@@ -1,0 +1,54 @@
+//! Quickstart: the shortest path through the public API.
+//!
+//! Retrains BraggNN on the remote (simulated) Cerebras through the full
+//! DNNTrainerFlow — stage data over the WAN, train with real PJRT steps,
+//! return the model, deploy to the edge — then answers one inference
+//! batch.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use anyhow::Result;
+
+use xloop::util::stats::human_secs;
+use xloop::workflow::{Coordinator, Mode, Scenario, TrainingMode};
+
+fn main() -> Result<()> {
+    xloop::util::logging::init();
+
+    // 1. Bring up the paper fabric: SLAC + ALCF, DTNs, faas endpoints,
+    //    accelerator models, flow engine, PJRT runtime.
+    let mut coordinator = Coordinator::paper(42)?;
+
+    // 2. Ask for real training (a short run — the loss curve is real).
+    coordinator.set_training_mode(TrainingMode::Real {
+        steps_override: Some(30),
+    });
+
+    // 3. Run the paper's retraining flow on the remote Cerebras.
+    let scenario = Scenario::table1("braggnn", Mode::RemoteCerebras)?;
+    let outcome = coordinator.run_retraining(&scenario, None)?;
+    let b = &outcome.breakdown;
+
+    println!("retrained {} via {}", b.model, b.mode_label);
+    println!("  data transfer : {}", human_secs(b.data_transfer_s.unwrap()));
+    println!(
+        "  training      : {} (virtual; {} real PJRT steps, final loss {:.5})",
+        human_secs(b.training_s),
+        b.real_steps,
+        b.final_loss.unwrap()
+    );
+    println!("  model transfer: {}", human_secs(b.model_transfer_s.unwrap()));
+    println!("  end-to-end    : {}", human_secs(b.end_to_end_s));
+
+    // 4. The edge host now serves the new model.
+    let dataset = coordinator.world.dataset("braggnn-train")?.clone();
+    let report = coordinator.world.edge.serve_stream(&dataset, 4)?;
+    println!(
+        "edge serving v{}: {} samples, mean latency {}, {} samples/s (real)",
+        report.version,
+        report.samples,
+        human_secs(report.real_mean_s),
+        report.real_throughput as u64
+    );
+    Ok(())
+}

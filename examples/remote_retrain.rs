@@ -1,0 +1,82 @@
+//! Table 1 reproduction: the end-to-end retraining time breakdown for
+//! every (model, mode) pair the paper measured, printed side by side
+//! with the paper's numbers.
+//!
+//! Run: `cargo run --release --example remote_retrain [-- --real]`
+//! (`--real` also executes real PJRT training steps per cell.)
+
+use anyhow::Result;
+
+use xloop::workflow::{render_table1, Coordinator, Scenario, TrainingMode};
+
+/// Paper Table 1 values for the comparison column.
+fn paper_reference(model: &str, mode_label: &str) -> Option<(f64, f64, f64, f64)> {
+    // (data transfer, training, model transfer, end-to-end)
+    match (model, mode_label) {
+        ("braggnn", l) if l.starts_with("Local") => Some((0.0, 1102.0, 0.0, 1102.0)),
+        ("braggnn", l) if l.contains("Cerebras") => Some((7.0, 19.0, 5.0, 31.0)),
+        ("braggnn", l) if l.contains("SambaNova") => Some((7.0, 139.0, 5.0, 151.0)),
+        ("cookienetae", l) if l.starts_with("Local") => Some((0.0, 517.0, 0.0, 517.0)),
+        ("cookienetae", l) if l.contains("Cerebras") => Some((5.0, 6.0, 4.0, 15.0)),
+        ("cookienetae", l) if l.contains("multi-GPU") => Some((5.0, 88.0, 4.0, 97.0)),
+        _ => None,
+    }
+}
+
+fn main() -> Result<()> {
+    xloop::util::logging::init();
+    let real = std::env::args().any(|a| a == "--real");
+
+    let mut rows = Vec::new();
+    for scenario in Scenario::table1_grid() {
+        let mut c = Coordinator::paper(42)?;
+        c.set_training_mode(if real {
+            TrainingMode::Real {
+                steps_override: None,
+            }
+        } else {
+            TrainingMode::VirtualOnly
+        });
+        eprintln!("running {} / {} ...", scenario.model, scenario.mode.label());
+        let outcome = c.run_retraining(&scenario, None)?;
+        rows.push(outcome.breakdown);
+    }
+
+    println!("\n=== Table 1 (reproduced, virtual seconds) ===\n");
+    print!("{}", render_table1(&rows));
+
+    println!("\n=== paper vs measured (end-to-end) ===\n");
+    println!(
+        "{:<34} {:<12} {:>10} {:>10} {:>8}",
+        "Mode", "Model", "paper (s)", "ours (s)", "ratio"
+    );
+    for r in &rows {
+        if let Some((_, _, _, e2e)) = paper_reference(&r.model, &r.mode_label) {
+            println!(
+                "{:<34} {:<12} {:>10.0} {:>10.1} {:>8.2}",
+                r.mode_label,
+                r.model,
+                e2e,
+                r.end_to_end_s,
+                r.end_to_end_s / e2e
+            );
+        }
+    }
+
+    // headline claim check
+    let local = rows
+        .iter()
+        .find(|r| r.model == "braggnn" && r.mode_label.starts_with("Local"))
+        .unwrap();
+    let cerebras = rows
+        .iter()
+        .find(|r| r.model == "braggnn" && r.mode_label.contains("Cerebras"))
+        .unwrap();
+    let speedup = local.end_to_end_s / cerebras.end_to_end_s;
+    println!(
+        "\nheadline: remote DCAI is {speedup:.1}x faster end-to-end than the local GPU \
+         (paper: >30x) — {}",
+        if speedup > 30.0 { "REPRODUCED" } else { "NOT reproduced" }
+    );
+    Ok(())
+}

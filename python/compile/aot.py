@@ -1,0 +1,182 @@
+"""AOT lowering: JAX (L2) + Pallas (L1) -> HLO text artifacts for rust (L3).
+
+Emits, into `artifacts/`:
+
+    <model>_train.hlo.txt   one Adam step, flat ABI (see model.py docstring)
+    <model>_infer.hlo.txt   batched forward pass
+    <model>_meta.json       tensor names/shapes + ABI layout for rust
+    pv_surface.hlo.txt      Pallas pseudo-Voigt synthesis (data generator)
+    pv_meta.json
+    init/<model>_p<i>.npy   He-init parameter snapshots (seed 42) so the
+                            rust trainer starts from the same state pytest
+                            verified
+    manifest.json           artifact index + input digest (staleness check)
+
+Interchange is HLO **text**, not `.serialize()`: jax >= 0.5 emits
+HloModuleProto with 64-bit instruction ids which the xla crate's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Python runs ONCE at build time (`make artifacts`); nothing here is on the
+rust request path.
+"""
+
+import argparse
+import hashlib
+import json
+import pathlib
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from .kernels import pseudo_voigt
+
+PV_BATCH = 256
+PV_PATCH = 11  # Bragg peak patches are 11x11 (paper §4.2)
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple=True)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _specs(shapes) -> list:
+    return [jax.ShapeDtypeStruct(s, d) for (s, d) in shapes]
+
+
+def lower_model(spec: M.ModelSpec, outdir: pathlib.Path) -> dict:
+    train_shapes = M.train_arg_shapes(spec)
+    infer_shapes = M.infer_arg_shapes(spec)
+
+    train_fn = M.make_train_step(spec)
+    infer_fn = M.make_infer(spec)
+
+    print(f"[aot] lowering {spec.name} train step "
+          f"({len(train_shapes)} args, batch={spec.train_batch})", flush=True)
+    train_hlo = to_hlo_text(jax.jit(train_fn).lower(*_specs(train_shapes)))
+    train_file = f"{spec.name}_train.hlo.txt"
+    (outdir / train_file).write_text(train_hlo)
+
+    print(f"[aot] lowering {spec.name} infer (batch={spec.infer_batch})", flush=True)
+    infer_hlo = to_hlo_text(jax.jit(infer_fn).lower(*_specs(infer_shapes)))
+    infer_file = f"{spec.name}_infer.hlo.txt"
+    (outdir / infer_file).write_text(infer_hlo)
+
+    # Initial parameters: the rust trainer loads these to start from the
+    # exact pytest-verified state. Raw little-endian f32, C order.
+    init_dir = outdir / "init"
+    init_dir.mkdir(exist_ok=True)
+    params = M.init_params(spec, jax.random.PRNGKey(42))
+    init_files = []
+    for i, (ps, p) in enumerate(zip(spec.params, params)):
+        fname = f"init/{spec.name}_p{i}.bin"
+        np.asarray(p, dtype="<f4").tofile(outdir / fname)
+        init_files.append(fname)
+
+    n = spec.n_params
+    meta = {
+        "name": spec.name,
+        "param_count": spec.param_count,
+        "params": [
+            {"name": ps.name, "shape": list(ps.shape), "init": init_files[i]}
+            for i, ps in enumerate(spec.params)
+        ],
+        "input_shape": list(spec.input_shape),
+        "target_shape": list(spec.target_shape),
+        "train_batch": spec.train_batch,
+        "infer_batch": spec.infer_batch,
+        "adam": {
+            "lr": M.ADAM_LR,
+            "beta1": M.ADAM_B1,
+            "beta2": M.ADAM_B2,
+            "eps": M.ADAM_EPS,
+        },
+        "fwd_flops_per_sample": M.fwd_flops_per_sample(spec),
+        "train_flops_per_step": M.train_flops_per_step(spec),
+        "sample_bytes": 2 * int(np.prod(spec.input_shape))
+        + 4 * int(np.prod(spec.target_shape)),  # 16-bit pixels + f32 labels
+        "train": {
+            "file": train_file,
+            # arg order: params*n, m*n, v*n, step, x, y
+            "n_args": 3 * n + 3,
+            "n_outputs": 3 * n + 2,  # params', m', v', step', loss
+            "arg_shapes": [list(s) for (s, _) in M.train_arg_shapes(spec)],
+        },
+        "infer": {
+            "file": infer_file,
+            "n_args": n + 1,
+            "n_outputs": 1,
+            "arg_shapes": [list(s) for (s, _) in M.infer_arg_shapes(spec)],
+        },
+    }
+    (outdir / f"{spec.name}_meta.json").write_text(json.dumps(meta, indent=1))
+    return meta
+
+
+def lower_pv(outdir: pathlib.Path) -> dict:
+    """The L1 pseudo-Voigt kernel as a standalone data-synthesis artifact."""
+    print(f"[aot] lowering pv_surface (P={PV_BATCH}, {PV_PATCH}x{PV_PATCH})",
+          flush=True)
+
+    def pv(params):
+        return (pseudo_voigt(params, height=PV_PATCH, width=PV_PATCH),)
+
+    lowered = jax.jit(pv).lower(
+        jax.ShapeDtypeStruct((PV_BATCH, 7), jnp.float32)
+    )
+    (outdir / "pv_surface.hlo.txt").write_text(to_hlo_text(lowered))
+    meta = {
+        "file": "pv_surface.hlo.txt",
+        "batch": PV_BATCH,
+        "height": PV_PATCH,
+        "width": PV_PATCH,
+        "param_order": ["amp", "x0", "y0", "sigma_x", "sigma_y", "eta", "bg"],
+    }
+    (outdir / "pv_meta.json").write_text(json.dumps(meta, indent=1))
+    return meta
+
+
+def input_digest() -> str:
+    """Digest of every python source feeding the artifacts."""
+    root = pathlib.Path(__file__).parent
+    h = hashlib.sha256()
+    for f in sorted(root.rglob("*.py")):
+        h.update(f.read_bytes())
+    return h.hexdigest()
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="artifact directory")
+    ap.add_argument(
+        "--models", nargs="*", default=list(M.MODELS), help="subset of models"
+    )
+    args = ap.parse_args()
+
+    outdir = pathlib.Path(args.out)
+    outdir.mkdir(parents=True, exist_ok=True)
+
+    manifest = {"digest": input_digest(), "models": {}, "jax": jax.__version__}
+    for name in args.models:
+        manifest["models"][name] = lower_model(M.MODELS[name], outdir)["train"][
+            "file"
+        ]
+    manifest["pv"] = lower_pv(outdir)["file"]
+    (outdir / "manifest.json").write_text(json.dumps(manifest, indent=1))
+    sizes = {
+        f.name: f.stat().st_size for f in sorted(outdir.glob("*.hlo.txt"))
+    }
+    print(f"[aot] wrote {len(sizes)} HLO modules: "
+          + ", ".join(f"{k} ({v//1024} KiB)" for k, v in sizes.items()))
+
+
+if __name__ == "__main__":
+    sys.exit(main())

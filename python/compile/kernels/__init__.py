@@ -1,0 +1,22 @@
+"""L1: Pallas kernels for the paper's compute hot-spots.
+
+- `matmul` / `dense`  — tiled MXU matmul with custom_vjp (fwd+bwd Pallas)
+- `conv2d` / `conv2d_bias` — conv as shifted matmuls, custom_vjp likewise
+- `pseudo_voigt` — VPU elementwise Bragg-peak surface synthesis
+
+`ref.py` carries the pure-jnp oracles pytest checks every kernel against.
+"""
+
+from .conv2d import conv2d, conv2d_bias, conv2d_pallas
+from .matmul import dense, matmul, matmul_pallas
+from .pseudo_voigt import pseudo_voigt
+
+__all__ = [
+    "conv2d",
+    "conv2d_bias",
+    "conv2d_pallas",
+    "dense",
+    "matmul",
+    "matmul_pallas",
+    "pseudo_voigt",
+]

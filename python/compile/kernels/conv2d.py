@@ -1,0 +1,145 @@
+"""Pallas conv2d as a sum of shifted MXU matmuls.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): instead of the CUDA
+thread-per-output-pixel formulation, a VALID stride-1 NHWC conv is
+decomposed into KH*KW shifted GEMMs:
+
+    out[n, oh, ow, co] = sum_{kh, kw} x[n, oh+kh, ow+kw, :] @ w[kh, kw, :, :]
+
+Each program instance owns a batch block; the (kh, kw) loop is unrolled at
+trace time (9 iterations for 3x3), and every iteration is a
+(BB*OH*OW, Cin) x (Cin, Cout) contraction that feeds the 128x128 systolic
+array. The input block, the full filter, and the f32 accumulator all live
+in VMEM; for the paper's models the largest block is
+CookieNetAE's 4x16x128x96 input slab + 3x3x96x96 filter + accumulator
+≈ 3.1 MiB + 0.3 MiB + 3.1 MiB — comfortably inside 16 MiB with
+double-buffering headroom.
+
+Padding (SAME) is applied by the caller with `jnp.pad` -- pad has a
+trivial, XLA-fused vjp (slice), keeping the kernel itself VALID-only.
+
+Backward, via custom_vjp, reuses Pallas primitives exclusively:
+  dx = conv2d(full_pad(g), rot180(w).swap(io))   -- this same kernel
+  dw[kh,kw] = x_shift(kh,kw)^T @ g               -- the Pallas matmul
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .matmul import matmul_pallas
+
+# Batch block: instances stream over the batch dimension.
+BLOCK_B = 8
+
+
+def _conv2d_kernel(x_ref, w_ref, o_ref, *, kh: int, kw: int):
+    """One batch block of VALID conv via unrolled shifted matmuls."""
+    bb, hp, wp, cin = x_ref.shape
+    oh = hp - kh + 1
+    ow = wp - kw + 1
+    cout = w_ref.shape[-1]
+    acc = jnp.zeros((bb * oh * ow, cout), dtype=jnp.float32)
+    for i in range(kh):
+        for j in range(kw):
+            xs = x_ref[:, i : i + oh, j : j + ow, :].reshape(bb * oh * ow, cin)
+            acc += jnp.dot(
+                xs, w_ref[i, j], preferred_element_type=jnp.float32
+            )
+    o_ref[...] = acc.reshape(bb, oh, ow, cout)
+
+
+@functools.partial(jax.jit, static_argnames=("block_b", "interpret"))
+def conv2d_pallas(
+    x: jnp.ndarray,
+    w: jnp.ndarray,
+    *,
+    block_b: int = BLOCK_B,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Raw Pallas VALID stride-1 NHWC conv (no vjp wrapper).
+
+    x: [B, H, W, Cin], w: [KH, KW, Cin, Cout] -> [B, OH, OW, Cout].
+    """
+    if x.ndim != 4 or w.ndim != 4:
+        raise ValueError(f"conv2d_pallas expects NHWC x HWIO, got {x.shape} x {w.shape}")
+    b, h, wd, cin = x.shape
+    kh, kw, cin2, cout = w.shape
+    if cin != cin2:
+        raise ValueError(f"channel mismatch: {x.shape} x {w.shape}")
+    if h < kh or wd < kw:
+        raise ValueError(f"input {x.shape} smaller than filter {w.shape}")
+    oh, ow = h - kh + 1, wd - kw + 1
+
+    block_b = min(block_b, b)
+    pad_b = (-b) % block_b
+    if pad_b:
+        x = jnp.pad(x, ((0, pad_b), (0, 0), (0, 0), (0, 0)))
+    bp = x.shape[0]
+
+    out = pl.pallas_call(
+        functools.partial(_conv2d_kernel, kh=kh, kw=kw),
+        grid=(bp // block_b,),
+        in_specs=[
+            pl.BlockSpec((block_b, h, wd, cin), lambda i: (i, 0, 0, 0)),
+            pl.BlockSpec((kh, kw, cin, cout), lambda i: (0, 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_b, oh, ow, cout), lambda i: (i, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((bp, oh, ow, cout), jnp.float32),
+        interpret=interpret,
+    )(x.astype(jnp.float32), w.astype(jnp.float32))
+    return out[:b]
+
+
+@jax.custom_vjp
+def conv2d(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """Differentiable Pallas VALID conv: NHWC x HWIO -> NHWC."""
+    return conv2d_pallas(x, w)
+
+
+def _conv2d_fwd(x, w):
+    return conv2d_pallas(x, w), (x, w)
+
+
+def _conv2d_bwd(res, g):
+    x, w = res
+    kh, kw, cin, cout = w.shape
+    b, oh, ow, _ = g.shape
+
+    # dx: full-correlation of g with the 180-rotated, io-swapped filter --
+    # the same Pallas conv kernel on a padded cotangent.
+    g_pad = jnp.pad(g, ((0, 0), (kh - 1, kh - 1), (kw - 1, kw - 1), (0, 0)))
+    w_rot = jnp.flip(w, axis=(0, 1)).transpose(0, 1, 3, 2)  # [KH,KW,Cout,Cin]
+    dx = conv2d_pallas(g_pad, w_rot)
+
+    # dw: ONE im2col-style Pallas matmul over all (kh, kw) taps at once —
+    # (KH*KW*Cin, B*OH*OW) x (B*OH*OW, Cout). Replacing the previous
+    # per-tap loop (9 separate kernels) cut the BraggNN train step 6x
+    # (EXPERIMENTS.md §Perf).
+    g2 = g.reshape(b * oh * ow, cout)
+    taps = []
+    for i in range(kh):
+        for j in range(kw):
+            taps.append(x[:, i : i + oh, j : j + ow, :].reshape(b * oh * ow, cin))
+    xs_all = jnp.concatenate(taps, axis=1)  # [B*OH*OW, KH*KW*Cin]
+    dw = matmul_pallas(xs_all.T, g2).reshape(kh, kw, cin, cout)
+    return dx, dw
+
+
+conv2d.defvjp(_conv2d_fwd, _conv2d_bwd)
+
+
+def conv2d_bias(
+    x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray, *, padding: str = "VALID"
+) -> jnp.ndarray:
+    """Conv + bias with SAME/VALID handling at the jnp level."""
+    if padding == "SAME":
+        kh, kw = w.shape[0], w.shape[1]
+        ph0, ph1 = (kh - 1) // 2, kh // 2
+        pw0, pw1 = (kw - 1) // 2, kw // 2
+        x = jnp.pad(x, ((0, 0), (ph0, ph1), (pw0, pw1), (0, 0)))
+    elif padding != "VALID":
+        raise ValueError(f"unknown padding {padding!r}")
+    return conv2d(x, w) + b[None, None, None, :]

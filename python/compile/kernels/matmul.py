@@ -1,0 +1,146 @@
+"""Tiled Pallas matmul — the MXU workhorse for both models.
+
+TPU mapping (see DESIGN.md §Hardware-Adaptation): the grid tiles the
+output (M, N) space; each program instance owns one (BM, BN) output block
+and loops over K in (BK)-wide slabs held in VMEM, accumulating in a f32
+VMEM scratch block. BM/BN default to 128 to line up with the 128x128 MXU
+systolic array; BK to 128 lanes. Inputs that do not divide the block
+sizes are zero-padded at the wrapper level (zero rows/cols do not perturb
+the product) and the result is sliced back.
+
+Backward: matmul is wrapped in `jax.custom_vjp` whose cotangents are
+themselves Pallas matmuls (dA = g @ B^T, dB = A^T @ g), so the entire
+training graph -- forward AND backward -- flows through this kernel.
+
+interpret=True everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; interpret mode lowers the kernel to plain HLO loops, which
+is what `make artifacts` ships to the rust runtime.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+# Default block sizes, chosen for the MXU (128x128) and a VMEM budget of
+# (BM*BK + BK*BN + BM*BN) * 4B = 192 KiB << 16 MiB, leaving room for
+# double buffering of the K-slab stream.
+BLOCK_M = 128
+BLOCK_N = 128
+BLOCK_K = 128
+
+
+def _matmul_kernel(a_ref, b_ref, o_ref, acc_ref, *, n_k: int):
+    """One (BM, BN) output block; grid = (M/BM, N/BN, K/BK).
+
+    K is the innermost (minor) grid axis, so consecutive program steps
+    stream K-slabs for the same output block; `acc_ref` (VMEM scratch)
+    carries the partial sum across those steps.
+    """
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(
+        a_ref[...], b_ref[...], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(k == n_k - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...]
+
+
+def _pad_to(x: jnp.ndarray, axis: int, mult: int) -> jnp.ndarray:
+    size = x.shape[axis]
+    rem = (-size) % mult
+    if rem == 0:
+        return x
+    pad = [(0, 0)] * x.ndim
+    pad[axis] = (0, rem)
+    return jnp.pad(x, pad)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_m", "block_n", "block_k", "interpret")
+)
+def matmul_pallas(
+    a: jnp.ndarray,
+    b: jnp.ndarray,
+    *,
+    block_m: int = BLOCK_M,
+    block_n: int = BLOCK_N,
+    block_k: int = BLOCK_K,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Raw Pallas (M,K)x(K,N) product without the custom_vjp wrapper."""
+    if a.ndim != 2 or b.ndim != 2:
+        raise ValueError(f"matmul_pallas expects 2-D operands, got {a.shape} x {b.shape}")
+    m, k = a.shape
+    k2, n = b.shape
+    if k != k2:
+        raise ValueError(f"contraction mismatch: {a.shape} x {b.shape}")
+
+    # Shrink blocks for tiny operands so the grid is never empty and the
+    # padding overhead stays bounded.
+    block_m = min(block_m, max(8, m))
+    block_n = min(block_n, max(8, n))
+    block_k = min(block_k, max(8, k))
+    # Long-K contractions (conv backward-dw: K = B*OH*OW ~ 10k) would pay
+    # one grid step per 128-slab; widen the K slab instead. VMEM check:
+    # 128x2048 + 2048x128 + 128x128 f32 = 2.1 MiB — double-buffers fine
+    # inside 16 MiB (perf log: EXPERIMENTS.md §Perf, 6x on the train step).
+    if k > 8 * block_k:
+        block_k = min(2048, k)
+
+    a = _pad_to(_pad_to(a.astype(jnp.float32), 0, block_m), 1, block_k)
+    b = _pad_to(_pad_to(b.astype(jnp.float32), 0, block_k), 1, block_n)
+    mp, kp = a.shape
+    _, np_ = b.shape
+    n_k = kp // block_k
+
+    grid = (mp // block_m, np_ // block_n, n_k)
+    out = pl.pallas_call(
+        functools.partial(_matmul_kernel, n_k=n_k),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_m, block_k), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((block_k, block_n), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((block_m, block_n), jnp.float32)],
+        interpret=interpret,
+    )(a, b)
+    return out[:m, :n]
+
+
+@jax.custom_vjp
+def matmul(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Differentiable Pallas matmul: a [M,K] @ b [K,N] -> [M,N] (f32)."""
+    return matmul_pallas(a, b)
+
+
+def _matmul_fwd(a, b):
+    return matmul_pallas(a, b), (a, b)
+
+
+def _matmul_bwd(res, g):
+    a, b = res
+    # Cotangents are Pallas matmuls too: the backward pass exercises the
+    # same MXU kernel. Transposes stay at the jnp level (layout change,
+    # fused by XLA into the operand feed).
+    da = matmul_pallas(g, b.T)
+    db = matmul_pallas(a.T, g)
+    return da, db
+
+
+matmul.defvjp(_matmul_fwd, _matmul_bwd)
+
+
+def dense(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Affine layer on the Pallas matmul; bias add is a fused XLA op."""
+    return matmul(x, w) + b[None, :]

@@ -1,0 +1,87 @@
+"""Pallas pseudo-Voigt surface evaluator — the data-simulation hot-spot.
+
+The paper's operation **S** (simulate a datum) for HEDM is the synthesis
+of Bragg-peak detector patches, whose physics shape is the 2-D
+pseudo-Voigt profile that the conventional analysis **A** also fits. This
+kernel batch-evaluates P surfaces on an HxW pixel grid.
+
+TPU mapping: a pure-VPU elementwise kernel — no MXU involvement. The grid
+tiles the peak batch; each instance broadcasts its 7 scalar parameters
+over an (H, W) lane block (8x128 VPU lanes line up with the 11x11 and
+16x128 patch shapes after padding). Everything (params slab + output
+block) is trivially VMEM-resident.
+
+The rust data generator executes the AOT-lowered form of this kernel via
+PJRT (`artifacts/pv_surface.hlo.txt`) so the L1 kernel sits on the
+runtime data path, then adds detector noise rust-side.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_P = 64
+
+
+def _pv_kernel(p_ref, o_ref):
+    """p_ref: [BP, 7]; o_ref: [BP, H, W]."""
+    _, h, w = o_ref.shape
+    amp = p_ref[:, 0][:, None, None]
+    x0 = p_ref[:, 1][:, None, None]
+    y0 = p_ref[:, 2][:, None, None]
+    sx = p_ref[:, 3][:, None, None]
+    sy = p_ref[:, 4][:, None, None]
+    eta = p_ref[:, 5][:, None, None]
+    bg = p_ref[:, 6][:, None, None]
+    rows = jax.lax.broadcasted_iota(jnp.float32, (1, h, w), 1)
+    cols = jax.lax.broadcasted_iota(jnp.float32, (1, h, w), 2)
+    dx = cols - x0
+    dy = rows - y0
+    gx = dx * dx / (sx * sx)
+    gy = dy * dy / (sy * sy)
+    gauss = jnp.exp(-0.5 * (gx + gy))
+    lorentz = 1.0 / (1.0 + gx + gy)
+    o_ref[...] = amp * (eta * lorentz + (1.0 - eta) * gauss) + bg
+
+
+@functools.partial(
+    jax.jit, static_argnames=("height", "width", "block_p", "interpret")
+)
+def pseudo_voigt(
+    params: jnp.ndarray,
+    *,
+    height: int,
+    width: int,
+    block_p: int = BLOCK_P,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Batched pseudo-Voigt surfaces.
+
+    params: [P, 7] = (amp, x0, y0, sigma_x, sigma_y, eta, bg);
+    returns [P, height, width] f32. Matches `ref.pseudo_voigt_ref`.
+    """
+    if params.ndim != 2 or params.shape[1] != 7:
+        raise ValueError(f"params must be [P, 7], got {params.shape}")
+    p = params.shape[0]
+    block_p = min(block_p, max(1, p))
+    pad = (-p) % block_p
+    if pad:
+        # Padded rows have sigma=0 -> guard with a benign sigma of 1.
+        filler = jnp.tile(
+            jnp.array([[0.0, 0.0, 0.0, 1.0, 1.0, 0.5, 0.0]], jnp.float32),
+            (pad, 1),
+        )
+        params = jnp.concatenate([params.astype(jnp.float32), filler])
+    pp = params.shape[0]
+
+    out = pl.pallas_call(
+        _pv_kernel,
+        grid=(pp // block_p,),
+        in_specs=[pl.BlockSpec((block_p, 7), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((block_p, height, width), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((pp, height, width), jnp.float32),
+        interpret=interpret,
+    )(params.astype(jnp.float32))
+    return out[:p]

@@ -1,0 +1,58 @@
+"""Pure-jnp oracles for every Pallas kernel (L1 correctness contract).
+
+Each function here is the mathematical definition the corresponding Pallas
+kernel in this package must match to within float tolerance. pytest
+(python/tests/test_kernels.py) sweeps shapes/dtypes with hypothesis and
+asserts `assert_allclose(kernel(...), ref(...))`.
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def matmul_ref(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Plain (M,K)x(K,N) matrix product, f32 accumulation."""
+    return jnp.matmul(a.astype(jnp.float32), b.astype(jnp.float32))
+
+
+def dense_ref(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Affine layer: x @ w + b."""
+    return matmul_ref(x, w) + b[None, :]
+
+
+def conv2d_ref(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """VALID, stride-1, NHWC x HWIO convolution (cross-correlation).
+
+    x: [B, H, W, Cin], w: [KH, KW, Cin, Cout] -> [B, H-KH+1, W-KW+1, Cout]
+    """
+    return jax.lax.conv_general_dilated(
+        x.astype(jnp.float32),
+        w.astype(jnp.float32),
+        window_strides=(1, 1),
+        padding="VALID",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+
+
+def pseudo_voigt_ref(params: jnp.ndarray, height: int, width: int) -> jnp.ndarray:
+    """Batched 2-D pseudo-Voigt surface on a pixel grid.
+
+    params: [P, 7] columns (amp, x0, y0, sigma_x, sigma_y, eta, bg).
+    Returns [P, height, width] with
+        pv = amp * (eta * L + (1 - eta) * G) + bg
+        G  = exp(-0.5 * (dx^2 / sx^2 + dy^2 / sy^2))
+        L  = 1 / (1 + dx^2 / sx^2 + dy^2 / sy^2)
+    where dx = col - x0, dy = row - y0. This must match, formula-for-formula,
+    `rust/src/analysis/pseudo_voigt.rs` (the conventional baseline) and
+    `rust/src/data/bragg.rs` (the synthetic generator).
+    """
+    amp, x0, y0, sx, sy, eta, bg = [params[:, i][:, None, None] for i in range(7)]
+    rows = jnp.arange(height, dtype=jnp.float32)[None, :, None]
+    cols = jnp.arange(width, dtype=jnp.float32)[None, None, :]
+    dx = cols - x0
+    dy = rows - y0
+    gx = dx * dx / (sx * sx)
+    gy = dy * dy / (sy * sy)
+    gauss = jnp.exp(-0.5 * (gx + gy))
+    lorentz = 1.0 / (1.0 + gx + gy)
+    return amp * (eta * lorentz + (1.0 - eta) * gauss) + bg

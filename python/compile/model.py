@@ -1,0 +1,278 @@
+"""L2: the paper's two DNNs in JAX, built on the L1 Pallas kernels.
+
+* **BraggNN** (Liu et al. 2020, §5.2) — localizes a Bragg peak center
+  (x, y) inside an 11x11 detector patch. Three VALID 3x3 conv blocks
+  (64, 32, 8 channels) + four dense layers (64, 32, 16, 2). 36,922
+  parameters — "lightweight by design" per the paper.
+
+* **CookieNetAE** (§5.2) — estimates the per-channel electron-energy
+  probability density for the 16-channel CookieBox eToF array. Eight SAME
+  3x3 conv layers over a 16x128 energy-histogram image, ReLU everywhere,
+  314,401 parameters (paper: 343,937 — same depth/class, channel widths
+  chosen as [32,64,96,96,96,64,32,1]; documented in DESIGN.md).
+
+Both models train with MSE + Adam(1e-3) exactly as §5.2 describes. The
+train step is expressed over a *flat* tuple ABI so `aot.py` can lower it
+once and the rust runtime can feed literals positionally:
+
+    train:  (p_0..p_{n-1}, m_0..m_{n-1}, v_0..v_{n-1}, step, x, y)
+         -> (p'_0..p'_{n-1}, m'_.., v'_.., step+1, loss)
+    infer:  (p_0..p_{n-1}, x) -> (y_hat,)
+
+Every conv/dense in fwd AND bwd goes through the Pallas kernels
+(custom_vjp), so the AOT HLO the rust side executes is kernel-generated
+end to end.
+"""
+
+import dataclasses
+from typing import Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import conv2d_bias, dense
+
+# --------------------------------------------------------------------------
+# Model specs
+# --------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    name: str
+    shape: tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelSpec:
+    """Static description of a model: what aot.py lowers and rust loads."""
+
+    name: str
+    params: tuple  # tuple[ParamSpec, ...]
+    input_shape: tuple  # per-sample x shape
+    target_shape: tuple  # per-sample y shape
+    train_batch: int
+    infer_batch: int
+
+    @property
+    def n_params(self) -> int:
+        return len(self.params)
+
+    @property
+    def param_count(self) -> int:
+        total = 0
+        for p in self.params:
+            n = 1
+            for d in p.shape:
+                n *= d
+            total += n
+        return total
+
+
+def _conv_spec(name: str, kh: int, kw: int, cin: int, cout: int):
+    return [
+        ParamSpec(f"{name}_w", (kh, kw, cin, cout)),
+        ParamSpec(f"{name}_b", (cout,)),
+    ]
+
+
+def _fc_spec(name: str, fin: int, fout: int):
+    return [ParamSpec(f"{name}_w", (fin, fout)), ParamSpec(f"{name}_b", (fout,))]
+
+
+BRAGGNN_CONVS = [(1, 64), (64, 32), (32, 8)]  # VALID 3x3: 11 -> 9 -> 7 -> 5
+BRAGGNN_FCS = [(5 * 5 * 8, 64), (64, 32), (32, 16), (16, 2)]
+
+_bragg_params = []
+for i, (ci, co) in enumerate(BRAGGNN_CONVS):
+    _bragg_params += _conv_spec(f"conv{i+1}", 3, 3, ci, co)
+for i, (fi, fo) in enumerate(BRAGGNN_FCS):
+    _bragg_params += _fc_spec(f"fc{i+1}", fi, fo)
+
+BRAGGNN = ModelSpec(
+    name="braggnn",
+    params=tuple(_bragg_params),
+    input_shape=(11, 11, 1),
+    target_shape=(2,),
+    train_batch=128,
+    infer_batch=512,
+)
+
+COOKIE_CHANNELS = [1, 32, 64, 96, 96, 96, 64, 32, 1]  # 8 SAME 3x3 convs
+
+_cookie_params = []
+for i, (ci, co) in enumerate(zip(COOKIE_CHANNELS[:-1], COOKIE_CHANNELS[1:])):
+    _cookie_params += _conv_spec(f"conv{i+1}", 3, 3, ci, co)
+
+COOKIENETAE = ModelSpec(
+    name="cookienetae",
+    params=tuple(_cookie_params),
+    input_shape=(16, 128, 1),
+    target_shape=(16, 128, 1),
+    train_batch=4,
+    infer_batch=8,
+)
+
+MODELS = {m.name: m for m in (BRAGGNN, COOKIENETAE)}
+
+
+# --------------------------------------------------------------------------
+# Init
+# --------------------------------------------------------------------------
+
+
+def init_params(spec: ModelSpec, key: jax.Array) -> list:
+    """He-normal weights, zero biases, in spec order."""
+    params = []
+    keys = jax.random.split(key, len(spec.params))
+    for ps, k in zip(spec.params, keys):
+        if ps.name.endswith("_b"):
+            params.append(jnp.zeros(ps.shape, jnp.float32))
+        else:
+            fan_in = 1
+            for d in ps.shape[:-1]:
+                fan_in *= d
+            std = (2.0 / fan_in) ** 0.5
+            params.append(std * jax.random.normal(k, ps.shape, jnp.float32))
+    return params
+
+
+# --------------------------------------------------------------------------
+# Forward passes (all compute through Pallas kernels)
+# --------------------------------------------------------------------------
+
+
+def braggnn_fwd(params: Sequence[jnp.ndarray], x: jnp.ndarray) -> jnp.ndarray:
+    """x: [B, 11, 11, 1] -> normalized (row, col) peak center in [0,1]^2."""
+    (c1w, c1b, c2w, c2b, c3w, c3b,
+     f1w, f1b, f2w, f2b, f3w, f3b, f4w, f4b) = params
+    h = jax.nn.relu(conv2d_bias(x, c1w, c1b, padding="VALID"))
+    h = jax.nn.relu(conv2d_bias(h, c2w, c2b, padding="VALID"))
+    h = jax.nn.relu(conv2d_bias(h, c3w, c3b, padding="VALID"))
+    h = h.reshape(h.shape[0], -1)
+    h = jax.nn.relu(dense(h, f1w, f1b))
+    h = jax.nn.relu(dense(h, f2w, f2b))
+    h = jax.nn.relu(dense(h, f3w, f3b))
+    return dense(h, f4w, f4b)
+
+
+def cookienetae_fwd(params: Sequence[jnp.ndarray], x: jnp.ndarray) -> jnp.ndarray:
+    """x: [B, 16, 128, 1] energy histograms -> per-channel energy pdf."""
+    h = x
+    n_layers = len(params) // 2
+    for i in range(n_layers):
+        w, b = params[2 * i], params[2 * i + 1]
+        h = conv2d_bias(h, w, b, padding="SAME")
+        h = jax.nn.relu(h)  # paper: rectifier on all layers, output included
+    return h
+
+
+FORWARDS: dict = {
+    "braggnn": braggnn_fwd,
+    "cookienetae": cookienetae_fwd,
+}
+
+
+def mse_loss(fwd: Callable, params: Sequence[jnp.ndarray], x, y) -> jnp.ndarray:
+    pred = fwd(params, x)
+    return jnp.mean((pred - y) ** 2)
+
+
+# --------------------------------------------------------------------------
+# Adam train step (flat ABI)
+# --------------------------------------------------------------------------
+
+ADAM_LR = 1e-3
+ADAM_B1 = 0.9
+ADAM_B2 = 0.999
+ADAM_EPS = 1e-8
+
+
+def make_train_step(spec: ModelSpec) -> Callable:
+    """Returns train_step(*flat_args) -> flat_outputs (see module doc)."""
+    fwd = FORWARDS[spec.name]
+    n = spec.n_params
+
+    def train_step(*args):
+        params = list(args[:n])
+        m = list(args[n : 2 * n])
+        v = list(args[2 * n : 3 * n])
+        step = args[3 * n]
+        x, y = args[3 * n + 1], args[3 * n + 2]
+
+        loss, grads = jax.value_and_grad(
+            lambda p: mse_loss(fwd, p, x, y)
+        )(params)
+
+        t = step + 1.0
+        b1t = ADAM_B1**t
+        b2t = ADAM_B2**t
+        new_p, new_m, new_v = [], [], []
+        for p, g, mi, vi in zip(params, grads, m, v):
+            mi = ADAM_B1 * mi + (1.0 - ADAM_B1) * g
+            vi = ADAM_B2 * vi + (1.0 - ADAM_B2) * g * g
+            m_hat = mi / (1.0 - b1t)
+            v_hat = vi / (1.0 - b2t)
+            new_p.append(p - ADAM_LR * m_hat / (jnp.sqrt(v_hat) + ADAM_EPS))
+            new_m.append(mi)
+            new_v.append(vi)
+        return (*new_p, *new_m, *new_v, t, loss)
+
+    return train_step
+
+
+def make_infer(spec: ModelSpec) -> Callable:
+    fwd = FORWARDS[spec.name]
+    n = spec.n_params
+
+    def infer(*args):
+        params = list(args[:n])
+        x = args[n]
+        return (fwd(params, x),)
+
+    return infer
+
+
+def fwd_flops_per_sample(spec: ModelSpec) -> int:
+    """Analytic multiply-add FLOPs (x2) of one forward sample.
+
+    This is the *algorithmic* cost a real accelerator executes, used by the
+    rust `accel` performance models; it deliberately excludes the
+    interpret-mode emulation overhead of the CPU artifacts.
+    """
+    if spec.name == "braggnn":
+        flops = 0
+        h = 11
+        for ci, co in BRAGGNN_CONVS:  # VALID 3x3
+            h -= 2
+            flops += 2 * h * h * 9 * ci * co
+        for fi, fo in BRAGGNN_FCS:
+            flops += 2 * fi * fo
+        return flops
+    if spec.name == "cookienetae":
+        flops = 0
+        for ci, co in zip(COOKIE_CHANNELS[:-1], COOKIE_CHANNELS[1:]):
+            flops += 2 * 16 * 128 * 9 * ci * co  # SAME 3x3
+        return flops
+    raise ValueError(spec.name)
+
+
+def train_flops_per_step(spec: ModelSpec) -> int:
+    """fwd + bwd (~2x fwd) over the batch, plus ~10 FLOPs/param of Adam."""
+    return 3 * spec.train_batch * fwd_flops_per_sample(spec) + 10 * spec.param_count
+
+
+def train_arg_shapes(spec: ModelSpec) -> list:
+    """[(shape, dtype)] in positional order for the train-step ABI."""
+    shapes = [ps.shape for ps in spec.params]
+    flat = shapes * 3  # params, m, v
+    flat.append(())  # step (f32 scalar)
+    flat.append((spec.train_batch, *spec.input_shape))  # x
+    flat.append((spec.train_batch, *spec.target_shape))  # y
+    return [(s, jnp.float32) for s in flat]
+
+
+def infer_arg_shapes(spec: ModelSpec) -> list:
+    shapes = [ps.shape for ps in spec.params]
+    shapes.append((spec.infer_batch, *spec.input_shape))
+    return [(s, jnp.float32) for s in shapes]

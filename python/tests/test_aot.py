@@ -1,0 +1,88 @@
+"""AOT pipeline: HLO text artifacts exist, parse, and carry the right ABI."""
+
+import json
+import pathlib
+
+import numpy as np
+import pytest
+
+ARTIFACTS = pathlib.Path(__file__).resolve().parents[2] / "artifacts"
+
+pytestmark = pytest.mark.skipif(
+    not (ARTIFACTS / "manifest.json").exists(),
+    reason="run `make artifacts` first",
+)
+
+
+def _meta(name):
+    return json.loads((ARTIFACTS / f"{name}_meta.json").read_text())
+
+
+@pytest.mark.parametrize("model", ["braggnn", "cookienetae"])
+def test_hlo_text_entry_computation(model):
+    for phase in ("train", "infer"):
+        text = (ARTIFACTS / f"{model}_{phase}.hlo.txt").read_text()
+        assert text.startswith("HloModule"), f"{model}_{phase} not HLO text"
+        assert "ENTRY" in text
+        # jax>=0.5 proto ids overflow the crate's XLA; text is the contract
+        assert not text.startswith("\x08"), "binary proto snuck in"
+
+
+@pytest.mark.parametrize("model", ["braggnn", "cookienetae"])
+def test_meta_abi_layout(model):
+    meta = _meta(model)
+    n = len(meta["params"])
+    assert meta["train"]["n_args"] == 3 * n + 3
+    assert meta["train"]["n_outputs"] == 3 * n + 2
+    assert meta["infer"]["n_args"] == n + 1
+    shapes = meta["train"]["arg_shapes"]
+    # params, m, v share shapes
+    for i in range(n):
+        assert shapes[i] == shapes[n + i] == shapes[2 * n + i]
+        assert shapes[i] == meta["params"][i]["shape"]
+    assert shapes[3 * n] == []  # scalar step
+    assert shapes[3 * n + 1] == [meta["train_batch"], *meta["input_shape"]]
+
+
+@pytest.mark.parametrize("model", ["braggnn", "cookienetae"])
+def test_hlo_parameter_arity_matches_meta(model):
+    """The ENTRY parameter count in the HLO text must equal the meta ABI."""
+    meta = _meta(model)
+    for phase in ("train", "infer"):
+        text = (ARTIFACTS / f"{model}_{phase}.hlo.txt").read_text()
+        entry = text[text.index("ENTRY") :]
+        # entry params appear as `... = f32[...] parameter(K)` lines
+        n_params = entry.count(" parameter(")
+        assert n_params == meta[phase]["n_args"], (model, phase, n_params)
+
+
+@pytest.mark.parametrize("model", ["braggnn", "cookienetae"])
+def test_init_snapshots(model):
+    meta = _meta(model)
+    total = 0
+    for p in meta["params"]:
+        raw = np.fromfile(ARTIFACTS / p["init"], dtype="<f4")
+        want = int(np.prod(p["shape"])) if p["shape"] else 1
+        assert raw.size == want, p["name"]
+        assert np.all(np.isfinite(raw)), p["name"]
+        total += raw.size
+    assert total == meta["param_count"]
+
+
+def test_pv_meta():
+    meta = json.loads((ARTIFACTS / "pv_meta.json").read_text())
+    assert meta["param_order"] == [
+        "amp", "x0", "y0", "sigma_x", "sigma_y", "eta", "bg",
+    ]
+    text = (ARTIFACTS / meta["file"]).read_text()
+    assert text.startswith("HloModule")
+
+
+def test_manifest_digest_current():
+    """Artifacts must be regenerated when compile/ sources change."""
+    from compile.aot import input_digest
+
+    manifest = json.loads((ARTIFACTS / "manifest.json").read_text())
+    assert manifest["digest"] == input_digest(), (
+        "artifacts stale: run `make artifacts`"
+    )

@@ -1,0 +1,240 @@
+"""L1 correctness: every Pallas kernel vs its pure-jnp oracle.
+
+hypothesis sweeps shapes (and the f32/bf16 input dtypes the kernels
+accept); assert_allclose against ref.py is the contract the AOT artifacts
+inherit.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import (
+    conv2d,
+    conv2d_bias,
+    conv2d_pallas,
+    dense,
+    matmul,
+    matmul_pallas,
+    pseudo_voigt,
+)
+from compile.kernels.ref import (
+    conv2d_ref,
+    dense_ref,
+    matmul_ref,
+    pseudo_voigt_ref,
+)
+
+HYPO = dict(max_examples=25, deadline=None)
+
+
+def rand(rng, shape, dtype=np.float32):
+    return rng.normal(size=shape).astype(dtype)
+
+
+# ---------------------------------------------------------------- matmul
+
+
+@settings(**HYPO)
+@given(
+    m=st.integers(1, 200),
+    k=st.integers(1, 160),
+    n=st.integers(1, 130),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matmul_matches_ref(m, k, n, seed):
+    rng = np.random.default_rng(seed)
+    a, b = rand(rng, (m, k)), rand(rng, (k, n))
+    got = matmul_pallas(jnp.asarray(a), jnp.asarray(b))
+    np.testing.assert_allclose(got, matmul_ref(a, b), rtol=1e-4, atol=1e-4)
+
+
+@settings(**HYPO)
+@given(
+    m=st.integers(1, 64),
+    k=st.integers(1, 64),
+    n=st.integers(1, 64),
+    bm=st.sampled_from([8, 32, 128]),
+    bn=st.sampled_from([8, 32, 128]),
+    bk=st.sampled_from([8, 32, 128]),
+)
+def test_matmul_block_shape_invariance(m, k, n, bm, bn, bk):
+    """The result must not depend on the BlockSpec tiling."""
+    rng = np.random.default_rng(7)
+    a, b = rand(rng, (m, k)), rand(rng, (k, n))
+    got = matmul_pallas(
+        jnp.asarray(a), jnp.asarray(b), block_m=bm, block_n=bn, block_k=bk
+    )
+    np.testing.assert_allclose(got, matmul_ref(a, b), rtol=1e-4, atol=1e-4)
+
+
+def test_matmul_bf16_inputs_accumulate_f32():
+    rng = np.random.default_rng(3)
+    a = rng.normal(size=(32, 48)).astype(jnp.bfloat16)
+    b = rng.normal(size=(48, 16)).astype(jnp.bfloat16)
+    got = matmul_pallas(jnp.asarray(a), jnp.asarray(b))
+    assert got.dtype == jnp.float32
+    ref = matmul_ref(np.asarray(a, np.float32), np.asarray(b, np.float32))
+    np.testing.assert_allclose(got, ref, rtol=2e-2, atol=2e-2)
+
+
+def test_matmul_grad_matches_jnp():
+    rng = np.random.default_rng(5)
+    a, b = rand(rng, (16, 20)), rand(rng, (20, 8))
+    f = lambda a, b: jnp.sum(matmul(a, b) ** 2)
+    fr = lambda a, b: jnp.sum((a @ b) ** 2)
+    ga, gb = jax.grad(f, (0, 1))(jnp.asarray(a), jnp.asarray(b))
+    gar, gbr = jax.grad(fr, (0, 1))(jnp.asarray(a), jnp.asarray(b))
+    np.testing.assert_allclose(ga, gar, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(gb, gbr, rtol=1e-4, atol=1e-4)
+
+
+def test_matmul_rejects_bad_shapes():
+    with pytest.raises(ValueError):
+        matmul_pallas(jnp.zeros((2, 3)), jnp.zeros((4, 5)))
+    with pytest.raises(ValueError):
+        matmul_pallas(jnp.zeros((2, 3, 4)), jnp.zeros((4, 5)))
+
+
+def test_dense_bias():
+    rng = np.random.default_rng(11)
+    x, w, b = rand(rng, (10, 20)), rand(rng, (20, 5)), rand(rng, (5,))
+    got = dense(jnp.asarray(x), jnp.asarray(w), jnp.asarray(b))
+    np.testing.assert_allclose(got, dense_ref(x, w, b), rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------- conv2d
+
+
+@settings(**HYPO)
+@given(
+    b=st.integers(1, 12),
+    extra_h=st.integers(0, 12),
+    extra_w=st.integers(0, 12),
+    cin=st.sampled_from([1, 3, 16]),
+    cout=st.sampled_from([1, 8, 32]),
+    ksz=st.sampled_from([1, 3, 5]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_conv2d_matches_ref(b, extra_h, extra_w, cin, cout, ksz, seed):
+    rng = np.random.default_rng(seed)
+    h, w = ksz + extra_h, ksz + extra_w
+    x = rand(rng, (b, h, w, cin))
+    wt = rand(rng, (ksz, ksz, cin, cout))
+    got = conv2d_pallas(jnp.asarray(x), jnp.asarray(wt))
+    np.testing.assert_allclose(got, conv2d_ref(x, wt), rtol=1e-4, atol=1e-4)
+
+
+@settings(**HYPO)
+@given(bb=st.sampled_from([1, 2, 8, 16]), b=st.integers(1, 9))
+def test_conv2d_batch_block_invariance(bb, b):
+    rng = np.random.default_rng(13)
+    x = rand(rng, (b, 11, 11, 2))
+    wt = rand(rng, (3, 3, 2, 4))
+    got = conv2d_pallas(jnp.asarray(x), jnp.asarray(wt), block_b=bb)
+    np.testing.assert_allclose(got, conv2d_ref(x, wt), rtol=1e-4, atol=1e-4)
+
+
+def test_conv2d_same_padding_matches_lax():
+    rng = np.random.default_rng(17)
+    x = rand(rng, (2, 16, 128, 3))
+    wt = rand(rng, (3, 3, 3, 4))
+    bias = rand(rng, (4,))
+    got = conv2d_bias(
+        jnp.asarray(x), jnp.asarray(wt), jnp.asarray(bias), padding="SAME"
+    )
+    ref = (
+        jax.lax.conv_general_dilated(
+            x, wt, (1, 1), "SAME", dimension_numbers=("NHWC", "HWIO", "NHWC")
+        )
+        + bias
+    )
+    np.testing.assert_allclose(got, ref, rtol=1e-4, atol=1e-4)
+
+
+def test_conv2d_grad_matches_ref():
+    rng = np.random.default_rng(19)
+    x = rand(rng, (2, 7, 7, 3))
+    wt = rand(rng, (3, 3, 3, 4))
+    f = lambda x, w: jnp.sum(conv2d(x, w) ** 2)
+    fr = lambda x, w: jnp.sum(conv2d_ref(x, w) ** 2)
+    gx, gw = jax.grad(f, (0, 1))(jnp.asarray(x), jnp.asarray(wt))
+    gxr, gwr = jax.grad(fr, (0, 1))(jnp.asarray(x), jnp.asarray(wt))
+    np.testing.assert_allclose(gx, gxr, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(gw, gwr, rtol=1e-4, atol=1e-4)
+
+
+def test_conv2d_rejects_bad_shapes():
+    with pytest.raises(ValueError):
+        conv2d_pallas(jnp.zeros((2, 5, 5, 3)), jnp.zeros((3, 3, 4, 8)))
+    with pytest.raises(ValueError):
+        conv2d_pallas(jnp.zeros((2, 2, 2, 3)), jnp.zeros((3, 3, 3, 8)))
+    with pytest.raises(ValueError):
+        conv2d_bias(
+            jnp.zeros((1, 5, 5, 1)),
+            jnp.zeros((3, 3, 1, 1)),
+            jnp.zeros((1,)),
+            padding="FULL",
+        )
+
+
+# ---------------------------------------------------------- pseudo-Voigt
+
+
+@settings(**HYPO)
+@given(
+    p=st.integers(1, 300),
+    h=st.sampled_from([8, 11, 16]),
+    w=st.sampled_from([8, 11, 128]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_pseudo_voigt_matches_ref(p, h, w, seed):
+    rng = np.random.default_rng(seed)
+    params = np.stack(
+        [
+            rng.uniform(10, 500, p),      # amp
+            rng.uniform(1, w - 2, p),     # x0
+            rng.uniform(1, h - 2, p),     # y0
+            rng.uniform(0.3, 4, p),       # sigma_x
+            rng.uniform(0.3, 4, p),       # sigma_y
+            rng.uniform(0, 1, p),         # eta
+            rng.uniform(0, 10, p),        # bg
+        ],
+        axis=1,
+    ).astype(np.float32)
+    got = pseudo_voigt(jnp.asarray(params), height=h, width=w)
+    ref = pseudo_voigt_ref(params, h, w)
+    np.testing.assert_allclose(got, ref, rtol=1e-5, atol=1e-3)
+
+
+def test_pseudo_voigt_eta_limits():
+    """eta=0 must be the pure Gaussian, eta=1 the pure Lorentzian."""
+    base = np.array([[100.0, 5.0, 5.0, 1.5, 2.0, 0.0, 1.0]], np.float32)
+    g = np.asarray(pseudo_voigt(jnp.asarray(base), height=11, width=11))
+    base[0, 5] = 1.0
+    l = np.asarray(pseudo_voigt(jnp.asarray(base), height=11, width=11))
+    rows = np.arange(11.0)[:, None] - 5.0
+    cols = np.arange(11.0)[None, :] - 5.0
+    gx = cols**2 / 1.5**2
+    gy = rows**2 / 2.0**2
+    np.testing.assert_allclose(
+        g[0], 100 * np.exp(-0.5 * (gx + gy)) + 1, rtol=1e-5, atol=1e-4
+    )
+    np.testing.assert_allclose(
+        l[0], 100 / (1 + gx + gy) + 1, rtol=1e-5, atol=1e-4
+    )
+
+
+def test_pseudo_voigt_peak_at_center():
+    """The maximum must land on the integer pixel nearest (x0, y0)."""
+    params = np.array([[200.0, 3.0, 7.0, 1.0, 1.0, 0.3, 0.0]], np.float32)
+    out = np.asarray(pseudo_voigt(jnp.asarray(params), height=11, width=11))[0]
+    r, c = np.unravel_index(np.argmax(out), out.shape)
+    assert (r, c) == (7, 3)
+
+
+def test_pseudo_voigt_rejects_bad_shapes():
+    with pytest.raises(ValueError):
+        pseudo_voigt(jnp.zeros((4, 6)), height=8, width=8)

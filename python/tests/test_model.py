@@ -1,0 +1,143 @@
+"""L2 correctness: model shapes, Adam semantics, convergence."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+
+
+@pytest.fixture(scope="module")
+def key():
+    return jax.random.PRNGKey(0)
+
+
+# ------------------------------------------------------------------ specs
+
+
+def test_braggnn_param_count():
+    # conv(576+64, 18432+32, 2304+8) + fc(12800+64, 2048+32, 512+16, 32+2)
+    assert M.BRAGGNN.param_count == 36922
+    assert M.BRAGGNN.n_params == 14
+
+
+def test_cookienetae_param_count():
+    # 8 SAME 3x3 convs over channels [1,32,64,96,96,96,64,32,1]
+    assert M.COOKIENETAE.param_count == 314401
+    assert M.COOKIENETAE.n_params == 16
+    # within 10% of the paper's 343,937 (channel widths are not published)
+    assert abs(M.COOKIENETAE.param_count - 343937) / 343937 < 0.10
+
+
+def test_init_matches_spec_shapes(key):
+    for spec in M.MODELS.values():
+        params = M.init_params(spec, key)
+        for ps, p in zip(spec.params, params):
+            assert p.shape == ps.shape, ps.name
+            assert p.dtype == jnp.float32
+        biases = [p for ps, p in zip(spec.params, params) if ps.name.endswith("_b")]
+        for b in biases:
+            assert float(jnp.abs(b).max()) == 0.0
+
+
+# ---------------------------------------------------------------- forward
+
+
+def test_braggnn_forward_shape(key):
+    params = M.init_params(M.BRAGGNN, key)
+    x = jax.random.normal(key, (5, 11, 11, 1))
+    out = M.braggnn_fwd(params, x)
+    assert out.shape == (5, 2)
+    assert bool(jnp.all(jnp.isfinite(out)))
+
+
+def test_cookienetae_forward_shape(key):
+    params = M.init_params(M.COOKIENETAE, key)
+    x = jax.random.normal(key, (2, 16, 128, 1))
+    out = M.cookienetae_fwd(params, x)
+    assert out.shape == (2, 16, 128, 1)
+    # ReLU output layer: non-negative everywhere (it is a pdf estimate)
+    assert float(out.min()) >= 0.0
+
+
+# ------------------------------------------------------------------- adam
+
+
+def _reference_adam(params, grads, m, v, step):
+    """Straight transcription of Kingma & Ba with bias correction."""
+    t = step + 1.0
+    out_p, out_m, out_v = [], [], []
+    for p, g, mi, vi in zip(params, grads, m, v):
+        mi = M.ADAM_B1 * mi + (1 - M.ADAM_B1) * g
+        vi = M.ADAM_B2 * vi + (1 - M.ADAM_B2) * g * g
+        mh = mi / (1 - M.ADAM_B1**t)
+        vh = vi / (1 - M.ADAM_B2**t)
+        out_p.append(p - M.ADAM_LR * mh / (jnp.sqrt(vh) + M.ADAM_EPS))
+        out_m.append(mi)
+        out_v.append(vi)
+    return out_p, out_m, out_v
+
+
+def test_train_step_is_adam(key):
+    spec = M.BRAGGNN
+    n = spec.n_params
+    params = M.init_params(spec, key)
+    m = [jnp.zeros_like(p) for p in params]
+    v = [jnp.zeros_like(p) for p in params]
+    x = jax.random.normal(key, (spec.train_batch, *spec.input_shape))
+    y = jax.random.uniform(key, (spec.train_batch, *spec.target_shape))
+
+    out = M.make_train_step(spec)(*params, *m, *v, jnp.float32(0.0), x, y)
+    got_p, got_m, got_v = out[:n], out[n : 2 * n], out[2 * n : 3 * n]
+    assert float(out[3 * n]) == 1.0  # step incremented
+
+    loss, grads = jax.value_and_grad(
+        lambda p: M.mse_loss(M.braggnn_fwd, p, x, y)
+    )(list(params))
+    np.testing.assert_allclose(float(out[-1]), float(loss), rtol=1e-5)
+    ref_p, ref_m, ref_v = _reference_adam(params, grads, m, v, 0.0)
+    for a, b in zip(got_p, ref_p):
+        np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-6)
+    for a, b in zip(got_m, ref_m):
+        np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-7)
+    for a, b in zip(got_v, ref_v):
+        np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-9)
+
+
+def test_braggnn_loss_decreases(key):
+    spec = M.BRAGGNN
+    n = spec.n_params
+    params = M.init_params(spec, key)
+    state = [*params,
+             *[jnp.zeros_like(p) for p in params],
+             *[jnp.zeros_like(p) for p in params],
+             jnp.float32(0.0)]
+    x = jax.random.normal(key, (spec.train_batch, *spec.input_shape))
+    y = jax.random.uniform(key, (spec.train_batch, *spec.target_shape))
+    step = jax.jit(M.make_train_step(spec))
+    losses = []
+    for _ in range(8):
+        out = step(*state, x, y)
+        losses.append(float(out[-1]))
+        state = list(out[: 3 * n + 1])
+    assert losses[-1] < losses[0] * 0.7, losses
+
+
+def test_infer_matches_forward(key):
+    for spec in M.MODELS.values():
+        params = M.init_params(spec, key)
+        x = jax.random.normal(key, (spec.infer_batch, *spec.input_shape))
+        (got,) = M.make_infer(spec)(*params, x)
+        want = M.FORWARDS[spec.name](params, x)
+        np.testing.assert_allclose(got, want, rtol=1e-6)
+
+
+def test_train_arg_shapes_layout():
+    for spec in M.MODELS.values():
+        shapes = M.train_arg_shapes(spec)
+        n = spec.n_params
+        assert len(shapes) == 3 * n + 3
+        assert shapes[3 * n][0] == ()  # step scalar
+        assert shapes[3 * n + 1][0] == (spec.train_batch, *spec.input_shape)
+        assert shapes[3 * n + 2][0] == (spec.train_batch, *spec.target_shape)

@@ -1,0 +1,59 @@
+//! Bench: regenerate **Fig. 3** — file-transfer throughput between the
+//! SLAC and ALCF DTNs vs file concurrency, both directions — and time
+//! the transfer simulator itself.
+//!
+//! Run: `cargo bench --bench fig3_transfer`
+
+#[path = "harness.rs"]
+mod harness;
+
+use xloop::simnet::VClock;
+use xloop::transfer::{TransferRequest, TransferService};
+
+fn run_transfer(src: &str, dst: &str, bytes: u64, files: usize, k: usize) -> f64 {
+    let mut svc = TransferService::paper(7);
+    let mut clock = VClock::new();
+    let mut req = TransferRequest::split_even("fig3", src.into(), dst.into(), bytes, files);
+    req.concurrency = Some(k);
+    svc.execute(&mut clock, &req).unwrap().throughput_bps()
+}
+
+fn main() {
+    let bytes: u64 = 25_000_000_000;
+    let files = 32;
+
+    harness::group("Fig. 3 series — throughput (GB/s) vs concurrency");
+    println!(
+        "{:>12} {:>18} {:>18}",
+        "concurrency", "SLAC->ALCF (GB/s)", "ALCF->SLAC (GB/s)"
+    );
+    let mut fwd_series = Vec::new();
+    for k in [1usize, 2, 4, 8, 16, 32] {
+        let fwd = run_transfer("slac#dtn", "alcf#dtn", bytes, files, k);
+        let back = run_transfer("alcf#dtn", "slac#dtn", bytes, files, k);
+        fwd_series.push(fwd);
+        println!("{k:>12} {:>18.3} {:>18.3}", fwd / 1e9, back / 1e9);
+    }
+    // paper-shape assertions: monotone rise to >1 GB/s saturation
+    assert!(
+        fwd_series.windows(2).all(|w| w[1] >= w[0] - 1.0),
+        "throughput not monotone"
+    );
+    assert!(fwd_series[0] < 0.5e9, "single stream should be window-bound");
+    assert!(
+        *fwd_series.last().unwrap() > 1.0e9,
+        "saturated throughput should exceed 1 GB/s"
+    );
+    println!("\nshape vs paper: rises with concurrency, saturates >1 GB/s — OK");
+
+    harness::group("simulator cost (the thing criterion would measure)");
+    for (label, files, k) in [
+        ("simulate 25 GB / 32 files / k=8", 32usize, 8usize),
+        ("simulate 25 GB / 256 files / k=16", 256, 16),
+        ("simulate 25 GB / 1024 files / k=32", 1024, 32),
+    ] {
+        harness::bench(label, 2, 10, || {
+            std::hint::black_box(run_transfer("slac#dtn", "alcf#dtn", bytes, files, k));
+        });
+    }
+}

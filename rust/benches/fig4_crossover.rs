@@ -1,0 +1,59 @@
+//! Bench: regenerate **Fig. 4** — conventional vs ML-surrogate total
+//! processing time vs dataset size, with the crossover point — and time
+//! the analytical model evaluation.
+//!
+//! Run: `cargo bench --bench fig4_crossover`
+
+#[path = "harness.rs"]
+mod harness;
+
+use xloop::costmodel::CostParams;
+
+fn main() {
+    let params = CostParams::paper();
+
+    harness::group("Fig. 4 series — total time (s) vs N");
+    println!(
+        "{:>12} {:>18} {:>18} {:>8}",
+        "N peaks", "conventional (s)", "ML surrogate (s)", "winner"
+    );
+    let mut crossings = 0;
+    let mut last_winner_ml = false;
+    let mut n = 1e3;
+    while n <= 1e9 {
+        let fc = params.f_conventional_us(n) / 1e6;
+        let fml = params.f_ml_us(n) / 1e6;
+        let ml = fml < fc;
+        if ml != last_winner_ml && n > 1e3 {
+            crossings += 1;
+        }
+        last_winner_ml = ml;
+        println!(
+            "{n:>12.0e} {fc:>18.2} {fml:>18.2} {:>8}",
+            if ml { "ML" } else { "conv" }
+        );
+        n *= 10.0;
+    }
+    let cross = params.crossover().unwrap();
+    println!("\ncrossover N* = {:.3e} peaks", cross.n_star);
+
+    // paper-shape assertions
+    assert_eq!(crossings, 1, "exactly one crossover expected");
+    assert!(
+        (8.0e6..10.0e6).contains(&cross.n_star),
+        "crossover {:.3e} outside the paper's regime",
+        cross.n_star
+    );
+    assert!(params.f_conventional_us(1e4) < params.f_ml_us(1e4));
+    assert!(params.f_conventional_us(1e8) > params.f_ml_us(1e8));
+    println!("shape vs paper: conventional wins only for small N — OK");
+
+    harness::group("model evaluation cost");
+    harness::bench("f_conventional + f_ml, one N", 100, 1000, || {
+        std::hint::black_box(params.f_conventional_us(std::hint::black_box(1e7)));
+        std::hint::black_box(params.f_ml_us(std::hint::black_box(1e7)));
+    });
+    harness::bench("closed-form crossover", 100, 1000, || {
+        std::hint::black_box(params.crossover().unwrap());
+    });
+}

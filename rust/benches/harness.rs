@@ -1,0 +1,74 @@
+//! Minimal criterion-style bench harness (criterion is not in the
+//! offline crate cache — see Cargo.toml header).
+//!
+//! Provides warmup + timed iterations with mean/std/min/p50/p95 and
+//! criterion-like one-line reporting. Shared by every bench target via
+//! `#[path = "harness.rs"] mod harness;`.
+#![allow(dead_code)] // each bench uses a subset of the stats fields
+
+use std::time::Instant;
+
+#[derive(Debug, Clone, Copy)]
+pub struct BenchStats {
+    pub iters: u32,
+    pub mean_s: f64,
+    pub std_s: f64,
+    pub min_s: f64,
+    pub p50_s: f64,
+    pub p95_s: f64,
+}
+
+pub fn fmt_time(s: f64) -> String {
+    if s < 1e-6 {
+        format!("{:.1} ns", s * 1e9)
+    } else if s < 1e-3 {
+        format!("{:.2} µs", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.2} ms", s * 1e3)
+    } else {
+        format!("{:.3} s", s)
+    }
+}
+
+/// Time `f` for `iters` iterations after `warmup` unmeasured runs.
+pub fn bench<F: FnMut()>(name: &str, warmup: u32, iters: u32, mut f: F) -> BenchStats {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters as usize);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+    let var = samples
+        .iter()
+        .map(|x| (x - mean) * (x - mean))
+        .sum::<f64>()
+        / (samples.len().max(2) - 1) as f64;
+    let mut sorted = samples.clone();
+    sorted.sort_by(|a, b| a.total_cmp(b));
+    let stats = BenchStats {
+        iters,
+        mean_s: mean,
+        std_s: var.sqrt(),
+        min_s: sorted[0],
+        p50_s: sorted[sorted.len() / 2],
+        p95_s: sorted[((sorted.len() as f64 * 0.95) as usize).min(sorted.len() - 1)],
+    };
+    println!(
+        "{name:<52} time: [{} {} {}]  (p95 {}, {} iters)",
+        fmt_time(stats.min_s),
+        fmt_time(stats.mean_s),
+        fmt_time(stats.mean_s + stats.std_s),
+        fmt_time(stats.p95_s),
+        iters
+    );
+    stats
+}
+
+/// Section header, criterion-group style.
+pub fn group(title: &str) {
+    println!("\n=== {title} ===\n");
+}

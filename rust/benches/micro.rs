@@ -1,0 +1,122 @@
+//! Micro-benchmarks of the hot paths (the §Perf baseline/after numbers
+//! in EXPERIMENTS.md come from here):
+//!
+//! * PJRT execution: BraggNN/CookieNetAE train step + batched inference
+//! * conventional analyzer: pseudo-Voigt LM fit per peak
+//! * data generation: render + noise per kilopatch
+//! * fabric: fluid allocation, flow-engine dispatch, JSON parse
+//!
+//! Run: `cargo bench --bench micro`
+
+#[path = "harness.rs"]
+mod harness;
+
+use xloop::analysis;
+use xloop::data::{bragg, BraggConfig};
+use xloop::models::{default_artifacts_dir, ModelMeta, ModelRegistry};
+use xloop::runtime::Runtime;
+use xloop::simnet::{max_min_rates, Topology};
+use xloop::training::{TrainState, Trainer};
+use xloop::util::Json;
+
+fn main() {
+    let dir = default_artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("artifacts missing — run `make artifacts` first");
+        std::process::exit(1);
+    }
+    let registry = ModelRegistry::load(&dir).unwrap();
+    let rt = Runtime::cpu().unwrap();
+
+    harness::group("L2/L1 via PJRT — train step (real execution)");
+    for name in ["braggnn", "cookienetae"] {
+        let meta: ModelMeta = registry.get(name).unwrap().clone();
+        let trainer = Trainer::new(&rt, &meta).unwrap();
+        let mut state = TrainState::init(&meta).unwrap();
+        let n = if name == "braggnn" { 2048 } else { 32 };
+        let ds = match name {
+            "braggnn" => bragg::generate(&BraggConfig::default(), n, 1).unwrap(),
+            _ => xloop::data::cookiebox::generate(&xloop::data::CookieConfig::default(), n, 1)
+                .unwrap(),
+        };
+        let idx: Vec<usize> = (0..meta.train_batch).collect();
+        let (x, y) = ds.gather_batch(&idx).unwrap();
+        let iters = if name == "braggnn" { 10 } else { 3 };
+        let stats = harness::bench(
+            &format!("{name} train step (batch {})", meta.train_batch),
+            1,
+            iters,
+            || {
+                std::hint::black_box(trainer.step(&mut state, &x, &y).unwrap());
+            },
+        );
+        let gflops = meta.train_flops_per_step / 1e9;
+        println!(
+            "    -> {:.2} algorithmic GFLOP/step = {:.2} GFLOP/s effective",
+            gflops,
+            gflops / stats.mean_s
+        );
+    }
+
+    harness::group("L2/L1 via PJRT — batched inference");
+    for name in ["braggnn", "cookienetae"] {
+        let meta: ModelMeta = registry.get(name).unwrap().clone();
+        let exe = rt.load_hlo(&meta.infer_hlo_path()).unwrap();
+        let params = TrainState::init(&meta).unwrap().params;
+        let x = xloop::runtime::Tensor::zeros(
+            std::iter::once(meta.infer_batch)
+                .chain(meta.input_shape.iter().copied())
+                .collect(),
+        );
+        let mut args: Vec<xla::Literal> =
+            params.iter().map(|t| t.to_literal().unwrap()).collect();
+        args.push(x.to_literal().unwrap());
+        let stats = harness::bench(
+            &format!("{name} inference (batch {})", meta.infer_batch),
+            1,
+            10,
+            || {
+                std::hint::black_box(exe.run_literals(&args).unwrap());
+            },
+        );
+        println!(
+            "    -> {:.1} µs/sample (paper E for BraggNN: 0.35 µs on batch GPU)",
+            stats.mean_s / meta.infer_batch as f64 * 1e6
+        );
+    }
+
+    harness::group("conventional analyzer A — pseudo-Voigt LM fit");
+    let ds = bragg::generate(&BraggConfig::default(), 256, 3).unwrap();
+    let stats = harness::bench("fit 64 noisy peaks", 1, 5, || {
+        std::hint::black_box(analysis::label_patches(&ds.x[..64 * 121], 64, 11, 11).unwrap());
+    });
+    println!(
+        "    -> {:.0} µs/peak single-core (paper A: 2.44 µs on 1024 cores = 2500 µs/core)",
+        stats.mean_s / 64.0 * 1e6
+    );
+
+    harness::group("data generation S");
+    harness::bench("render+noise 1024 patches (rust)", 1, 10, || {
+        std::hint::black_box(bragg::generate(&BraggConfig::default(), 1024, 9).unwrap());
+    });
+    let pv = registry.pv().unwrap().clone();
+    let mut rng = xloop::util::Rng::new(4);
+    let params = bragg::sample_params(&BraggConfig::default(), 1024, &mut rng);
+    harness::bench("render 1024 patches (Pallas kernel via PJRT)", 1, 10, || {
+        std::hint::black_box(bragg::render_pjrt(&rt, &pv, &params).unwrap());
+    });
+
+    harness::group("fabric micro");
+    let topo = Topology::paper();
+    let slac = topo.facility("slac").unwrap();
+    let alcf = topo.facility("alcf").unwrap();
+    let route = topo.route(slac, alcf).unwrap().to_vec();
+    let routes: Vec<&[_]> = (0..64).map(|_| route.as_slice()).collect();
+    harness::bench("max-min fair allocation, 64 flows", 100, 1000, || {
+        std::hint::black_box(max_min_rates(&topo, &routes));
+    });
+    let meta_text = std::fs::read_to_string(dir.join("braggnn_meta.json")).unwrap();
+    harness::bench("parse braggnn_meta.json", 100, 1000, || {
+        std::hint::black_box(Json::parse(&meta_text).unwrap());
+    });
+}

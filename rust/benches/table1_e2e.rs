@@ -1,0 +1,74 @@
+//! Bench: regenerate **Table 1** — the end-to-end retraining breakdown
+//! grid — assert its shape against the paper, and time the full flow
+//! engine path (virtual-only, so the numbers measure the coordinator,
+//! not PJRT).
+//!
+//! Run: `cargo bench --bench table1_e2e`
+
+#[path = "harness.rs"]
+mod harness;
+
+use xloop::workflow::{render_table1, Coordinator, Mode, Scenario, TrainingMode};
+
+fn run_cell(model: &str, mode: Mode) -> xloop::workflow::RetrainBreakdown {
+    let mut c = Coordinator::paper(42).unwrap();
+    c.set_training_mode(TrainingMode::VirtualOnly);
+    let scenario = Scenario::table1(model, mode).unwrap();
+    c.run_retraining(&scenario, None).unwrap().breakdown
+}
+
+fn main() {
+    harness::group("Table 1 grid (virtual seconds)");
+    let mut rows = Vec::new();
+    for scenario in Scenario::table1_grid() {
+        rows.push(run_cell(&scenario.model, scenario.mode));
+    }
+    print!("{}", render_table1(&rows));
+
+    // paper-shape assertions
+    let get = |model: &str, needle: &str| {
+        rows.iter()
+            .find(|r| r.model == model && r.mode_label.contains(needle))
+            .unwrap()
+    };
+    let paper: &[(&str, &str, f64)] = &[
+        ("braggnn", "Local", 1102.0),
+        ("braggnn", "Cerebras", 31.0),
+        ("braggnn", "SambaNova", 151.0),
+        ("cookienetae", "Local", 517.0),
+        ("cookienetae", "Cerebras", 15.0),
+        ("cookienetae", "multi-GPU", 97.0),
+    ];
+    println!("\n{:<14} {:<12} {:>10} {:>10} {:>8}", "mode", "model", "paper", "ours", "ratio");
+    for &(model, needle, target) in paper {
+        let r = get(model, needle);
+        let ratio = r.end_to_end_s / target;
+        println!(
+            "{needle:<14} {model:<12} {target:>10.0} {:>10.1} {ratio:>8.2}",
+            r.end_to_end_s
+        );
+        assert!(
+            (0.5..2.0).contains(&ratio),
+            "{model}/{needle}: {:.1}s vs paper {target}s",
+            r.end_to_end_s
+        );
+    }
+    // ordering within each model matches the paper
+    assert!(get("braggnn", "Cerebras").end_to_end_s < get("braggnn", "SambaNova").end_to_end_s);
+    assert!(get("braggnn", "SambaNova").end_to_end_s < get("braggnn", "Local").end_to_end_s);
+    assert!(
+        get("cookienetae", "Cerebras").end_to_end_s < get("cookienetae", "multi-GPU").end_to_end_s
+    );
+    assert!(
+        get("cookienetae", "multi-GPU").end_to_end_s < get("cookienetae", "Local").end_to_end_s
+    );
+    // headline >30x
+    let speedup = get("braggnn", "Local").end_to_end_s / get("braggnn", "Cerebras").end_to_end_s;
+    assert!(speedup > 30.0, "headline speedup {speedup:.1}");
+    println!("\nheadline: {speedup:.1}x remote-vs-local (paper: >30x) — OK");
+
+    harness::group("coordinator cost (flow engine + fabric, no PJRT training)");
+    harness::bench("one remote retraining flow (virtual)", 1, 5, || {
+        std::hint::black_box(run_cell("braggnn", Mode::RemoteCerebras));
+    });
+}

@@ -1,0 +1,164 @@
+//! The generic accelerator time model (see module docs in `mod.rs`).
+
+/// Ring-allreduce cost model for data-parallel gradient sync.
+#[derive(Debug, Clone, Copy)]
+pub struct AllreduceModel {
+    /// per-link bandwidth (bytes/s)
+    pub bw_bps: f64,
+    /// per-hop latency (s); small-tensor syncs are latency-dominated
+    pub latency_s: f64,
+}
+
+impl AllreduceModel {
+    /// Ring allreduce over `n` workers of `bytes` of gradients.
+    /// 2(n-1)/n * bytes volume per worker + 2(n-1) latency hops.
+    pub fn cost(&self, n: u32, bytes: f64) -> f64 {
+        if n <= 1 {
+            return 0.0;
+        }
+        let n = n as f64;
+        2.0 * (n - 1.0) / n * bytes / self.bw_bps + 2.0 * (n - 1.0) * self.latency_s
+    }
+}
+
+/// One accelerator configuration (a Table 1 row's "mode").
+#[derive(Debug, Clone)]
+pub struct AcceleratorModel {
+    pub name: String,
+    /// peak throughput in FLOP/s
+    pub peak_flops: f64,
+    /// achieved fraction of peak on sub-1M-param models
+    pub efficiency: f64,
+    /// fixed per-step cost (framework, launch, host sync)
+    pub per_step_overhead_s: f64,
+    /// data-parallel width (replicas); 1 = single device
+    pub data_parallel: u32,
+    pub allreduce: Option<AllreduceModel>,
+    /// one-time job setup (data load, graph load, worker spin-up)
+    pub setup_s: f64,
+}
+
+/// Breakdown of a modeled training run.
+#[derive(Debug, Clone, Copy)]
+pub struct TrainTime {
+    pub setup_s: f64,
+    pub steps_executed: u64,
+    pub per_step_s: f64,
+    pub total_s: f64,
+    /// fraction of per-step time spent on actual FLOPs
+    pub compute_fraction: f64,
+}
+
+impl AcceleratorModel {
+    /// Time for one synchronized optimizer step. Each of the `dp`
+    /// replicas runs its own base batch (`flops_per_step`), so wall-clock
+    /// compute equals the single-device value; data parallelism pays off
+    /// by cutting the step *count* (see `train_time`).
+    pub fn step_time(&self, flops_per_step: f64, grad_bytes: f64) -> f64 {
+        let compute = flops_per_step / (self.peak_flops * self.efficiency);
+        let sync = self
+            .allreduce
+            .map(|a| a.cost(self.data_parallel, grad_bytes))
+            .unwrap_or(0.0);
+        self.per_step_overhead_s + compute + sync
+    }
+
+    /// Full training-run model for a recipe of `steps` base-batch steps.
+    pub fn train_time(&self, flops_per_step: f64, grad_bytes: f64, steps: u64) -> TrainTime {
+        let dp = self.data_parallel.max(1) as u64;
+        let steps_executed = steps.div_ceil(dp);
+        let compute = flops_per_step / (self.peak_flops * self.efficiency);
+        let sync = self
+            .allreduce
+            .map(|a| a.cost(self.data_parallel, grad_bytes))
+            .unwrap_or(0.0);
+        let per_step_s = self.per_step_overhead_s + compute + sync;
+        TrainTime {
+            setup_s: self.setup_s,
+            steps_executed,
+            per_step_s,
+            total_s: self.setup_s + steps_executed as f64 * per_step_s,
+            compute_fraction: compute / per_step_s,
+        }
+    }
+
+    /// Batched-inference latency model (the paper's E operation).
+    pub fn infer_time(&self, flops_per_batch: f64) -> f64 {
+        self.per_step_overhead_s / 4.0 // no optimizer/sync work
+            + flops_per_batch / (self.peak_flops * self.efficiency)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy() -> AcceleratorModel {
+        AcceleratorModel {
+            name: "toy".into(),
+            peak_flops: 1e12,
+            efficiency: 0.5,
+            per_step_overhead_s: 1e-3,
+            data_parallel: 1,
+            allreduce: None,
+            setup_s: 10.0,
+        }
+    }
+
+    #[test]
+    fn single_device_accounting() {
+        let m = toy();
+        // 5e8 flops / 5e11 eff-flops = 1 ms compute + 1 ms overhead
+        let t = m.train_time(5e8, 0.0, 1000);
+        assert_eq!(t.steps_executed, 1000);
+        assert!((t.per_step_s - 2e-3).abs() < 1e-12);
+        assert!((t.total_s - 12.0).abs() < 1e-9);
+        assert!((t.compute_fraction - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn data_parallel_divides_steps_adds_sync() {
+        let mut m = toy();
+        m.data_parallel = 8;
+        m.allreduce = Some(AllreduceModel {
+            bw_bps: 1e9,
+            latency_s: 5e-4,
+        });
+        let t = m.train_time(5e8, 1e6, 1000);
+        assert_eq!(t.steps_executed, 125);
+        // sync = 2*7/8*1e6/1e9 + 14*5e-4 = 1.75e-3 + 7e-3 = 8.75e-3
+        let sync = 2.0 * 7.0 / 8.0 * 1e6 / 1e9 + 14.0 * 5e-4;
+        assert!((t.per_step_s - (2e-3 + sync)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn allreduce_zero_for_single_worker() {
+        let a = AllreduceModel {
+            bw_bps: 1e9,
+            latency_s: 1e-3,
+        };
+        assert_eq!(a.cost(1, 1e9), 0.0);
+        assert!(a.cost(2, 1e6) > 0.0);
+    }
+
+    #[test]
+    fn allreduce_monotone_in_workers_and_bytes() {
+        let a = AllreduceModel {
+            bw_bps: 1e9,
+            latency_s: 1e-4,
+        };
+        let mut last = 0.0;
+        for n in 2..16 {
+            let c = a.cost(n, 1e6);
+            assert!(c > last);
+            last = c;
+        }
+        assert!(a.cost(4, 2e6) > a.cost(4, 1e6));
+    }
+
+    #[test]
+    fn inference_is_cheaper_than_training_step() {
+        let m = toy();
+        assert!(m.infer_time(5e8) < m.train_time(5e8, 0.0, 1).per_step_s);
+    }
+}

@@ -1,0 +1,230 @@
+//! The conventional Bragg-peak analyzer **A**: pseudo-Voigt LM fitting of
+//! detector patches — the baseline BraggNN replaces (paper §4.2/§5.2:
+//! "positions are typically computed by fitting the observed intensities
+//! ... to a theoretical peak shape such as pseudo-Voigt").
+//!
+//! Real compute, really run: `label_patches` measures its own wallclock
+//! so EXPERIMENTS.md reports an honest C(A) on this machine.
+
+use anyhow::Result;
+
+use super::lm::{solve, LeastSquares, LmOptions, LmResult};
+use super::pseudo_voigt::{jacobian, value, N_PARAMS, P_AMP, P_BG, P_ETA, P_SX, P_SY, P_X0, P_Y0};
+
+/// One fitted peak.
+#[derive(Debug, Clone, Copy)]
+pub struct PeakFit {
+    /// [amp, x0, y0, sigma_x, sigma_y, eta, bg]
+    pub params: [f64; N_PARAMS],
+    pub cost: f64,
+    pub iterations: u32,
+    pub converged: bool,
+}
+
+impl PeakFit {
+    pub fn center(&self) -> (f64, f64) {
+        (self.params[P_X0], self.params[P_Y0])
+    }
+}
+
+struct PatchProblem<'a> {
+    patch: &'a [f32],
+    height: usize,
+    width: usize,
+}
+
+impl LeastSquares<N_PARAMS> for PatchProblem<'_> {
+    fn n_residuals(&self) -> usize {
+        self.patch.len()
+    }
+
+    fn residual(&self, p: &[f64; N_PARAMS], i: usize) -> f64 {
+        let y = (i / self.width) as f64;
+        let x = (i % self.width) as f64;
+        value(p, x, y) - self.patch[i] as f64
+    }
+
+    fn jacobian_row(&self, p: &[f64; N_PARAMS], i: usize) -> [f64; N_PARAMS] {
+        let y = (i / self.width) as f64;
+        let x = (i % self.width) as f64;
+        jacobian(p, x, y)
+    }
+
+    fn project(&self, p: &mut [f64; N_PARAMS]) {
+        p[P_AMP] = p[P_AMP].max(1e-3);
+        p[P_X0] = p[P_X0].clamp(0.0, (self.width - 1) as f64);
+        p[P_Y0] = p[P_Y0].clamp(0.0, (self.height - 1) as f64);
+        p[P_SX] = p[P_SX].clamp(0.2, self.width as f64);
+        p[P_SY] = p[P_SY].clamp(0.2, self.height as f64);
+        p[P_ETA] = p[P_ETA].clamp(0.0, 1.0);
+        p[P_BG] = p[P_BG].max(0.0);
+    }
+}
+
+/// Moment-based initial guess: background from the patch border, centroid
+/// and second moments from background-subtracted intensity.
+pub fn initial_guess(patch: &[f32], height: usize, width: usize) -> [f64; N_PARAMS] {
+    let mut bg = f64::INFINITY;
+    for r in 0..height {
+        for c in 0..width {
+            if r == 0 || c == 0 || r == height - 1 || c == width - 1 {
+                bg = bg.min(patch[r * width + c] as f64);
+            }
+        }
+    }
+    if !bg.is_finite() {
+        bg = 0.0;
+    }
+    let mut mass = 0.0;
+    let mut mx = 0.0;
+    let mut my = 0.0;
+    let mut peak = 0.0f64;
+    for r in 0..height {
+        for c in 0..width {
+            let v = (patch[r * width + c] as f64 - bg).max(0.0);
+            mass += v;
+            mx += v * c as f64;
+            my += v * r as f64;
+            peak = peak.max(v);
+        }
+    }
+    let (x0, y0) = if mass > 0.0 {
+        (mx / mass, my / mass)
+    } else {
+        ((width / 2) as f64, (height / 2) as f64)
+    };
+    let mut vx = 0.0;
+    let mut vy = 0.0;
+    if mass > 0.0 {
+        for r in 0..height {
+            for c in 0..width {
+                let v = (patch[r * width + c] as f64 - bg).max(0.0);
+                vx += v * (c as f64 - x0).powi(2);
+                vy += v * (r as f64 - y0).powi(2);
+            }
+        }
+        vx /= mass;
+        vy /= mass;
+    }
+    [
+        peak.max(1e-3),
+        x0,
+        y0,
+        vx.sqrt().clamp(0.5, width as f64 / 2.0),
+        vy.sqrt().clamp(0.5, height as f64 / 2.0),
+        0.5,
+        bg,
+    ]
+}
+
+/// Fit one patch (row-major `height x width` intensities).
+pub fn fit_patch(patch: &[f32], height: usize, width: usize) -> Result<PeakFit> {
+    let prob = PatchProblem {
+        patch,
+        height,
+        width,
+    };
+    let init = initial_guess(patch, height, width);
+    let LmResult {
+        params,
+        cost,
+        iterations,
+        converged,
+    } = solve(&prob, init, LmOptions::default())?;
+    Ok(PeakFit {
+        params,
+        cost,
+        iterations,
+        converged,
+    })
+}
+
+/// Batch labeling (the paper's A over a staged dataset): returns fits and
+/// the measured wallclock per peak in seconds.
+pub fn label_patches(
+    patches: &[f32],
+    n: usize,
+    height: usize,
+    width: usize,
+) -> Result<(Vec<PeakFit>, f64)> {
+    let px = height * width;
+    assert_eq!(patches.len(), n * px, "patch buffer size mismatch");
+    let started = std::time::Instant::now();
+    let fits = (0..n)
+        .map(|i| fit_patch(&patches[i * px..(i + 1) * px], height, width))
+        .collect::<Result<Vec<_>>>()?;
+    let per_peak = started.elapsed().as_secs_f64() / n.max(1) as f64;
+    Ok((fits, per_peak))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn render(params: &[f64; N_PARAMS], h: usize, w: usize) -> Vec<f32> {
+        let mut out = vec![0.0f32; h * w];
+        for r in 0..h {
+            for c in 0..w {
+                out[r * w + c] = value(params, c as f64, r as f64) as f32;
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn recovers_clean_peak_to_subpixel() {
+        let truth = [150.0, 4.6, 5.8, 1.3, 1.9, 0.3, 4.0];
+        let patch = render(&truth, 11, 11);
+        let fit = fit_patch(&patch, 11, 11).unwrap();
+        let (x, y) = fit.center();
+        assert!((x - 4.6).abs() < 0.02, "x {x}");
+        assert!((y - 5.8).abs() < 0.02, "y {y}");
+        assert!((fit.params[P_SX] - 1.3).abs() < 0.05);
+        assert!((fit.params[P_ETA] - 0.3).abs() < 0.1);
+    }
+
+    #[test]
+    fn recovers_noisy_peak_within_tenth_pixel() {
+        let truth = [200.0, 5.4, 4.2, 1.6, 1.4, 0.5, 6.0];
+        let clean = render(&truth, 11, 11);
+        let mut rng = crate::util::Rng::new(11);
+        let noisy: Vec<f32> = clean
+            .iter()
+            .map(|&v| rng.poisson(v as f64) as f32)
+            .collect();
+        let fit = fit_patch(&noisy, 11, 11).unwrap();
+        let (x, y) = fit.center();
+        assert!((x - 5.4).abs() < 0.1, "x {x}");
+        assert!((y - 4.2).abs() < 0.1, "y {y}");
+    }
+
+    #[test]
+    fn initial_guess_is_reasonable() {
+        let truth = [100.0, 3.0, 7.0, 1.0, 1.0, 0.4, 2.0];
+        let patch = render(&truth, 11, 11);
+        let g = initial_guess(&patch, 11, 11);
+        assert!((g[P_X0] - 3.0).abs() < 1.0, "{g:?}");
+        assert!((g[P_Y0] - 7.0).abs() < 1.0, "{g:?}");
+        assert!(g[P_BG] <= 3.0 + 1e-6);
+    }
+
+    #[test]
+    fn flat_patch_does_not_explode() {
+        let patch = vec![5.0f32; 121];
+        let fit = fit_patch(&patch, 11, 11).unwrap();
+        assert!(fit.params.iter().all(|v| v.is_finite()), "{fit:?}");
+    }
+
+    #[test]
+    fn batch_labeling_times_per_peak() {
+        let truth = [150.0, 5.0, 5.0, 1.5, 1.5, 0.4, 3.0];
+        let one = render(&truth, 11, 11);
+        let mut all = Vec::new();
+        for _ in 0..16 {
+            all.extend_from_slice(&one);
+        }
+        let (fits, per_peak) = label_patches(&all, 16, 11, 11).unwrap();
+        assert_eq!(fits.len(), 16);
+        assert!(per_peak > 0.0 && per_peak < 0.1, "{per_peak}");
+    }
+}

@@ -1,0 +1,257 @@
+//! Levenberg–Marquardt nonlinear least squares.
+//!
+//! Generic over the model: the caller supplies residual + Jacobian rows.
+//! Used by the pseudo-Voigt fitter (the conventional baseline **A**);
+//! written dimension-generically so tests can exercise it on independent
+//! problems.
+
+use anyhow::{bail, Result};
+
+/// A least-squares problem of `N` parameters.
+pub trait LeastSquares<const N: usize> {
+    /// Number of residuals (data points).
+    fn n_residuals(&self) -> usize;
+
+    /// Residual r_i = model_i(params) - observation_i.
+    fn residual(&self, params: &[f64; N], i: usize) -> f64;
+
+    /// d r_i / d params.
+    fn jacobian_row(&self, params: &[f64; N], i: usize) -> [f64; N];
+
+    /// Clamp parameters into their feasible region after each step.
+    fn project(&self, _params: &mut [f64; N]) {}
+}
+
+/// Solver configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct LmOptions {
+    pub max_iters: u32,
+    pub lambda_init: f64,
+    pub lambda_up: f64,
+    pub lambda_down: f64,
+    /// stop when the relative cost improvement falls below this
+    pub ftol: f64,
+}
+
+impl Default for LmOptions {
+    fn default() -> Self {
+        LmOptions {
+            max_iters: 100,
+            lambda_init: 1e-3,
+            lambda_up: 10.0,
+            lambda_down: 0.3,
+            ftol: 1e-10,
+        }
+    }
+}
+
+/// Fit outcome.
+#[derive(Debug, Clone, Copy)]
+pub struct LmResult<const N: usize> {
+    pub params: [f64; N],
+    pub cost: f64,
+    pub iterations: u32,
+    pub converged: bool,
+}
+
+fn cost<const N: usize>(prob: &impl LeastSquares<N>, p: &[f64; N]) -> f64 {
+    (0..prob.n_residuals())
+        .map(|i| {
+            let r = prob.residual(p, i);
+            r * r
+        })
+        .sum::<f64>()
+        * 0.5
+}
+
+/// Solve the damped normal equations (JtJ + λ diag(JtJ)) δ = -Jt r.
+pub fn solve<const N: usize>(
+    prob: &impl LeastSquares<N>,
+    init: [f64; N],
+    opts: LmOptions,
+) -> Result<LmResult<N>> {
+    if prob.n_residuals() < N {
+        bail!(
+            "underdetermined: {} residuals for {N} parameters",
+            prob.n_residuals()
+        );
+    }
+    let mut params = init;
+    prob.project(&mut params);
+    let mut lambda = opts.lambda_init;
+    let mut current_cost = cost(prob, &params);
+    let mut converged = false;
+    let mut iters = 0;
+
+    for _ in 0..opts.max_iters {
+        iters += 1;
+        // accumulate JtJ and Jt r
+        let mut jtj = [[0.0f64; N]; N];
+        let mut jtr = [0.0f64; N];
+        for i in 0..prob.n_residuals() {
+            let r = prob.residual(&params, i);
+            let row = prob.jacobian_row(&params, i);
+            for a in 0..N {
+                jtr[a] += row[a] * r;
+                for b in a..N {
+                    jtj[a][b] += row[a] * row[b];
+                }
+            }
+        }
+        for a in 0..N {
+            for b in 0..a {
+                jtj[a][b] = jtj[b][a];
+            }
+        }
+
+        // try steps until one reduces the cost (or lambda explodes)
+        let mut improved = false;
+        for _ in 0..20 {
+            let mut damped = jtj;
+            for (a, row) in damped.iter_mut().enumerate() {
+                row[a] += lambda * jtj[a][a].max(1e-12);
+            }
+            let Some(delta) = solve_spd::<N>(&damped, &jtr) else {
+                lambda *= opts.lambda_up;
+                continue;
+            };
+            let mut trial = params;
+            for a in 0..N {
+                trial[a] -= delta[a];
+            }
+            prob.project(&mut trial);
+            let trial_cost = cost(prob, &trial);
+            if trial_cost < current_cost {
+                let rel = (current_cost - trial_cost) / current_cost.max(1e-300);
+                params = trial;
+                current_cost = trial_cost;
+                lambda = (lambda * opts.lambda_down).max(1e-12);
+                improved = true;
+                if rel < opts.ftol {
+                    converged = true;
+                }
+                break;
+            }
+            lambda *= opts.lambda_up;
+        }
+        if !improved {
+            // cannot improve: local minimum (or flat) — call it converged
+            converged = true;
+        }
+        if converged {
+            break;
+        }
+    }
+
+    Ok(LmResult {
+        params,
+        cost: current_cost,
+        iterations: iters,
+        converged,
+    })
+}
+
+/// Gaussian elimination with partial pivoting for the (small) SPD system.
+fn solve_spd<const N: usize>(a: &[[f64; N]; N], b: &[f64; N]) -> Option<[f64; N]> {
+    let mut m = *a;
+    let mut rhs = *b;
+    for col in 0..N {
+        let piv = (col..N).max_by(|&i, &j| m[i][col].abs().total_cmp(&m[j][col].abs()))?;
+        if m[piv][col].abs() < 1e-300 {
+            return None;
+        }
+        m.swap(col, piv);
+        rhs.swap(col, piv);
+        for row in col + 1..N {
+            let f = m[row][col] / m[col][col];
+            for k in col..N {
+                m[row][k] -= f * m[col][k];
+            }
+            rhs[row] -= f * rhs[col];
+        }
+    }
+    let mut x = [0.0; N];
+    for row in (0..N).rev() {
+        let mut acc = rhs[row];
+        for k in row + 1..N {
+            acc -= m[row][k] * x[k];
+        }
+        x[row] = acc / m[row][row];
+    }
+    Some(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// y = a * exp(-b x) observed at fixed xs.
+    struct ExpDecay {
+        xs: Vec<f64>,
+        ys: Vec<f64>,
+    }
+
+    impl LeastSquares<2> for ExpDecay {
+        fn n_residuals(&self) -> usize {
+            self.xs.len()
+        }
+        fn residual(&self, p: &[f64; 2], i: usize) -> f64 {
+            p[0] * (-p[1] * self.xs[i]).exp() - self.ys[i]
+        }
+        fn jacobian_row(&self, p: &[f64; 2], i: usize) -> [f64; 2] {
+            let e = (-p[1] * self.xs[i]).exp();
+            [e, -p[0] * self.xs[i] * e]
+        }
+        fn project(&self, p: &mut [f64; 2]) {
+            p[0] = p[0].max(1e-9);
+            p[1] = p[1].clamp(1e-9, 100.0);
+        }
+    }
+
+    #[test]
+    fn recovers_exponential_decay() {
+        let truth = [5.0, 0.7];
+        let xs: Vec<f64> = (0..50).map(|i| i as f64 * 0.1).collect();
+        let ys: Vec<f64> = xs.iter().map(|&x| truth[0] * (-truth[1] * x).exp()).collect();
+        let prob = ExpDecay { xs, ys };
+        let fit = solve(&prob, [1.0, 0.1], LmOptions::default()).unwrap();
+        assert!(fit.converged);
+        assert!((fit.params[0] - 5.0).abs() < 1e-6, "{:?}", fit.params);
+        assert!((fit.params[1] - 0.7).abs() < 1e-6, "{:?}", fit.params);
+        assert!(fit.cost < 1e-12);
+    }
+
+    #[test]
+    fn noisy_fit_stays_close() {
+        let truth = [5.0, 0.7];
+        let mut rng = crate::util::Rng::new(9);
+        let xs: Vec<f64> = (0..200).map(|i| i as f64 * 0.05).collect();
+        let ys: Vec<f64> = xs
+            .iter()
+            .map(|&x| truth[0] * (-truth[1] * x).exp() + 0.02 * rng.normal())
+            .collect();
+        let prob = ExpDecay { xs, ys };
+        let fit = solve(&prob, [2.0, 0.2], LmOptions::default()).unwrap();
+        assert!((fit.params[0] - 5.0).abs() < 0.05, "{:?}", fit.params);
+        assert!((fit.params[1] - 0.7).abs() < 0.02, "{:?}", fit.params);
+    }
+
+    #[test]
+    fn underdetermined_rejected() {
+        let prob = ExpDecay {
+            xs: vec![1.0],
+            ys: vec![1.0],
+        };
+        assert!(solve(&prob, [1.0, 1.0], LmOptions::default()).is_err());
+    }
+
+    #[test]
+    fn projection_respected() {
+        // start outside the feasible box; solution must stay inside
+        let xs: Vec<f64> = (0..20).map(|i| i as f64 * 0.1).collect();
+        let ys: Vec<f64> = xs.iter().map(|&x| 5.0 * (-0.7f64 * x).exp()).collect();
+        let prob = ExpDecay { xs, ys };
+        let fit = solve(&prob, [-3.0, -5.0], LmOptions::default()).unwrap();
+        assert!(fit.params[0] > 0.0 && fit.params[1] > 0.0);
+    }
+}

@@ -1,0 +1,10 @@
+//! Conventional analysis baseline **A**: pseudo-Voigt peak fitting via
+//! Levenberg–Marquardt — the method BraggNN replaces, implemented for
+//! real (it also produces the training labels in the DNNTrainerFlow).
+
+pub mod fitter;
+pub mod lm;
+pub mod pseudo_voigt;
+
+pub use fitter::{fit_patch, initial_guess, label_patches, PeakFit};
+pub use lm::{solve as lm_solve, LeastSquares, LmOptions, LmResult};

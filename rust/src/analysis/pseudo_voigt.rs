@@ -1,0 +1,107 @@
+//! 2-D pseudo-Voigt profile: value + analytic Jacobian.
+//!
+//! This is the peak shape HEDM pipelines fit to detector patches (the
+//! paper's conventional operation **A**). The formula matches
+//! `python/compile/kernels/ref.py::pseudo_voigt_ref` exactly — the L1
+//! Pallas kernel synthesizes with it, this module fits with it.
+
+/// Parameter vector layout: [amp, x0, y0, sigma_x, sigma_y, eta, bg].
+pub const N_PARAMS: usize = 7;
+
+pub const P_AMP: usize = 0;
+pub const P_X0: usize = 1;
+pub const P_Y0: usize = 2;
+pub const P_SX: usize = 3;
+pub const P_SY: usize = 4;
+pub const P_ETA: usize = 5;
+pub const P_BG: usize = 6;
+
+/// Profile value at pixel (x=col, y=row).
+pub fn value(p: &[f64; N_PARAMS], x: f64, y: f64) -> f64 {
+    let dx = x - p[P_X0];
+    let dy = y - p[P_Y0];
+    let gx = dx * dx / (p[P_SX] * p[P_SX]);
+    let gy = dy * dy / (p[P_SY] * p[P_SY]);
+    let gauss = (-0.5 * (gx + gy)).exp();
+    let lorentz = 1.0 / (1.0 + gx + gy);
+    p[P_AMP] * (p[P_ETA] * lorentz + (1.0 - p[P_ETA]) * gauss) + p[P_BG]
+}
+
+/// Analytic partial derivatives at pixel (x, y), in parameter order.
+pub fn jacobian(p: &[f64; N_PARAMS], x: f64, y: f64) -> [f64; N_PARAMS] {
+    let (amp, x0, y0, sx, sy, eta) = (p[P_AMP], p[P_X0], p[P_Y0], p[P_SX], p[P_SY], p[P_ETA]);
+    let dx = x - x0;
+    let dy = y - y0;
+    let gx = dx * dx / (sx * sx);
+    let gy = dy * dy / (sy * sy);
+    let g = (-0.5 * (gx + gy)).exp();
+    let l = 1.0 / (1.0 + gx + gy);
+    let shape = eta * l + (1.0 - eta) * g;
+    // common factor d(F)/d(gx) = d(F)/d(gy) = -(eta*l^2 + 0.5*(1-eta)*g)
+    let df_dg = eta * l * l + 0.5 * (1.0 - eta) * g;
+
+    let mut out = [0.0; N_PARAMS];
+    out[P_AMP] = shape;
+    out[P_X0] = amp * df_dg * 2.0 * dx / (sx * sx);
+    out[P_Y0] = amp * df_dg * 2.0 * dy / (sy * sy);
+    out[P_SX] = amp * df_dg * 2.0 * dx * dx / (sx * sx * sx);
+    out[P_SY] = amp * df_dg * 2.0 * dy * dy / (sy * sy * sy);
+    out[P_ETA] = amp * (l - g);
+    out[P_BG] = 1.0;
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_params() -> [f64; N_PARAMS] {
+        [120.0, 4.3, 6.1, 1.4, 2.1, 0.35, 3.0]
+    }
+
+    #[test]
+    fn value_limits() {
+        let mut p = sample_params();
+        // at the exact center both G and L are 1 -> amp + bg
+        assert!((value(&p, 4.3, 6.1) - 123.0).abs() < 1e-12);
+        // eta=0 pure Gaussian, eta=1 pure Lorentzian at one test pixel
+        p[P_ETA] = 0.0;
+        let dx: f64 = 2.0 / 1.4;
+        let dy: f64 = -1.0 / 2.1;
+        let g = (-0.5 * (dx * dx + dy * dy)).exp();
+        assert!((value(&p, 6.3, 5.1) - (120.0 * g + 3.0)).abs() < 1e-9);
+        p[P_ETA] = 1.0;
+        let l = 1.0 / (1.0 + dx * dx + dy * dy);
+        assert!((value(&p, 6.3, 5.1) - (120.0 * l + 3.0)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn jacobian_matches_finite_differences() {
+        let p = sample_params();
+        for (x, y) in [(4.0, 6.0), (0.0, 0.0), (10.0, 3.0), (4.3, 6.1)] {
+            let jac = jacobian(&p, x, y);
+            for i in 0..N_PARAMS {
+                let h = 1e-6 * p[i].abs().max(1e-3);
+                let mut pp = p;
+                pp[i] += h;
+                let mut pm = p;
+                pm[i] -= h;
+                let fd = (value(&pp, x, y) - value(&pm, x, y)) / (2.0 * h);
+                assert!(
+                    (jac[i] - fd).abs() < 1e-4 * fd.abs().max(1.0),
+                    "param {i} at ({x},{y}): analytic {} vs fd {fd}",
+                    jac[i]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn matches_kernel_formula_symmetry() {
+        // symmetric params -> symmetric surface (same invariant the L1
+        // kernel test checks)
+        let p = [100.0, 5.0, 5.0, 1.5, 1.5, 0.4, 2.0];
+        assert!((value(&p, 0.0, 0.0) - value(&p, 10.0, 10.0)).abs() < 1e-12);
+        assert!((value(&p, 0.0, 10.0) - value(&p, 10.0, 0.0)).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,271 @@
+//! Config system: JSON fabric/scenario configuration with defaults.
+//!
+//! Everything the paper fabric hard-codes can be overridden from a
+//! config file (CLI: `--config path.json`): topology, transfer tunables,
+//! accelerator constants, and scenario parameters. Partial configs are
+//! fine — anything omitted keeps the paper-calibrated default.
+//!
+//! ```json
+//! {
+//!   "topology": { "facilities": [...], "links": [...], "routes": [...] },
+//!   "transfer": { "per_flow_cap_gbps": 4.0, "auto_concurrency": 16 },
+//!   "accelerators": { "alcf#cerebras": { "per_step_overhead_ms": 0.2 } },
+//!   "scenario":  { "staged_gb": 5.0, "real_samples": 1024, "seed": 7 }
+//! }
+//! ```
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::simnet::Topology;
+use crate::util::Json;
+use crate::workflow::{Coordinator, Scenario};
+
+/// Parsed configuration (all sections optional).
+#[derive(Debug, Clone, Default)]
+pub struct Config {
+    pub topology: Option<Topology>,
+    pub transfer: Option<TransferOverrides>,
+    pub accelerators: Vec<AccelOverride>,
+    pub scenario: Option<ScenarioOverrides>,
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct TransferOverrides {
+    pub per_file_startup_s: Option<f64>,
+    pub per_flow_cap_gbps: Option<f64>,
+    pub auto_concurrency: Option<usize>,
+    pub submit_overhead_s: Option<f64>,
+    pub completion_detect_s: Option<f64>,
+}
+
+#[derive(Debug, Clone)]
+pub struct AccelOverride {
+    pub endpoint: String,
+    pub peak_tflops: Option<f64>,
+    pub efficiency: Option<f64>,
+    pub per_step_overhead_ms: Option<f64>,
+    pub setup_s: Option<f64>,
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct ScenarioOverrides {
+    pub staged_gb: Option<f64>,
+    pub real_samples: Option<usize>,
+    pub seed: Option<u64>,
+}
+
+impl Config {
+    pub fn load(path: &Path) -> Result<Config> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading config {path:?}"))?;
+        let j = Json::parse(&text).with_context(|| format!("parsing config {path:?}"))?;
+        Self::from_json(&j)
+    }
+
+    pub fn from_json(j: &Json) -> Result<Config> {
+        let mut cfg = Config::default();
+        if !j.get("topology").is_null() {
+            cfg.topology = Some(Topology::from_json(j.get("topology"))?);
+        }
+        let t = j.get("transfer");
+        if !t.is_null() {
+            cfg.transfer = Some(TransferOverrides {
+                per_file_startup_s: t.get("per_file_startup_s").as_f64(),
+                per_flow_cap_gbps: t.get("per_flow_cap_gbps").as_f64(),
+                auto_concurrency: t.get("auto_concurrency").as_usize(),
+                submit_overhead_s: t.get("submit_overhead_s").as_f64(),
+                completion_detect_s: t.get("completion_detect_s").as_f64(),
+            });
+        }
+        if let Some(obj) = j.get("accelerators").as_obj() {
+            for (endpoint, a) in obj {
+                cfg.accelerators.push(AccelOverride {
+                    endpoint: endpoint.clone(),
+                    peak_tflops: a.get("peak_tflops").as_f64(),
+                    efficiency: a.get("efficiency").as_f64(),
+                    per_step_overhead_ms: a.get("per_step_overhead_ms").as_f64(),
+                    setup_s: a.get("setup_s").as_f64(),
+                });
+            }
+        }
+        let s = j.get("scenario");
+        if !s.is_null() {
+            cfg.scenario = Some(ScenarioOverrides {
+                staged_gb: s.get("staged_gb").as_f64(),
+                real_samples: s.get("real_samples").as_usize(),
+                seed: s.get("seed").as_u64(),
+            });
+        }
+        Ok(cfg)
+    }
+
+    /// Apply to a built coordinator (topology swaps the whole transfer
+    /// fabric; endpoints must exist in the new topology when swapped).
+    pub fn apply(&self, c: &mut Coordinator) -> Result<()> {
+        if let Some(topo) = &self.topology {
+            // validate the paper endpoints still resolve
+            for ep in ["slac", "alcf"] {
+                topo.facility(ep)
+                    .with_context(|| format!("custom topology must keep facility `{ep}`"))?;
+            }
+            c.world.transfer.topo = topo.clone();
+        }
+        if let Some(t) = &self.transfer {
+            let p = &mut c.world.transfer.params;
+            if let Some(v) = t.per_file_startup_s {
+                p.per_file_startup_s = v;
+            }
+            if let Some(v) = t.per_flow_cap_gbps {
+                p.per_flow_cap_bps = v * 1e9 / 8.0;
+            }
+            if let Some(v) = t.auto_concurrency {
+                p.auto_concurrency = v;
+            }
+            if let Some(v) = t.submit_overhead_s {
+                p.submit_overhead_s = v;
+            }
+            if let Some(v) = t.completion_detect_s {
+                p.completion_detect_s = v;
+            }
+        }
+        for ov in &self.accelerators {
+            let accel = c
+                .world
+                .accels
+                .get_mut(&ov.endpoint)
+                .with_context(|| format!("no accelerator endpoint `{}`", ov.endpoint))?;
+            if let Some(v) = ov.peak_tflops {
+                accel.peak_flops = v * 1e12;
+            }
+            if let Some(v) = ov.efficiency {
+                accel.efficiency = v;
+            }
+            if let Some(v) = ov.per_step_overhead_ms {
+                accel.per_step_overhead_s = v / 1e3;
+            }
+            if let Some(v) = ov.setup_s {
+                accel.setup_s = v;
+            }
+        }
+        Ok(())
+    }
+
+    /// Apply the scenario section onto a scenario.
+    pub fn apply_scenario(&self, s: &mut Scenario) {
+        if let Some(ov) = &self.scenario {
+            if let Some(gb) = ov.staged_gb {
+                s.staged_bytes = (gb * 1e9) as u64;
+            }
+            if let Some(n) = ov.real_samples {
+                s.real_samples = n;
+            }
+            if let Some(seed) = ov.seed {
+                s.seed = seed;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workflow::Mode;
+
+    fn artifacts_present() -> bool {
+        crate::models::default_artifacts_dir()
+            .join("manifest.json")
+            .exists()
+    }
+
+    #[test]
+    fn empty_config_is_noop() {
+        let cfg = Config::from_json(&Json::parse("{}").unwrap()).unwrap();
+        assert!(cfg.topology.is_none());
+        assert!(cfg.transfer.is_none());
+        assert!(cfg.accelerators.is_empty());
+    }
+
+    #[test]
+    fn parses_and_applies_overrides() {
+        if !artifacts_present() {
+            return;
+        }
+        let j = Json::parse(
+            r#"{
+              "transfer": {"per_flow_cap_gbps": 8.0, "auto_concurrency": 16},
+              "accelerators": {"alcf#cerebras": {"per_step_overhead_ms": 0.1, "setup_s": 1.0}},
+              "scenario": {"staged_gb": 1.0, "real_samples": 64, "seed": 5}
+            }"#,
+        )
+        .unwrap();
+        let cfg = Config::from_json(&j).unwrap();
+        let mut c = Coordinator::paper(1).unwrap();
+        cfg.apply(&mut c).unwrap();
+        assert_eq!(c.world.transfer.params.auto_concurrency, 16);
+        assert!((c.world.transfer.params.per_flow_cap_bps - 1e9).abs() < 1.0);
+        let a = c.world.accel("alcf#cerebras").unwrap();
+        assert!((a.per_step_overhead_s - 1e-4).abs() < 1e-12);
+        assert_eq!(a.setup_s, 1.0);
+
+        let mut s = Scenario::table1("braggnn", Mode::RemoteCerebras).unwrap();
+        cfg.apply_scenario(&mut s);
+        assert_eq!(s.staged_bytes, 1_000_000_000);
+        assert_eq!(s.real_samples, 64);
+        assert_eq!(s.seed, 5);
+    }
+
+    #[test]
+    fn unknown_accelerator_rejected() {
+        if !artifacts_present() {
+            return;
+        }
+        let j = Json::parse(r#"{"accelerators": {"moon#tpu": {"setup_s": 1.0}}}"#).unwrap();
+        let cfg = Config::from_json(&j).unwrap();
+        let mut c = Coordinator::paper(1).unwrap();
+        let err = cfg.apply(&mut c).unwrap_err();
+        assert!(err.to_string().contains("moon#tpu"), "{err}");
+    }
+
+    #[test]
+    fn custom_topology_must_keep_facilities() {
+        if !artifacts_present() {
+            return;
+        }
+        let j = Json::parse(
+            r#"{"topology": {
+              "facilities": ["x", "y"],
+              "links": [{"name": "l", "gbps": 1.0, "latency_ms": 1.0}],
+              "routes": [{"from": "x", "to": "y", "links": ["l"]}]
+            }}"#,
+        )
+        .unwrap();
+        let cfg = Config::from_json(&j).unwrap();
+        let mut c = Coordinator::paper(1).unwrap();
+        assert!(cfg.apply(&mut c).is_err());
+    }
+
+    #[test]
+    fn faster_cerebras_config_shrinks_training_time() {
+        if !artifacts_present() {
+            return;
+        }
+        let j = Json::parse(
+            r#"{"accelerators": {"alcf#cerebras": {"per_step_overhead_ms": 0.05}}}"#,
+        )
+        .unwrap();
+        let cfg = Config::from_json(&j).unwrap();
+        let mut c = Coordinator::paper(2).unwrap();
+        c.set_training_mode(crate::workflow::TrainingMode::VirtualOnly);
+        cfg.apply(&mut c).unwrap();
+        let s = Scenario::table1("braggnn", Mode::RemoteCerebras).unwrap();
+        let outcome = c.run_retraining(&s, None).unwrap();
+        // 76k steps * 0.05ms ~ 4s (default overhead would give ~18s)
+        assert!(
+            outcome.breakdown.training_s < 10.0,
+            "{}",
+            outcome.breakdown.training_s
+        );
+    }
+}

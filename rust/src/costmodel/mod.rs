@@ -1,0 +1,19 @@
+//! The paper's analytical performance model (§4.1–4.2, Eqs. 1–5).
+//!
+//! Six basic operations over a datum `d`:
+//!   **C**ollect, **S**imulate, **A**nalyze (conventional), **T**rain,
+//!   **D**eploy, **E**stimate (ML surrogate inference),
+//! plus data movement `a -d-> b`. Costs compose into the two strategies
+//! compared in Fig. 4:
+//!
+//!   Eq. 4 (conventional):  f_c(N)  = N*(c_move + c_analyze + c_return)
+//!   Eq. 5 (ML surrogate):  f_ml(N) = p*N*(c_move + c_analyze + c_label)
+//!                                    + T_train + T_model_move
+//!                                    + (1-p)*N*c_estimate
+//!
+//! `paper()` uses the exact §4.2 constants (BraggNN / HEDM on a 1024-core
+//! cluster, 1 GB/s WAN, Cerebras 19 s training).
+
+pub mod eqs;
+
+pub use eqs::{overlapped_label_train_s, CostParams, CrossoverReport};

@@ -1,0 +1,274 @@
+//! Synthetic HEDM Bragg-peak patches (the paper's operation **S**).
+//!
+//! Each sample is an 11x11 detector patch holding one pseudo-Voigt peak
+//! with Poisson counting noise; the label is the true sub-pixel center,
+//! normalized to [0, 1]^2 — exactly what BraggNN regresses.
+//!
+//! Two render paths produce identical surfaces (tested against each
+//! other):
+//! * `render_cpu` — the rust formula in `analysis::pseudo_voigt`;
+//! * `render_pjrt` — the AOT-lowered L1 Pallas kernel
+//!   (`artifacts/pv_surface.hlo.txt`), putting the Pallas kernel on the
+//!   runtime data path.
+
+use anyhow::{bail, Result};
+
+use super::container::Dataset;
+use crate::analysis::pseudo_voigt::{value, N_PARAMS};
+use crate::models::PvMeta;
+use crate::runtime::{Runtime, Tensor};
+use crate::util::Rng;
+
+pub const PATCH: usize = 11;
+
+/// Peak parameter sampling ranges (kept well inside the patch so the
+/// conventional fitter and BraggNN both have a fair task).
+#[derive(Debug, Clone)]
+pub struct BraggConfig {
+    pub amp: (f64, f64),
+    pub center_margin: f64,
+    pub sigma: (f64, f64),
+    pub eta: (f64, f64),
+    pub bg: (f64, f64),
+    pub poisson_noise: bool,
+    /// scale each patch to peak 1 (BraggNN's input normalization)
+    pub normalize: bool,
+}
+
+impl Default for BraggConfig {
+    fn default() -> Self {
+        BraggConfig {
+            amp: (80.0, 400.0),
+            center_margin: 3.0,
+            sigma: (0.8, 2.2),
+            eta: (0.1, 0.9),
+            bg: (1.0, 8.0),
+            poisson_noise: true,
+            normalize: true,
+        }
+    }
+}
+
+/// Draw `n` sets of pseudo-Voigt parameters.
+pub fn sample_params(cfg: &BraggConfig, n: usize, rng: &mut Rng) -> Vec<[f64; N_PARAMS]> {
+    let lo = cfg.center_margin;
+    let hi = (PATCH - 1) as f64 - cfg.center_margin;
+    (0..n)
+        .map(|_| {
+            [
+                rng.uniform(cfg.amp.0, cfg.amp.1),
+                rng.uniform(lo, hi),
+                rng.uniform(lo, hi),
+                rng.uniform(cfg.sigma.0, cfg.sigma.1),
+                rng.uniform(cfg.sigma.0, cfg.sigma.1),
+                rng.uniform(cfg.eta.0, cfg.eta.1),
+                rng.uniform(cfg.bg.0, cfg.bg.1),
+            ]
+        })
+        .collect()
+}
+
+/// Render surfaces with the rust formula.
+pub fn render_cpu(params: &[[f64; N_PARAMS]]) -> Vec<f32> {
+    let mut out = Vec::with_capacity(params.len() * PATCH * PATCH);
+    for p in params {
+        for r in 0..PATCH {
+            for c in 0..PATCH {
+                out.push(value(p, c as f64, r as f64) as f32);
+            }
+        }
+    }
+    out
+}
+
+/// Render surfaces by executing the AOT Pallas kernel via PJRT.
+pub fn render_pjrt(
+    rt: &Runtime,
+    pv: &PvMeta,
+    params: &[[f64; N_PARAMS]],
+) -> Result<Vec<f32>> {
+    if pv.height != PATCH || pv.width != PATCH {
+        bail!("pv artifact is {}x{}, expected {PATCH}x{PATCH}", pv.height, pv.width);
+    }
+    let exe = rt.load_hlo(&pv.hlo_path())?;
+    let mut out = Vec::with_capacity(params.len() * PATCH * PATCH);
+    for chunk in params.chunks(pv.batch) {
+        // the artifact has a fixed batch; pad the tail with benign rows
+        let mut flat = Vec::with_capacity(pv.batch * 7);
+        for p in chunk {
+            flat.extend(p.iter().map(|&v| v as f32));
+        }
+        for _ in chunk.len()..pv.batch {
+            flat.extend_from_slice(&[0.0, 0.0, 0.0, 1.0, 1.0, 0.5, 0.0]);
+        }
+        let t = Tensor::new(vec![pv.batch, 7], flat)?;
+        let res = exe.run(&[t])?;
+        let surf = &res[0];
+        out.extend_from_slice(&surf.data()[..chunk.len() * PATCH * PATCH]);
+    }
+    Ok(out)
+}
+
+/// Apply Poisson counting noise in place.
+pub fn add_poisson_noise(surfaces: &mut [f32], rng: &mut Rng) {
+    for v in surfaces.iter_mut() {
+        *v = rng.poisson((*v).max(0.0) as f64) as f32;
+    }
+}
+
+/// Scale each patch to peak intensity 1 (BraggNN input convention).
+pub fn normalize_patches(surfaces: &mut [f32]) {
+    for patch in surfaces.chunks_mut(PATCH * PATCH) {
+        let max = patch.iter().cloned().fold(0.0f32, f32::max);
+        if max > 0.0 {
+            for v in patch.iter_mut() {
+                *v /= max;
+            }
+        }
+    }
+}
+
+/// Labels: true centers normalized by the patch extent (col, row order —
+/// matching the (x, y) the paper's BraggNN predicts).
+pub fn labels(params: &[[f64; N_PARAMS]]) -> Vec<f32> {
+    let denom = (PATCH - 1) as f64;
+    params
+        .iter()
+        .flat_map(|p| [(p[1] / denom) as f32, (p[2] / denom) as f32])
+        .collect()
+}
+
+/// Generate a full dataset (CPU render path).
+pub fn generate(cfg: &BraggConfig, n: usize, seed: u64) -> Result<Dataset> {
+    let mut rng = Rng::new(seed);
+    let params = sample_params(cfg, n, &mut rng);
+    let mut x = render_cpu(&params);
+    if cfg.poisson_noise {
+        add_poisson_noise(&mut x, &mut rng);
+    }
+    if cfg.normalize {
+        normalize_patches(&mut x);
+    }
+    let y = labels(&params);
+    Dataset::new(
+        format!("bragg-{n}"),
+        vec![PATCH, PATCH, 1],
+        vec![2],
+        x,
+        y,
+    )
+}
+
+/// Generate via the PJRT Pallas kernel (noise still rust-side).
+pub fn generate_pjrt(
+    rt: &Runtime,
+    pv: &PvMeta,
+    cfg: &BraggConfig,
+    n: usize,
+    seed: u64,
+) -> Result<Dataset> {
+    let mut rng = Rng::new(seed);
+    let params = sample_params(cfg, n, &mut rng);
+    let mut x = render_pjrt(rt, pv, &params)?;
+    if cfg.poisson_noise {
+        add_poisson_noise(&mut x, &mut rng);
+    }
+    if cfg.normalize {
+        normalize_patches(&mut x);
+    }
+    let y = labels(&params);
+    Dataset::new(
+        format!("bragg-pjrt-{n}"),
+        vec![PATCH, PATCH, 1],
+        vec![2],
+        x,
+        y,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dataset_shapes_and_label_range() {
+        let d = generate(&BraggConfig::default(), 64, 3).unwrap();
+        assert_eq!(d.n, 64);
+        assert_eq!(d.input_shape, vec![11, 11, 1]);
+        assert_eq!(d.wire_sample_bytes, 2 * 121 + 8);
+        for v in &d.y {
+            assert!((0.0..=1.0).contains(v), "{v}");
+        }
+    }
+
+    #[test]
+    fn deterministic_by_seed() {
+        let a = generate(&BraggConfig::default(), 8, 42).unwrap();
+        let b = generate(&BraggConfig::default(), 8, 42).unwrap();
+        assert_eq!(a.x, b.x);
+        let c = generate(&BraggConfig::default(), 8, 43).unwrap();
+        assert_ne!(a.x, c.x);
+    }
+
+    #[test]
+    fn peak_lands_where_label_says() {
+        let mut cfg = BraggConfig::default();
+        cfg.poisson_noise = false;
+        let d = generate(&cfg, 16, 7).unwrap();
+        for i in 0..d.n {
+            let patch = &d.x[i * 121..(i + 1) * 121];
+            let (mut best, mut br, mut bc) = (f32::NEG_INFINITY, 0usize, 0usize);
+            for r in 0..11 {
+                for c in 0..11 {
+                    if patch[r * 11 + c] > best {
+                        best = patch[r * 11 + c];
+                        br = r;
+                        bc = c;
+                    }
+                }
+            }
+            let lx = d.y[2 * i] * 10.0;
+            let ly = d.y[2 * i + 1] * 10.0;
+            assert!((bc as f32 - lx).abs() <= 1.0, "sample {i}: col {bc} vs {lx}");
+            assert!((br as f32 - ly).abs() <= 1.0, "sample {i}: row {br} vs {ly}");
+        }
+    }
+
+    #[test]
+    fn pjrt_render_matches_cpu_render() {
+        let dir = crate::models::default_artifacts_dir();
+        if !dir.join("pv_meta.json").exists() {
+            return; // artifacts not built
+        }
+        let pv = PvMeta::load(&dir).unwrap();
+        let rt = Runtime::cpu().unwrap();
+        let mut rng = Rng::new(5);
+        // deliberately not a multiple of the artifact batch
+        let params = sample_params(&BraggConfig::default(), 300, &mut rng);
+        let cpu = render_cpu(&params);
+        let pjrt = render_pjrt(&rt, &pv, &params).unwrap();
+        assert_eq!(cpu.len(), pjrt.len());
+        for (a, b) in cpu.iter().zip(&pjrt) {
+            assert!((a - b).abs() < 1e-2 * a.abs().max(1.0), "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn conventional_fitter_recovers_generated_labels() {
+        // closes the loop: generator -> analyzer A -> label accuracy
+        let mut cfg = BraggConfig::default();
+        cfg.poisson_noise = true;
+        let d = generate(&cfg, 24, 9).unwrap();
+        let (fits, per_peak) =
+            crate::analysis::label_patches(&d.x, d.n, 11, 11).unwrap();
+        let mut worst: f64 = 0.0;
+        for (i, fit) in fits.iter().enumerate() {
+            let (x, y) = fit.center();
+            let lx = d.y[2 * i] as f64 * 10.0;
+            let ly = d.y[2 * i + 1] as f64 * 10.0;
+            worst = worst.max((x - lx).abs()).max((y - ly).abs());
+        }
+        assert!(worst < 0.35, "worst center error {worst} px");
+        assert!(per_peak < 0.1, "labeling took {per_peak}s/peak");
+    }
+}

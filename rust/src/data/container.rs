@@ -1,0 +1,208 @@
+//! In-memory supervised dataset + batch iteration.
+
+use anyhow::{bail, Result};
+
+use crate::runtime::Tensor;
+use crate::util::Rng;
+
+/// A supervised dataset of flattened f32 samples.
+#[derive(Debug, Clone)]
+pub struct Dataset {
+    pub name: String,
+    /// per-sample input shape (e.g. [11, 11, 1])
+    pub input_shape: Vec<usize>,
+    /// per-sample target shape (e.g. [2])
+    pub target_shape: Vec<usize>,
+    /// row-major [n, input_shape...]
+    pub x: Vec<f32>,
+    /// row-major [n, target_shape...]
+    pub y: Vec<f32>,
+    pub n: usize,
+    /// bytes of one sample on the wire (detector pixels are 16-bit)
+    pub wire_sample_bytes: usize,
+}
+
+impl Dataset {
+    pub fn new(
+        name: impl Into<String>,
+        input_shape: Vec<usize>,
+        target_shape: Vec<usize>,
+        x: Vec<f32>,
+        y: Vec<f32>,
+    ) -> Result<Dataset> {
+        let in_elems: usize = input_shape.iter().product();
+        let out_elems: usize = target_shape.iter().product();
+        if in_elems == 0 || x.len() % in_elems != 0 {
+            bail!("x length {} not a multiple of sample size {in_elems}", x.len());
+        }
+        let n = x.len() / in_elems;
+        if y.len() != n * out_elems {
+            bail!("y length {} != {} samples x {out_elems}", y.len(), n);
+        }
+        let wire_sample_bytes = 2 * in_elems + 4 * out_elems;
+        Ok(Dataset {
+            name: name.into(),
+            input_shape,
+            target_shape,
+            x,
+            y,
+            n,
+            wire_sample_bytes,
+        })
+    }
+
+    pub fn in_elems(&self) -> usize {
+        self.input_shape.iter().product()
+    }
+
+    pub fn out_elems(&self) -> usize {
+        self.target_shape.iter().product()
+    }
+
+    /// Total wire size (what the transfer service moves).
+    pub fn wire_bytes(&self) -> u64 {
+        (self.n * self.wire_sample_bytes) as u64
+    }
+
+    /// Build batch tensors from explicit sample indices (wraps around).
+    pub fn gather_batch(&self, indices: &[usize]) -> Result<(Tensor, Tensor)> {
+        let ie = self.in_elems();
+        let oe = self.out_elems();
+        let b = indices.len();
+        let mut bx = Vec::with_capacity(b * ie);
+        let mut by = Vec::with_capacity(b * oe);
+        for &raw in indices {
+            let i = raw % self.n;
+            bx.extend_from_slice(&self.x[i * ie..(i + 1) * ie]);
+            by.extend_from_slice(&self.y[i * oe..(i + 1) * oe]);
+        }
+        let mut xs = vec![b];
+        xs.extend(&self.input_shape);
+        let mut ys = vec![b];
+        ys.extend(&self.target_shape);
+        Ok((Tensor::new(xs, bx)?, Tensor::new(ys, by)?))
+    }
+
+    /// Split into (train, validation) at a fraction.
+    pub fn split(&self, train_frac: f64) -> Result<(Dataset, Dataset)> {
+        if !(0.0..1.0).contains(&train_frac) || self.n < 2 {
+            bail!("bad split {train_frac} of {} samples", self.n);
+        }
+        let k = ((self.n as f64 * train_frac) as usize).clamp(1, self.n - 1);
+        let ie = self.in_elems();
+        let oe = self.out_elems();
+        let a = Dataset::new(
+            format!("{}-train", self.name),
+            self.input_shape.clone(),
+            self.target_shape.clone(),
+            self.x[..k * ie].to_vec(),
+            self.y[..k * oe].to_vec(),
+        )?;
+        let b = Dataset::new(
+            format!("{}-val", self.name),
+            self.input_shape.clone(),
+            self.target_shape.clone(),
+            self.x[k * ie..].to_vec(),
+            self.y[k * oe..].to_vec(),
+        )?;
+        Ok((a, b))
+    }
+}
+
+/// Shuffled epoch-based batch index iterator.
+#[derive(Debug)]
+pub struct BatchIter {
+    order: Vec<usize>,
+    cursor: usize,
+    batch: usize,
+    rng: Rng,
+}
+
+impl BatchIter {
+    pub fn new(n: usize, batch: usize, seed: u64) -> BatchIter {
+        assert!(n > 0 && batch > 0);
+        let mut rng = Rng::new(seed);
+        let mut order: Vec<usize> = (0..n).collect();
+        rng.shuffle(&mut order);
+        BatchIter {
+            order,
+            cursor: 0,
+            batch,
+            rng,
+        }
+    }
+
+    /// Next batch of indices (reshuffles each epoch; wraps the tail).
+    pub fn next_batch(&mut self) -> Vec<usize> {
+        let mut out = Vec::with_capacity(self.batch);
+        for _ in 0..self.batch {
+            if self.cursor >= self.order.len() {
+                self.rng.shuffle(&mut self.order);
+                self.cursor = 0;
+            }
+            out.push(self.order[self.cursor]);
+            self.cursor += 1;
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy() -> Dataset {
+        Dataset::new(
+            "toy",
+            vec![2, 2],
+            vec![1],
+            (0..40).map(|v| v as f32).collect(), // 10 samples of 4
+            (0..10).map(|v| v as f32).collect(),
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn shapes_and_sizes() {
+        let d = toy();
+        assert_eq!(d.n, 10);
+        assert_eq!(d.wire_sample_bytes, 2 * 4 + 4);
+        assert_eq!(d.wire_bytes(), 120);
+    }
+
+    #[test]
+    fn gather_batch_layout() {
+        let d = toy();
+        let (x, y) = d.gather_batch(&[2, 0]).unwrap();
+        assert_eq!(x.shape(), &[2, 2, 2]);
+        assert_eq!(&x.data()[..4], &[8.0, 9.0, 10.0, 11.0]); // sample 2
+        assert_eq!(y.data(), &[2.0, 0.0]);
+    }
+
+    #[test]
+    fn split_preserves_counts() {
+        let d = toy();
+        let (a, b) = d.split(0.8).unwrap();
+        assert_eq!(a.n, 8);
+        assert_eq!(b.n, 2);
+        assert!(d.split(1.5).is_err());
+    }
+
+    #[test]
+    fn batch_iter_covers_epoch() {
+        let mut it = BatchIter::new(10, 3, 1);
+        let mut seen = std::collections::BTreeSet::new();
+        for _ in 0..4 {
+            for i in it.next_batch() {
+                seen.insert(i);
+            }
+        }
+        assert_eq!(seen.len(), 10); // full epoch covered within 12 draws
+    }
+
+    #[test]
+    fn mismatched_lengths_rejected() {
+        assert!(Dataset::new("bad", vec![2], vec![1], vec![0.0; 5], vec![0.0; 2]).is_err());
+        assert!(Dataset::new("bad", vec![2], vec![1], vec![0.0; 4], vec![0.0; 3]).is_err());
+    }
+}

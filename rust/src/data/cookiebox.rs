@@ -1,0 +1,192 @@
+//! Synthetic CookieBox eToF data (paper §5.2).
+//!
+//! The CookieBox is "an angular array of sixteen electron Time-of-Flight
+//! spectrometers"; CookieNetAE maps an image of 16 empirical energy
+//! histograms (128 x 1 eV bins per channel, sparse when few electrons are
+//! detected) to the true energy-angle probability density.
+//!
+//! The generator follows that physics shape: a per-shot ground-truth pdf
+//! (two spectral lines whose center sweeps sinusoidally over the 16
+//! angular channels — the circular-polarization streaking signature),
+//! from which a small number of electrons is Poisson-sampled into the
+//! input histogram. Input = sparse histogram, target = true pdf.
+
+use anyhow::Result;
+
+use super::container::Dataset;
+use crate::util::Rng;
+
+pub const CHANNELS: usize = 16;
+pub const BINS: usize = 128;
+
+#[derive(Debug, Clone)]
+pub struct CookieConfig {
+    /// mean detected electrons per channel (low = hard, as in the paper)
+    pub electrons_per_channel: f64,
+    /// energy-line width range (bins)
+    pub line_width: (f64, f64),
+    /// sweep amplitude of the line center across channels (bins)
+    pub streak_amplitude: (f64, f64),
+}
+
+impl Default for CookieConfig {
+    fn default() -> Self {
+        CookieConfig {
+            electrons_per_channel: 25.0,
+            line_width: (2.0, 6.0),
+            streak_amplitude: (5.0, 20.0),
+        }
+    }
+}
+
+/// Ground-truth pdf for one shot: [CHANNELS * BINS], each channel
+/// normalized to peak 1 (ReLU-friendly regression target).
+fn shot_pdf(cfg: &CookieConfig, rng: &mut Rng) -> Vec<f32> {
+    let c1 = rng.uniform(30.0, 90.0);
+    let c2 = c1 + rng.uniform(15.0, 35.0);
+    let w1 = rng.uniform(cfg.line_width.0, cfg.line_width.1);
+    let w2 = rng.uniform(cfg.line_width.0, cfg.line_width.1);
+    let a2 = rng.uniform(0.3, 1.0);
+    let streak = rng.uniform(cfg.streak_amplitude.0, cfg.streak_amplitude.1);
+    let phase = rng.uniform(0.0, 2.0 * std::f64::consts::PI);
+
+    let mut pdf = vec![0.0f32; CHANNELS * BINS];
+    for ch in 0..CHANNELS {
+        let theta = 2.0 * std::f64::consts::PI * ch as f64 / CHANNELS as f64 + phase;
+        let shift = streak * theta.cos();
+        let m1 = c1 + shift;
+        let m2 = c2 + shift;
+        let mut peak = 0.0f64;
+        let mut row = [0.0f64; BINS];
+        for (b, slot) in row.iter_mut().enumerate() {
+            let e = b as f64;
+            let g1 = (-0.5 * ((e - m1) / w1).powi(2)).exp();
+            let g2 = a2 * (-0.5 * ((e - m2) / w2).powi(2)).exp();
+            *slot = g1 + g2;
+            peak = peak.max(*slot);
+        }
+        if peak > 0.0 {
+            for (b, &v) in row.iter().enumerate() {
+                pdf[ch * BINS + b] = (v / peak) as f32;
+            }
+        }
+    }
+    pdf
+}
+
+/// Poisson-sample an empirical histogram from a pdf, normalized to its
+/// own peak (what the detector + binning pipeline produces).
+fn sample_histogram(pdf: &[f32], electrons: f64, rng: &mut Rng) -> Vec<f32> {
+    let mut hist = vec![0.0f32; pdf.len()];
+    for ch in 0..CHANNELS {
+        let row = &pdf[ch * BINS..(ch + 1) * BINS];
+        let total: f32 = row.iter().sum();
+        if total <= 0.0 {
+            continue;
+        }
+        let mut peak = 0.0f32;
+        for b in 0..BINS {
+            let lambda = electrons * (row[b] / total) as f64;
+            let c = rng.poisson(lambda) as f32;
+            hist[ch * BINS + b] = c;
+            peak = peak.max(c);
+        }
+        if peak > 0.0 {
+            for b in 0..BINS {
+                hist[ch * BINS + b] /= peak;
+            }
+        }
+    }
+    hist
+}
+
+/// Generate a CookieNetAE dataset: x = sparse histograms, y = true pdfs,
+/// both [n, 16, 128, 1].
+pub fn generate(cfg: &CookieConfig, n: usize, seed: u64) -> Result<Dataset> {
+    let mut rng = Rng::new(seed);
+    let mut x = Vec::with_capacity(n * CHANNELS * BINS);
+    let mut y = Vec::with_capacity(n * CHANNELS * BINS);
+    for _ in 0..n {
+        let pdf = shot_pdf(cfg, &mut rng);
+        let hist = sample_histogram(&pdf, cfg.electrons_per_channel, &mut rng);
+        x.extend_from_slice(&hist);
+        y.extend_from_slice(&pdf);
+    }
+    Dataset::new(
+        format!("cookiebox-{n}"),
+        vec![CHANNELS, BINS, 1],
+        vec![CHANNELS, BINS, 1],
+        x,
+        y,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shapes_and_ranges() {
+        let d = generate(&CookieConfig::default(), 4, 1).unwrap();
+        assert_eq!(d.n, 4);
+        assert_eq!(d.input_shape, vec![16, 128, 1]);
+        assert_eq!(d.target_shape, vec![16, 128, 1]);
+        for v in d.x.iter().chain(&d.y) {
+            assert!((0.0..=1.0).contains(v), "{v}");
+        }
+    }
+
+    #[test]
+    fn target_rows_peak_at_one() {
+        let d = generate(&CookieConfig::default(), 2, 2).unwrap();
+        for s in 0..d.n {
+            for ch in 0..CHANNELS {
+                let off = s * CHANNELS * BINS + ch * BINS;
+                let peak = d.y[off..off + BINS].iter().cloned().fold(0.0f32, f32::max);
+                assert!((peak - 1.0).abs() < 1e-6, "sample {s} ch {ch}: {peak}");
+            }
+        }
+    }
+
+    #[test]
+    fn histogram_is_sparser_than_pdf() {
+        let d = generate(&CookieConfig::default(), 4, 3).unwrap();
+        let nz_x = d.x.iter().filter(|&&v| v > 0.0).count();
+        let nz_y = d.y.iter().filter(|&&v| v > 0.01).count();
+        assert!(
+            nz_x < nz_y,
+            "histogram ({nz_x} nonzero) should be sparser than pdf ({nz_y})"
+        );
+    }
+
+    #[test]
+    fn streaking_moves_lines_across_channels() {
+        // the per-channel argmax must not be constant (circular
+        // polarization sweeps the energy center)
+        let d = generate(&CookieConfig::default(), 3, 4).unwrap();
+        for s in 0..d.n {
+            let mut argmaxes = vec![];
+            for ch in 0..CHANNELS {
+                let off = s * CHANNELS * BINS + ch * BINS;
+                let row = &d.y[off..off + BINS];
+                let am = row
+                    .iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .unwrap()
+                    .0;
+                argmaxes.push(am);
+            }
+            let min = *argmaxes.iter().min().unwrap();
+            let max = *argmaxes.iter().max().unwrap();
+            assert!(max - min >= 4, "no streaking: {argmaxes:?}");
+        }
+    }
+
+    #[test]
+    fn deterministic_by_seed() {
+        let a = generate(&CookieConfig::default(), 2, 11).unwrap();
+        let b = generate(&CookieConfig::default(), 2, 11).unwrap();
+        assert_eq!(a.x, b.x);
+    }
+}

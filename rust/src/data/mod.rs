@@ -1,0 +1,11 @@
+//! Synthetic data substrates (the paper's operation **S**): Bragg-peak
+//! patches for BraggNN, CookieBox eToF histograms for CookieNetAE, plus
+//! the in-memory dataset container and batch iterator the trainer uses.
+
+pub mod bragg;
+pub mod container;
+pub mod cookiebox;
+
+pub use bragg::{BraggConfig, PATCH};
+pub use container::{BatchIter, Dataset};
+pub use cookiebox::{CookieConfig, BINS, CHANNELS};

@@ -1,0 +1,253 @@
+//! Edge host: model deployment + streaming inference (the paper's
+//! operations **D** and **E**).
+//!
+//! "Once the DNN is trained, we use another set of AI accelerators
+//! specialized for model inference, called edge-AI, to process experiment
+//! data near the data acquisition in real-time" (§2). The edge host keeps
+//! the currently deployed model version, answers batched inference with
+//! *real* PJRT executions, and reports both real latency statistics and
+//! the modeled edge-device virtual time.
+
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use crate::accel::AcceleratorModel;
+use crate::data::Dataset;
+use crate::models::ModelMeta;
+use crate::runtime::{Executable, Runtime, Tensor};
+use crate::util::stats::{percentile, Summary};
+
+/// A model deployed on the edge.
+pub struct DeployedModel {
+    pub meta: ModelMeta,
+    pub params: Vec<Tensor>,
+    pub version: u32,
+    exe: Arc<Executable>,
+}
+
+/// The edge inference host co-located with the experiment.
+pub struct EdgeHost {
+    pub name: String,
+    rt: Arc<Runtime>,
+    deployed: Option<DeployedModel>,
+    versions: u32,
+    /// virtual-time model of the edge accelerator
+    pub device: AcceleratorModel,
+}
+
+/// Streaming-serving outcome.
+#[derive(Debug, Clone)]
+pub struct ServeReport {
+    pub model: String,
+    pub version: u32,
+    pub batches: u64,
+    pub samples: u64,
+    /// real per-batch latency (s): mean/p50/p99
+    pub real_mean_s: f64,
+    pub real_p50_s: f64,
+    pub real_p99_s: f64,
+    /// real end-to-end throughput (samples/s)
+    pub real_throughput: f64,
+    /// modeled edge-device time for the same work (s)
+    pub virtual_total_s: f64,
+    /// mean output finite-ness check passed
+    pub outputs_finite: bool,
+}
+
+/// A lightweight edge inference device (Jetson/edge-GPU class).
+pub fn edge_device() -> AcceleratorModel {
+    AcceleratorModel {
+        name: "edge-gpu".into(),
+        peak_flops: 10.0e12,
+        efficiency: 0.25,
+        per_step_overhead_s: 0.8e-3,
+        data_parallel: 1,
+        allreduce: None,
+        setup_s: 2.0,
+    }
+}
+
+impl EdgeHost {
+    pub fn new(name: impl Into<String>, rt: Arc<Runtime>) -> EdgeHost {
+        EdgeHost {
+            name: name.into(),
+            rt,
+            deployed: None,
+            versions: 0,
+            device: edge_device(),
+        }
+    }
+
+    /// Install a trained model (compiles the inference artifact once).
+    pub fn deploy(&mut self, meta: &ModelMeta, params: Vec<Tensor>) -> Result<u32> {
+        if params.len() != meta.params.len() {
+            bail!(
+                "deploy `{}`: {} tensors, expected {}",
+                meta.name,
+                params.len(),
+                meta.params.len()
+            );
+        }
+        for (spec, t) in meta.params.iter().zip(&params) {
+            if t.shape() != spec.shape.as_slice() {
+                bail!("deploy `{}`: `{}` shape mismatch", meta.name, spec.name);
+            }
+            if !t.is_finite() {
+                bail!("deploy `{}`: `{}` has non-finite weights", meta.name, spec.name);
+            }
+        }
+        let exe = self.rt.load_hlo(&meta.infer_hlo_path())?;
+        self.versions += 1;
+        self.deployed = Some(DeployedModel {
+            meta: meta.clone(),
+            params,
+            version: self.versions,
+            exe,
+        });
+        log::info!(
+            "edge `{}`: deployed {} v{}",
+            self.name,
+            meta.name,
+            self.versions
+        );
+        Ok(self.versions)
+    }
+
+    pub fn deployed(&self) -> Option<&DeployedModel> {
+        self.deployed.as_ref()
+    }
+
+    /// Real batched inference on the deployed model.
+    pub fn infer_batch(&self, x: &Tensor) -> Result<Tensor> {
+        let dep = self
+            .deployed
+            .as_ref()
+            .context("no model deployed on this edge host")?;
+        let want: Vec<usize> = std::iter::once(dep.meta.infer_batch)
+            .chain(dep.meta.input_shape.iter().copied())
+            .collect();
+        if x.shape() != want.as_slice() {
+            bail!("infer batch shape {:?} != {:?}", x.shape(), want);
+        }
+        let mut args: Vec<xla::Literal> = dep
+            .params
+            .iter()
+            .map(|t| t.to_literal())
+            .collect::<Result<Vec<_>>>()?;
+        args.push(x.to_literal()?);
+        let mut out = dep.exe.run_literals(&args)?;
+        if out.len() != 1 {
+            bail!("inference returned {} outputs", out.len());
+        }
+        Ok(out.remove(0))
+    }
+
+    /// Serve `n_batches` from a dataset stream, measuring real latency and
+    /// modeling edge-device virtual time.
+    pub fn serve_stream(&self, dataset: &Dataset, n_batches: u64) -> Result<ServeReport> {
+        let dep = self
+            .deployed
+            .as_ref()
+            .context("no model deployed on this edge host")?;
+        let b = dep.meta.infer_batch;
+        let mut latencies = Vec::with_capacity(n_batches as usize);
+        let mut summary = Summary::new();
+        let mut finite = true;
+        let started = std::time::Instant::now();
+        for i in 0..n_batches {
+            let idx: Vec<usize> = (0..b).map(|k| (i as usize * b + k) % dataset.n).collect();
+            let (x, _) = dataset.gather_batch(&idx)?;
+            let t0 = std::time::Instant::now();
+            let out = self.infer_batch(&x)?;
+            let dt = t0.elapsed().as_secs_f64();
+            latencies.push(dt);
+            summary.add(dt);
+            finite &= out.is_finite();
+        }
+        let total = started.elapsed().as_secs_f64();
+        let flops_per_batch = dep.meta.fwd_flops_per_sample * b as f64;
+        let virtual_total_s = n_batches as f64 * self.device.infer_time(flops_per_batch);
+        Ok(ServeReport {
+            model: dep.meta.name.clone(),
+            version: dep.version,
+            batches: n_batches,
+            samples: n_batches * b as u64,
+            real_mean_s: summary.mean(),
+            real_p50_s: percentile(&latencies, 50.0),
+            real_p99_s: percentile(&latencies, 99.0),
+            real_throughput: (n_batches * b as u64) as f64 / total,
+            virtual_total_s,
+            outputs_finite: finite,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::BraggConfig;
+    use crate::models::{default_artifacts_dir, ModelMeta};
+    use crate::training::TrainState;
+
+    fn setup() -> Option<(EdgeHost, ModelMeta)> {
+        let dir = default_artifacts_dir();
+        if !dir.join("manifest.json").exists() {
+            return None;
+        }
+        let meta = ModelMeta::load(&dir, "braggnn").unwrap();
+        let rt = Runtime::cpu().unwrap();
+        Some((EdgeHost::new("slac-edge", rt), meta))
+    }
+
+    #[test]
+    fn deploy_and_infer() {
+        let Some((mut edge, meta)) = setup() else { return };
+        assert!(edge.infer_batch(&Tensor::zeros(vec![1])).is_err()); // nothing deployed
+        let params = TrainState::init(&meta).unwrap().params;
+        let v = edge.deploy(&meta, params).unwrap();
+        assert_eq!(v, 1);
+        let x = Tensor::zeros(
+            std::iter::once(meta.infer_batch)
+                .chain(meta.input_shape.iter().copied())
+                .collect(),
+        );
+        let out = edge.infer_batch(&x).unwrap();
+        assert_eq!(out.shape(), &[meta.infer_batch, 2]);
+        assert!(out.is_finite());
+    }
+
+    #[test]
+    fn redeploy_bumps_version() {
+        let Some((mut edge, meta)) = setup() else { return };
+        let params = TrainState::init(&meta).unwrap().params;
+        assert_eq!(edge.deploy(&meta, params.clone()).unwrap(), 1);
+        assert_eq!(edge.deploy(&meta, params).unwrap(), 2);
+    }
+
+    #[test]
+    fn deploy_rejects_bad_params() {
+        let Some((mut edge, meta)) = setup() else { return };
+        let mut params = TrainState::init(&meta).unwrap().params;
+        params.pop();
+        assert!(edge.deploy(&meta, params).is_err());
+        let mut params = TrainState::init(&meta).unwrap().params;
+        params[0].data_mut()[0] = f32::NAN;
+        assert!(edge.deploy(&meta, params).is_err());
+    }
+
+    #[test]
+    fn serve_stream_reports() {
+        let Some((mut edge, meta)) = setup() else { return };
+        let params = TrainState::init(&meta).unwrap().params;
+        edge.deploy(&meta, params).unwrap();
+        let ds = crate::data::bragg::generate(&BraggConfig::default(), 600, 2).unwrap();
+        let rep = edge.serve_stream(&ds, 5).unwrap();
+        assert_eq!(rep.batches, 5);
+        assert_eq!(rep.samples, 5 * meta.infer_batch as u64);
+        assert!(rep.outputs_finite);
+        assert!(rep.real_throughput > 0.0);
+        assert!(rep.real_p99_s >= rep.real_p50_s);
+        assert!(rep.virtual_total_s > 0.0);
+    }
+}

@@ -1,0 +1,61 @@
+//! funcX endpoints: function-serving daemons pinned to facilities.
+
+use crate::simnet::FacilityId;
+
+/// Endpoint liveness (heartbeat-derived in real funcX).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EndpointStatus {
+    Online,
+    Offline,
+}
+
+/// A function-serving endpoint deployed at a facility.
+#[derive(Debug, Clone)]
+pub struct FaasEndpoint {
+    pub id: String,
+    pub facility: FacilityId,
+    /// seconds a task waits in the endpoint's queue before starting
+    pub queue_latency_s: f64,
+    /// first-task worker spin-up (container/venv activation)
+    pub cold_start_s: f64,
+    pub status: EndpointStatus,
+    /// tasks executed so far (cold start applies only to the first)
+    pub tasks_run: u64,
+}
+
+impl FaasEndpoint {
+    pub fn new(id: impl Into<String>, facility: FacilityId) -> FaasEndpoint {
+        FaasEndpoint {
+            id: id.into(),
+            facility,
+            queue_latency_s: 1.0,
+            cold_start_s: 2.0,
+            status: EndpointStatus::Online,
+            tasks_run: 0,
+        }
+    }
+
+    /// Dispatch overhead for the next task, then mark it counted.
+    pub fn next_dispatch_overhead(&mut self) -> f64 {
+        let cold = if self.tasks_run == 0 {
+            self.cold_start_s
+        } else {
+            0.0
+        };
+        self.tasks_run += 1;
+        self.queue_latency_s + cold
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cold_start_only_once() {
+        let mut ep = FaasEndpoint::new("alcf#cerebras", FacilityId(1));
+        assert_eq!(ep.next_dispatch_overhead(), 3.0);
+        assert_eq!(ep.next_dispatch_overhead(), 1.0);
+        assert_eq!(ep.next_dispatch_overhead(), 1.0);
+    }
+}

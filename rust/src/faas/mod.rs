@@ -1,0 +1,21 @@
+//! funcX analog: a federated function-as-a-service fabric.
+//!
+//! "funcX ... offers the ability to turn any computing resource,
+//! including clouds, clusters, supercomputers, edge-AI devices and DCAI
+//! systems into a function-serving endpoint" (paper §3). Here:
+//!
+//! * a **function** is registered once and addressed by `FuncId`;
+//! * an **endpoint** binds a facility + dispatch overheads (queue wait,
+//!   cold start) and can be taken offline for failure injection;
+//! * **submit** runs the function against the caller's context, charging
+//!   dispatch overheads to the virtual clock, and records a task whose
+//!   status/result can be polled later (fire-and-forget semantics).
+//!
+//! The service is generic over the context type `C` so the workflow layer
+//! can pass its `World` while unit tests use lightweight mocks.
+
+pub mod endpoint;
+pub mod service;
+
+pub use endpoint::{EndpointStatus, FaasEndpoint};
+pub use service::{FaasService, FuncId, TaskId, TaskRecord, TaskStatus};

@@ -1,0 +1,278 @@
+//! The funcX service: function registry, task submission, result store.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context, Result};
+
+use super::endpoint::{EndpointStatus, FaasEndpoint};
+use crate::simnet::VClock;
+use crate::util::Json;
+
+/// Registered function handle.
+#[derive(Debug, Clone, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct FuncId(pub String);
+
+/// Submitted task handle.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct TaskId(pub u64);
+
+/// Task lifecycle.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TaskStatus {
+    Success(Json),
+    Failed(String),
+}
+
+/// Accounting record for one executed task.
+#[derive(Debug, Clone)]
+pub struct TaskRecord {
+    pub id: TaskId,
+    pub func: FuncId,
+    pub endpoint: String,
+    pub submitted_vt: f64,
+    pub started_vt: f64,
+    pub finished_vt: f64,
+    pub status: TaskStatus,
+}
+
+impl TaskRecord {
+    /// Time spent executing the body (excludes queue/cold-start).
+    pub fn exec_secs(&self) -> f64 {
+        self.finished_vt - self.started_vt
+    }
+
+    /// Dispatch overhead (queue wait + cold start).
+    pub fn overhead_secs(&self) -> f64 {
+        self.started_vt - self.submitted_vt
+    }
+}
+
+type FuncBody<C> = Box<dyn Fn(&mut C, &mut VClock, &Json) -> Result<Json>>;
+
+/// The federated FaaS fabric, generic over the execution context `C`.
+pub struct FaasService<C> {
+    funcs: BTreeMap<FuncId, FuncBody<C>>,
+    endpoints: BTreeMap<String, FaasEndpoint>,
+    tasks: Vec<TaskRecord>,
+}
+
+impl<C> Default for FaasService<C> {
+    fn default() -> Self {
+        FaasService {
+            funcs: BTreeMap::new(),
+            endpoints: BTreeMap::new(),
+            tasks: Vec::new(),
+        }
+    }
+}
+
+impl<C> FaasService<C> {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Register a function; returns its handle (idempotent by name is NOT
+    /// allowed — re-registering a name is an error, as in funcX where each
+    /// registration mints a new UUID; we keep names unique for clarity).
+    pub fn register_function(
+        &mut self,
+        name: &str,
+        body: impl Fn(&mut C, &mut VClock, &Json) -> Result<Json> + 'static,
+    ) -> Result<FuncId> {
+        let id = FuncId(name.to_string());
+        if self.funcs.contains_key(&id) {
+            bail!("function `{name}` already registered");
+        }
+        self.funcs.insert(id.clone(), Box::new(body));
+        Ok(id)
+    }
+
+    pub fn register_endpoint(&mut self, ep: FaasEndpoint) -> Result<()> {
+        if self.endpoints.contains_key(&ep.id) {
+            bail!("faas endpoint `{}` already registered", ep.id);
+        }
+        self.endpoints.insert(ep.id.clone(), ep);
+        Ok(())
+    }
+
+    pub fn endpoint_mut(&mut self, id: &str) -> Result<&mut FaasEndpoint> {
+        self.endpoints
+            .get_mut(id)
+            .with_context(|| format!("unknown faas endpoint `{id}`"))
+    }
+
+    /// Submit a function to an endpoint and run it to completion in
+    /// virtual time. Returns the task handle; failures are recorded (and
+    /// surfaced via `result()`), not panicked, mirroring funcX's
+    /// fire-and-forget model.
+    pub fn submit(
+        &mut self,
+        ctx: &mut C,
+        clock: &mut VClock,
+        endpoint_id: &str,
+        func: &FuncId,
+        args: &Json,
+    ) -> Result<TaskId> {
+        let submitted_vt = clock.now();
+        let ep = self
+            .endpoints
+            .get_mut(endpoint_id)
+            .with_context(|| format!("unknown faas endpoint `{endpoint_id}`"))?;
+        let task_id = TaskId(self.tasks.len() as u64 + 1);
+        if ep.status == EndpointStatus::Offline {
+            self.tasks.push(TaskRecord {
+                id: task_id,
+                func: func.clone(),
+                endpoint: endpoint_id.to_string(),
+                submitted_vt,
+                started_vt: submitted_vt,
+                finished_vt: submitted_vt,
+                status: TaskStatus::Failed(format!("endpoint `{endpoint_id}` offline")),
+            });
+            return Ok(task_id);
+        }
+        let overhead = ep.next_dispatch_overhead();
+        clock.advance(overhead);
+        let started_vt = clock.now();
+
+        let body = self
+            .funcs
+            .get(func)
+            .with_context(|| format!("unknown function `{}`", func.0))?;
+        let status = match body(ctx, clock, args) {
+            Ok(v) => TaskStatus::Success(v),
+            Err(e) => TaskStatus::Failed(format!("{e:#}")),
+        };
+        self.tasks.push(TaskRecord {
+            id: task_id,
+            func: func.clone(),
+            endpoint: endpoint_id.to_string(),
+            submitted_vt,
+            started_vt,
+            finished_vt: clock.now(),
+            status,
+        });
+        Ok(task_id)
+    }
+
+    pub fn record(&self, id: TaskId) -> Result<&TaskRecord> {
+        self.tasks
+            .iter()
+            .find(|t| t.id == id)
+            .with_context(|| format!("unknown task {id:?}"))
+    }
+
+    /// The task's output, or an error if it failed.
+    pub fn result(&self, id: TaskId) -> Result<&Json> {
+        match &self.record(id)?.status {
+            TaskStatus::Success(v) => Ok(v),
+            TaskStatus::Failed(msg) => bail!("task {id:?} failed: {msg}"),
+        }
+    }
+
+    pub fn records(&self) -> &[TaskRecord] {
+        &self.tasks
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::simnet::FacilityId;
+
+    #[derive(Default)]
+    struct Ctx {
+        calls: u32,
+    }
+
+    fn setup() -> (FaasService<Ctx>, FuncId) {
+        let mut svc = FaasService::<Ctx>::new();
+        svc.register_endpoint(FaasEndpoint::new("alcf#gpu", FacilityId(1)))
+            .unwrap();
+        let f = svc
+            .register_function("train", |ctx: &mut Ctx, clock, args| {
+                ctx.calls += 1;
+                let secs = args.get("secs").as_f64().unwrap_or(1.0);
+                clock.advance(secs);
+                Ok(Json::obj(vec![("trained", Json::Bool(true))]))
+            })
+            .unwrap();
+        (svc, f)
+    }
+
+    #[test]
+    fn submit_runs_and_accounts_time() {
+        let (mut svc, f) = setup();
+        let mut ctx = Ctx::default();
+        let mut clock = VClock::new();
+        let args = Json::obj(vec![("secs", Json::num(19.0))]);
+        let t = svc.submit(&mut ctx, &mut clock, "alcf#gpu", &f, &args).unwrap();
+        let rec = svc.record(t).unwrap();
+        assert_eq!(rec.overhead_secs(), 3.0); // queue 1 + cold start 2
+        assert_eq!(rec.exec_secs(), 19.0);
+        assert_eq!(clock.now(), 22.0);
+        assert_eq!(ctx.calls, 1);
+        assert!(svc.result(t).unwrap().get("trained").as_bool().unwrap());
+    }
+
+    #[test]
+    fn second_task_skips_cold_start() {
+        let (mut svc, f) = setup();
+        let mut ctx = Ctx::default();
+        let mut clock = VClock::new();
+        let args = Json::obj(vec![("secs", Json::num(1.0))]);
+        svc.submit(&mut ctx, &mut clock, "alcf#gpu", &f, &args).unwrap();
+        let before = clock.now();
+        let t2 = svc.submit(&mut ctx, &mut clock, "alcf#gpu", &f, &args).unwrap();
+        assert_eq!(svc.record(t2).unwrap().overhead_secs(), 1.0);
+        assert_eq!(clock.now() - before, 2.0);
+    }
+
+    #[test]
+    fn body_error_is_recorded_not_fatal() {
+        let mut svc = FaasService::<Ctx>::new();
+        svc.register_endpoint(FaasEndpoint::new("e", FacilityId(0)))
+            .unwrap();
+        let f = svc
+            .register_function("boom", |_, _, _| anyhow::bail!("kaput"))
+            .unwrap();
+        let mut ctx = Ctx::default();
+        let mut clock = VClock::new();
+        let t = svc.submit(&mut ctx, &mut clock, "e", &f, &Json::Null).unwrap();
+        let err = svc.result(t).unwrap_err();
+        assert!(err.to_string().contains("kaput"), "{err}");
+    }
+
+    #[test]
+    fn offline_endpoint_fails_fast() {
+        let (mut svc, f) = setup();
+        svc.endpoint_mut("alcf#gpu").unwrap().status = EndpointStatus::Offline;
+        let mut ctx = Ctx::default();
+        let mut clock = VClock::new();
+        let t = svc.submit(&mut ctx, &mut clock, "alcf#gpu", &f, &Json::Null).unwrap();
+        assert!(svc.result(t).is_err());
+        assert_eq!(clock.now(), 0.0); // nothing charged
+        assert_eq!(ctx.calls, 0);
+    }
+
+    #[test]
+    fn unknown_endpoint_and_function() {
+        let (mut svc, f) = setup();
+        let mut ctx = Ctx::default();
+        let mut clock = VClock::new();
+        assert!(svc.submit(&mut ctx, &mut clock, "nope", &f, &Json::Null).is_err());
+        let bad = FuncId("ghost".into());
+        assert!(svc
+            .submit(&mut ctx, &mut clock, "alcf#gpu", &bad, &Json::Null)
+            .is_err());
+    }
+
+    #[test]
+    fn duplicate_registration_rejected() {
+        let (mut svc, _) = setup();
+        assert!(svc.register_function("train", |_, _, _| Ok(Json::Null)).is_err());
+        assert!(svc
+            .register_endpoint(FaasEndpoint::new("alcf#gpu", FacilityId(1)))
+            .is_err());
+    }
+}

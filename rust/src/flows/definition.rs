@@ -1,0 +1,298 @@
+//! Flow definitions: declarative DAGs of actions (Globus Flows analog).
+//!
+//! A *Flow* "represents a single process that orchestrates a series of
+//! services/actions into a self contained operation ... a declaratively
+//! defined ordering of Action Providers with condition handling" (§3).
+//! Definitions are plain JSON (see `workflow::dnn_trainer_flow` for the
+//! paper's flow) and validated for unique ids, resolvable dependencies,
+//! and acyclicity at load time.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::Json;
+
+/// What to do when an action exhausts its retries.
+#[derive(Debug, Clone, PartialEq)]
+pub enum FailurePolicy {
+    /// fail the run immediately (default)
+    Abort,
+    /// record the failure, skip dependents, keep running independents
+    Continue,
+    /// run the named handler action, then fail the run
+    Catch(String),
+}
+
+/// One action in a flow.
+#[derive(Debug, Clone)]
+pub struct ActionDef {
+    pub id: String,
+    /// action-provider name (must be registered on the engine)
+    pub provider: String,
+    /// parameters; strings may contain `${input...}` / `${result...}`
+    pub params: Json,
+    pub depends_on: Vec<String>,
+    pub retries: u32,
+    pub retry_backoff_s: f64,
+    pub on_failure: FailurePolicy,
+    /// handler actions only run via `FailurePolicy::Catch`
+    pub is_handler: bool,
+}
+
+/// A validated flow definition.
+#[derive(Debug, Clone)]
+pub struct FlowDefinition {
+    pub name: String,
+    pub actions: Vec<ActionDef>,
+    /// topological execution order over non-handler actions
+    order: Vec<usize>,
+}
+
+impl FlowDefinition {
+    pub fn new(name: impl Into<String>, actions: Vec<ActionDef>) -> Result<FlowDefinition> {
+        let mut def = FlowDefinition {
+            name: name.into(),
+            actions,
+            order: vec![],
+        };
+        def.validate()?;
+        Ok(def)
+    }
+
+    /// Execution order (indices into `actions`), handlers excluded.
+    pub fn order(&self) -> &[usize] {
+        &self.order
+    }
+
+    pub fn action(&self, id: &str) -> Result<&ActionDef> {
+        self.actions
+            .iter()
+            .find(|a| a.id == id)
+            .with_context(|| format!("flow `{}` has no action `{id}`", self.name))
+    }
+
+    fn validate(&mut self) -> Result<()> {
+        if self.actions.is_empty() {
+            bail!("flow `{}` has no actions", self.name);
+        }
+        let mut ids = BTreeSet::new();
+        for a in &self.actions {
+            if !ids.insert(a.id.as_str()) {
+                bail!("duplicate action id `{}`", a.id);
+            }
+        }
+        let index: BTreeMap<&str, usize> = self
+            .actions
+            .iter()
+            .enumerate()
+            .map(|(i, a)| (a.id.as_str(), i))
+            .collect();
+        for a in &self.actions {
+            for d in &a.depends_on {
+                if !index.contains_key(d.as_str()) {
+                    bail!("action `{}` depends on unknown `{d}`", a.id);
+                }
+            }
+            if let FailurePolicy::Catch(h) = &a.on_failure {
+                let hi = *index
+                    .get(h.as_str())
+                    .with_context(|| format!("action `{}` catches unknown `{h}`", a.id))?;
+                if !self.actions[hi].is_handler {
+                    bail!("catch target `{h}` must be declared as a handler");
+                }
+            }
+            if a.is_handler && !a.depends_on.is_empty() {
+                bail!("handler `{}` cannot have dependencies", a.id);
+            }
+        }
+        // Kahn topological sort over non-handler actions
+        let mut indeg: Vec<usize> = self
+            .actions
+            .iter()
+            .map(|a| if a.is_handler { usize::MAX } else { a.depends_on.len() })
+            .collect();
+        let mut queue: Vec<usize> = indeg
+            .iter()
+            .enumerate()
+            .filter(|&(_, &d)| d == 0)
+            .map(|(i, _)| i)
+            .collect();
+        let mut order = Vec::new();
+        while let Some(i) = queue.pop() {
+            order.push(i);
+            for (j, b) in self.actions.iter().enumerate() {
+                if !b.is_handler && b.depends_on.iter().any(|d| d == &self.actions[i].id) {
+                    indeg[j] -= 1;
+                    if indeg[j] == 0 {
+                        queue.push(j);
+                    }
+                }
+            }
+        }
+        // keep declaration order among ready actions for determinism
+        order.sort_by_key(|&i| {
+            (
+                self.depth(i),
+                i,
+            )
+        });
+        let expected = self.actions.iter().filter(|a| !a.is_handler).count();
+        if order.len() != expected {
+            bail!("flow `{}` has a dependency cycle", self.name);
+        }
+        self.order = order;
+        Ok(())
+    }
+
+    /// Longest dependency chain above action `i` (for stable ordering).
+    fn depth(&self, i: usize) -> usize {
+        self.actions[i]
+            .depends_on
+            .iter()
+            .map(|d| {
+                let j = self.actions.iter().position(|a| &a.id == d).unwrap();
+                1 + self.depth(j)
+            })
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// Parse from JSON:
+    /// `{"name": ..., "actions": [{"id","provider","params","depends_on",
+    ///   "retries","retry_backoff_s","on_failure","handler"}]}`
+    /// `on_failure`: "abort" (default) | "continue" | {"catch": "id"}.
+    pub fn from_json(j: &Json) -> Result<FlowDefinition> {
+        let name = j.get("name").as_str().context("flow missing `name`")?;
+        let actions = j
+            .get("actions")
+            .as_arr()
+            .context("flow missing `actions`")?
+            .iter()
+            .map(|a| {
+                let on_failure = match a.get("on_failure") {
+                    Json::Null => FailurePolicy::Abort,
+                    v => match v.as_str() {
+                        Some("abort") => FailurePolicy::Abort,
+                        Some("continue") => FailurePolicy::Continue,
+                        Some(other) => bail!("unknown on_failure `{other}`"),
+                        None => FailurePolicy::Catch(
+                            v.get("catch")
+                                .as_str()
+                                .context("on_failure object needs `catch`")?
+                                .to_string(),
+                        ),
+                    },
+                };
+                Ok(ActionDef {
+                    id: a.get("id").as_str().context("action `id`")?.to_string(),
+                    provider: a
+                        .get("provider")
+                        .as_str()
+                        .context("action `provider`")?
+                        .to_string(),
+                    params: a.get("params").clone(),
+                    depends_on: match a.get("depends_on").as_arr() {
+                        Some(arr) => arr
+                            .iter()
+                            .map(|d| Ok(d.as_str().context("dep name")?.to_string()))
+                            .collect::<Result<_>>()?,
+                        None => vec![],
+                    },
+                    retries: a.get("retries").as_u64().unwrap_or(0) as u32,
+                    retry_backoff_s: a.get("retry_backoff_s").as_f64().unwrap_or(5.0),
+                    on_failure,
+                    is_handler: a.get("handler").as_bool().unwrap_or(false),
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        FlowDefinition::new(name, actions)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn action(id: &str, deps: &[&str]) -> ActionDef {
+        ActionDef {
+            id: id.into(),
+            provider: "noop".into(),
+            params: Json::Null,
+            depends_on: deps.iter().map(|s| s.to_string()).collect(),
+            retries: 0,
+            retry_backoff_s: 1.0,
+            on_failure: FailurePolicy::Abort,
+            is_handler: false,
+        }
+    }
+
+    #[test]
+    fn topological_order_respects_deps() {
+        let def = FlowDefinition::new(
+            "f",
+            vec![
+                action("c", &["a", "b"]),
+                action("a", &[]),
+                action("b", &["a"]),
+            ],
+        )
+        .unwrap();
+        let ids: Vec<&str> = def.order().iter().map(|&i| def.actions[i].id.as_str()).collect();
+        assert_eq!(ids, vec!["a", "b", "c"]);
+    }
+
+    #[test]
+    fn cycle_detected() {
+        let err = FlowDefinition::new(
+            "f",
+            vec![action("a", &["b"]), action("b", &["a"])],
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("cycle"), "{err}");
+    }
+
+    #[test]
+    fn duplicate_and_unknown_rejected() {
+        assert!(FlowDefinition::new("f", vec![action("a", &[]), action("a", &[])]).is_err());
+        assert!(FlowDefinition::new("f", vec![action("a", &["ghost"])]).is_err());
+        assert!(FlowDefinition::new("f", vec![]).is_err());
+    }
+
+    #[test]
+    fn catch_must_point_at_handler() {
+        let mut a = action("a", &[]);
+        a.on_failure = FailurePolicy::Catch("h".into());
+        let mut h = action("h", &[]);
+        h.is_handler = false;
+        let err = FlowDefinition::new("f", vec![a.clone(), h.clone()]).unwrap_err();
+        assert!(err.to_string().contains("handler"), "{err}");
+        h.is_handler = true;
+        assert!(FlowDefinition::new("f", vec![a, h]).is_ok());
+    }
+
+    #[test]
+    fn parses_json_definition() {
+        let j = Json::parse(
+            r#"{
+          "name": "demo",
+          "actions": [
+            {"id": "stage", "provider": "transfer", "params": {"bytes": 100}},
+            {"id": "train", "provider": "compute", "depends_on": ["stage"],
+             "retries": 2, "on_failure": {"catch": "cleanup"}},
+            {"id": "cleanup", "provider": "noop", "handler": true}
+          ]
+        }"#,
+        )
+        .unwrap();
+        let def = FlowDefinition::from_json(&j).unwrap();
+        assert_eq!(def.name, "demo");
+        assert_eq!(def.actions.len(), 3);
+        assert_eq!(def.order().len(), 2); // handler excluded
+        assert_eq!(def.action("train").unwrap().retries, 2);
+        assert_eq!(
+            def.action("train").unwrap().on_failure,
+            FailurePolicy::Catch("cleanup".into())
+        );
+    }
+}

@@ -1,0 +1,551 @@
+//! The flow run engine: executes a validated `FlowDefinition` against a
+//! set of registered action providers, with template parameter passing,
+//! per-action authentication, retries, failure policies, and a full
+//! event log whose virtual-time spans become the Table 1 breakdown.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context, Result};
+
+use super::definition::{FailurePolicy, FlowDefinition};
+use super::template::resolve_params;
+use crate::auth::{AuthService, TokenId};
+use crate::simnet::VClock;
+use crate::util::Json;
+
+/// One pluggable action kind (Transfer, Compute, Deploy, ...).
+pub trait ActionProvider<C> {
+    /// Provider name referenced by `ActionDef::provider`.
+    fn name(&self) -> &'static str;
+
+    /// Auth scope a token must carry to invoke this provider.
+    fn scope(&self) -> String {
+        format!("{}:use", self.name())
+    }
+
+    /// Run the action. Advance `clock` by however long it takes.
+    fn execute(&self, ctx: &mut C, clock: &mut VClock, params: &Json) -> Result<Json>;
+}
+
+/// Outcome of one action inside a run.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ActionStatus {
+    Success,
+    Failed(String),
+    /// not run because a dependency failed or the run aborted
+    Skipped,
+}
+
+/// Event-log entry for one action.
+#[derive(Debug, Clone)]
+pub struct ActionRecord {
+    pub id: String,
+    pub provider: String,
+    pub attempts: u32,
+    pub start_vt: f64,
+    pub end_vt: f64,
+    pub status: ActionStatus,
+}
+
+impl ActionRecord {
+    pub fn duration(&self) -> f64 {
+        self.end_vt - self.start_vt
+    }
+}
+
+/// Full record of one flow run.
+#[derive(Debug, Clone)]
+pub struct RunReport {
+    pub flow: String,
+    pub start_vt: f64,
+    pub end_vt: f64,
+    pub succeeded: bool,
+    pub records: Vec<ActionRecord>,
+    /// successful action outputs by action id
+    pub outputs: BTreeMap<String, Json>,
+}
+
+impl RunReport {
+    pub fn duration(&self) -> f64 {
+        self.end_vt - self.start_vt
+    }
+
+    pub fn record(&self, id: &str) -> Result<&ActionRecord> {
+        self.records
+            .iter()
+            .find(|r| r.id == id)
+            .with_context(|| format!("run has no action `{id}`"))
+    }
+
+    pub fn output(&self, id: &str) -> Result<&Json> {
+        self.outputs
+            .get(id)
+            .with_context(|| format!("no output recorded for `{id}`"))
+    }
+
+    /// Serialize the event log (persisted by the CLI for every run).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("flow", Json::str(self.flow.clone())),
+            ("start_vt", Json::num(self.start_vt)),
+            ("end_vt", Json::num(self.end_vt)),
+            ("succeeded", Json::Bool(self.succeeded)),
+            (
+                "actions",
+                Json::arr(
+                    self.records
+                        .iter()
+                        .map(|r| {
+                            Json::obj(vec![
+                                ("id", Json::str(r.id.clone())),
+                                ("provider", Json::str(r.provider.clone())),
+                                ("attempts", Json::num(r.attempts as f64)),
+                                ("start_vt", Json::num(r.start_vt)),
+                                ("end_vt", Json::num(r.end_vt)),
+                                (
+                                    "status",
+                                    match &r.status {
+                                        ActionStatus::Success => Json::str("success"),
+                                        ActionStatus::Skipped => Json::str("skipped"),
+                                        ActionStatus::Failed(m) => Json::obj(vec![(
+                                            "failed",
+                                            Json::str(m.clone()),
+                                        )]),
+                                    },
+                                ),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+}
+
+/// The engine: providers + auth + dispatch overhead accounting.
+pub struct FlowEngine<C> {
+    providers: BTreeMap<&'static str, Box<dyn ActionProvider<C>>>,
+    pub auth: AuthService,
+    /// flows-service bookkeeping charged per action dispatch
+    pub dispatch_overhead_s: f64,
+}
+
+impl<C> Default for FlowEngine<C> {
+    fn default() -> Self {
+        FlowEngine {
+            providers: BTreeMap::new(),
+            auth: AuthService::new(),
+            dispatch_overhead_s: 0.2,
+        }
+    }
+}
+
+impl<C> FlowEngine<C> {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn register_provider(&mut self, p: Box<dyn ActionProvider<C>>) -> Result<()> {
+        let name = p.name();
+        if self.providers.contains_key(name) {
+            bail!("provider `{name}` already registered");
+        }
+        self.providers.insert(name, p);
+        Ok(())
+    }
+
+    pub fn provider_names(&self) -> Vec<&'static str> {
+        self.providers.keys().copied().collect()
+    }
+
+    /// Execute a flow to completion (callers persist the report).
+    pub fn run(
+        &mut self,
+        def: &FlowDefinition,
+        input: &Json,
+        token: &TokenId,
+        ctx: &mut C,
+        clock: &mut VClock,
+    ) -> Result<RunReport> {
+        // all providers referenced must exist before we start
+        for a in &def.actions {
+            if !self.providers.contains_key(a.provider.as_str()) {
+                bail!(
+                    "flow `{}`: no provider `{}` (have: {})",
+                    def.name,
+                    a.provider,
+                    self.provider_names().join(", ")
+                );
+            }
+        }
+
+        let start_vt = clock.now();
+        let mut outputs: BTreeMap<String, Json> = BTreeMap::new();
+        let mut statuses: BTreeMap<String, ActionStatus> = BTreeMap::new();
+        let mut records: Vec<ActionRecord> = Vec::new();
+        let mut aborted = false;
+
+        for &idx in def.order() {
+            let action = &def.actions[idx];
+            let dep_ok = action
+                .depends_on
+                .iter()
+                .all(|d| matches!(statuses.get(d.as_str()), Some(ActionStatus::Success)));
+            if aborted || !dep_ok {
+                statuses.insert(action.id.clone(), ActionStatus::Skipped);
+                records.push(ActionRecord {
+                    id: action.id.clone(),
+                    provider: action.provider.clone(),
+                    attempts: 0,
+                    start_vt: clock.now(),
+                    end_vt: clock.now(),
+                    status: ActionStatus::Skipped,
+                });
+                continue;
+            }
+
+            let (record, output) =
+                self.run_action(def, &action.id, input, &outputs, token, ctx, clock)?;
+            let failed = matches!(record.status, ActionStatus::Failed(_));
+            statuses.insert(action.id.clone(), record.status.clone());
+            if let Some(v) = output {
+                outputs.insert(action.id.clone(), v);
+            }
+            records.push(record);
+
+            if failed {
+                match &action.on_failure {
+                    FailurePolicy::Abort => aborted = true,
+                    FailurePolicy::Continue => {}
+                    FailurePolicy::Catch(handler) => {
+                        let (h, hout) =
+                            self.run_action(def, handler, input, &outputs, token, ctx, clock)?;
+                        statuses.insert(handler.clone(), h.status.clone());
+                        if let Some(v) = hout {
+                            outputs.insert(handler.clone(), v);
+                        }
+                        records.push(h);
+                        aborted = true;
+                    }
+                }
+            }
+        }
+
+        let succeeded = !aborted
+            && records
+                .iter()
+                .all(|r| matches!(r.status, ActionStatus::Success));
+        Ok(RunReport {
+            flow: def.name.clone(),
+            start_vt,
+            end_vt: clock.now(),
+            succeeded,
+            records,
+            outputs,
+        })
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn run_action(
+        &mut self,
+        def: &FlowDefinition,
+        id: &str,
+        input: &Json,
+        outputs: &BTreeMap<String, Json>,
+        token: &TokenId,
+        ctx: &mut C,
+        clock: &mut VClock,
+    ) -> Result<(ActionRecord, Option<Json>)> {
+        let action = def.action(id)?;
+        let provider = self
+            .providers
+            .get(action.provider.as_str())
+            .with_context(|| format!("no provider `{}`", action.provider))?;
+
+        let start_vt = clock.now();
+        clock.advance(self.dispatch_overhead_s);
+
+        let fail = |status: String, clock: &VClock| {
+            (
+                ActionRecord {
+                    id: action.id.clone(),
+                    provider: action.provider.clone(),
+                    attempts: 0,
+                    start_vt,
+                    end_vt: clock.now(),
+                    status: ActionStatus::Failed(status),
+                },
+                None,
+            )
+        };
+
+        // authenticate this action (paper: every interaction goes through
+        // Globus Auth)
+        if let Err(e) = self.auth.validate(clock, token, &provider.scope()) {
+            return Ok(fail(format!("auth: {e:#}"), clock));
+        }
+
+        let params = match resolve_params(&action.params, input, outputs) {
+            Ok(p) => p,
+            Err(e) => return Ok(fail(format!("template: {e:#}"), clock)),
+        };
+
+        let mut attempts = 0;
+        let outcome = loop {
+            attempts += 1;
+            match provider.execute(ctx, clock, &params) {
+                Ok(v) => break Ok(v),
+                Err(e) if attempts <= action.retries => {
+                    log::warn!(
+                        "action `{}` attempt {attempts} failed, retrying: {e:#}",
+                        action.id
+                    );
+                    clock.advance(action.retry_backoff_s);
+                }
+                Err(e) => break Err(e),
+            }
+        };
+
+        Ok(match outcome {
+            Ok(v) => (
+                ActionRecord {
+                    id: action.id.clone(),
+                    provider: action.provider.clone(),
+                    attempts,
+                    start_vt,
+                    end_vt: clock.now(),
+                    status: ActionStatus::Success,
+                },
+                Some(v),
+            ),
+            Err(e) => (
+                ActionRecord {
+                    id: action.id.clone(),
+                    provider: action.provider.clone(),
+                    attempts,
+                    start_vt,
+                    end_vt: clock.now(),
+                    status: ActionStatus::Failed(format!("{e:#}")),
+                },
+                None,
+            ),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::flows::definition::ActionDef;
+
+    /// Test context: a scratch value + a failure switch.
+    #[derive(Default)]
+    struct Ctx {
+        log: Vec<String>,
+        fail_times: u32,
+    }
+
+    struct Work;
+    impl ActionProvider<Ctx> for Work {
+        fn name(&self) -> &'static str {
+            "work"
+        }
+        fn execute(&self, ctx: &mut Ctx, clock: &mut VClock, params: &Json) -> Result<Json> {
+            let label = params.get("label").as_str().unwrap_or("?").to_string();
+            if ctx.fail_times > 0 {
+                ctx.fail_times -= 1;
+                bail!("transient failure");
+            }
+            clock.advance(params.get("secs").as_f64().unwrap_or(1.0));
+            ctx.log.push(label.clone());
+            Ok(Json::obj(vec![("did", Json::str(label))]))
+        }
+    }
+
+    struct Cleanup;
+    impl ActionProvider<Ctx> for Cleanup {
+        fn name(&self) -> &'static str {
+            "cleanup"
+        }
+        fn execute(&self, ctx: &mut Ctx, _: &mut VClock, _: &Json) -> Result<Json> {
+            ctx.log.push("cleanup".into());
+            Ok(Json::Null)
+        }
+    }
+
+    fn engine() -> (FlowEngine<Ctx>, TokenId) {
+        let mut e = FlowEngine::<Ctx>::new();
+        e.register_provider(Box::new(Work)).unwrap();
+        e.register_provider(Box::new(Cleanup)).unwrap();
+        let clock = VClock::new();
+        let token = e
+            .auth
+            .issue(&clock, "user", &["work:use", "cleanup:use"], 1e9)
+            .id;
+        (e, token)
+    }
+
+    fn action(id: &str, deps: &[&str], params: Json) -> ActionDef {
+        ActionDef {
+            id: id.into(),
+            provider: "work".into(),
+            params,
+            depends_on: deps.iter().map(|s| s.to_string()).collect(),
+            retries: 0,
+            retry_backoff_s: 1.0,
+            on_failure: FailurePolicy::Abort,
+            is_handler: false,
+        }
+    }
+
+    #[test]
+    fn linear_flow_passes_outputs_and_accounts_time() {
+        let (mut e, token) = engine();
+        let def = FlowDefinition::new(
+            "f",
+            vec![
+                action(
+                    "a",
+                    &[],
+                    Json::obj(vec![
+                        ("label", Json::str("stage")),
+                        ("secs", Json::num(5.0)),
+                    ]),
+                ),
+                action(
+                    "b",
+                    &["a"],
+                    Json::obj(vec![
+                        ("label", Json::str("${result.a.did}-next")),
+                        ("secs", Json::num(2.0)),
+                    ]),
+                ),
+            ],
+        )
+        .unwrap();
+        let mut ctx = Ctx::default();
+        let mut clock = VClock::new();
+        let rep = e
+            .run(&def, &Json::Null, &token, &mut ctx, &mut clock)
+            .unwrap();
+        assert!(rep.succeeded);
+        assert_eq!(ctx.log, vec!["stage", "stage-next"]);
+        // durations: 5 + 2 + 2*(dispatch 0.2 + auth 0.05)
+        assert!((rep.duration() - 7.5).abs() < 1e-9, "{}", rep.duration());
+        assert_eq!(rep.record("a").unwrap().attempts, 1);
+        assert_eq!(
+            rep.output("b").unwrap().get("did").as_str(),
+            Some("stage-next")
+        );
+    }
+
+    #[test]
+    fn retries_then_succeeds() {
+        let (mut e, token) = engine();
+        let mut a = action("a", &[], Json::obj(vec![("label", Json::str("x"))]));
+        a.retries = 3;
+        a.retry_backoff_s = 2.0;
+        let def = FlowDefinition::new("f", vec![a]).unwrap();
+        let mut ctx = Ctx {
+            fail_times: 2,
+            ..Default::default()
+        };
+        let mut clock = VClock::new();
+        let rep = e
+            .run(&def, &Json::Null, &token, &mut ctx, &mut clock)
+            .unwrap();
+        assert!(rep.succeeded);
+        assert_eq!(rep.record("a").unwrap().attempts, 3);
+        assert!(clock.now() >= 4.0); // two backoffs charged
+    }
+
+    #[test]
+    fn abort_skips_dependents() {
+        let (mut e, token) = engine();
+        let def = FlowDefinition::new(
+            "f",
+            vec![
+                action("a", &[], Json::obj(vec![("label", Json::str("x"))])),
+                action("b", &["a"], Json::Null),
+            ],
+        )
+        .unwrap();
+        let mut ctx = Ctx {
+            fail_times: 1,
+            ..Default::default()
+        };
+        let mut clock = VClock::new();
+        let rep = e
+            .run(&def, &Json::Null, &token, &mut ctx, &mut clock)
+            .unwrap();
+        assert!(!rep.succeeded);
+        assert_eq!(rep.record("b").unwrap().status, ActionStatus::Skipped);
+    }
+
+    #[test]
+    fn catch_runs_handler() {
+        let (mut e, token) = engine();
+        let mut a = action("a", &[], Json::Null);
+        a.on_failure = FailurePolicy::Catch("h".into());
+        let mut h = action("h", &[], Json::Null);
+        h.provider = "cleanup".into();
+        h.is_handler = true;
+        let def = FlowDefinition::new("f", vec![a, h]).unwrap();
+        let mut ctx = Ctx {
+            fail_times: 1,
+            ..Default::default()
+        };
+        let mut clock = VClock::new();
+        let rep = e
+            .run(&def, &Json::Null, &token, &mut ctx, &mut clock)
+            .unwrap();
+        assert!(!rep.succeeded);
+        assert_eq!(ctx.log, vec!["cleanup"]);
+        assert_eq!(rep.record("h").unwrap().status, ActionStatus::Success);
+    }
+
+    #[test]
+    fn missing_scope_fails_action() {
+        let (mut e, _) = engine();
+        let clock0 = VClock::new();
+        let weak = e.auth.issue(&clock0, "user", &["cleanup:use"], 1e9).id;
+        let def =
+            FlowDefinition::new("f", vec![action("a", &[], Json::Null)]).unwrap();
+        let mut ctx = Ctx::default();
+        let mut clock = VClock::new();
+        let rep = e.run(&def, &Json::Null, &weak, &mut ctx, &mut clock).unwrap();
+        assert!(!rep.succeeded);
+        match &rep.record("a").unwrap().status {
+            ActionStatus::Failed(m) => assert!(m.contains("auth"), "{m}"),
+            s => panic!("{s:?}"),
+        }
+    }
+
+    #[test]
+    fn unknown_provider_rejected_upfront() {
+        let (mut e, token) = engine();
+        let mut a = action("a", &[], Json::Null);
+        a.provider = "ghost".into();
+        let def = FlowDefinition::new("f", vec![a]).unwrap();
+        let mut ctx = Ctx::default();
+        let mut clock = VClock::new();
+        assert!(e.run(&def, &Json::Null, &token, &mut ctx, &mut clock).is_err());
+    }
+
+    #[test]
+    fn report_serializes() {
+        let (mut e, token) = engine();
+        let def = FlowDefinition::new(
+            "f",
+            vec![action("a", &[], Json::obj(vec![("label", Json::str("x"))]))],
+        )
+        .unwrap();
+        let mut ctx = Ctx::default();
+        let mut clock = VClock::new();
+        let rep = e.run(&def, &Json::Null, &token, &mut ctx, &mut clock).unwrap();
+        let j = rep.to_json().to_string();
+        let parsed = Json::parse(&j).unwrap();
+        assert_eq!(parsed.get("flow").as_str(), Some("f"));
+        assert_eq!(parsed.get("actions").at(0).get("status").as_str(), Some("success"));
+    }
+}

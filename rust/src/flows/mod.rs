@@ -1,0 +1,17 @@
+//! Globus Flows analog: declarative action orchestration.
+//!
+//! * `definition` — flows as validated JSON DAGs of actions;
+//! * `template`  — `${input...}` / `${result...}` parameter passing;
+//! * `engine`    — the run engine: auth per action, retries, failure
+//!   policies (abort/continue/catch), and a virtual-time event log.
+//!
+//! Concrete action providers (Transfer, Compute, Deploy) live in
+//! `crate::workflow::providers` because they need the `World` context.
+
+pub mod definition;
+pub mod engine;
+pub mod template;
+
+pub use definition::{ActionDef, FailurePolicy, FlowDefinition};
+pub use engine::{ActionProvider, ActionRecord, ActionStatus, FlowEngine, RunReport};
+pub use template::resolve_params;

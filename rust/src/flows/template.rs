@@ -1,0 +1,175 @@
+//! Parameter templating: `${input.x.y}` and `${result.action.key}`.
+//!
+//! Globus Flows passes state between actions by referencing the flow
+//! input and prior action outputs; this is the equivalent for our JSON
+//! action parameters. A string that is *exactly* one `${...}` reference
+//! is replaced by the referenced JSON value (preserving its type);
+//! references embedded in longer strings are stringified in place.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::Json;
+
+/// Resolve all templates in `params` against the flow `input` and the
+/// `outputs` of previously completed actions.
+pub fn resolve_params(
+    params: &Json,
+    input: &Json,
+    outputs: &BTreeMap<String, Json>,
+) -> Result<Json> {
+    Ok(match params {
+        Json::Str(s) => resolve_string(s, input, outputs)?,
+        Json::Arr(items) => Json::Arr(
+            items
+                .iter()
+                .map(|v| resolve_params(v, input, outputs))
+                .collect::<Result<_>>()?,
+        ),
+        Json::Obj(map) => Json::Obj(
+            map.iter()
+                .map(|(k, v)| Ok((k.clone(), resolve_params(v, input, outputs)?)))
+                .collect::<Result<_>>()?,
+        ),
+        other => other.clone(),
+    })
+}
+
+fn resolve_string(
+    s: &str,
+    input: &Json,
+    outputs: &BTreeMap<String, Json>,
+) -> Result<Json> {
+    // whole-string reference keeps the referenced type
+    if let Some(path) = s
+        .strip_prefix("${")
+        .and_then(|r| r.strip_suffix("}"))
+        .filter(|p| !p.contains("${"))
+    {
+        if !s[2..s.len() - 1].contains('}') {
+            return Ok(lookup(path, input, outputs)?.clone());
+        }
+    }
+    // embedded references: stringify each
+    let mut out = String::new();
+    let mut rest = s;
+    while let Some(start) = rest.find("${") {
+        out.push_str(&rest[..start]);
+        let after = &rest[start + 2..];
+        let end = after
+            .find('}')
+            .with_context(|| format!("unterminated template in `{s}`"))?;
+        let path = &after[..end];
+        let v = lookup(path, input, outputs)?;
+        match v {
+            Json::Str(inner) => out.push_str(inner),
+            other => out.push_str(&other.to_string()),
+        }
+        rest = &after[end + 1..];
+    }
+    out.push_str(rest);
+    Ok(Json::Str(out))
+}
+
+fn lookup<'a>(
+    path: &str,
+    input: &'a Json,
+    outputs: &'a BTreeMap<String, Json>,
+) -> Result<&'a Json> {
+    let mut parts = path.split('.');
+    let root = parts.next().context("empty template path")?;
+    let mut cur: &Json = match root {
+        "input" => input,
+        "result" => {
+            let action = parts
+                .next()
+                .with_context(|| format!("`${{result...}}` needs an action id in `{path}`"))?;
+            outputs
+                .get(action)
+                .with_context(|| format!("no completed action `{action}` for `${{{path}}}`"))?
+        }
+        other => bail!("template root must be `input` or `result`, got `{other}`"),
+    };
+    for key in parts {
+        let next = cur.get(key);
+        if next.is_null() && cur.get(key) == &Json::Null {
+            // distinguish "missing" from literal null by map lookup
+            match cur.as_obj() {
+                Some(m) if m.contains_key(key) => {}
+                _ => bail!("template `${{{path}}}`: key `{key}` not found"),
+            }
+        }
+        cur = cur.get(key);
+    }
+    Ok(cur)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn setup() -> (Json, BTreeMap<String, Json>) {
+        let input = Json::parse(r#"{"model": "braggnn", "n": 5, "dst": {"host": "edge1"}}"#)
+            .unwrap();
+        let mut outputs = BTreeMap::new();
+        outputs.insert(
+            "train".to_string(),
+            Json::parse(r#"{"loss": 0.25, "artifact": "m.bin"}"#).unwrap(),
+        );
+        (input, outputs)
+    }
+
+    #[test]
+    fn whole_string_keeps_type() {
+        let (input, outputs) = setup();
+        let p = Json::parse(r#"{"count": "${input.n}", "loss": "${result.train.loss}"}"#)
+            .unwrap();
+        let r = resolve_params(&p, &input, &outputs).unwrap();
+        assert_eq!(r.get("count"), &Json::Num(5.0));
+        assert_eq!(r.get("loss"), &Json::Num(0.25));
+    }
+
+    #[test]
+    fn embedded_references_stringify() {
+        let (input, outputs) = setup();
+        let p = Json::str("deploy ${input.model} (loss=${result.train.loss}) to ${input.dst.host}");
+        let r = resolve_params(&p, &input, &outputs).unwrap();
+        assert_eq!(
+            r.as_str(),
+            Some("deploy braggnn (loss=0.25) to edge1")
+        );
+    }
+
+    #[test]
+    fn nested_structures_resolved() {
+        let (input, outputs) = setup();
+        let p = Json::parse(r#"{"a": ["${input.model}", {"b": "${result.train.artifact}"}]}"#)
+            .unwrap();
+        let r = resolve_params(&p, &input, &outputs).unwrap();
+        assert_eq!(r.get("a").at(0).as_str(), Some("braggnn"));
+        assert_eq!(r.get("a").at(1).get("b").as_str(), Some("m.bin"));
+    }
+
+    #[test]
+    fn errors_are_specific() {
+        let (input, outputs) = setup();
+        for (tpl, needle) in [
+            ("${result.ghost.x}", "no completed action"),
+            ("${weird.x}", "root"),
+            ("${input.missing}", "not found"),
+            ("prefix ${input.n", "unterminated"),
+        ] {
+            let err = resolve_params(&Json::str(tpl), &input, &outputs).unwrap_err();
+            assert!(err.to_string().contains(needle), "{tpl}: {err}");
+        }
+    }
+
+    #[test]
+    fn non_template_strings_untouched() {
+        let (input, outputs) = setup();
+        let p = Json::str("plain string $no-brace {also}");
+        let r = resolve_params(&p, &input, &outputs).unwrap();
+        assert_eq!(r.as_str(), Some("plain string $no-brace {also}"));
+    }
+}

@@ -1,0 +1,33 @@
+//! # xloop
+//!
+//! Production-quality reproduction of *"Bridging Data Center AI Systems
+//! with Edge Computing for Actionable Information Retrieval"* (Liu et
+//! al., XLOOP @ SC 2021) as a three-layer Rust + JAX + Pallas stack:
+//!
+//! * **L3 (this crate)** — the paper's system contribution: a
+//!   geographically distributed workflow fabric (flows engine, federated
+//!   FaaS, WAN transfer service) that retrains DNNs on remote
+//!   data-center AI systems and deploys them to edge hosts.
+//! * **L2/L1 (python/, build-time only)** — BraggNN and CookieNetAE in
+//!   JAX on Pallas kernels, AOT-lowered to `artifacts/*.hlo.txt`.
+//! * **runtime** — PJRT CPU bridge executing those artifacts from rust.
+//!
+//! See DESIGN.md for the system inventory and experiment index, and
+//! EXPERIMENTS.md for paper-vs-measured results.
+
+pub mod accel;
+pub mod analysis;
+pub mod costmodel;
+pub mod data;
+pub mod edge;
+pub mod auth;
+pub mod config;
+pub mod faas;
+pub mod flows;
+pub mod models;
+pub mod simnet;
+pub mod training;
+pub mod transfer;
+pub mod runtime;
+pub mod util;
+pub mod workflow;

@@ -1,0 +1,318 @@
+//! `xloop` — the leader CLI for the geographically distributed DNN
+//! retraining fabric (XLOOP 2021 reproduction).
+//!
+//! Subcommands:
+//!   table1    reproduce Table 1 (end-to-end retraining breakdown grid)
+//!   retrain   run one DNNTrainerFlow scenario (real PJRT training)
+//!   fig3      transfer-throughput sweep (Fig. 3)
+//!   fig4      conventional-vs-ML crossover curves (Fig. 4)
+//!   serve     retrain, deploy, then stream inference at the edge
+//!   info      runtime/artifact status
+
+use anyhow::{bail, Result};
+
+use xloop::costmodel::CostParams;
+use xloop::simnet::VClock;
+use xloop::transfer::{TransferRequest, TransferService};
+use xloop::util::cli::Options;
+use xloop::util::stats::{human_bytes, human_secs};
+use xloop::workflow::{
+    render_table1, Coordinator, Mode, Scenario, TrainingMode,
+};
+
+fn main() {
+    xloop::util::logging::init();
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let code = match run(&args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn run(args: &[String]) -> Result<()> {
+    let Some(cmd) = args.first() else {
+        print_usage();
+        return Ok(());
+    };
+    let rest = &args[1..];
+    match cmd.as_str() {
+        "table1" => cmd_table1(rest),
+        "retrain" => cmd_retrain(rest),
+        "fig3" => cmd_fig3(rest),
+        "fig4" => cmd_fig4(rest),
+        "serve" => cmd_serve(rest),
+        "info" => cmd_info(),
+        "help" | "--help" | "-h" => {
+            print_usage();
+            Ok(())
+        }
+        other => bail!("unknown command `{other}` (try `xloop help`)"),
+    }
+}
+
+fn print_usage() {
+    println!(
+        "xloop — bridging data-center AI systems with edge computing\n\
+         \n\
+         usage: xloop <command> [options]\n\
+         \n\
+         commands:\n\
+           table1    reproduce Table 1 (retraining time breakdown grid)\n\
+           retrain   run one retraining flow (--model, --mode, --real-steps)\n\
+           fig3      WAN transfer throughput vs concurrency (Fig. 3)\n\
+           fig4      conventional vs ML-surrogate crossover (Fig. 4)\n\
+           serve     retrain + deploy + stream edge inference\n\
+           info      artifact/runtime status\n\
+         \n\
+         run a command with --help for its options"
+    );
+}
+
+fn cmd_table1(args: &[String]) -> Result<()> {
+    let opts = Options::new()
+        .flag("real", "run real PJRT training steps in each cell")
+        .opt("seed", "42", "fabric seed");
+    if args.iter().any(|a| a == "--help") {
+        print!("{}", opts.usage("xloop table1"));
+        return Ok(());
+    }
+    let p = opts.parse(args).map_err(anyhow::Error::msg)?;
+    let seed: u64 = p.get_usize("seed")? as u64;
+
+    let mut rows = Vec::new();
+    for scenario in Scenario::table1_grid() {
+        // fresh fabric per row: the paper measured independent runs
+        let mut c = Coordinator::paper(seed)?;
+        c.set_training_mode(if p.get_bool("real") {
+            TrainingMode::Real {
+                steps_override: None,
+            }
+        } else {
+            TrainingMode::VirtualOnly
+        });
+        log::info!("running {} / {}", scenario.model, scenario.mode.label());
+        let outcome = c.run_retraining(&scenario, None)?;
+        rows.push(outcome.breakdown);
+    }
+    println!("\nTable 1 — end-to-end retraining breakdown (virtual seconds)\n");
+    print!("{}", render_table1(&rows));
+    println!("\npaper reference: BraggNN 1102/31/151 s, CookieNetAE 517/15/97 s end-to-end");
+    Ok(())
+}
+
+fn cmd_retrain(args: &[String]) -> Result<()> {
+    let opts = Options::new()
+        .opt("model", "braggnn", "model to retrain (braggnn|cookienetae)")
+        .opt("mode", "remote-cerebras", "training mode")
+        .opt("real-steps", "0", "real PJRT steps (0 = recipe default)")
+        .opt("samples", "0", "real dataset samples (0 = scenario default)")
+        .opt("seed", "42", "fabric seed")
+        .opt("config", "", "JSON config file (fabric/scenario overrides)")
+        .flag("virtual-only", "skip real training (time modeling only)")
+        .flag("events", "print the flow event log");
+    if args.iter().any(|a| a == "--help") {
+        print!("{}", opts.usage("xloop retrain"));
+        return Ok(());
+    }
+    let p = opts.parse(args).map_err(anyhow::Error::msg)?;
+
+    let config = match p.get("config") {
+        "" => xloop::config::Config::default(),
+        path => xloop::config::Config::load(std::path::Path::new(path))?,
+    };
+    let mode = Mode::parse(p.get("mode"))?;
+    let mut scenario = Scenario::table1(p.get("model"), mode)?;
+    scenario.seed = p.get_usize("seed")? as u64;
+    if p.get_usize("samples")? > 0 {
+        scenario.real_samples = p.get_usize("samples")?;
+    }
+    config.apply_scenario(&mut scenario);
+
+    let mut c = Coordinator::paper(scenario.seed)?;
+    config.apply(&mut c)?;
+    c.set_training_mode(if p.get_bool("virtual-only") {
+        TrainingMode::VirtualOnly
+    } else {
+        TrainingMode::Real {
+            steps_override: match p.get_usize("real-steps")? {
+                0 => None,
+                n => Some(n as u64),
+            },
+        }
+    });
+
+    let outcome = c.run_retraining(&scenario, None)?;
+    let b = &outcome.breakdown;
+    println!("model: {} | mode: {}", b.model, b.mode_label);
+    if let Some(s) = b.data_transfer_s {
+        println!("  data transfer : {}", human_secs(s));
+    }
+    println!("  training      : {}", human_secs(b.training_s));
+    if let Some(s) = b.model_transfer_s {
+        println!("  model transfer: {}", human_secs(s));
+    }
+    println!("  end-to-end    : {}", human_secs(b.end_to_end_s));
+    if let Some(loss) = b.final_loss {
+        println!("  real steps    : {} (final loss {loss:.5})", b.real_steps);
+    }
+    if p.get_bool("events") {
+        println!("\nevent log:\n{}", outcome.report.to_json());
+    }
+    Ok(())
+}
+
+fn cmd_fig3(args: &[String]) -> Result<()> {
+    let opts = Options::new()
+        .opt("gb", "25", "payload size in GB")
+        .opt("files", "32", "number of files")
+        .opt("seed", "7", "fabric seed");
+    if args.iter().any(|a| a == "--help") {
+        print!("{}", opts.usage("xloop fig3"));
+        return Ok(());
+    }
+    let p = opts.parse(args).map_err(anyhow::Error::msg)?;
+    let bytes = (p.get_f64("gb")? * 1e9) as u64;
+    let files = p.get_usize("files")?;
+    let seed = p.get_usize("seed")? as u64;
+
+    println!(
+        "Fig. 3 — Globus-style transfer throughput, {} in {files} files\n",
+        human_bytes(bytes as f64)
+    );
+    println!("{:>12} {:>18} {:>18}", "concurrency", "SLAC->ALCF (GB/s)", "ALCF->SLAC (GB/s)");
+    for k in [1usize, 2, 4, 8, 16, 32] {
+        if k > files {
+            break;
+        }
+        let mut fwd_svc = TransferService::paper(seed);
+        let mut clock = VClock::new();
+        let mut req = TransferRequest::split_even(
+            "fig3-fwd",
+            "slac#dtn".into(),
+            "alcf#dtn".into(),
+            bytes,
+            files,
+        );
+        req.concurrency = Some(k);
+        let fwd = fwd_svc.execute(&mut clock, &req)?;
+
+        let mut back_svc = TransferService::paper(seed + 1);
+        let mut clock = VClock::new();
+        let mut req = TransferRequest::split_even(
+            "fig3-back",
+            "alcf#dtn".into(),
+            "slac#dtn".into(),
+            bytes,
+            files,
+        );
+        req.concurrency = Some(k);
+        let back = back_svc.execute(&mut clock, &req)?;
+        println!(
+            "{k:>12} {:>18.3} {:>18.3}",
+            fwd.throughput_bps() / 1e9,
+            back.throughput_bps() / 1e9
+        );
+    }
+    println!("\npaper reference: >1 GB/s with concurrent files over one 10 Gbps DTN NIC");
+    Ok(())
+}
+
+fn cmd_fig4(args: &[String]) -> Result<()> {
+    let opts = Options::new();
+    if args.iter().any(|a| a == "--help") {
+        print!("{}", opts.usage("xloop fig4"));
+        return Ok(());
+    }
+    let params = CostParams::paper();
+    println!("Fig. 4 — conventional vs ML-surrogate total processing time\n");
+    println!(
+        "{:>12} {:>18} {:>18} {:>8}",
+        "N peaks", "conventional (s)", "ML surrogate (s)", "winner"
+    );
+    let mut n = 1e3;
+    while n <= 1e9 {
+        let fc = params.f_conventional_us(n) / 1e6;
+        let fml = params.f_ml_us(n) / 1e6;
+        println!(
+            "{:>12.0e} {:>18.2} {:>18.2} {:>8}",
+            n,
+            fc,
+            fml,
+            if fc <= fml { "conv" } else { "ML" }
+        );
+        n *= 10.0;
+    }
+    let cross = params.crossover()?;
+    println!(
+        "\ncrossover at N* = {:.2e} peaks (paper Fig. 4: conventional wins only for small N)",
+        cross.n_star
+    );
+    Ok(())
+}
+
+fn cmd_serve(args: &[String]) -> Result<()> {
+    let opts = Options::new()
+        .opt("model", "braggnn", "model to serve")
+        .opt("real-steps", "40", "real PJRT training steps before deploy")
+        .opt("batches", "20", "inference batches to stream")
+        .opt("seed", "42", "fabric seed");
+    if args.iter().any(|a| a == "--help") {
+        print!("{}", opts.usage("xloop serve"));
+        return Ok(());
+    }
+    let p = opts.parse(args).map_err(anyhow::Error::msg)?;
+
+    let mut scenario = Scenario::table1(p.get("model"), Mode::RemoteCerebras)?;
+    scenario.seed = p.get_usize("seed")? as u64;
+    let mut c = Coordinator::paper(scenario.seed)?;
+    c.set_training_mode(TrainingMode::Real {
+        steps_override: Some(p.get_usize("real-steps")? as u64),
+    });
+    let outcome = c.run_retraining(&scenario, None)?;
+    println!(
+        "retrained {} in {} (virtual), loss {:?}",
+        scenario.model,
+        human_secs(outcome.breakdown.end_to_end_s),
+        outcome.breakdown.final_loss
+    );
+
+    let dataset = c.world.dataset(&format!("{}-train", scenario.model))?.clone();
+    let rep = c.world.edge.serve_stream(&dataset, p.get_usize("batches")? as u64)?;
+    println!(
+        "edge serving: {} samples in {} batches | real mean {} p99 {} | {} samples/s | modeled edge time {}",
+        rep.samples,
+        rep.batches,
+        human_secs(rep.real_mean_s),
+        human_secs(rep.real_p99_s),
+        rep.real_throughput as u64,
+        human_secs(rep.virtual_total_s),
+    );
+    Ok(())
+}
+
+fn cmd_info() -> Result<()> {
+    let dir = xloop::models::default_artifacts_dir();
+    println!("artifacts dir: {dir:?}");
+    if !dir.join("manifest.json").exists() {
+        println!("artifacts NOT built — run `make artifacts`");
+        return Ok(());
+    }
+    let registry = xloop::models::ModelRegistry::load(&dir)?;
+    let rt = xloop::runtime::Runtime::cpu()?;
+    println!("PJRT platform: {}", rt.platform());
+    for name in registry.names() {
+        let m = registry.get(name)?;
+        println!(
+            "  {name}: {} params, train batch {}, {:.2} GFLOP/step, sample {} B",
+            m.param_count,
+            m.train_batch,
+            m.train_flops_per_step / 1e9,
+            m.sample_bytes
+        );
+    }
+    Ok(())
+}

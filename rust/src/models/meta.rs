@@ -1,0 +1,345 @@
+//! Typed views over the AOT artifact metadata (`artifacts/*_meta.json`).
+//!
+//! aot.py emits, per model, the flat train/infer ABI (tensor order,
+//! shapes, output counts), Adam hyperparameters, analytic FLOP counts and
+//! initial-parameter snapshots. This module parses those sidecars so the
+//! trainer and runtime can feed PJRT executables positionally without any
+//! Python at runtime.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::Json;
+
+/// One parameter tensor of a model.
+#[derive(Debug, Clone)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    /// artifact-relative path of the He-init snapshot (raw LE f32)
+    pub init_file: String,
+}
+
+impl TensorSpec {
+    pub fn elems(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// ABI of one lowered executable (train step or inference).
+#[derive(Debug, Clone)]
+pub struct PhaseMeta {
+    /// artifact-relative HLO text file
+    pub file: String,
+    pub n_args: usize,
+    pub n_outputs: usize,
+    pub arg_shapes: Vec<Vec<usize>>,
+}
+
+/// Adam hyperparameters baked into the train-step HLO (informational —
+/// the values live inside the artifact; these let reports show them).
+#[derive(Debug, Clone, Copy)]
+pub struct AdamMeta {
+    pub lr: f64,
+    pub beta1: f64,
+    pub beta2: f64,
+    pub eps: f64,
+}
+
+/// Full metadata for one model's artifacts.
+#[derive(Debug, Clone)]
+pub struct ModelMeta {
+    pub name: String,
+    pub param_count: usize,
+    pub params: Vec<TensorSpec>,
+    pub input_shape: Vec<usize>,
+    pub target_shape: Vec<usize>,
+    pub train_batch: usize,
+    pub infer_batch: usize,
+    pub adam: AdamMeta,
+    pub fwd_flops_per_sample: f64,
+    pub train_flops_per_step: f64,
+    /// wire size of one (input, label) sample in bytes (16-bit pixels)
+    pub sample_bytes: usize,
+    pub train: PhaseMeta,
+    pub infer: PhaseMeta,
+    /// directory the artifact-relative paths resolve against
+    pub artifacts_dir: PathBuf,
+}
+
+impl ModelMeta {
+    pub fn load(artifacts_dir: &Path, model: &str) -> Result<ModelMeta> {
+        let path = artifacts_dir.join(format!("{model}_meta.json"));
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} (run `make artifacts`)"))?;
+        let j = Json::parse(&text).with_context(|| format!("parsing {path:?}"))?;
+        Self::from_json(&j, artifacts_dir)
+    }
+
+    pub fn from_json(j: &Json, artifacts_dir: &Path) -> Result<ModelMeta> {
+        let name = j
+            .get("name")
+            .as_str()
+            .context("meta missing `name`")?
+            .to_string();
+        let params = j
+            .get("params")
+            .as_arr()
+            .context("meta missing `params`")?
+            .iter()
+            .map(|p| {
+                Ok(TensorSpec {
+                    name: p.get("name").as_str().context("param name")?.to_string(),
+                    shape: parse_shape(p.get("shape"))?,
+                    init_file: p.get("init").as_str().context("param init")?.to_string(),
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let param_count = j
+            .get("param_count")
+            .as_usize()
+            .context("meta missing `param_count`")?;
+        let declared: usize = params.iter().map(|p| p.elems()).sum();
+        if declared != param_count {
+            bail!("param_count {param_count} != sum of tensor sizes {declared}");
+        }
+        let adam = AdamMeta {
+            lr: j.get("adam").get("lr").as_f64().context("adam lr")?,
+            beta1: j.get("adam").get("beta1").as_f64().context("adam beta1")?,
+            beta2: j.get("adam").get("beta2").as_f64().context("adam beta2")?,
+            eps: j.get("adam").get("eps").as_f64().context("adam eps")?,
+        };
+        let meta = ModelMeta {
+            param_count,
+            input_shape: parse_shape(j.get("input_shape"))?,
+            target_shape: parse_shape(j.get("target_shape"))?,
+            train_batch: j.get("train_batch").as_usize().context("train_batch")?,
+            infer_batch: j.get("infer_batch").as_usize().context("infer_batch")?,
+            adam,
+            fwd_flops_per_sample: j
+                .get("fwd_flops_per_sample")
+                .as_f64()
+                .context("fwd_flops_per_sample")?,
+            train_flops_per_step: j
+                .get("train_flops_per_step")
+                .as_f64()
+                .context("train_flops_per_step")?,
+            sample_bytes: j.get("sample_bytes").as_usize().context("sample_bytes")?,
+            train: parse_phase(j.get("train"))?,
+            infer: parse_phase(j.get("infer"))?,
+            params,
+            name,
+            artifacts_dir: artifacts_dir.to_path_buf(),
+        };
+        meta.validate()?;
+        Ok(meta)
+    }
+
+    fn validate(&self) -> Result<()> {
+        let n = self.params.len();
+        if self.train.n_args != 3 * n + 3 {
+            bail!(
+                "train ABI mismatch: n_args {} != 3*{n}+3",
+                self.train.n_args
+            );
+        }
+        if self.train.n_outputs != 3 * n + 2 {
+            bail!(
+                "train ABI mismatch: n_outputs {} != 3*{n}+2",
+                self.train.n_outputs
+            );
+        }
+        if self.infer.n_args != n + 1 {
+            bail!("infer ABI mismatch: n_args {} != {n}+1", self.infer.n_args);
+        }
+        for (i, p) in self.params.iter().enumerate() {
+            for k in [i, n + i, 2 * n + i] {
+                if self.train.arg_shapes[k] != p.shape {
+                    bail!("train arg {k} shape != param `{}`", p.name);
+                }
+            }
+        }
+        Ok(())
+    }
+
+    pub fn train_hlo_path(&self) -> PathBuf {
+        self.artifacts_dir.join(&self.train.file)
+    }
+
+    pub fn infer_hlo_path(&self) -> PathBuf {
+        self.artifacts_dir.join(&self.infer.file)
+    }
+
+    /// Load the He-init parameter snapshots (raw little-endian f32).
+    pub fn load_init_params(&self) -> Result<Vec<Vec<f32>>> {
+        self.params
+            .iter()
+            .map(|p| {
+                let path = self.artifacts_dir.join(&p.init_file);
+                let bytes = std::fs::read(&path)
+                    .with_context(|| format!("reading init snapshot {path:?}"))?;
+                if bytes.len() != 4 * p.elems() {
+                    bail!(
+                        "init `{}`: {} bytes, expected {}",
+                        p.name,
+                        bytes.len(),
+                        4 * p.elems()
+                    );
+                }
+                Ok(bytes
+                    .chunks_exact(4)
+                    .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                    .collect())
+            })
+            .collect()
+    }
+
+    /// Total parameter bytes (f32), e.g. the "model transfer" payload.
+    pub fn param_bytes(&self) -> u64 {
+        4 * self.param_count as u64
+    }
+
+    /// Dataset wire size for `n` samples.
+    pub fn dataset_bytes(&self, n: u64) -> u64 {
+        n * self.sample_bytes as u64
+    }
+}
+
+fn parse_shape(j: &Json) -> Result<Vec<usize>> {
+    j.as_arr()
+        .context("shape not an array")?
+        .iter()
+        .map(|d| d.as_usize().context("shape dim not a non-negative int"))
+        .collect()
+}
+
+fn parse_phase(j: &Json) -> Result<PhaseMeta> {
+    Ok(PhaseMeta {
+        file: j.get("file").as_str().context("phase file")?.to_string(),
+        n_args: j.get("n_args").as_usize().context("phase n_args")?,
+        n_outputs: j.get("n_outputs").as_usize().context("phase n_outputs")?,
+        arg_shapes: j
+            .get("arg_shapes")
+            .as_arr()
+            .context("phase arg_shapes")?
+            .iter()
+            .map(parse_shape)
+            .collect::<Result<Vec<_>>>()?,
+    })
+}
+
+/// Metadata for the pseudo-Voigt synthesis artifact.
+#[derive(Debug, Clone)]
+pub struct PvMeta {
+    pub file: String,
+    pub batch: usize,
+    pub height: usize,
+    pub width: usize,
+    pub artifacts_dir: PathBuf,
+}
+
+impl PvMeta {
+    pub fn load(artifacts_dir: &Path) -> Result<PvMeta> {
+        let path = artifacts_dir.join("pv_meta.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} (run `make artifacts`)"))?;
+        let j = Json::parse(&text)?;
+        let order: Vec<&str> = j
+            .get("param_order")
+            .as_arr()
+            .context("pv param_order")?
+            .iter()
+            .filter_map(|v| v.as_str())
+            .collect();
+        if order != ["amp", "x0", "y0", "sigma_x", "sigma_y", "eta", "bg"] {
+            bail!("pv param order changed: {order:?}");
+        }
+        Ok(PvMeta {
+            file: j.get("file").as_str().context("pv file")?.to_string(),
+            batch: j.get("batch").as_usize().context("pv batch")?,
+            height: j.get("height").as_usize().context("pv height")?,
+            width: j.get("width").as_usize().context("pv width")?,
+            artifacts_dir: artifacts_dir.to_path_buf(),
+        })
+    }
+
+    pub fn hlo_path(&self) -> PathBuf {
+        self.artifacts_dir.join(&self.file)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fake_meta_json() -> String {
+        // 2-tensor toy model with a consistent ABI
+        r#"{
+          "name": "toy",
+          "param_count": 8,
+          "params": [
+            {"name": "w", "shape": [2, 3], "init": "init/toy_p0.bin"},
+            {"name": "b", "shape": [2], "init": "init/toy_p1.bin"}
+          ],
+          "input_shape": [3], "target_shape": [2],
+          "train_batch": 4, "infer_batch": 8,
+          "adam": {"lr": 0.001, "beta1": 0.9, "beta2": 0.999, "eps": 1e-8},
+          "fwd_flops_per_sample": 12,
+          "train_flops_per_step": 224,
+          "sample_bytes": 14,
+          "train": {
+            "file": "toy_train.hlo.txt", "n_args": 9, "n_outputs": 8,
+            "arg_shapes": [[2,3],[2],[2,3],[2],[2,3],[2],[],[4,3],[4,2]]
+          },
+          "infer": {
+            "file": "toy_infer.hlo.txt", "n_args": 3, "n_outputs": 1,
+            "arg_shapes": [[2,3],[2],[8,3]]
+          }
+        }"#
+        .to_string()
+    }
+
+    #[test]
+    fn parses_consistent_meta() {
+        let j = Json::parse(&fake_meta_json()).unwrap();
+        let m = ModelMeta::from_json(&j, Path::new("/tmp/a")).unwrap();
+        assert_eq!(m.name, "toy");
+        assert_eq!(m.params.len(), 2);
+        assert_eq!(m.param_bytes(), 32);
+        assert_eq!(m.dataset_bytes(10), 140);
+        assert_eq!(m.train_hlo_path(), PathBuf::from("/tmp/a/toy_train.hlo.txt"));
+    }
+
+    #[test]
+    fn rejects_bad_param_count() {
+        let text = fake_meta_json().replace("\"param_count\": 8", "\"param_count\": 9");
+        let j = Json::parse(&text).unwrap();
+        assert!(ModelMeta::from_json(&j, Path::new("/tmp")).is_err());
+    }
+
+    #[test]
+    fn rejects_bad_abi() {
+        let text = fake_meta_json().replace("\"n_args\": 9", "\"n_args\": 8");
+        let j = Json::parse(&text).unwrap();
+        let err = ModelMeta::from_json(&j, Path::new("/tmp")).unwrap_err();
+        assert!(err.to_string().contains("ABI"), "{err}");
+    }
+
+    #[test]
+    fn loads_real_artifacts_if_present() {
+        let dir = crate::models::default_artifacts_dir();
+        if !dir.join("manifest.json").exists() {
+            return; // `make artifacts` not run yet
+        }
+        for name in ["braggnn", "cookienetae"] {
+            let m = ModelMeta::load(&dir, name).unwrap();
+            assert!(m.param_count > 10_000, "{name}");
+            assert!(m.train_flops_per_step > 1e6, "{name}");
+            let init = m.load_init_params().unwrap();
+            assert_eq!(init.len(), m.params.len());
+        }
+        let pv = PvMeta::load(&dir).unwrap();
+        assert_eq!((pv.height, pv.width), (11, 11));
+    }
+}

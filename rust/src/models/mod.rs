@@ -1,0 +1,21 @@
+//! Model registry: typed access to the AOT artifacts the Python layer
+//! built (`make artifacts`). No Python runs past this point.
+
+pub mod meta;
+pub mod registry;
+pub mod repository;
+
+pub use meta::{ModelMeta, PhaseMeta, PvMeta, TensorSpec};
+pub use registry::ModelRegistry;
+pub use repository::{Checkpoint, ExperimentTag, ModelRepository};
+
+use std::path::PathBuf;
+
+/// Default artifact directory: `$XLOOP_ARTIFACTS` or `<repo>/artifacts`
+/// (resolved relative to the crate root so tests work from any cwd).
+pub fn default_artifacts_dir() -> PathBuf {
+    if let Ok(dir) = std::env::var("XLOOP_ARTIFACTS") {
+        return PathBuf::from(dir);
+    }
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}

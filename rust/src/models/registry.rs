@@ -1,0 +1,95 @@
+//! Lookup of every model the artifact directory carries, plus the model
+//! repository abstraction the paper's Future Work §7(1) sketches (pick a
+//! foundation model to fine-tune instead of retraining from scratch).
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use super::meta::{ModelMeta, PvMeta};
+use crate::util::Json;
+
+/// All models known to an artifact directory.
+#[derive(Debug)]
+pub struct ModelRegistry {
+    dir: PathBuf,
+    models: BTreeMap<String, ModelMeta>,
+    pv: Option<PvMeta>,
+}
+
+impl ModelRegistry {
+    /// Read `manifest.json` and load every model's metadata.
+    pub fn load(dir: &Path) -> Result<ModelRegistry> {
+        let manifest_path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&manifest_path)
+            .with_context(|| format!("reading {manifest_path:?} (run `make artifacts`)"))?;
+        let manifest = Json::parse(&text)?;
+        let mut models = BTreeMap::new();
+        if let Some(obj) = manifest.get("models").as_obj() {
+            for name in obj.keys() {
+                models.insert(name.clone(), ModelMeta::load(dir, name)?);
+            }
+        }
+        if models.is_empty() {
+            bail!("manifest {manifest_path:?} lists no models");
+        }
+        let pv = if manifest.get("pv").is_null() {
+            None
+        } else {
+            Some(PvMeta::load(dir)?)
+        };
+        Ok(ModelRegistry {
+            dir: dir.to_path_buf(),
+            models,
+            pv,
+        })
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        self.models.keys().map(|s| s.as_str()).collect()
+    }
+
+    pub fn get(&self, name: &str) -> Result<&ModelMeta> {
+        self.models.get(name).with_context(|| {
+            format!(
+                "unknown model `{name}` (available: {})",
+                self.names().join(", ")
+            )
+        })
+    }
+
+    pub fn pv(&self) -> Result<&PvMeta> {
+        self.pv
+            .as_ref()
+            .context("artifacts carry no pv_surface module")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn loads_real_registry_if_present() {
+        let dir = crate::models::default_artifacts_dir();
+        if !dir.join("manifest.json").exists() {
+            return;
+        }
+        let reg = ModelRegistry::load(&dir).unwrap();
+        assert_eq!(reg.names(), vec!["braggnn", "cookienetae"]);
+        assert!(reg.get("braggnn").is_ok());
+        assert!(reg.get("nope").is_err());
+        assert!(reg.pv().is_ok());
+    }
+
+    #[test]
+    fn missing_dir_is_actionable() {
+        let err = ModelRegistry::load(Path::new("/nonexistent/path")).unwrap_err();
+        assert!(err.to_string().contains("make artifacts"), "{err}");
+    }
+}

@@ -1,0 +1,169 @@
+//! Model repository — the paper's Future Work §7(1), implemented:
+//! "building the model repository ... so as to pick up the right model
+//! as foundation to fine-tune using new dataset instead of retraining
+//! from scratch, to further accelerate the training process."
+//!
+//! The repository stores versioned trained checkpoints per model, tagged
+//! with the experiment context they came from; `select_foundation` picks
+//! the best warm start for a new context (same model + closest context,
+//! lowest validation loss); the trainer then fine-tunes from it, which
+//! the warm-start ablation (`xloop::workflow` tests and the `micro`
+//! bench) shows converges in a fraction of the cold-start steps.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context, Result};
+
+use crate::runtime::Tensor;
+
+/// Experiment context a checkpoint was trained under (used for
+/// similarity matching when choosing a foundation).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ExperimentTag {
+    /// sample / beamline descriptor, free-form ("Ti64-layer3")
+    pub sample: String,
+    /// detector distance or comparable numeric knob (arbitrary units)
+    pub setting: f64,
+}
+
+impl ExperimentTag {
+    /// Similarity distance: different sample dominates, then the knob.
+    pub fn distance(&self, other: &ExperimentTag) -> f64 {
+        let sample_penalty = if self.sample == other.sample { 0.0 } else { 10.0 };
+        sample_penalty + (self.setting - other.setting).abs()
+    }
+}
+
+/// One stored checkpoint.
+pub struct Checkpoint {
+    pub model: String,
+    pub version: u32,
+    pub params: Vec<Tensor>,
+    pub val_loss: f32,
+    pub tag: ExperimentTag,
+    /// virtual time the producing run spent training
+    pub train_virtual_s: f64,
+}
+
+/// Versioned checkpoint store, per model.
+#[derive(Default)]
+pub struct ModelRepository {
+    store: BTreeMap<String, Vec<Checkpoint>>,
+}
+
+impl ModelRepository {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Store a checkpoint; returns its version (1-based per model).
+    pub fn publish(
+        &mut self,
+        model: &str,
+        params: Vec<Tensor>,
+        val_loss: f32,
+        tag: ExperimentTag,
+        train_virtual_s: f64,
+    ) -> Result<u32> {
+        if params.is_empty() {
+            bail!("refusing to publish `{model}` with no parameter tensors");
+        }
+        if !val_loss.is_finite() {
+            bail!("refusing to publish `{model}` with non-finite val loss");
+        }
+        let entry = self.store.entry(model.to_string()).or_default();
+        let version = entry.len() as u32 + 1;
+        entry.push(Checkpoint {
+            model: model.to_string(),
+            version,
+            params,
+            val_loss,
+            tag,
+            train_virtual_s,
+        });
+        Ok(version)
+    }
+
+    pub fn versions(&self, model: &str) -> usize {
+        self.store.get(model).map(|v| v.len()).unwrap_or(0)
+    }
+
+    pub fn get(&self, model: &str, version: u32) -> Result<&Checkpoint> {
+        self.store
+            .get(model)
+            .and_then(|v| v.get(version as usize - 1))
+            .with_context(|| format!("no checkpoint `{model}` v{version}"))
+    }
+
+    /// Pick the foundation checkpoint for a new experiment context:
+    /// minimize (context distance, then val loss). `None` when the
+    /// repository has nothing for this model (cold start).
+    pub fn select_foundation(
+        &self,
+        model: &str,
+        tag: &ExperimentTag,
+    ) -> Option<&Checkpoint> {
+        self.store.get(model)?.iter().min_by(|a, b| {
+            (a.tag.distance(tag), a.val_loss)
+                .partial_cmp(&(b.tag.distance(tag), b.val_loss))
+                .unwrap()
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn params() -> Vec<Tensor> {
+        vec![Tensor::zeros(vec![2, 2])]
+    }
+
+    fn tag(sample: &str, setting: f64) -> ExperimentTag {
+        ExperimentTag {
+            sample: sample.into(),
+            setting,
+        }
+    }
+
+    #[test]
+    fn publish_and_version() {
+        let mut repo = ModelRepository::new();
+        assert_eq!(repo.versions("braggnn"), 0);
+        assert_eq!(
+            repo.publish("braggnn", params(), 0.1, tag("Ti64", 1.0), 19.0).unwrap(),
+            1
+        );
+        assert_eq!(
+            repo.publish("braggnn", params(), 0.05, tag("Ti64", 2.0), 19.0).unwrap(),
+            2
+        );
+        assert_eq!(repo.versions("braggnn"), 2);
+        assert_eq!(repo.get("braggnn", 2).unwrap().val_loss, 0.05);
+        assert!(repo.get("braggnn", 3).is_err());
+        assert!(repo.get("cookienetae", 1).is_err());
+    }
+
+    #[test]
+    fn selection_prefers_same_sample_then_loss() {
+        let mut repo = ModelRepository::new();
+        repo.publish("m", params(), 0.50, tag("A", 1.0), 19.0).unwrap();
+        repo.publish("m", params(), 0.01, tag("B", 1.0), 19.0).unwrap();
+        repo.publish("m", params(), 0.20, tag("A", 1.2), 19.0).unwrap();
+        // same sample (A) wins over better loss on sample B; closer
+        // setting breaks the tie within A
+        let best = repo.select_foundation("m", &tag("A", 1.15)).unwrap();
+        assert_eq!(best.version, 3);
+        // unknown model -> cold start
+        assert!(repo.select_foundation("x", &tag("A", 1.0)).is_none());
+    }
+
+    #[test]
+    fn rejects_bad_checkpoints() {
+        let mut repo = ModelRepository::new();
+        assert!(repo.publish("m", vec![], 0.1, tag("A", 0.0), 1.0).is_err());
+        assert!(repo
+            .publish("m", params(), f32::NAN, tag("A", 0.0), 1.0)
+            .is_err());
+    }
+}

@@ -1,0 +1,198 @@
+//! PJRT CPU client wrapper: load HLO-text artifacts, compile once, cache,
+//! execute. Adapted from /opt/xla-example/load_hlo (see README gotchas:
+//! HLO *text* interchange, tuple-rooted entry computations).
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use super::tensor::Tensor;
+
+/// A compiled, loaded XLA executable plus ABI bookkeeping.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    /// artifact the executable came from (diagnostics)
+    pub source: PathBuf,
+    /// compile wallclock, recorded for EXPERIMENTS.md §Perf
+    pub compile_secs: f64,
+}
+
+// SAFETY: PJRT CPU client objects are internally synchronized (the
+// underlying TfrtCpuClient is thread-safe); the raw pointers in the xla
+// crate wrappers are only non-Send because bindgen cannot know that. All
+// mutation goes through the PJRT C API which locks internally.
+unsafe impl Send for Executable {}
+unsafe impl Sync for Executable {}
+
+impl Executable {
+    /// Execute with host tensors; returns the flattened output tuple.
+    ///
+    /// aot.py lowers every entry computation with `return_tuple=True`, so
+    /// the single result buffer is a tuple literal we decompose here.
+    pub fn run(&self, args: &[Tensor]) -> Result<Vec<Tensor>> {
+        let literals = args
+            .iter()
+            .map(|t| t.to_literal())
+            .collect::<Result<Vec<_>>>()?;
+        self.run_literals(&literals)
+    }
+
+    /// Execute with pre-built literals (hot path: lets the caller reuse
+    /// constant input literals across steps).
+    pub fn run_literals(&self, args: &[xla::Literal]) -> Result<Vec<Tensor>> {
+        let outs = self
+            .exe
+            .execute::<xla::Literal>(args)
+            .with_context(|| format!("executing {:?}", self.source))?;
+        let buf = outs
+            .first()
+            .and_then(|d| d.first())
+            .context("executable produced no output buffer")?;
+        let root = buf.to_literal_sync().context("fetching result literal")?;
+        let parts = root.to_tuple().context("decomposing result tuple")?;
+        parts.iter().map(Tensor::from_literal).collect()
+    }
+
+    /// Execute and return raw literals (for callers that feed outputs
+    /// back in as the next step's inputs without host conversion).
+    pub fn run_raw(&self, args: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let outs = self
+            .exe
+            .execute::<xla::Literal>(args)
+            .with_context(|| format!("executing {:?}", self.source))?;
+        let buf = outs
+            .first()
+            .and_then(|d| d.first())
+            .context("executable produced no output buffer")?;
+        let root = buf.to_literal_sync().context("fetching result literal")?;
+        root.to_tuple().context("decomposing result tuple")
+    }
+}
+
+/// Process-wide PJRT runtime with an executable cache.
+///
+/// Compilation of the train-step artifacts takes seconds; every consumer
+/// (trainer, edge server, benches) shares one compiled instance per path.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    cache: Mutex<HashMap<PathBuf, Arc<Executable>>>,
+}
+
+// SAFETY: see Executable — the PJRT CPU client is thread-safe.
+unsafe impl Send for Runtime {}
+unsafe impl Sync for Runtime {}
+
+impl Runtime {
+    /// Create a CPU PJRT client.
+    pub fn cpu() -> Result<Arc<Runtime>> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Arc::new(Runtime {
+            client,
+            cache: Mutex::new(HashMap::new()),
+        }))
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an HLO text artifact (cached by absolute path).
+    pub fn load_hlo(&self, path: &Path) -> Result<Arc<Executable>> {
+        let key = path
+            .canonicalize()
+            .with_context(|| format!("artifact not found: {path:?} (run `make artifacts`)"))?;
+        if let Some(hit) = self.cache.lock().unwrap().get(&key) {
+            return Ok(hit.clone());
+        }
+        let started = Instant::now();
+        let path_str = key
+            .to_str()
+            .with_context(|| format!("non-utf8 path {key:?}"))?;
+        let proto = xla::HloModuleProto::from_text_file(path_str)
+            .with_context(|| format!("parsing HLO text {key:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("XLA compile of {key:?}"))?;
+        let compiled = Arc::new(Executable {
+            exe,
+            source: key.clone(),
+            compile_secs: started.elapsed().as_secs_f64(),
+        });
+        log::debug!(
+            "compiled {:?} in {:.2}s",
+            key.file_name().unwrap_or_default(),
+            compiled.compile_secs
+        );
+        self.cache
+            .lock()
+            .unwrap()
+            .insert(key, compiled.clone());
+        Ok(compiled)
+    }
+
+    /// Number of compiled executables currently cached.
+    pub fn cache_len(&self) -> usize {
+        self.cache.lock().unwrap().len()
+    }
+}
+
+/// Verify an artifact ABI: arity errors surface at load, not mid-training.
+pub fn check_arity(exe_args: usize, meta_args: usize, what: &str) -> Result<()> {
+    if exe_args != meta_args {
+        bail!("{what}: executable wants {exe_args} args, meta says {meta_args}");
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::default_artifacts_dir;
+
+    #[test]
+    fn pv_surface_executes_and_matches_formula() {
+        let dir = default_artifacts_dir();
+        if !dir.join("pv_meta.json").exists() {
+            return; // artifacts not built
+        }
+        let meta = crate::models::PvMeta::load(&dir).unwrap();
+        let rt = Runtime::cpu().unwrap();
+        let exe = rt.load_hlo(&meta.hlo_path()).unwrap();
+
+        // params batch: first row is a centered symmetric peak
+        let mut params = vec![0.0f32; meta.batch * 7];
+        params[0..7].copy_from_slice(&[100.0, 5.0, 5.0, 1.5, 1.5, 0.4, 2.0]);
+        for i in 1..meta.batch {
+            params[i * 7..i * 7 + 7].copy_from_slice(&[1.0, 5.0, 5.0, 1.0, 1.0, 0.5, 0.0]);
+        }
+        let t = Tensor::new(vec![meta.batch, 7], params).unwrap();
+        let out = exe.run(&[t]).unwrap();
+        assert_eq!(out.len(), 1);
+        let surf = &out[0];
+        assert_eq!(surf.shape(), &[meta.batch, meta.height, meta.width]);
+        // center pixel: amp*(eta*1 + (1-eta)*1) + bg = 102
+        let center = surf.at(&[0, 5, 5]);
+        assert!((center - 102.0).abs() < 1e-3, "center {center}");
+        // symmetric peak: corners equal
+        let c1 = surf.at(&[0, 0, 0]);
+        let c2 = surf.at(&[0, 10, 10]);
+        assert!((c1 - c2).abs() < 1e-4);
+        // cached on second load
+        assert!(Arc::ptr_eq(&exe, &rt.load_hlo(&meta.hlo_path()).unwrap()));
+    }
+
+    #[test]
+    fn missing_artifact_is_actionable() {
+        let rt = Runtime::cpu().unwrap();
+        let err = match rt.load_hlo(Path::new("/nonexistent/foo.hlo.txt")) {
+            Err(e) => e,
+            Ok(_) => panic!("expected error"),
+        };
+        assert!(err.to_string().contains("make artifacts"), "{err}");
+    }
+}

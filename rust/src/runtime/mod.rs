@@ -1,0 +1,12 @@
+//! Runtime layer: the xla-crate PJRT bridge (load + execute artifacts).
+//!
+//! `PjRtClient::cpu()` → `HloModuleProto::from_text_file` →
+//! `client.compile` → `execute`, with an executable cache and a host
+//! `Tensor` type. Python never appears here; the artifacts are the only
+//! interface to L2/L1.
+
+pub mod client;
+pub mod tensor;
+
+pub use client::{Executable, Runtime};
+pub use tensor::Tensor;

@@ -1,0 +1,149 @@
+//! Host-side f32 tensor + conversions to/from XLA literals.
+//!
+//! Everything crossing the PJRT boundary in this system is f32 (the
+//! train-step ABI flattens params/opt-state/batches to f32 tensors), so a
+//! single concrete tensor type keeps the hot path free of dtype dispatch.
+
+use anyhow::{bail, Context, Result};
+
+/// Dense row-major f32 tensor.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    shape: Vec<usize>,
+    data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Result<Tensor> {
+        let elems: usize = shape.iter().product();
+        if elems != data.len() {
+            bail!(
+                "shape {:?} needs {} elems, got {}",
+                shape,
+                elems,
+                data.len()
+            );
+        }
+        Ok(Tensor { shape, data })
+    }
+
+    pub fn zeros(shape: Vec<usize>) -> Tensor {
+        let elems = shape.iter().product();
+        Tensor {
+            shape,
+            data: vec![0.0; elems],
+        }
+    }
+
+    pub fn scalar(v: f32) -> Tensor {
+        Tensor {
+            shape: vec![],
+            data: vec![v],
+        }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    pub fn elems(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn byte_len(&self) -> usize {
+        4 * self.data.len()
+    }
+
+    /// Scalar extraction (shape [] or [1]).
+    pub fn item(&self) -> Result<f32> {
+        if self.data.len() != 1 {
+            bail!("item() on tensor with {} elems", self.data.len());
+        }
+        Ok(self.data[0])
+    }
+
+    /// Convert to an XLA literal (f32, row-major).
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        let dims: Vec<i64> = self.shape.iter().map(|&d| d as i64).collect();
+        let lit = xla::Literal::vec1(&self.data);
+        lit.reshape(&dims)
+            .with_context(|| format!("reshaping literal to {:?}", self.shape))
+    }
+
+    /// Convert back from an XLA literal, checking the element type.
+    pub fn from_literal(lit: &xla::Literal) -> Result<Tensor> {
+        let shape = lit.shape().context("literal shape")?;
+        let dims: Vec<usize> = match &shape {
+            xla::Shape::Array(a) => a.dims().iter().map(|&d| d as usize).collect(),
+            _ => bail!("literal is not an array"),
+        };
+        let data: Vec<f32> = lit.to_vec().context("literal to_vec<f32>")?;
+        Tensor::new(dims, data)
+    }
+
+    /// Flat offset for a multi-index (debug/test helper).
+    pub fn at(&self, idx: &[usize]) -> f32 {
+        debug_assert_eq!(idx.len(), self.shape.len());
+        let mut off = 0;
+        for (i, (&ix, &dim)) in idx.iter().zip(&self.shape).enumerate() {
+            debug_assert!(ix < dim, "index {idx:?} out of {:?} at {i}", self.shape);
+            off = off * dim + ix;
+        }
+        self.data[off]
+    }
+
+    pub fn is_finite(&self) -> bool {
+        self.data.iter().all(|v| v.is_finite())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn new_checks_len() {
+        assert!(Tensor::new(vec![2, 3], vec![0.0; 6]).is_ok());
+        assert!(Tensor::new(vec![2, 3], vec![0.0; 5]).is_err());
+    }
+
+    #[test]
+    fn scalar_and_item() {
+        let t = Tensor::scalar(4.5);
+        assert_eq!(t.shape(), &[] as &[usize]);
+        assert_eq!(t.item().unwrap(), 4.5);
+        assert!(Tensor::zeros(vec![2]).item().is_err());
+    }
+
+    #[test]
+    fn indexing_row_major() {
+        let t = Tensor::new(vec![2, 3], (0..6).map(|x| x as f32).collect()).unwrap();
+        assert_eq!(t.at(&[0, 0]), 0.0);
+        assert_eq!(t.at(&[0, 2]), 2.0);
+        assert_eq!(t.at(&[1, 0]), 3.0);
+    }
+
+    #[test]
+    fn literal_roundtrip() {
+        let t = Tensor::new(vec![2, 2], vec![1.0, 2.0, 3.0, 4.0]).unwrap();
+        let lit = t.to_literal().unwrap();
+        let back = Tensor::from_literal(&lit).unwrap();
+        assert_eq!(back, t);
+    }
+
+    #[test]
+    fn scalar_literal_roundtrip() {
+        let t = Tensor::scalar(7.0);
+        let lit = t.to_literal().unwrap();
+        let back = Tensor::from_literal(&lit).unwrap();
+        assert_eq!(back, t);
+    }
+}

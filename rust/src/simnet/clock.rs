@@ -1,0 +1,82 @@
+//! Virtual clock for the discrete-event fabric.
+//!
+//! Everything the paper measured on infrastructure we don't have (ESnet,
+//! DCAI machines) is accounted in *virtual seconds* on this clock; real
+//! wallclock (PJRT executions) is measured separately by `metrics`.
+//! DESIGN.md §7 defines the two-clock discipline.
+
+/// Monotonic virtual clock (seconds).
+#[derive(Debug, Clone, Default)]
+pub struct VClock {
+    now: f64,
+}
+
+impl VClock {
+    pub fn new() -> VClock {
+        VClock { now: 0.0 }
+    }
+
+    pub fn now(&self) -> f64 {
+        self.now
+    }
+
+    /// Advance by a non-negative duration.
+    pub fn advance(&mut self, dt: f64) {
+        assert!(dt >= 0.0 && dt.is_finite(), "bad clock delta {dt}");
+        self.now += dt;
+    }
+
+    /// Jump to an absolute time not before the present.
+    pub fn advance_to(&mut self, t: f64) {
+        assert!(
+            t >= self.now - 1e-9,
+            "clock would move backwards: {} -> {t}",
+            self.now
+        );
+        self.now = self.now.max(t);
+    }
+}
+
+/// A span of virtual time, for per-phase breakdowns.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct VSpan {
+    pub start: f64,
+    pub end: f64,
+}
+
+impl VSpan {
+    pub fn duration(&self) -> f64 {
+        self.end - self.start
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn advances() {
+        let mut c = VClock::new();
+        c.advance(1.5);
+        c.advance(0.5);
+        assert_eq!(c.now(), 2.0);
+        c.advance_to(5.0);
+        assert_eq!(c.now(), 5.0);
+        c.advance_to(5.0); // no-op is fine
+        assert_eq!(c.now(), 5.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_negative_delta() {
+        VClock::new().advance(-1.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_backwards_jump() {
+        let mut c = VClock::new();
+        c.advance(10.0);
+        c.advance_to(1.0);
+    }
+}

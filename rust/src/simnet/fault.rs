@@ -1,0 +1,84 @@
+//! Fault injection for the WAN fabric.
+//!
+//! The transfer service (paper §3: Globus "provides fault recovery")
+//! needs failures to recover *from*. This model injects per-file transfer
+//! failures and endpoint outages, deterministically seeded so every
+//! experiment is reproducible.
+
+use crate::util::Rng;
+
+/// Failure model parameters.
+#[derive(Debug, Clone)]
+pub struct FaultModel {
+    /// probability a single file transfer attempt fails mid-flight
+    pub file_failure_prob: f64,
+    /// when a failure happens, the fraction of the file already moved is
+    /// uniform in [0, 1) — wasted bytes that must be re-sent
+    pub retry_backoff_s: f64,
+    /// maximum attempts per file before the task fails hard
+    pub max_attempts: u32,
+}
+
+impl FaultModel {
+    /// No faults (the default for paper-table reproduction).
+    pub fn none() -> FaultModel {
+        FaultModel {
+            file_failure_prob: 0.0,
+            retry_backoff_s: 5.0,
+            max_attempts: 3,
+        }
+    }
+
+    /// A lossy WAN for failure-injection tests.
+    pub fn flaky(p: f64) -> FaultModel {
+        FaultModel {
+            file_failure_prob: p,
+            retry_backoff_s: 5.0,
+            max_attempts: 5,
+        }
+    }
+
+    /// Draw the attempt outcome for one file: `None` = success, or
+    /// `Some(fraction_completed_before_failure)`.
+    pub fn draw_failure(&self, rng: &mut Rng) -> Option<f64> {
+        if self.file_failure_prob > 0.0 && rng.chance(self.file_failure_prob) {
+            Some(rng.f64())
+        } else {
+            None
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn none_never_fails() {
+        let m = FaultModel::none();
+        let mut rng = Rng::new(1);
+        for _ in 0..1000 {
+            assert!(m.draw_failure(&mut rng).is_none());
+        }
+    }
+
+    #[test]
+    fn flaky_fails_at_expected_rate() {
+        let m = FaultModel::flaky(0.3);
+        let mut rng = Rng::new(2);
+        let fails = (0..10_000)
+            .filter(|_| m.draw_failure(&mut rng).is_some())
+            .count();
+        assert!((fails as f64 / 10_000.0 - 0.3).abs() < 0.02, "{fails}");
+    }
+
+    #[test]
+    fn failure_fraction_in_unit_interval() {
+        let m = FaultModel::flaky(1.0);
+        let mut rng = Rng::new(3);
+        for _ in 0..100 {
+            let f = m.draw_failure(&mut rng).unwrap();
+            assert!((0.0..1.0).contains(&f));
+        }
+    }
+}

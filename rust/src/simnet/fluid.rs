@@ -1,0 +1,326 @@
+//! Max-min fair fluid flow simulation.
+//!
+//! Concurrent transfers share links; the throughput each one sees is the
+//! max-min fair ("water-filling") allocation over every link it crosses.
+//! This is the standard fluid model for TCP-fair bulk transfers on
+//! over-provisioned R&E networks (paper §4.1: ESnet/Internet2 keep
+//! backbone utilization under ~40%, so fair-share, not congestion
+//! collapse, is the operative regime).
+//!
+//! The simulation is event-driven and exact for piecewise-constant rate
+//! sets: rates change only at flow arrival/completion instants, so we
+//! re-solve the allocation at each event and jump to the next one.
+//! Complexity O(F * L * F) per event, microscopic at our scales.
+
+use std::collections::BTreeMap;
+
+use super::topology::{LinkId, Topology};
+
+/// A bulk data flow to simulate.
+#[derive(Debug, Clone)]
+pub struct FlowSpec {
+    pub route: Vec<LinkId>,
+    pub bytes: f64,
+    /// absolute virtual time the flow becomes active
+    pub arrival: f64,
+}
+
+/// Completion record for one flow.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FlowResult {
+    pub start: f64,
+    pub finish: f64,
+}
+
+impl FlowResult {
+    pub fn duration(&self) -> f64 {
+        self.finish - self.start
+    }
+}
+
+/// Max-min fair rate allocation for the given active flows.
+///
+/// Returns one rate (bytes/s) per flow. Pure function — exposed for
+/// property tests (rates must saturate at least one link unless all flows
+/// are bottlenecked elsewhere, never exceed any link capacity, etc.).
+pub fn max_min_rates(topo: &Topology, routes: &[&[LinkId]]) -> Vec<f64> {
+    let n = routes.len();
+    let mut rates = vec![0.0; n];
+    if n == 0 {
+        return rates;
+    }
+    let mut remaining_cap: BTreeMap<LinkId, f64> = BTreeMap::new();
+    for r in routes {
+        for &l in *r {
+            remaining_cap
+                .entry(l)
+                .or_insert_with(|| topo.link(l).capacity_bps);
+        }
+    }
+    let mut unfixed: Vec<usize> = (0..n).collect();
+    while !unfixed.is_empty() {
+        // per-link fair share among unfixed flows crossing it
+        let mut best: Option<(LinkId, f64)> = None;
+        for (&l, &cap) in &remaining_cap {
+            let users = unfixed
+                .iter()
+                .filter(|&&f| routes[f].contains(&l))
+                .count();
+            if users == 0 {
+                continue;
+            }
+            let share = cap / users as f64;
+            if best.map(|(_, s)| share < s).unwrap_or(true) {
+                best = Some((l, share));
+            }
+        }
+        let Some((bottleneck, share)) = best else {
+            // remaining flows cross no capacitated link: unconstrained
+            // (cannot happen with non-empty routes); give them zero.
+            break;
+        };
+        // fix every unfixed flow crossing the bottleneck
+        let (fixed, rest): (Vec<usize>, Vec<usize>) = unfixed
+            .into_iter()
+            .partition(|&f| routes[f].contains(&bottleneck));
+        for &f in &fixed {
+            rates[f] = share;
+            for &l in routes[f] {
+                if let Some(cap) = remaining_cap.get_mut(&l) {
+                    *cap = (*cap - share).max(0.0);
+                }
+            }
+        }
+        remaining_cap.remove(&bottleneck);
+        unfixed = rest;
+    }
+    rates
+}
+
+/// Simulate a set of flows to completion; returns per-flow results in
+/// input order.
+pub fn simulate(topo: &Topology, flows: &[FlowSpec]) -> Vec<FlowResult> {
+    #[derive(Debug)]
+    struct Active {
+        idx: usize,
+        remaining: f64,
+    }
+
+    let mut results: Vec<FlowResult> = flows
+        .iter()
+        .map(|f| FlowResult {
+            start: f.arrival,
+            finish: f64::NAN,
+        })
+        .collect();
+
+    // arrival order
+    let mut pending: Vec<usize> = (0..flows.len()).collect();
+    pending.sort_by(|&a, &b| flows[a].arrival.total_cmp(&flows[b].arrival));
+    let mut pending = std::collections::VecDeque::from(pending);
+
+    let mut active: Vec<Active> = Vec::new();
+    let mut t = 0.0f64;
+
+    loop {
+        // admit arrivals at or before t
+        while pending
+            .front()
+            .map(|&i| flows[i].arrival <= t + 1e-12)
+            .unwrap_or(false)
+        {
+            let i = pending.pop_front().unwrap();
+            if flows[i].bytes <= 0.0 {
+                results[i].finish = flows[i].arrival;
+            } else {
+                active.push(Active {
+                    idx: i,
+                    remaining: flows[i].bytes,
+                });
+            }
+        }
+
+        if active.is_empty() {
+            match pending.front() {
+                Some(&i) => {
+                    t = flows[i].arrival;
+                    continue;
+                }
+                None => break,
+            }
+        }
+
+        let routes: Vec<&[LinkId]> = active
+            .iter()
+            .map(|a| flows[a.idx].route.as_slice())
+            .collect();
+        let rates = max_min_rates(topo, &routes);
+
+        // next event: earliest completion or next arrival
+        let mut dt = f64::INFINITY;
+        for (a, &r) in active.iter().zip(&rates) {
+            if r > 0.0 {
+                dt = dt.min(a.remaining / r);
+            }
+        }
+        if let Some(&i) = pending.front() {
+            dt = dt.min(flows[i].arrival - t);
+        }
+        assert!(
+            dt.is_finite(),
+            "stalled fluid simulation (zero-rate flows and no arrivals)"
+        );
+
+        // advance
+        t += dt;
+        for (a, &r) in active.iter_mut().zip(&rates) {
+            a.remaining -= r * dt;
+        }
+        active.retain(|a| {
+            // one byte of slack so float rounding at large t cannot stall
+            if a.remaining <= 1.0 {
+                results[a.idx].finish = t;
+                false
+            } else {
+                true
+            }
+        });
+    }
+
+    results
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::simnet::topology::GBPS;
+
+    fn topo() -> Topology {
+        Topology::paper()
+    }
+
+    fn slac_alcf_route(t: &Topology) -> Vec<LinkId> {
+        let slac = t.facility("slac").unwrap();
+        let alcf = t.facility("alcf").unwrap();
+        t.route(slac, alcf).unwrap().to_vec()
+    }
+
+    #[test]
+    fn single_flow_gets_bottleneck_bandwidth() {
+        let t = topo();
+        let route = slac_alcf_route(&t);
+        let gb = 1e9;
+        let res = simulate(
+            &t,
+            &[FlowSpec {
+                route,
+                bytes: 10.0 * gb,
+                arrival: 0.0,
+            }],
+        );
+        // bottleneck = 10 Gbps NIC = 1.25 GB/s -> 8 s
+        assert!((res[0].duration() - 8.0).abs() < 1e-6, "{res:?}");
+    }
+
+    #[test]
+    fn concurrent_flows_share_fairly() {
+        let t = topo();
+        let route = slac_alcf_route(&t);
+        let gb = 1e9;
+        let flows: Vec<FlowSpec> = (0..4)
+            .map(|_| FlowSpec {
+                route: route.clone(),
+                bytes: 1.0 * gb,
+                arrival: 0.0,
+            })
+            .collect();
+        let res = simulate(&t, &flows);
+        // 4 equal flows over a 1.25 GB/s bottleneck: all finish at 3.2 s
+        for r in &res {
+            assert!((r.finish - 3.2).abs() < 1e-6, "{res:?}");
+        }
+    }
+
+    #[test]
+    fn later_arrival_slows_first_flow() {
+        let t = topo();
+        let route = slac_alcf_route(&t);
+        let gb = 1e9;
+        let res = simulate(
+            &t,
+            &[
+                FlowSpec {
+                    route: route.clone(),
+                    bytes: 2.5 * gb,
+                    arrival: 0.0,
+                },
+                FlowSpec {
+                    route,
+                    bytes: 1.25 * gb,
+                    arrival: 1.0,
+                },
+            ],
+        );
+        // flow0 alone for 1 s (1.25 GB done), then shares 0.625 GB/s each.
+        // flow0: 1.25 GB left / 0.625 = 2 s more -> finishes t=3
+        // flow1: 1.25 GB at 0.625 GB/s = 2 s -> finishes t=3
+        assert!((res[0].finish - 3.0).abs() < 1e-6, "{res:?}");
+        assert!((res[1].finish - 3.0).abs() < 1e-6, "{res:?}");
+    }
+
+    #[test]
+    fn narrow_backbone_binds_before_nics() {
+        let j = crate::util::Json::parse(
+            r#"{
+            "facilities": ["a", "b"],
+            "links": [
+                {"name": "nic-a", "gbps": 10.0, "latency_ms": 0.5},
+                {"name": "bb", "gbps": 8.0, "latency_ms": 20.0},
+                {"name": "nic-b", "gbps": 10.0, "latency_ms": 0.5}
+            ],
+            "routes": [{"from": "a", "to": "b", "links": ["nic-a", "bb", "nic-b"]}]
+        }"#,
+        )
+        .unwrap();
+        let t = Topology::from_json(&j).unwrap();
+        let a = t.facility("a").unwrap();
+        let b = t.facility("b").unwrap();
+        let route = t.route(a, b).unwrap().to_vec();
+        // 2 flows: 8 Gbps backbone shares at 4 each (< NIC share of 5)
+        let rates = max_min_rates(&t, &[&route, &route]);
+        assert!((rates[0] - 4.0 * GBPS).abs() < 1.0, "{rates:?}");
+        assert!((rates[1] - 4.0 * GBPS).abs() < 1.0, "{rates:?}");
+        // 1 flow: backbone still binds (8 < 10)
+        let rates = max_min_rates(&t, &[&route]);
+        assert!((rates[0] - 8.0 * GBPS).abs() < 1.0, "{rates:?}");
+    }
+
+    #[test]
+    fn rates_never_exceed_any_link() {
+        let t = topo();
+        let route = slac_alcf_route(&t);
+        for n in 1..20 {
+            let routes: Vec<&[LinkId]> = (0..n).map(|_| route.as_slice()).collect();
+            let rates = max_min_rates(&t, &routes);
+            let total: f64 = rates.iter().sum();
+            assert!(total <= 10.0 * GBPS + 1e-3, "n={n} total={total}");
+            // work-conserving: bottleneck saturated
+            assert!(total >= 10.0 * GBPS - 1e-3, "n={n} total={total}");
+        }
+    }
+
+    #[test]
+    fn zero_byte_flow_finishes_at_arrival() {
+        let t = topo();
+        let route = slac_alcf_route(&t);
+        let res = simulate(
+            &t,
+            &[FlowSpec {
+                route,
+                bytes: 0.0,
+                arrival: 2.0,
+            }],
+        );
+        assert_eq!(res[0].finish, 2.0);
+    }
+}

@@ -1,0 +1,17 @@
+//! Discrete-event WAN simulator: virtual clock, facility/link topology,
+//! max-min fair fluid bandwidth sharing, and fault injection.
+//!
+//! Substitutes for the physical ESnet SLAC<->ALCF path of the paper
+//! (DESIGN.md §2) while preserving the behaviours the evaluation depends
+//! on: NIC/backbone bottlenecks, RTT-dominated startup, concurrency
+//! scaling (Fig. 3), and transfer fault recovery.
+
+pub mod clock;
+pub mod fault;
+pub mod fluid;
+pub mod topology;
+
+pub use clock::{VClock, VSpan};
+pub use fault::FaultModel;
+pub use fluid::{max_min_rates, simulate, FlowResult, FlowSpec};
+pub use topology::{Facility, FacilityId, Link, LinkId, Topology, GBPS};

@@ -1,0 +1,259 @@
+//! Facility/link topology of the geographically distributed fabric.
+//!
+//! The paper's testbed (§5.1): SLAC (experiment + edge) and ALCF (DCAI)
+//! joined by ESnet — 100 Gbps backbone, 10 Gbps DTN NICs on each side,
+//! ~48 ms round-trip at 3000 km. `paper_topology()` encodes exactly that;
+//! config files can define others.
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::Json;
+
+/// Index into `Topology::links`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct LinkId(pub usize);
+
+/// Index into `Topology::facilities`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct FacilityId(pub usize);
+
+/// One shared network segment (a DTN NIC or a backbone circuit).
+#[derive(Debug, Clone)]
+pub struct Link {
+    pub name: String,
+    /// capacity in bytes/second
+    pub capacity_bps: f64,
+    /// one-way latency contribution in seconds
+    pub latency_s: f64,
+}
+
+/// A science facility hosting endpoints (experiment, edge, DCAI, storage).
+#[derive(Debug, Clone)]
+pub struct Facility {
+    pub name: String,
+}
+
+/// Static routed topology: facilities, links, and per-pair link paths.
+#[derive(Debug, Clone)]
+pub struct Topology {
+    pub facilities: Vec<Facility>,
+    pub links: Vec<Link>,
+    /// routes[(a, b)] = ordered links from a to b (symmetric by default)
+    routes: Vec<((FacilityId, FacilityId), Vec<LinkId>)>,
+}
+
+pub const GBPS: f64 = 1e9 / 8.0; // bytes per second in one Gbit/s
+
+impl Topology {
+    pub fn facility(&self, name: &str) -> Result<FacilityId> {
+        self.facilities
+            .iter()
+            .position(|f| f.name == name)
+            .map(FacilityId)
+            .with_context(|| format!("unknown facility `{name}`"))
+    }
+
+    pub fn facility_name(&self, id: FacilityId) -> &str {
+        &self.facilities[id.0].name
+    }
+
+    pub fn link(&self, id: LinkId) -> &Link {
+        &self.links[id.0]
+    }
+
+    /// Ordered links between two facilities.
+    pub fn route(&self, from: FacilityId, to: FacilityId) -> Result<&[LinkId]> {
+        self.routes
+            .iter()
+            .find(|(pair, _)| *pair == (from, to))
+            .map(|(_, r)| r.as_slice())
+            .with_context(|| {
+                format!(
+                    "no route {} -> {}",
+                    self.facility_name(from),
+                    self.facility_name(to)
+                )
+            })
+    }
+
+    /// Total one-way latency along a route.
+    pub fn route_latency(&self, from: FacilityId, to: FacilityId) -> Result<f64> {
+        Ok(self
+            .route(from, to)?
+            .iter()
+            .map(|&l| self.link(l).latency_s)
+            .sum())
+    }
+
+    /// Round-trip time between facilities.
+    pub fn rtt(&self, a: FacilityId, b: FacilityId) -> Result<f64> {
+        Ok(self.route_latency(a, b)? + self.route_latency(b, a)?)
+    }
+
+    /// The paper's SLAC<->ALCF testbed.
+    pub fn paper() -> Topology {
+        let facilities = vec![
+            Facility {
+                name: "slac".into(),
+            },
+            Facility {
+                name: "alcf".into(),
+            },
+        ];
+        // 48 ms RTT => 24 ms one-way, dominated by the 3000 km backbone.
+        let links = vec![
+            Link {
+                name: "slac-dtn-nic".into(),
+                capacity_bps: 10.0 * GBPS,
+                latency_s: 0.5e-3,
+            },
+            Link {
+                name: "esnet-backbone".into(),
+                capacity_bps: 100.0 * GBPS,
+                latency_s: 23.0e-3,
+            },
+            Link {
+                name: "alcf-dtn-nic".into(),
+                capacity_bps: 10.0 * GBPS,
+                latency_s: 0.5e-3,
+            },
+        ];
+        let slac = FacilityId(0);
+        let alcf = FacilityId(1);
+        let fwd = vec![LinkId(0), LinkId(1), LinkId(2)];
+        let rev = vec![LinkId(2), LinkId(1), LinkId(0)];
+        Topology {
+            facilities,
+            links,
+            routes: vec![((slac, alcf), fwd), ((alcf, slac), rev)],
+        }
+    }
+
+    /// Parse a topology from a JSON config:
+    /// `{"facilities": ["a","b"], "links": [{"name","gbps","latency_ms"}],
+    ///   "routes": [{"from":"a","to":"b","links":["l1","l2"]}]}`
+    /// Routes are added in both the given and reverse direction unless the
+    /// reverse is listed explicitly.
+    pub fn from_json(j: &Json) -> Result<Topology> {
+        let facilities: Vec<Facility> = j
+            .get("facilities")
+            .as_arr()
+            .context("topology missing `facilities`")?
+            .iter()
+            .map(|f| {
+                Ok(Facility {
+                    name: f.as_str().context("facility name")?.to_string(),
+                })
+            })
+            .collect::<Result<_>>()?;
+        let links: Vec<Link> = j
+            .get("links")
+            .as_arr()
+            .context("topology missing `links`")?
+            .iter()
+            .map(|l| {
+                Ok(Link {
+                    name: l.get("name").as_str().context("link name")?.to_string(),
+                    capacity_bps: l.get("gbps").as_f64().context("link gbps")? * GBPS,
+                    latency_s: l.get("latency_ms").as_f64().context("link latency_ms")? / 1e3,
+                })
+            })
+            .collect::<Result<_>>()?;
+        let mut topo = Topology {
+            facilities,
+            links,
+            routes: vec![],
+        };
+        let link_id = |topo: &Topology, name: &str| -> Result<LinkId> {
+            topo.links
+                .iter()
+                .position(|l| l.name == name)
+                .map(LinkId)
+                .with_context(|| format!("unknown link `{name}`"))
+        };
+        for r in j.get("routes").as_arr().context("topology `routes`")? {
+            let from = topo.facility(r.get("from").as_str().context("route from")?)?;
+            let to = topo.facility(r.get("to").as_str().context("route to")?)?;
+            if from == to {
+                bail!("route from a facility to itself");
+            }
+            let path: Vec<LinkId> = r
+                .get("links")
+                .as_arr()
+                .context("route links")?
+                .iter()
+                .map(|n| link_id(&topo, n.as_str().context("route link name")?))
+                .collect::<Result<_>>()?;
+            if path.is_empty() {
+                bail!("empty route");
+            }
+            topo.routes.push(((from, to), path.clone()));
+            if !topo.routes.iter().any(|(p, _)| *p == (to, from)) {
+                let mut rev = path;
+                rev.reverse();
+                topo.routes.push(((to, from), rev));
+            }
+        }
+        Ok(topo)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_topology_matches_section_5_1() {
+        let t = Topology::paper();
+        let slac = t.facility("slac").unwrap();
+        let alcf = t.facility("alcf").unwrap();
+        let rtt = t.rtt(slac, alcf).unwrap();
+        assert!((rtt - 0.048).abs() < 1e-9, "rtt {rtt}");
+        // narrowest link on the path is the 10 Gbps DTN NIC
+        let min_cap = t
+            .route(slac, alcf)
+            .unwrap()
+            .iter()
+            .map(|&l| t.link(l).capacity_bps)
+            .fold(f64::INFINITY, f64::min);
+        assert_eq!(min_cap, 10.0 * GBPS);
+    }
+
+    #[test]
+    fn json_roundtrip_with_reverse_route() {
+        let j = Json::parse(
+            r#"{
+          "facilities": ["x", "y"],
+          "links": [{"name": "l0", "gbps": 1.0, "latency_ms": 10.0}],
+          "routes": [{"from": "x", "to": "y", "links": ["l0"]}]
+        }"#,
+        )
+        .unwrap();
+        let t = Topology::from_json(&j).unwrap();
+        let x = t.facility("x").unwrap();
+        let y = t.facility("y").unwrap();
+        assert_eq!(t.route(x, y).unwrap(), &[LinkId(0)]);
+        assert_eq!(t.route(y, x).unwrap(), &[LinkId(0)]); // implied reverse
+        assert!((t.rtt(x, y).unwrap() - 0.020).abs() < 1e-12);
+    }
+
+    #[test]
+    fn bad_configs_fail() {
+        for bad in [
+            r#"{"facilities": ["x"], "links": [], "routes": [{"from":"x","to":"x","links":[]}]}"#,
+            r#"{"facilities": ["x","y"], "links": [], "routes": [{"from":"x","to":"y","links":["nope"]}]}"#,
+            r#"{"facilities": ["x","y"], "links": [], "routes": [{"from":"x","to":"y","links":[]}]}"#,
+        ] {
+            let j = Json::parse(bad).unwrap();
+            assert!(Topology::from_json(&j).is_err(), "{bad}");
+        }
+    }
+
+    #[test]
+    fn unknown_lookups_fail() {
+        let t = Topology::paper();
+        assert!(t.facility("nersc").is_err());
+        let slac = t.facility("slac").unwrap();
+        assert!(t.route(slac, slac).is_err());
+    }
+}

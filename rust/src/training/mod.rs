@@ -1,0 +1,11 @@
+//! Training driver: every optimizer step is a real PJRT execution of the
+//! AOT train-step artifact (L2+L1), driven from rust. Virtual-time
+//! accounting for the paper's DCAI devices happens in the workflow layer
+//! via `accel` models; this module measures *real* compute and produces
+//! *real* loss curves.
+
+pub mod state;
+pub mod trainer;
+
+pub use state::TrainState;
+pub use trainer::{Recipe, TrainReport, Trainer};

@@ -1,0 +1,135 @@
+//! Mutable training state matching the flat train-step ABI.
+
+use anyhow::{bail, Result};
+
+use crate::models::ModelMeta;
+use crate::runtime::Tensor;
+
+/// Parameters + Adam moments + step counter.
+#[derive(Debug, Clone)]
+pub struct TrainState {
+    pub params: Vec<Tensor>,
+    pub m: Vec<Tensor>,
+    pub v: Vec<Tensor>,
+    pub step: f32,
+}
+
+impl TrainState {
+    /// Start from the artifact's He-init snapshot (same state pytest
+    /// verified on the python side).
+    pub fn init(meta: &ModelMeta) -> Result<TrainState> {
+        let raw = meta.load_init_params()?;
+        let params = meta
+            .params
+            .iter()
+            .zip(raw)
+            .map(|(spec, data)| Tensor::new(spec.shape.clone(), data))
+            .collect::<Result<Vec<_>>>()?;
+        let zeros: Vec<Tensor> = meta
+            .params
+            .iter()
+            .map(|spec| Tensor::zeros(spec.shape.clone()))
+            .collect();
+        Ok(TrainState {
+            m: zeros.clone(),
+            v: zeros,
+            params,
+            step: 0.0,
+        })
+    }
+
+    /// Build from externally supplied parameters (e.g. a deployed model).
+    pub fn from_params(meta: &ModelMeta, params: Vec<Tensor>) -> Result<TrainState> {
+        if params.len() != meta.params.len() {
+            bail!(
+                "expected {} parameter tensors, got {}",
+                meta.params.len(),
+                params.len()
+            );
+        }
+        for (spec, t) in meta.params.iter().zip(&params) {
+            if t.shape() != spec.shape.as_slice() {
+                bail!(
+                    "param `{}`: shape {:?} != spec {:?}",
+                    spec.name,
+                    t.shape(),
+                    spec.shape
+                );
+            }
+        }
+        let zeros: Vec<Tensor> = meta
+            .params
+            .iter()
+            .map(|spec| Tensor::zeros(spec.shape.clone()))
+            .collect();
+        Ok(TrainState {
+            m: zeros.clone(),
+            v: zeros,
+            params,
+            step: 0.0,
+        })
+    }
+
+    /// Update from the train-step outputs (params', m', v', step', loss).
+    /// Returns the loss.
+    pub fn absorb_outputs(&mut self, outputs: Vec<Tensor>) -> Result<f32> {
+        let n = self.params.len();
+        if outputs.len() != 3 * n + 2 {
+            bail!("expected {} outputs, got {}", 3 * n + 2, outputs.len());
+        }
+        let mut it = outputs.into_iter();
+        for i in 0..n {
+            self.params[i] = it.next().unwrap();
+        }
+        for i in 0..n {
+            self.m[i] = it.next().unwrap();
+        }
+        for i in 0..n {
+            self.v[i] = it.next().unwrap();
+        }
+        self.step = it.next().unwrap().item()?;
+        it.next().unwrap().item()
+    }
+
+    /// Total parameter elements (sanity checks, reports).
+    pub fn param_count(&self) -> usize {
+        self.params.iter().map(|t| t.elems()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::default_artifacts_dir;
+    use crate::models::ModelMeta;
+
+    #[test]
+    fn init_from_artifacts() {
+        let dir = default_artifacts_dir();
+        if !dir.join("manifest.json").exists() {
+            return;
+        }
+        let meta = ModelMeta::load(&dir, "braggnn").unwrap();
+        let state = TrainState::init(&meta).unwrap();
+        assert_eq!(state.param_count(), meta.param_count);
+        assert_eq!(state.step, 0.0);
+        // moments start at zero
+        assert!(state.m.iter().all(|t| t.data().iter().all(|&v| v == 0.0)));
+        // weights are He-init, not all zero
+        assert!(state.params[0].data().iter().any(|&v| v != 0.0));
+    }
+
+    #[test]
+    fn from_params_validates_shapes() {
+        let dir = default_artifacts_dir();
+        if !dir.join("manifest.json").exists() {
+            return;
+        }
+        let meta = ModelMeta::load(&dir, "braggnn").unwrap();
+        let good = TrainState::init(&meta).unwrap().params;
+        assert!(TrainState::from_params(&meta, good.clone()).is_ok());
+        let mut bad = good;
+        bad[0] = Tensor::zeros(vec![1, 2, 3]);
+        assert!(TrainState::from_params(&meta, bad).is_err());
+    }
+}

@@ -1,0 +1,198 @@
+//! The training loop: dataset batches in, PJRT train-step executions out.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{bail, Result};
+
+use super::state::TrainState;
+use crate::data::{BatchIter, Dataset};
+use crate::models::ModelMeta;
+use crate::runtime::{Executable, Runtime, Tensor};
+
+/// The full training recipe for a model — the step count the paper-scale
+/// devices are modeled over, and the (smaller) number of *real* PJRT
+/// steps the end-to-end examples execute.
+#[derive(Debug, Clone, Copy)]
+pub struct Recipe {
+    /// optimizer steps of the full production training run
+    pub full_steps: u64,
+    /// real steps the e2e driver executes on this CPU
+    pub real_steps: u64,
+}
+
+impl Recipe {
+    /// Standard recipes backing the Table 1 calibration
+    /// (`accel::devices`): BraggNN 76k steps, CookieNetAE 25k steps.
+    pub fn standard(model: &str) -> Result<Recipe> {
+        Ok(match model {
+            "braggnn" => Recipe {
+                full_steps: 76_000,
+                real_steps: 200,
+            },
+            "cookienetae" => Recipe {
+                full_steps: 25_000,
+                real_steps: 12,
+            },
+            other => bail!("no standard recipe for `{other}`"),
+        })
+    }
+}
+
+/// Outcome of a (real) training run.
+#[derive(Debug, Clone)]
+pub struct TrainReport {
+    pub model: String,
+    pub steps: u64,
+    /// (step, loss) samples
+    pub losses: Vec<(u64, f32)>,
+    pub first_loss: f32,
+    pub final_loss: f32,
+    /// wallclock of the whole loop
+    pub real_secs: f64,
+    /// wallclock spent inside PJRT execute
+    pub exec_secs: f64,
+}
+
+/// Drives the AOT train-step executable.
+pub struct Trainer {
+    exe: Arc<Executable>,
+    meta: ModelMeta,
+}
+
+impl Trainer {
+    pub fn new(rt: &Runtime, meta: &ModelMeta) -> Result<Trainer> {
+        let exe = rt.load_hlo(&meta.train_hlo_path())?;
+        Ok(Trainer {
+            exe,
+            meta: meta.clone(),
+        })
+    }
+
+    pub fn meta(&self) -> &ModelMeta {
+        &self.meta
+    }
+
+    /// One optimizer step on a prepared batch. Returns the loss.
+    pub fn step(&self, state: &mut TrainState, x: &Tensor, y: &Tensor) -> Result<f32> {
+        let want_x: Vec<usize> = std::iter::once(self.meta.train_batch)
+            .chain(self.meta.input_shape.iter().copied())
+            .collect();
+        if x.shape() != want_x.as_slice() {
+            bail!("batch x shape {:?} != {:?}", x.shape(), want_x);
+        }
+        let n = state.params.len();
+        let mut args: Vec<xla::Literal> = Vec::with_capacity(3 * n + 3);
+        for t in state.params.iter().chain(&state.m).chain(&state.v) {
+            args.push(t.to_literal()?);
+        }
+        args.push(Tensor::scalar(state.step).to_literal()?);
+        args.push(x.to_literal()?);
+        args.push(y.to_literal()?);
+        let outputs = self.exe.run_literals(&args)?;
+        state.absorb_outputs(outputs)
+    }
+
+    /// Run `steps` optimizer steps over the dataset (shuffled batches).
+    pub fn train(
+        &self,
+        state: &mut TrainState,
+        dataset: &Dataset,
+        steps: u64,
+        seed: u64,
+        log_every: u64,
+    ) -> Result<TrainReport> {
+        if dataset.input_shape != self.meta.input_shape {
+            bail!(
+                "dataset input {:?} != model input {:?}",
+                dataset.input_shape,
+                self.meta.input_shape
+            );
+        }
+        let started = Instant::now();
+        let mut exec_secs = 0.0;
+        let mut iter = BatchIter::new(dataset.n, self.meta.train_batch, seed);
+        let mut losses = Vec::new();
+        let mut first_loss = f32::NAN;
+        let mut last_loss = f32::NAN;
+        for s in 0..steps {
+            let idx = iter.next_batch();
+            let (x, y) = dataset.gather_batch(&idx)?;
+            let t0 = Instant::now();
+            let loss = self.step(state, &x, &y)?;
+            exec_secs += t0.elapsed().as_secs_f64();
+            if !loss.is_finite() {
+                bail!("loss diverged at step {s}: {loss}");
+            }
+            if s == 0 {
+                first_loss = loss;
+            }
+            last_loss = loss;
+            if log_every > 0 && (s % log_every == 0 || s + 1 == steps) {
+                losses.push((s, loss));
+                log::debug!("{} step {s}: loss {loss:.6}", self.meta.name);
+            }
+        }
+        Ok(TrainReport {
+            model: self.meta.name.clone(),
+            steps,
+            losses,
+            first_loss,
+            final_loss: last_loss,
+            real_secs: started.elapsed().as_secs_f64(),
+            exec_secs,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::BraggConfig;
+    use crate::models::default_artifacts_dir;
+
+    #[test]
+    fn braggnn_real_training_reduces_loss() {
+        let dir = default_artifacts_dir();
+        if !dir.join("manifest.json").exists() {
+            return;
+        }
+        let meta = ModelMeta::load(&dir, "braggnn").unwrap();
+        let rt = Runtime::cpu().unwrap();
+        let trainer = Trainer::new(&rt, &meta).unwrap();
+        let dataset = crate::data::bragg::generate(&BraggConfig::default(), 512, 1).unwrap();
+        let mut state = TrainState::init(&meta).unwrap();
+        let report = trainer.train(&mut state, &dataset, 25, 7, 5).unwrap();
+        assert_eq!(report.steps, 25);
+        assert!(
+            report.final_loss < report.first_loss * 0.8,
+            "loss {} -> {}",
+            report.first_loss,
+            report.final_loss
+        );
+        assert!(report.exec_secs > 0.0 && report.exec_secs <= report.real_secs);
+        assert!(state.step == 25.0);
+    }
+
+    #[test]
+    fn rejects_wrong_batch_shape() {
+        let dir = default_artifacts_dir();
+        if !dir.join("manifest.json").exists() {
+            return;
+        }
+        let meta = ModelMeta::load(&dir, "braggnn").unwrap();
+        let rt = Runtime::cpu().unwrap();
+        let trainer = Trainer::new(&rt, &meta).unwrap();
+        let mut state = TrainState::init(&meta).unwrap();
+        let x = Tensor::zeros(vec![3, 11, 11, 1]); // wrong batch
+        let y = Tensor::zeros(vec![3, 2]);
+        assert!(trainer.step(&mut state, &x, &y).is_err());
+    }
+
+    #[test]
+    fn standard_recipes_exist_for_all_models() {
+        assert!(Recipe::standard("braggnn").is_ok());
+        assert!(Recipe::standard("cookienetae").is_ok());
+        assert!(Recipe::standard("ghost").is_err());
+    }
+}

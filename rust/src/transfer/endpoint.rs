@@ -1,0 +1,99 @@
+//! Transfer endpoints: named DTN-backed storage locations at facilities.
+//!
+//! Mirrors Globus endpoint semantics: a transfer names a source and a
+//! destination endpoint; each endpoint is bound to a facility (which
+//! determines the WAN route) and has storage-side throughput limits that
+//! can cap a transfer below the NIC line rate (paper ref [34]:
+//! "bottleneck analysis" found storage, not network, often binds).
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context, Result};
+
+use crate::simnet::FacilityId;
+
+/// Endpoint identifier, conventionally `facility#name` ("slac#dtn").
+#[derive(Debug, Clone, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct EndpointId(pub String);
+
+impl std::fmt::Display for EndpointId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl From<&str> for EndpointId {
+    fn from(s: &str) -> Self {
+        EndpointId(s.to_string())
+    }
+}
+
+/// A registered transfer endpoint.
+#[derive(Debug, Clone)]
+pub struct Endpoint {
+    pub id: EndpointId,
+    pub facility: FacilityId,
+    /// storage read throughput (bytes/s) when sourcing data
+    pub read_bps: f64,
+    /// storage write throughput (bytes/s) when receiving data
+    pub write_bps: f64,
+}
+
+/// Endpoint registry for the transfer service.
+#[derive(Debug, Default)]
+pub struct EndpointRegistry {
+    endpoints: BTreeMap<EndpointId, Endpoint>,
+}
+
+impl EndpointRegistry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn register(&mut self, ep: Endpoint) -> Result<()> {
+        if self.endpoints.contains_key(&ep.id) {
+            bail!("endpoint `{}` already registered", ep.id);
+        }
+        self.endpoints.insert(ep.id.clone(), ep);
+        Ok(())
+    }
+
+    pub fn get(&self, id: &EndpointId) -> Result<&Endpoint> {
+        self.endpoints
+            .get(id)
+            .with_context(|| format!("unknown endpoint `{id}`"))
+    }
+
+    pub fn ids(&self) -> Vec<&EndpointId> {
+        self.endpoints.keys().collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ep(id: &str) -> Endpoint {
+        Endpoint {
+            id: id.into(),
+            facility: FacilityId(0),
+            read_bps: 1e9,
+            write_bps: 1e9,
+        }
+    }
+
+    #[test]
+    fn register_and_lookup() {
+        let mut r = EndpointRegistry::new();
+        r.register(ep("slac#dtn")).unwrap();
+        assert!(r.get(&"slac#dtn".into()).is_ok());
+        assert!(r.get(&"alcf#dtn".into()).is_err());
+    }
+
+    #[test]
+    fn duplicate_rejected() {
+        let mut r = EndpointRegistry::new();
+        r.register(ep("a#b")).unwrap();
+        assert!(r.register(ep("a#b")).is_err());
+    }
+}

@@ -1,0 +1,13 @@
+//! WAN transfer service (Globus Transfer analog): endpoints, windowed
+//! multi-file tasks over the simnet fabric, checksums, fault recovery,
+//! and the paper's `T = x/v + S` predictive model.
+
+pub mod endpoint;
+pub mod model;
+pub mod service;
+pub mod task;
+
+pub use endpoint::{Endpoint, EndpointId, EndpointRegistry};
+pub use model::{LinearModel, Observation};
+pub use service::{TransferParams, TransferService};
+pub use task::{FileReport, FileSpec, TransferReport, TransferRequest};

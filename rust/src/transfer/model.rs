@@ -1,0 +1,183 @@
+//! The paper's empirical transfer-time model `T = x/v + S` (§4.1,
+//! refs [33, 34]) with least-squares fitting from observed transfers.
+//!
+//! `x` = bytes, `v` = achievable rate, `S` = startup cost that "mainly
+//! depends on the number of files in the dataset" — so we fit
+//! `T = x/v + s0 + s1 * n_files`.
+
+use anyhow::{bail, Result};
+
+/// One observed (or simulated) transfer for fitting.
+#[derive(Debug, Clone, Copy)]
+pub struct Observation {
+    pub bytes: f64,
+    pub n_files: f64,
+    pub seconds: f64,
+}
+
+/// Fitted linear transfer-time model.
+#[derive(Debug, Clone, Copy)]
+pub struct LinearModel {
+    /// effective rate v (bytes/s)
+    pub rate_bps: f64,
+    /// constant startup s0 (s)
+    pub startup_s: f64,
+    /// per-file startup s1 (s/file)
+    pub per_file_s: f64,
+}
+
+impl LinearModel {
+    pub fn predict(&self, bytes: f64, n_files: f64) -> f64 {
+        bytes / self.rate_bps + self.startup_s + self.per_file_s * n_files
+    }
+
+    /// Ordinary least squares on T ~ a*x + s0 + s1*n, a = 1/v.
+    /// Needs >= 3 observations spanning different sizes and file counts.
+    pub fn fit(obs: &[Observation]) -> Result<LinearModel> {
+        if obs.len() < 3 {
+            bail!("need at least 3 observations, got {}", obs.len());
+        }
+        // normal equations for [a, s0, s1]
+        let mut ata = [[0.0f64; 3]; 3];
+        let mut atb = [0.0f64; 3];
+        for o in obs {
+            let row = [o.bytes, 1.0, o.n_files];
+            for i in 0..3 {
+                for j in 0..3 {
+                    ata[i][j] += row[i] * row[j];
+                }
+                atb[i] += row[i] * o.seconds;
+            }
+        }
+        let sol = solve3(ata, atb)?;
+        let (a, s0, s1) = (sol[0], sol[1], sol[2]);
+        if a <= 0.0 {
+            bail!("degenerate fit: non-positive rate coefficient {a}");
+        }
+        Ok(LinearModel {
+            rate_bps: 1.0 / a,
+            startup_s: s0,
+            per_file_s: s1,
+        })
+    }
+
+    /// Mean relative error of the model over a sample set.
+    pub fn mean_rel_error(&self, obs: &[Observation]) -> f64 {
+        if obs.is_empty() {
+            return f64::NAN;
+        }
+        obs.iter()
+            .map(|o| ((self.predict(o.bytes, o.n_files) - o.seconds) / o.seconds).abs())
+            .sum::<f64>()
+            / obs.len() as f64
+    }
+}
+
+/// Solve a 3x3 linear system by Gaussian elimination with partial pivots.
+fn solve3(mut a: [[f64; 3]; 3], mut b: [f64; 3]) -> Result<[f64; 3]> {
+    for col in 0..3 {
+        // pivot
+        let piv = (col..3)
+            .max_by(|&i, &j| a[i][col].abs().total_cmp(&a[j][col].abs()))
+            .unwrap();
+        if a[piv][col].abs() < 1e-12 {
+            bail!("singular system (observations not diverse enough)");
+        }
+        a.swap(col, piv);
+        b.swap(col, piv);
+        for row in col + 1..3 {
+            let f = a[row][col] / a[col][col];
+            for k in col..3 {
+                a[row][k] -= f * a[col][k];
+            }
+            b[row] -= f * b[col];
+        }
+    }
+    let mut x = [0.0; 3];
+    for row in (0..3).rev() {
+        let mut acc = b[row];
+        for k in row + 1..3 {
+            acc -= a[row][k] * x[k];
+        }
+        x[row] = acc / a[row][row];
+    }
+    Ok(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn recovers_exact_linear_data() {
+        // T = x/2e9 + 1.5 + 0.25*n
+        let truth = LinearModel {
+            rate_bps: 2e9,
+            startup_s: 1.5,
+            per_file_s: 0.25,
+        };
+        let obs: Vec<Observation> = [
+            (1e9, 1.0),
+            (5e9, 4.0),
+            (2e9, 16.0),
+            (8e9, 2.0),
+            (4e8, 32.0),
+        ]
+        .iter()
+        .map(|&(bytes, n_files)| Observation {
+            bytes,
+            n_files,
+            seconds: truth.predict(bytes, n_files),
+        })
+        .collect();
+        let fit = LinearModel::fit(&obs).unwrap();
+        assert!((fit.rate_bps - 2e9).abs() / 2e9 < 1e-9);
+        assert!((fit.startup_s - 1.5).abs() < 1e-9);
+        assert!((fit.per_file_s - 0.25).abs() < 1e-9);
+        assert!(fit.mean_rel_error(&obs) < 1e-12);
+    }
+
+    #[test]
+    fn needs_enough_diversity() {
+        let same = Observation {
+            bytes: 1e9,
+            n_files: 4.0,
+            seconds: 2.0,
+        };
+        assert!(LinearModel::fit(&[same, same, same]).is_err());
+        assert!(LinearModel::fit(&[same]).is_err());
+    }
+
+    #[test]
+    fn fits_simulated_transfers() {
+        use crate::simnet::VClock;
+        use crate::transfer::{TransferRequest, TransferService};
+        let mut svc = TransferService::paper(7);
+        let mut obs = vec![];
+        for &(gb, n) in &[(0.5, 4usize), (1.0, 8), (2.0, 16), (4.0, 8), (1.0, 32)] {
+            let mut clock = VClock::new();
+            let mut req = TransferRequest::split_even(
+                "fit",
+                "slac#dtn".into(),
+                "alcf#dtn".into(),
+                (gb * 1e9) as u64,
+                n,
+            );
+            req.concurrency = Some(8);
+            let rep = svc.execute(&mut clock, &req).unwrap();
+            obs.push(Observation {
+                bytes: rep.bytes as f64,
+                n_files: n as f64,
+                seconds: rep.duration(),
+            });
+        }
+        let fit = LinearModel::fit(&obs).unwrap();
+        // the fitted rate should land near the fabric cap (1.25 GB/s)
+        assert!(
+            (1.0e9..1.5e9).contains(&fit.rate_bps),
+            "rate {:.3e}",
+            fit.rate_bps
+        );
+        assert!(fit.mean_rel_error(&obs) < 0.05);
+    }
+}

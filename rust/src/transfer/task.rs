@@ -1,0 +1,159 @@
+//! Transfer task descriptions and completion reports.
+
+use super::endpoint::EndpointId;
+
+/// One file inside a transfer request.
+#[derive(Debug, Clone)]
+pub struct FileSpec {
+    pub name: String,
+    pub bytes: u64,
+}
+
+impl FileSpec {
+    pub fn new(name: impl Into<String>, bytes: u64) -> FileSpec {
+        FileSpec {
+            name: name.into(),
+            bytes,
+        }
+    }
+}
+
+/// A multi-file transfer between two endpoints.
+#[derive(Debug, Clone)]
+pub struct TransferRequest {
+    pub label: String,
+    pub src: EndpointId,
+    pub dst: EndpointId,
+    pub files: Vec<FileSpec>,
+    /// number of files moved concurrently (Globus `--concurrency`);
+    /// `None` lets the service auto-tune (paper §3: "automatically tuning
+    /// parameters to maximize bandwidth usage").
+    pub concurrency: Option<usize>,
+    /// verify checksums at the destination after each file
+    pub verify_checksum: bool,
+}
+
+impl TransferRequest {
+    pub fn total_bytes(&self) -> u64 {
+        self.files.iter().map(|f| f.bytes).sum()
+    }
+
+    /// Convenience: one logical dataset split into `n` equal files.
+    pub fn split_even(
+        label: impl Into<String>,
+        src: EndpointId,
+        dst: EndpointId,
+        total_bytes: u64,
+        n_files: usize,
+    ) -> TransferRequest {
+        assert!(n_files > 0);
+        let per = total_bytes / n_files as u64;
+        let mut files: Vec<FileSpec> = (0..n_files)
+            .map(|i| FileSpec::new(format!("part-{i:05}"), per))
+            .collect();
+        // remainder onto the last file so totals are exact
+        files.last_mut().unwrap().bytes += total_bytes - per * n_files as u64;
+        TransferRequest {
+            label: label.into(),
+            src,
+            dst,
+            files,
+            concurrency: None,
+            verify_checksum: true,
+        }
+    }
+}
+
+/// Outcome for a single file.
+#[derive(Debug, Clone)]
+pub struct FileReport {
+    pub name: String,
+    pub bytes: u64,
+    pub attempts: u32,
+    pub start_vt: f64,
+    pub finish_vt: f64,
+}
+
+/// Outcome for a whole task.
+#[derive(Debug, Clone)]
+pub struct TransferReport {
+    pub label: String,
+    pub src: EndpointId,
+    pub dst: EndpointId,
+    pub bytes: u64,
+    pub concurrency: usize,
+    pub start_vt: f64,
+    /// when task bookkeeping ends and the data phase begins
+    pub data_start_vt: f64,
+    /// when the last byte (+checksum) lands
+    pub data_end_vt: f64,
+    pub finish_vt: f64,
+    pub files: Vec<FileReport>,
+    /// total bytes re-sent due to injected faults
+    pub retried_bytes: u64,
+}
+
+impl TransferReport {
+    /// Full task duration including submit/detect bookkeeping (what the
+    /// Table 1 end-to-end columns see).
+    pub fn duration(&self) -> f64 {
+        self.finish_vt - self.start_vt
+    }
+
+    /// Data-phase duration (handshake + streaming + checksums).
+    pub fn data_secs(&self) -> f64 {
+        self.data_end_vt - self.data_start_vt
+    }
+
+    /// Goodput over the data phase in bytes/second — what a Globus-style
+    /// throughput benchmark (Fig. 3) reports.
+    pub fn throughput_bps(&self) -> f64 {
+        if self.data_secs() <= 0.0 {
+            return 0.0;
+        }
+        self.bytes as f64 / self.data_secs()
+    }
+
+    pub fn total_attempts(&self) -> u32 {
+        self.files.iter().map(|f| f.attempts).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn split_even_preserves_total() {
+        let req = TransferRequest::split_even(
+            "t",
+            "a#x".into(),
+            "b#y".into(),
+            1_000_000_007,
+            16,
+        );
+        assert_eq!(req.files.len(), 16);
+        assert_eq!(req.total_bytes(), 1_000_000_007);
+    }
+
+    #[test]
+    fn throughput() {
+        let rep = TransferReport {
+            label: "t".into(),
+            src: "a#x".into(),
+            dst: "b#y".into(),
+            bytes: 1_000_000,
+            concurrency: 4,
+            start_vt: 10.0,
+            data_start_vt: 10.5,
+            data_end_vt: 12.0,
+            finish_vt: 13.0,
+            files: vec![],
+            retried_bytes: 0,
+        };
+        assert_eq!(rep.duration(), 3.0);
+        assert_eq!(rep.data_secs(), 1.5);
+        // throughput over the data phase only
+        assert!((rep.throughput_bps() - 1_000_000.0 / 1.5).abs() < 1e-9);
+    }
+}

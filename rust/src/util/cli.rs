@@ -1,0 +1,217 @@
+//! Tiny CLI argument parser (no `clap` in the offline cache).
+//!
+//! Supports the subcommand + `--flag value` / `--flag=value` / boolean
+//! `--switch` shapes the `xloop` binary and examples need, with generated
+//! usage text.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone)]
+pub struct ArgSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub default: Option<&'static str>,
+    pub is_flag: bool,
+}
+
+/// Declarative option set for one (sub)command.
+#[derive(Debug, Default)]
+pub struct Options {
+    specs: Vec<ArgSpec>,
+}
+
+impl Options {
+    pub fn new() -> Self {
+        Options { specs: Vec::new() }
+    }
+
+    pub fn opt(mut self, name: &'static str, default: &'static str, help: &'static str) -> Self {
+        self.specs.push(ArgSpec {
+            name,
+            help,
+            default: Some(default),
+            is_flag: false,
+        });
+        self
+    }
+
+    pub fn req(mut self, name: &'static str, help: &'static str) -> Self {
+        self.specs.push(ArgSpec {
+            name,
+            help,
+            default: None,
+            is_flag: false,
+        });
+        self
+    }
+
+    pub fn flag(mut self, name: &'static str, help: &'static str) -> Self {
+        self.specs.push(ArgSpec {
+            name,
+            help,
+            default: None,
+            is_flag: true,
+        });
+        self
+    }
+
+    pub fn usage(&self, cmd: &str) -> String {
+        let mut out = format!("usage: {cmd} [options]\n");
+        for s in &self.specs {
+            let value = if s.is_flag { "" } else { " <value>" };
+            let def = match s.default {
+                Some(d) if !s.is_flag => format!(" (default: {d})"),
+                _ => String::new(),
+            };
+            out.push_str(&format!("  --{}{}\t{}{}\n", s.name, value, s.help, def));
+        }
+        out
+    }
+
+    /// Parse an argv slice (without the program/subcommand names).
+    pub fn parse(&self, args: &[String]) -> Result<Parsed, String> {
+        let mut values: BTreeMap<String, String> = BTreeMap::new();
+        let mut i = 0;
+        while i < args.len() {
+            let arg = &args[i];
+            let name = arg
+                .strip_prefix("--")
+                .ok_or_else(|| format!("unexpected positional argument `{arg}`"))?;
+            let (name, inline) = match name.split_once('=') {
+                Some((n, v)) => (n, Some(v.to_string())),
+                None => (name, None),
+            };
+            let spec = self
+                .specs
+                .iter()
+                .find(|s| s.name == name)
+                .ok_or_else(|| format!("unknown option `--{name}`"))?;
+            let value = if spec.is_flag {
+                if inline.is_some() {
+                    return Err(format!("flag `--{name}` takes no value"));
+                }
+                "true".to_string()
+            } else if let Some(v) = inline {
+                v
+            } else {
+                i += 1;
+                args.get(i)
+                    .cloned()
+                    .ok_or_else(|| format!("option `--{name}` needs a value"))?
+            };
+            values.insert(name.to_string(), value);
+            i += 1;
+        }
+        // defaults + required check
+        for s in &self.specs {
+            if !values.contains_key(s.name) {
+                if let Some(d) = s.default {
+                    values.insert(s.name.to_string(), d.to_string());
+                } else if !s.is_flag {
+                    return Err(format!("missing required option `--{}`", s.name));
+                }
+            }
+        }
+        Ok(Parsed { values })
+    }
+}
+
+#[derive(Debug)]
+pub struct Parsed {
+    values: BTreeMap<String, String>,
+}
+
+impl Parsed {
+    pub fn get(&self, name: &str) -> &str {
+        self.values
+            .get(name)
+            .map(|s| s.as_str())
+            .unwrap_or_default()
+    }
+
+    pub fn get_bool(&self, name: &str) -> bool {
+        self.values.get(name).map(|v| v == "true").unwrap_or(false)
+    }
+
+    pub fn get_usize(&self, name: &str) -> anyhow::Result<usize> {
+        self.get(name).parse().map_err(|_| {
+            anyhow::anyhow!(
+                "option `--{name}` expects an integer, got `{}`",
+                self.get(name)
+            )
+        })
+    }
+
+    pub fn get_f64(&self, name: &str) -> anyhow::Result<f64> {
+        self.get(name).parse().map_err(|_| {
+            anyhow::anyhow!(
+                "option `--{name}` expects a number, got `{}`",
+                self.get(name)
+            )
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn opts() -> Options {
+        Options::new()
+            .opt("model", "braggnn", "model name")
+            .req("mode", "execution mode")
+            .flag("verbose", "chatty output")
+            .opt("steps", "100", "train steps")
+    }
+
+    fn argv(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_mixed_styles() {
+        let p = opts()
+            .parse(&argv(&["--mode=remote", "--steps", "25", "--verbose"]))
+            .unwrap();
+        assert_eq!(p.get("model"), "braggnn"); // default
+        assert_eq!(p.get("mode"), "remote");
+        assert_eq!(p.get_usize("steps").unwrap(), 25);
+        assert!(p.get_bool("verbose"));
+    }
+
+    #[test]
+    fn missing_required_fails() {
+        let err = opts().parse(&argv(&["--steps", "1"])).unwrap_err();
+        assert!(err.contains("--mode"), "{err}");
+    }
+
+    #[test]
+    fn unknown_option_fails() {
+        let err = opts()
+            .parse(&argv(&["--mode", "x", "--nope", "1"]))
+            .unwrap_err();
+        assert!(err.contains("--nope"), "{err}");
+    }
+
+    #[test]
+    fn flag_with_value_fails() {
+        let err = opts()
+            .parse(&argv(&["--mode", "x", "--verbose=yes"]))
+            .unwrap_err();
+        assert!(err.contains("verbose"), "{err}");
+    }
+
+    #[test]
+    fn bad_number_reported() {
+        let p = opts().parse(&argv(&["--mode", "x", "--steps", "ten"])).unwrap();
+        assert!(p.get_usize("steps").is_err());
+    }
+
+    #[test]
+    fn usage_mentions_everything() {
+        let u = opts().usage("xloop run");
+        for needle in ["--model", "--mode", "--verbose", "--steps", "default: 100"] {
+            assert!(u.contains(needle), "{u}");
+        }
+    }
+}

@@ -1,0 +1,62 @@
+//! stderr logger for the `log` facade (no env_logger offline).
+//!
+//! Level comes from `XLOOP_LOG` (error|warn|info|debug|trace), default
+//! `info`. Install once with `logging::init()`; repeated calls are no-ops.
+
+use std::io::Write;
+use std::sync::Once;
+
+struct StderrLogger {
+    level: log::LevelFilter,
+}
+
+impl log::Log for StderrLogger {
+    fn enabled(&self, metadata: &log::Metadata) -> bool {
+        metadata.level() <= self.level
+    }
+
+    fn log(&self, record: &log::Record) {
+        if !self.enabled(record.metadata()) {
+            return;
+        }
+        let mut err = std::io::stderr().lock();
+        let _ = writeln!(
+            err,
+            "[{:<5} {}] {}",
+            record.level(),
+            record.target().split("::").last().unwrap_or(""),
+            record.args()
+        );
+    }
+
+    fn flush(&self) {}
+}
+
+static INIT: Once = Once::new();
+
+pub fn init() {
+    INIT.call_once(|| {
+        let level = match std::env::var("XLOOP_LOG").as_deref() {
+            Ok("error") => log::LevelFilter::Error,
+            Ok("warn") => log::LevelFilter::Warn,
+            Ok("debug") => log::LevelFilter::Debug,
+            Ok("trace") => log::LevelFilter::Trace,
+            Ok("off") => log::LevelFilter::Off,
+            _ => log::LevelFilter::Info,
+        };
+        let logger = Box::new(StderrLogger { level });
+        if log::set_boxed_logger(logger).is_ok() {
+            log::set_max_level(level);
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn init_is_idempotent() {
+        super::init();
+        super::init();
+        log::info!("logging smoke");
+    }
+}

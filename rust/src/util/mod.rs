@@ -1,0 +1,11 @@
+//! Self-contained utility layer standing in for crates absent from the
+//! offline cache (serde_json, clap, rand, env_logger). See DESIGN.md.
+
+pub mod cli;
+pub mod json;
+pub mod logging;
+pub mod rng;
+pub mod stats;
+
+pub use json::Json;
+pub use rng::Rng;

@@ -1,0 +1,296 @@
+//! The coordinator: owns the `World`, the flow engine, the virtual
+//! clock, and the user token; runs retraining scenarios end to end and
+//! extracts Table 1 breakdowns.
+
+use anyhow::{Context, Result};
+
+use super::flow::{dnn_trainer_flow, FlowShape};
+use super::scenario::Scenario;
+use super::world::{TrainingMode, World};
+use crate::auth::TokenId;
+use crate::flows::{FlowEngine, RunReport};
+use crate::simnet::VClock;
+use crate::util::Json;
+
+/// Table 1 row: the per-phase virtual-time breakdown of one retraining.
+#[derive(Debug, Clone)]
+pub struct RetrainBreakdown {
+    pub model: String,
+    pub mode_label: String,
+    pub data_transfer_s: Option<f64>,
+    pub training_s: f64,
+    pub model_transfer_s: Option<f64>,
+    /// user-initiation to model-received-at-edge-host (paper §5)
+    pub end_to_end_s: f64,
+    /// real PJRT training outcome when real training ran
+    pub final_loss: Option<f32>,
+    pub real_steps: u64,
+}
+
+/// Full outcome of a retraining run.
+pub struct RetrainOutcome {
+    pub report: RunReport,
+    pub breakdown: RetrainBreakdown,
+}
+
+/// The top-level system object.
+pub struct Coordinator {
+    pub world: World,
+    pub engine: FlowEngine<World>,
+    pub clock: VClock,
+    pub token: TokenId,
+}
+
+impl Coordinator {
+    /// Build the paper fabric with every provider/function registered and
+    /// a user token carrying the scopes the flow needs.
+    pub fn paper(seed: u64) -> Result<Coordinator> {
+        let world = World::paper(seed)?;
+        let mut engine = FlowEngine::<World>::new();
+        super::providers::register_all(&mut engine)?;
+        let clock = VClock::new();
+        let token = engine
+            .auth
+            .issue(
+                &clock,
+                "beamline-scientist",
+                &["transfer:use", "compute:use", "deploy:use", "rollback:use"],
+                30.0 * 24.0 * 3600.0,
+            )
+            .id;
+        Ok(Coordinator {
+            world,
+            engine,
+            clock,
+            token,
+        })
+    }
+
+    /// Generate the (small, real) training dataset for a scenario.
+    pub fn prepare_dataset(&mut self, scenario: &Scenario) -> Result<String> {
+        let name = format!("{}-train", scenario.model);
+        let mut faas = self.world.faas.take().context("faas missing")?;
+        let args = Json::obj(vec![
+            ("model", Json::str(scenario.model.clone())),
+            ("n", Json::num(scenario.real_samples as f64)),
+            ("seed", Json::num(scenario.seed as f64)),
+            ("name", Json::str(name.clone())),
+        ]);
+        let gen = crate::faas::FuncId("generate_data".into());
+        let task = faas.submit(
+            &mut self.world,
+            &mut self.clock,
+            "slac#sim",
+            &gen,
+            &args,
+        );
+        let result = task.and_then(|t| faas.result(t).cloned());
+        self.world.faas = Some(faas);
+        result?;
+        Ok(name)
+    }
+
+    /// Run one retraining scenario through the DNNTrainerFlow.
+    pub fn run_retraining(
+        &mut self,
+        scenario: &Scenario,
+        shape_overrides: Option<FlowShape>,
+    ) -> Result<RetrainOutcome> {
+        let dataset = self.prepare_dataset(scenario)?;
+        let shape = shape_overrides.unwrap_or(FlowShape {
+            remote: scenario.mode.is_remote(),
+            ..Default::default()
+        });
+        let def = dnn_trainer_flow(&shape)?;
+        let input = Json::obj(vec![
+            ("model", Json::str(scenario.model.clone())),
+            ("dataset", Json::str(dataset)),
+            ("dataset_bytes", Json::num(scenario.staged_bytes as f64)),
+            (
+                "train_endpoint",
+                Json::str(scenario.mode.train_endpoint()),
+            ),
+        ]);
+
+        let run_start = self.clock.now();
+        let report = self.engine.run(
+            &def,
+            &input,
+            &self.token,
+            &mut self.world,
+            &mut self.clock,
+        )?;
+        anyhow::ensure!(
+            report.succeeded,
+            "retraining flow failed: {:?}",
+            report
+                .records
+                .iter()
+                .map(|r| format!("{}:{:?}", r.id, r.status))
+                .collect::<Vec<_>>()
+        );
+
+        let action_secs = |id: &str| -> Option<f64> {
+            report.record(id).ok().map(|r| r.duration())
+        };
+        // paper §5: end-to-end = initiation until the model is received
+        // at the edge host machine (deploy/verify excluded)
+        let received_at = if scenario.mode.is_remote() {
+            report.record("return_model")?.end_vt
+        } else {
+            report.record("train")?.end_vt
+        };
+
+        let train_output = report.output("train")?.get("output").clone();
+        let breakdown = RetrainBreakdown {
+            model: scenario.model.clone(),
+            mode_label: scenario.mode.label().to_string(),
+            data_transfer_s: action_secs("stage_data"),
+            training_s: action_secs("train").context("train action missing")?,
+            model_transfer_s: action_secs("return_model"),
+            end_to_end_s: received_at - run_start,
+            final_loss: train_output
+                .get("final_loss")
+                .as_f64()
+                .map(|v| v as f32),
+            real_steps: train_output.get("real_steps").as_u64().unwrap_or(0),
+        };
+        Ok(RetrainOutcome { report, breakdown })
+    }
+
+    /// Switch real PJRT training on/off (benches use virtual-only).
+    pub fn set_training_mode(&mut self, mode: TrainingMode) {
+        self.world.training_mode = mode;
+    }
+}
+
+/// Render Table 1 rows as a text table.
+pub fn render_table1(rows: &[RetrainBreakdown]) -> String {
+    let mut out = String::new();
+    out.push_str(&format!(
+        "{:<34} {:<12} {:>14} {:>15} {:>15} {:>14}\n",
+        "Mode", "Network", "Data Xfer (s)", "Training (s)", "Model Xfer (s)", "End-to-End (s)"
+    ));
+    out.push_str(&"-".repeat(108));
+    out.push('\n');
+    for r in rows {
+        let fmt = |v: Option<f64>| match v {
+            Some(s) => format!("{s:.1}"),
+            None => "N/A".to_string(),
+        };
+        out.push_str(&format!(
+            "{:<34} {:<12} {:>14} {:>15.1} {:>15} {:>14.1}\n",
+            r.mode_label,
+            r.model,
+            fmt(r.data_transfer_s),
+            r.training_s,
+            fmt(r.model_transfer_s),
+            r.end_to_end_s
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workflow::scenario::Mode;
+
+    fn artifacts_present() -> bool {
+        crate::models::default_artifacts_dir()
+            .join("manifest.json")
+            .exists()
+    }
+
+    #[test]
+    fn remote_cerebras_braggnn_matches_table1_shape() {
+        if !artifacts_present() {
+            return;
+        }
+        let mut c = Coordinator::paper(42).unwrap();
+        c.set_training_mode(TrainingMode::VirtualOnly);
+        let scenario = Scenario::table1("braggnn", Mode::RemoteCerebras).unwrap();
+        let outcome = c.run_retraining(&scenario, None).unwrap();
+        let b = &outcome.breakdown;
+        // paper: transfer 7, train 19, model 5, e2e 31 — shape check
+        let xfer = b.data_transfer_s.unwrap();
+        assert!((4.0..11.0).contains(&xfer), "data xfer {xfer}");
+        assert!((15.0..23.0).contains(&b.training_s), "train {}", b.training_s);
+        let mx = b.model_transfer_s.unwrap();
+        assert!((2.0..8.0).contains(&mx), "model xfer {mx}");
+        assert!(
+            (22.0..42.0).contains(&b.end_to_end_s),
+            "e2e {}",
+            b.end_to_end_s
+        );
+        // edge got the model
+        assert!(c.world.edge.deployed().is_some());
+    }
+
+    #[test]
+    fn local_mode_has_no_transfers_and_is_30x_slower() {
+        if !artifacts_present() {
+            return;
+        }
+        let mut c = Coordinator::paper(42).unwrap();
+        c.set_training_mode(TrainingMode::VirtualOnly);
+        let local = c
+            .run_retraining(&Scenario::table1("braggnn", Mode::LocalV100).unwrap(), None)
+            .unwrap();
+        assert!(local.breakdown.data_transfer_s.is_none());
+        assert!(local.breakdown.model_transfer_s.is_none());
+
+        let mut c2 = Coordinator::paper(42).unwrap();
+        c2.set_training_mode(TrainingMode::VirtualOnly);
+        let remote = c2
+            .run_retraining(
+                &Scenario::table1("braggnn", Mode::RemoteCerebras).unwrap(),
+                None,
+            )
+            .unwrap();
+        let speedup = local.breakdown.end_to_end_s / remote.breakdown.end_to_end_s;
+        assert!(speedup > 30.0, "speedup only {speedup:.1}x");
+    }
+
+    #[test]
+    fn real_training_through_the_full_flow() {
+        if !artifacts_present() {
+            return;
+        }
+        let mut c = Coordinator::paper(43).unwrap();
+        c.set_training_mode(TrainingMode::Real {
+            steps_override: Some(15),
+        });
+        let mut scenario = Scenario::table1("braggnn", Mode::RemoteCerebras).unwrap();
+        scenario.real_samples = 256;
+        let outcome = c.run_retraining(&scenario, None).unwrap();
+        assert_eq!(outcome.breakdown.real_steps, 15);
+        let loss = outcome.breakdown.final_loss.unwrap();
+        assert!(loss.is_finite() && loss > 0.0);
+        // deployed weights are the trained ones, not init
+        let trained = c.world.trained("braggnn").unwrap();
+        let deployed = c.world.edge.deployed().unwrap();
+        assert_eq!(
+            trained.params[0].data()[..8],
+            deployed.params[0].data()[..8]
+        );
+    }
+
+    #[test]
+    fn render_table_formats() {
+        let rows = vec![RetrainBreakdown {
+            model: "braggnn".into(),
+            mode_label: "Remote (Cerebras, Entire Wafer)".into(),
+            data_transfer_s: Some(7.0),
+            training_s: 19.0,
+            model_transfer_s: Some(5.0),
+            end_to_end_s: 31.0,
+            final_loss: None,
+            real_steps: 0,
+        }];
+        let table = render_table1(&rows);
+        assert!(table.contains("Cerebras"));
+        assert!(table.contains("31.0"));
+        assert!(table.contains("N/A") == false);
+    }
+}

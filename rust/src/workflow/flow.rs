@@ -1,0 +1,197 @@
+//! The paper's DNNTrainerFlow as a declarative flow definition (§3,
+//! github.com/AISDC/DNNTrainerFlow): stage data → (label) → train on a
+//! DCAI endpoint → return the model → deploy to the edge.
+//!
+//! Built as JSON so it round-trips through `FlowDefinition::from_json` —
+//! the same path a user-authored flow file takes.
+
+use anyhow::Result;
+
+use crate::flows::FlowDefinition;
+use crate::util::Json;
+
+/// Options shaping the generated definition.
+#[derive(Debug, Clone)]
+pub struct FlowShape {
+    /// include WAN transfers (false = the paper's "local" mode)
+    pub remote: bool,
+    /// include the labeling action (operation A) before training
+    pub with_labeling: bool,
+    /// roll the edge back to pristine weights if deployment fails
+    pub rollback_on_failure: bool,
+    /// transfer file split + pinned concurrency
+    pub files: usize,
+    pub concurrency: Option<usize>,
+}
+
+impl Default for FlowShape {
+    fn default() -> Self {
+        FlowShape {
+            remote: true,
+            with_labeling: false,
+            rollback_on_failure: true,
+            files: 16,
+            concurrency: None,
+        }
+    }
+}
+
+/// Build the DNNTrainerFlow definition.
+///
+/// Flow input schema (referenced via `${input...}`):
+/// `{model, dataset, dataset_bytes, train_endpoint}`.
+pub fn dnn_trainer_flow(shape: &FlowShape) -> Result<FlowDefinition> {
+    let mut actions = Vec::new();
+    let mut train_dep = Vec::new();
+
+    if shape.remote {
+        let mut stage = format!(
+            r#"{{"id": "stage_data", "provider": "transfer", "retries": 2,
+                 "params": {{"label": "train-data", "src": "slac#dtn", "dst": "alcf#dtn",
+                             "bytes": "${{input.dataset_bytes}}", "files": {}"#,
+            shape.files
+        );
+        if let Some(k) = shape.concurrency {
+            stage.push_str(&format!(r#", "concurrency": {k}"#));
+        }
+        stage.push_str("}}");
+        actions.push(stage);
+        train_dep.push("stage_data");
+    }
+
+    if shape.with_labeling {
+        let dep = if shape.remote {
+            r#", "depends_on": ["stage_data"]"#
+        } else {
+            ""
+        };
+        actions.push(format!(
+            r#"{{"id": "label", "provider": "compute"{dep},
+                 "params": {{"endpoint": "alcf#cluster", "function": "label_data",
+                             "args": {{"dataset": "${{input.dataset}}"}}}}}}"#
+        ));
+        train_dep = vec!["label"];
+    }
+
+    let deps_json = if train_dep.is_empty() {
+        String::new()
+    } else {
+        format!(
+            r#", "depends_on": [{}]"#,
+            train_dep
+                .iter()
+                .map(|d| format!("\"{d}\""))
+                .collect::<Vec<_>>()
+                .join(", ")
+        )
+    };
+    actions.push(format!(
+        r#"{{"id": "train", "provider": "compute"{deps_json}, "retries": 1,
+             "params": {{"endpoint": "${{input.train_endpoint}}", "function": "train_model",
+                         "args": {{"model": "${{input.model}}", "dataset": "${{input.dataset}}",
+                                   "endpoint": "${{input.train_endpoint}}"}}}}}}"#
+    ));
+
+    let deploy_dep = if shape.remote {
+        actions.push(
+            r#"{"id": "return_model", "provider": "transfer", "retries": 2, "depends_on": ["train"],
+                "params": {"label": "trained-model", "src": "alcf#dtn", "dst": "slac#dtn",
+                           "model": "${input.model}", "files": 1}}"#
+                .to_string(),
+        );
+        "return_model"
+    } else {
+        "train"
+    };
+
+    let failure = if shape.rollback_on_failure {
+        r#", "on_failure": {"catch": "rollback_edge"}"#
+    } else {
+        ""
+    };
+    actions.push(format!(
+        r#"{{"id": "deploy", "provider": "deploy", "depends_on": ["{deploy_dep}"]{failure},
+             "params": {{"model": "${{input.model}}"}}}}"#
+    ));
+    if shape.rollback_on_failure {
+        actions.push(
+            r#"{"id": "rollback_edge", "provider": "rollback", "handler": true,
+                "params": {"model": "${input.model}"}}"#
+                .to_string(),
+        );
+    }
+
+    let name = if shape.remote {
+        "dnn-trainer-flow-remote"
+    } else {
+        "dnn-trainer-flow-local"
+    };
+    let text = format!(
+        r#"{{"name": "{name}", "actions": [{}]}}"#,
+        actions.join(", ")
+    );
+    FlowDefinition::from_json(&Json::parse(&text)?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn remote_flow_has_expected_chain() {
+        let def = dnn_trainer_flow(&FlowShape::default()).unwrap();
+        let ids: Vec<&str> = def
+            .order()
+            .iter()
+            .map(|&i| def.actions[i].id.as_str())
+            .collect();
+        assert_eq!(ids, vec!["stage_data", "train", "return_model", "deploy"]);
+        // handler exists but is excluded from the normal order
+        assert!(def.action("rollback_edge").unwrap().is_handler);
+    }
+
+    #[test]
+    fn local_flow_skips_transfers() {
+        let def = dnn_trainer_flow(&FlowShape {
+            remote: false,
+            rollback_on_failure: false,
+            ..Default::default()
+        })
+        .unwrap();
+        let ids: Vec<&str> = def
+            .order()
+            .iter()
+            .map(|&i| def.actions[i].id.as_str())
+            .collect();
+        assert_eq!(ids, vec!["train", "deploy"]);
+    }
+
+    #[test]
+    fn labeling_variant_inserts_label_before_train() {
+        let def = dnn_trainer_flow(&FlowShape {
+            with_labeling: true,
+            ..Default::default()
+        })
+        .unwrap();
+        let ids: Vec<&str> = def
+            .order()
+            .iter()
+            .map(|&i| def.actions[i].id.as_str())
+            .collect();
+        assert_eq!(
+            ids,
+            vec!["stage_data", "label", "train", "return_model", "deploy"]
+        );
+    }
+
+    #[test]
+    fn concurrency_pin_lands_in_params() {
+        let def = dnn_trainer_flow(&FlowShape {
+            concurrency: Some(4),
+            ..Default::default()
+        })
+        .unwrap();
+        let stage = def.action("stage_data").unwrap();
+        assert_eq!(stage.params.get("concurrency").as_usize(), Some(4));
+    }
+}

@@ -1,0 +1,22 @@
+//! The paper's system contribution, composed: the DNNTrainerFlow over
+//! the flows engine, funcX fabric, transfer service, accelerator models,
+//! PJRT trainer, and edge host.
+//!
+//! * `world`       — mutable fabric state threaded through actions
+//! * `functions`   — faas bodies: generate / label / train / evaluate
+//! * `providers`   — flow actions: transfer / compute / deploy / rollback
+//! * `flow`        — the declarative DNNTrainerFlow definition
+//! * `scenario`    — Table 1 scenario grid
+//! * `coordinator` — runs scenarios, extracts the Table 1 breakdown
+
+pub mod coordinator;
+pub mod flow;
+pub mod functions;
+pub mod providers;
+pub mod scenario;
+pub mod world;
+
+pub use coordinator::{render_table1, Coordinator, RetrainBreakdown, RetrainOutcome};
+pub use flow::{dnn_trainer_flow, FlowShape};
+pub use scenario::{Mode, Scenario};
+pub use world::{TrainedModel, TrainingMode, World};

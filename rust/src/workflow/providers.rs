@@ -1,0 +1,246 @@
+//! Concrete action providers binding the flows engine to the `World`:
+//! Transfer (Globus Transfer), Compute (funcX), Deploy (edge), Simulate.
+
+use anyhow::{Context, Result};
+
+use super::world::World;
+use crate::flows::ActionProvider;
+use crate::simnet::VClock;
+use crate::training::TrainState;
+use crate::transfer::TransferRequest;
+use crate::util::Json;
+
+/// Wrap a multi-file WAN transfer as a flow action.
+/// params: {label?, src, dst, files?, concurrency?, verify_checksum?}
+/// plus one payload selector: bytes | dataset | model.
+pub struct TransferProvider;
+
+impl ActionProvider<World> for TransferProvider {
+    fn name(&self) -> &'static str {
+        "transfer"
+    }
+
+    fn execute(&self, world: &mut World, clock: &mut VClock, params: &Json) -> Result<Json> {
+        let src = params.get("src").as_str().context("transfer params.src")?;
+        let dst = params.get("dst").as_str().context("transfer params.dst")?;
+        let bytes = world.payload_bytes(params)?;
+        let files = params.get("files").as_usize().unwrap_or(16).max(1);
+        let label = params
+            .get("label")
+            .as_str()
+            .unwrap_or("transfer")
+            .to_string();
+        let mut req = TransferRequest::split_even(label, src.into(), dst.into(), bytes, files);
+        if let Some(k) = params.get("concurrency").as_usize() {
+            req.concurrency = Some(k);
+        }
+        if let Some(v) = params.get("verify_checksum").as_bool() {
+            req.verify_checksum = v;
+        }
+        let rep = world.transfer.execute(clock, &req)?;
+
+        // the payload now exists at the destination facility's storage
+        let dst_facility = dst.split('#').next().unwrap_or(dst).to_string();
+        if let Some(ds) = params.get("dataset").as_str() {
+            world.put_file(&dst_facility, ds, bytes);
+        }
+        if let Some(m) = params.get("model").as_str() {
+            world.put_file(&dst_facility, &format!("{m}.weights"), bytes);
+        }
+
+        Ok(Json::obj(vec![
+            ("bytes", Json::num(rep.bytes as f64)),
+            ("seconds", Json::num(rep.duration())),
+            ("data_seconds", Json::num(rep.data_secs())),
+            ("throughput_bps", Json::num(rep.throughput_bps())),
+            ("concurrency", Json::num(rep.concurrency as f64)),
+            ("attempts", Json::num(rep.total_attempts() as f64)),
+        ]))
+    }
+}
+
+/// Wrap a funcX submission as a flow action.
+/// params: {endpoint, function, args}
+pub struct ComputeProvider;
+
+impl ActionProvider<World> for ComputeProvider {
+    fn name(&self) -> &'static str {
+        "compute"
+    }
+
+    fn execute(&self, world: &mut World, clock: &mut VClock, params: &Json) -> Result<Json> {
+        let endpoint = params
+            .get("endpoint")
+            .as_str()
+            .context("compute params.endpoint")?
+            .to_string();
+        let func = crate::faas::FuncId(
+            params
+                .get("function")
+                .as_str()
+                .context("compute params.function")?
+                .to_string(),
+        );
+        let args = params.get("args").clone();
+
+        // Take the faas service out of the world so the function body can
+        // borrow the rest of the world mutably (see World::faas docs).
+        let mut faas = world
+            .faas
+            .take()
+            .context("faas service missing (reentrant compute?)")?;
+        let submitted = faas.submit(world, clock, &endpoint, &func, &args);
+        let result = submitted.and_then(|task| {
+            let record = faas.record(task)?;
+            let exec_secs = record.exec_secs();
+            let overhead = record.overhead_secs();
+            let output = faas.result(task)?.clone();
+            Ok(Json::obj(vec![
+                ("endpoint", Json::str(endpoint.clone())),
+                ("exec_seconds", Json::num(exec_secs)),
+                ("dispatch_seconds", Json::num(overhead)),
+                ("output", output),
+            ]))
+        });
+        world.faas = Some(faas);
+        result
+    }
+}
+
+/// Deploy a trained model onto the edge host (operation **D**).
+/// params: {model}
+pub struct DeployProvider;
+
+impl ActionProvider<World> for DeployProvider {
+    fn name(&self) -> &'static str {
+        "deploy"
+    }
+
+    fn execute(&self, world: &mut World, clock: &mut VClock, params: &Json) -> Result<Json> {
+        let model = params.get("model").as_str().context("deploy params.model")?;
+        let meta = world.registry.get(model)?.clone();
+        let params_copy = world.trained(model)?.params.clone();
+        let version = world.edge.deploy(&meta, params_copy)?;
+
+        // smoke inference proves the deployment serves
+        let x = crate::runtime::Tensor::zeros(
+            std::iter::once(meta.infer_batch)
+                .chain(meta.input_shape.iter().copied())
+                .collect(),
+        );
+        let out = world.edge.infer_batch(&x)?;
+        anyhow::ensure!(out.is_finite(), "deployed model produced non-finite output");
+
+        // model load + runtime warm-up on the edge box
+        clock.advance(1.0 + meta.param_bytes() as f64 / 200e6);
+        Ok(Json::obj(vec![
+            ("model", Json::str(model)),
+            ("version", Json::num(version as f64)),
+        ]))
+    }
+}
+
+/// Re-deploy the *initial* weights (used by ablations / catch handlers to
+/// roll the edge back to a known-good model). params: {model}
+pub struct RollbackProvider;
+
+impl ActionProvider<World> for RollbackProvider {
+    fn name(&self) -> &'static str {
+        "rollback"
+    }
+
+    fn execute(&self, world: &mut World, clock: &mut VClock, params: &Json) -> Result<Json> {
+        let model = params.get("model").as_str().context("rollback params.model")?;
+        let meta = world.registry.get(model)?.clone();
+        let params_init = TrainState::init(&meta)?.params;
+        let version = world.edge.deploy(&meta, params_init)?;
+        clock.advance(1.0);
+        log::warn!("edge rolled back to pristine `{model}` (v{version})");
+        Ok(Json::obj(vec![
+            ("model", Json::str(model)),
+            ("version", Json::num(version as f64)),
+            ("rolled_back", Json::Bool(true)),
+        ]))
+    }
+}
+
+/// Register every provider on an engine.
+pub fn register_all(engine: &mut crate::flows::FlowEngine<World>) -> Result<()> {
+    engine.register_provider(Box::new(TransferProvider))?;
+    engine.register_provider(Box::new(ComputeProvider))?;
+    engine.register_provider(Box::new(DeployProvider))?;
+    engine.register_provider(Box::new(RollbackProvider))?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_present() -> bool {
+        crate::models::default_artifacts_dir()
+            .join("manifest.json")
+            .exists()
+    }
+
+    #[test]
+    fn transfer_provider_moves_dataset_metadata() {
+        if !artifacts_present() {
+            return;
+        }
+        let mut w = World::paper(4).unwrap();
+        let ds = crate::data::bragg::generate(&crate::data::BraggConfig::default(), 128, 1)
+            .unwrap();
+        w.datasets.insert("d1".into(), ds);
+        let mut clock = VClock::new();
+        let p = Json::parse(
+            r#"{"src": "slac#dtn", "dst": "alcf#dtn", "dataset": "d1", "files": 4}"#,
+        )
+        .unwrap();
+        let out = TransferProvider.execute(&mut w, &mut clock, &p).unwrap();
+        assert!(out.get("seconds").as_f64().unwrap() > 0.0);
+        assert!(w.file_bytes("alcf", "d1").is_ok());
+        assert_eq!(clock.now(), out.get("seconds").as_f64().unwrap());
+    }
+
+    #[test]
+    fn compute_provider_restores_faas_after_failure() {
+        if !artifacts_present() {
+            return;
+        }
+        let mut w = World::paper(5).unwrap();
+        let mut clock = VClock::new();
+        // unknown function -> submit errors, faas must be restored
+        let p = Json::parse(
+            r#"{"endpoint": "alcf#cluster", "function": "ghost", "args": {}}"#,
+        )
+        .unwrap();
+        assert!(ComputeProvider.execute(&mut w, &mut clock, &p).is_err());
+        assert!(w.faas.is_some(), "faas service lost after failure");
+    }
+
+    #[test]
+    fn deploy_requires_trained_model() {
+        if !artifacts_present() {
+            return;
+        }
+        let mut w = World::paper(6).unwrap();
+        let mut clock = VClock::new();
+        let p = Json::parse(r#"{"model": "braggnn"}"#).unwrap();
+        let err = DeployProvider.execute(&mut w, &mut clock, &p).unwrap_err();
+        assert!(err.to_string().contains("not been trained"), "{err}");
+    }
+
+    #[test]
+    fn rollback_deploys_pristine_weights() {
+        if !artifacts_present() {
+            return;
+        }
+        let mut w = World::paper(7).unwrap();
+        let mut clock = VClock::new();
+        let p = Json::parse(r#"{"model": "braggnn"}"#).unwrap();
+        let out = RollbackProvider.execute(&mut w, &mut clock, &p).unwrap();
+        assert_eq!(out.get("rolled_back").as_bool(), Some(true));
+        assert!(w.edge.deployed().is_some());
+    }
+}

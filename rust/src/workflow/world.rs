@@ -1,0 +1,205 @@
+//! `World`: the mutable state the flow engine's actions operate on —
+//! facility storage, datasets, trained models, the transfer fabric, the
+//! FaaS fabric, the PJRT runtime, accelerator models, and the edge host.
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use crate::accel::{cerebras_wse, local_v100, multi_gpu_horovod, sambanova_rdu, AcceleratorModel};
+use crate::data::Dataset;
+use crate::edge::EdgeHost;
+use crate::faas::{FaasEndpoint, FaasService};
+use crate::models::ModelRegistry;
+use crate::runtime::{Runtime, Tensor};
+use crate::training::TrainReport;
+use crate::transfer::TransferService;
+
+/// A model trained somewhere in the fabric, awaiting deployment.
+pub struct TrainedModel {
+    pub model: String,
+    pub params: Vec<Tensor>,
+    pub final_loss: Option<f32>,
+    /// real-execution report when real training ran
+    pub report: Option<TrainReport>,
+    /// virtual seconds the DCAI device spent
+    pub virtual_train_s: f64,
+    pub trained_on: String,
+}
+
+/// Controls whether `train_model` runs real PJRT steps.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum TrainingMode {
+    /// execute `Recipe::real_steps` (or the override) real PJRT steps
+    Real { steps_override: Option<u64> },
+    /// virtual-time only (Table 1 benches): params stay at init
+    VirtualOnly,
+}
+
+/// The execution context threaded through flows and faas functions.
+pub struct World {
+    pub rt: Arc<Runtime>,
+    pub registry: ModelRegistry,
+    pub transfer: TransferService,
+    /// taken out (`Option`) during submission so faas bodies can borrow
+    /// the rest of the world mutably — see `providers::ComputeProvider`
+    pub faas: Option<FaasService<World>>,
+    /// facility storage: facility -> logical file -> bytes
+    pub storage: BTreeMap<String, BTreeMap<String, u64>>,
+    /// in-memory dataset payloads by name
+    pub datasets: BTreeMap<String, Dataset>,
+    /// trained models by model name
+    pub trained: BTreeMap<String, TrainedModel>,
+    /// accelerator model per faas endpoint id
+    pub accels: BTreeMap<String, AcceleratorModel>,
+    pub edge: EdgeHost,
+    pub training_mode: TrainingMode,
+    /// per-peak wallclock of the last real labeling run (C(A) measured)
+    pub last_label_cost_s: Option<f64>,
+    /// versioned checkpoint store (paper §7 future work 1): publishes
+    /// every trained model, serves warm starts for fine-tuning
+    pub repository: crate::models::ModelRepository,
+}
+
+impl World {
+    /// The paper's fabric: SLAC (experiment + edge + local V100) and ALCF
+    /// (Cerebras, SambaNova, 8-GPU server, labeling cluster).
+    pub fn paper(seed: u64) -> Result<World> {
+        let rt = Runtime::cpu()?;
+        let registry = ModelRegistry::load(&crate::models::default_artifacts_dir())?;
+        let transfer = TransferService::paper(seed);
+        let slac = transfer.topo.facility("slac")?;
+        let alcf = transfer.topo.facility("alcf")?;
+
+        let mut faas = FaasService::<World>::new();
+        for (id, fac) in [
+            ("slac#v100", slac),
+            ("slac#sim", slac),
+            ("alcf#cerebras", alcf),
+            ("alcf#sambanova", alcf),
+            ("alcf#gpu8", alcf),
+            ("alcf#cluster", alcf),
+        ] {
+            faas.register_endpoint(FaasEndpoint::new(id, fac))?;
+        }
+        super::functions::register_all(&mut faas)?;
+
+        let mut accels = BTreeMap::new();
+        accels.insert("slac#v100".to_string(), local_v100());
+        accels.insert("alcf#cerebras".to_string(), cerebras_wse());
+        accels.insert("alcf#sambanova".to_string(), sambanova_rdu());
+        accels.insert("alcf#gpu8".to_string(), multi_gpu_horovod(8));
+
+        let edge = EdgeHost::new("slac-edge", rt.clone());
+
+        Ok(World {
+            rt,
+            registry,
+            transfer,
+            faas: Some(faas),
+            storage: BTreeMap::new(),
+            datasets: BTreeMap::new(),
+            trained: BTreeMap::new(),
+            accels,
+            edge,
+            training_mode: TrainingMode::Real {
+                steps_override: None,
+            },
+            last_label_cost_s: None,
+            repository: crate::models::ModelRepository::new(),
+        })
+    }
+
+    pub fn dataset(&self, name: &str) -> Result<&Dataset> {
+        self.datasets
+            .get(name)
+            .with_context(|| format!("unknown dataset `{name}`"))
+    }
+
+    pub fn trained(&self, model: &str) -> Result<&TrainedModel> {
+        self.trained
+            .get(model)
+            .with_context(|| format!("model `{model}` has not been trained"))
+    }
+
+    pub fn accel(&self, endpoint: &str) -> Result<&AcceleratorModel> {
+        self.accels
+            .get(endpoint)
+            .with_context(|| format!("no accelerator model for endpoint `{endpoint}`"))
+    }
+
+    /// Record a logical file at a facility's storage.
+    pub fn put_file(&mut self, facility: &str, name: &str, bytes: u64) {
+        self.storage
+            .entry(facility.to_string())
+            .or_default()
+            .insert(name.to_string(), bytes);
+    }
+
+    pub fn file_bytes(&self, facility: &str, name: &str) -> Result<u64> {
+        self.storage
+            .get(facility)
+            .and_then(|m| m.get(name))
+            .copied()
+            .with_context(|| format!("no file `{name}` at `{facility}`"))
+    }
+
+    /// Resolve the transfer payload size for a provider parameter set:
+    /// explicit `bytes`, a dataset's wire size, or a model's param bytes.
+    pub fn payload_bytes(&self, params: &crate::util::Json) -> Result<u64> {
+        if let Some(b) = params.get("bytes").as_u64() {
+            return Ok(b);
+        }
+        if let Some(ds) = params.get("dataset").as_str() {
+            return Ok(self.dataset(ds)?.wire_bytes());
+        }
+        if let Some(m) = params.get("model").as_str() {
+            return Ok(self.registry.get(m)?.param_bytes());
+        }
+        bail!("transfer params need `bytes`, `dataset`, or `model`")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_present() -> bool {
+        crate::models::default_artifacts_dir()
+            .join("manifest.json")
+            .exists()
+    }
+
+    #[test]
+    fn paper_world_wires_up() {
+        if !artifacts_present() {
+            return;
+        }
+        let w = World::paper(1).unwrap();
+        assert!(w.faas.is_some());
+        assert_eq!(w.accels.len(), 4);
+        assert!(w.accel("alcf#cerebras").is_ok());
+        assert!(w.accel("alcf#ghost").is_err());
+        assert!(w.dataset("nope").is_err());
+        assert!(w.trained("braggnn").is_err());
+    }
+
+    #[test]
+    fn storage_and_payload_resolution() {
+        if !artifacts_present() {
+            return;
+        }
+        let mut w = World::paper(2).unwrap();
+        w.put_file("slac", "scan-42.h5", 1000);
+        assert_eq!(w.file_bytes("slac", "scan-42.h5").unwrap(), 1000);
+        assert!(w.file_bytes("alcf", "scan-42.h5").is_err());
+
+        let p = crate::util::Json::parse(r#"{"bytes": 77}"#).unwrap();
+        assert_eq!(w.payload_bytes(&p).unwrap(), 77);
+        let p = crate::util::Json::parse(r#"{"model": "braggnn"}"#).unwrap();
+        assert_eq!(w.payload_bytes(&p).unwrap(), 4 * 36_922);
+        let p = crate::util::Json::parse(r#"{"nothing": 1}"#).unwrap();
+        assert!(w.payload_bytes(&p).is_err());
+    }
+}

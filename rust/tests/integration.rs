@@ -1,0 +1,221 @@
+//! Integration tests across the whole coordinator stack — flow engine +
+//! faas + transfer + runtime + edge, with failure injection.
+//!
+//! Tests that need AOT artifacts skip silently when `make artifacts` has
+//! not run (CI convention shared with the unit tests).
+
+use xloop::faas::EndpointStatus;
+use xloop::flows::ActionStatus;
+use xloop::simnet::FaultModel;
+use xloop::util::Json;
+use xloop::workflow::{
+    dnn_trainer_flow, Coordinator, FlowShape, Mode, Scenario, TrainingMode,
+};
+
+fn artifacts_present() -> bool {
+    xloop::models::default_artifacts_dir()
+        .join("manifest.json")
+        .exists()
+}
+
+#[test]
+fn full_flow_with_labeling_real_training_and_serving() {
+    if !artifacts_present() {
+        return;
+    }
+    let mut c = Coordinator::paper(99).unwrap();
+    c.set_training_mode(TrainingMode::Real {
+        steps_override: Some(20),
+    });
+    let mut scenario = Scenario::table1("braggnn", Mode::RemoteCerebras).unwrap();
+    scenario.real_samples = 512;
+    let shape = FlowShape {
+        remote: true,
+        with_labeling: true,
+        ..Default::default()
+    };
+    let outcome = c.run_retraining(&scenario, Some(shape)).unwrap();
+    assert!(outcome.report.succeeded);
+
+    // the five paper actions all ran, in virtual-time order
+    let ids: Vec<&str> = outcome
+        .report
+        .records
+        .iter()
+        .map(|r| r.id.as_str())
+        .collect();
+    assert_eq!(ids, vec!["stage_data", "label", "train", "return_model", "deploy"]);
+    let mut last_end = 0.0;
+    for r in &outcome.report.records {
+        assert!(r.start_vt >= last_end - 1e-9, "actions overlap: {}", r.id);
+        last_end = r.end_vt;
+    }
+
+    // labeling really ran the LM fitter
+    let label_out = outcome.report.output("label").unwrap().get("output").clone();
+    assert!(label_out.get("real_s_per_peak").as_f64().unwrap() > 0.0);
+    assert!(c.world.last_label_cost_s.is_some());
+
+    // training really ran and the deployed model serves
+    assert_eq!(outcome.breakdown.real_steps, 20);
+    let dataset = c.world.dataset("braggnn-train").unwrap().clone();
+    let serve = c.world.edge.serve_stream(&dataset, 2).unwrap();
+    assert!(serve.outputs_finite);
+
+    // event log round-trips through JSON
+    let text = outcome.report.to_json().to_string();
+    let parsed = Json::parse(&text).unwrap();
+    assert_eq!(parsed.get("succeeded").as_bool(), Some(true));
+    assert_eq!(parsed.get("actions").as_arr().unwrap().len(), 5);
+}
+
+#[test]
+fn flaky_wan_recovers_via_retries() {
+    if !artifacts_present() {
+        return;
+    }
+    let mut c = Coordinator::paper(7).unwrap();
+    c.set_training_mode(TrainingMode::VirtualOnly);
+    c.world.transfer.faults = FaultModel::flaky(0.25);
+    let scenario = Scenario::table1("braggnn", Mode::RemoteCerebras).unwrap();
+    let outcome = c.run_retraining(&scenario, None).unwrap();
+    assert!(outcome.report.succeeded, "flow should absorb WAN faults");
+    // faults cost time: slower than the clean fabric
+    let mut clean = Coordinator::paper(7).unwrap();
+    clean.set_training_mode(TrainingMode::VirtualOnly);
+    let base = clean.run_retraining(&scenario, None).unwrap();
+    assert!(
+        outcome.breakdown.data_transfer_s.unwrap() >= base.breakdown.data_transfer_s.unwrap(),
+        "faulty transfer not slower"
+    );
+}
+
+#[test]
+fn offline_dcai_endpoint_fails_flow_and_skips_downstream() {
+    if !artifacts_present() {
+        return;
+    }
+    let mut c = Coordinator::paper(8).unwrap();
+    c.set_training_mode(TrainingMode::VirtualOnly);
+    c.world
+        .faas
+        .as_mut()
+        .unwrap()
+        .endpoint_mut("alcf#cerebras")
+        .unwrap()
+        .status = EndpointStatus::Offline;
+
+    let scenario = Scenario::table1("braggnn", Mode::RemoteCerebras).unwrap();
+    let err = match c.run_retraining(&scenario, None) {
+        Err(e) => e,
+        Ok(_) => panic!("flow should fail with the DCAI offline"),
+    };
+    let msg = format!("{err:#}");
+    assert!(msg.contains("train"), "unexpected failure: {msg}");
+}
+
+#[test]
+fn missing_scope_blocks_transfer_action() {
+    if !artifacts_present() {
+        return;
+    }
+    let mut c = Coordinator::paper(9).unwrap();
+    c.set_training_mode(TrainingMode::VirtualOnly);
+    // swap in a token lacking transfer:use
+    let weak = c
+        .engine
+        .auth
+        .issue(&c.clock, "intruder", &["compute:use", "deploy:use"], 1e9)
+        .id;
+    c.token = weak;
+    let scenario = Scenario::table1("braggnn", Mode::RemoteCerebras).unwrap();
+    let err = match c.run_retraining(&scenario, None) {
+        Err(e) => e,
+        Ok(_) => panic!("flow should fail without transfer scope"),
+    };
+    assert!(format!("{err:#}").contains("Failed"), "{err:#}");
+}
+
+#[test]
+fn local_flow_has_exactly_train_and_deploy() {
+    if !artifacts_present() {
+        return;
+    }
+    let mut c = Coordinator::paper(10).unwrap();
+    c.set_training_mode(TrainingMode::VirtualOnly);
+    let scenario = Scenario::table1("cookienetae", Mode::LocalV100).unwrap();
+    let outcome = c.run_retraining(&scenario, None).unwrap();
+    let ids: Vec<&str> = outcome
+        .report
+        .records
+        .iter()
+        .map(|r| r.id.as_str())
+        .collect();
+    assert_eq!(ids, vec!["train", "deploy"]);
+    assert!(outcome.breakdown.data_transfer_s.is_none());
+}
+
+#[test]
+fn flow_definition_json_roundtrip_executes() {
+    if !artifacts_present() {
+        return;
+    }
+    // serialize the generated definition back to JSON-ish by rebuilding
+    // from its own JSON source and running it
+    let def = dnn_trainer_flow(&FlowShape::default()).unwrap();
+    assert_eq!(def.name, "dnn-trainer-flow-remote");
+    let mut c = Coordinator::paper(11).unwrap();
+    c.set_training_mode(TrainingMode::VirtualOnly);
+    let scenario = Scenario::table1("braggnn", Mode::RemoteCerebras).unwrap();
+    let dataset = c.prepare_dataset(&scenario).unwrap();
+    let input = Json::obj(vec![
+        ("model", Json::str("braggnn")),
+        ("dataset", Json::str(dataset)),
+        ("dataset_bytes", Json::num(1e8)),
+        ("train_endpoint", Json::str("alcf#cerebras")),
+    ]);
+    let token = c.token;
+    let report = c
+        .engine
+        .run(&def, &input, &token, &mut c.world, &mut c.clock)
+        .unwrap();
+    assert!(report.succeeded);
+}
+
+#[test]
+fn successive_retrainings_bump_edge_versions() {
+    if !artifacts_present() {
+        return;
+    }
+    let mut c = Coordinator::paper(12).unwrap();
+    c.set_training_mode(TrainingMode::VirtualOnly);
+    let scenario = Scenario::table1("braggnn", Mode::RemoteCerebras).unwrap();
+    c.run_retraining(&scenario, None).unwrap();
+    assert_eq!(c.world.edge.deployed().unwrap().version, 1);
+    c.run_retraining(&scenario, None).unwrap();
+    assert_eq!(c.world.edge.deployed().unwrap().version, 2);
+    // both models can coexist on the fabric
+    let cookie = Scenario::table1("cookienetae", Mode::RemoteCerebras).unwrap();
+    c.run_retraining(&cookie, None).unwrap();
+    assert_eq!(c.world.edge.deployed().unwrap().meta.name, "cookienetae");
+}
+
+#[test]
+fn auth_validations_cover_every_action() {
+    if !artifacts_present() {
+        return;
+    }
+    let mut c = Coordinator::paper(13).unwrap();
+    c.set_training_mode(TrainingMode::VirtualOnly);
+    let scenario = Scenario::table1("braggnn", Mode::RemoteCerebras).unwrap();
+    let outcome = c.run_retraining(&scenario, None).unwrap();
+    // one introspection per executed action (paper: every interaction is
+    // authenticated)
+    let executed = outcome
+        .report
+        .records
+        .iter()
+        .filter(|r| !matches!(r.status, ActionStatus::Skipped))
+        .count() as u64;
+    assert_eq!(c.engine.auth.validations, executed);
+}

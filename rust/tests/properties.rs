@@ -1,0 +1,396 @@
+//! Property-based tests over the coordinator substrates.
+//!
+//! proptest is not in the offline crate cache, so these use the same
+//! technique with the in-crate PRNG: hundreds of seeded random cases per
+//! invariant, failing seeds printed for replay. Each test states the
+//! invariant it pins.
+
+use xloop::analysis::{fit_patch, pseudo_voigt};
+use xloop::costmodel::CostParams;
+use xloop::flows::{ActionDef, FailurePolicy, FlowDefinition};
+use xloop::simnet::{max_min_rates, simulate, FlowSpec, Topology, VClock};
+use xloop::transfer::{TransferRequest, TransferService};
+use xloop::util::{Json, Rng};
+
+const CASES: u64 = 200;
+
+// ------------------------------------------------------------------ fluid
+
+/// Invariant: max-min fair rates never oversubscribe any link, and at
+/// least one link is saturated (work conservation).
+#[test]
+fn prop_fluid_rates_feasible_and_work_conserving() {
+    let topo = Topology::paper();
+    let slac = topo.facility("slac").unwrap();
+    let alcf = topo.facility("alcf").unwrap();
+    let fwd = topo.route(slac, alcf).unwrap().to_vec();
+    let rev = topo.route(alcf, slac).unwrap().to_vec();
+
+    for seed in 0..CASES {
+        let mut rng = Rng::new(seed);
+        let n = 1 + rng.below(24);
+        let routes: Vec<&[_]> = (0..n)
+            .map(|_| {
+                if rng.chance(0.5) {
+                    fwd.as_slice()
+                } else {
+                    rev.as_slice()
+                }
+            })
+            .collect();
+        let rates = max_min_rates(&topo, &routes);
+        assert!(rates.iter().all(|&r| r >= 0.0), "seed {seed}: negative rate");
+        // per-link feasibility
+        for li in 0..3 {
+            let link = xloop::simnet::LinkId(li);
+            let load: f64 = routes
+                .iter()
+                .zip(&rates)
+                .filter(|(r, _)| r.contains(&link))
+                .map(|(_, &rate)| rate)
+                .sum();
+            let cap = topo.link(link).capacity_bps;
+            assert!(
+                load <= cap * (1.0 + 1e-9),
+                "seed {seed}: link {li} oversubscribed {load} > {cap}"
+            );
+        }
+        // work conservation: every flow is bottlenecked somewhere
+        let saturated = (0..3).any(|li| {
+            let link = xloop::simnet::LinkId(li);
+            let load: f64 = routes
+                .iter()
+                .zip(&rates)
+                .filter(|(r, _)| r.contains(&link))
+                .map(|(_, &rate)| rate)
+                .sum();
+            (load - topo.link(link).capacity_bps).abs() < 1.0
+        });
+        assert!(saturated, "seed {seed}: no saturated link");
+    }
+}
+
+/// Invariant: completion times are monotone in flow size, and every flow
+/// finishes no earlier than bytes/bottleneck after its arrival.
+#[test]
+fn prop_fluid_completion_bounds() {
+    let topo = Topology::paper();
+    let slac = topo.facility("slac").unwrap();
+    let alcf = topo.facility("alcf").unwrap();
+    let route = topo.route(slac, alcf).unwrap().to_vec();
+    let bottleneck = 10.0e9 / 8.0;
+
+    for seed in 0..CASES {
+        let mut rng = Rng::new(1000 + seed);
+        let n = 1 + rng.below(12);
+        let flows: Vec<FlowSpec> = (0..n)
+            .map(|_| FlowSpec {
+                route: route.clone(),
+                bytes: rng.uniform(1e6, 5e9),
+                arrival: rng.uniform(0.0, 10.0),
+            })
+            .collect();
+        let res = simulate(&topo, &flows);
+        for (f, r) in flows.iter().zip(&res) {
+            let min_duration = f.bytes / bottleneck;
+            assert!(
+                r.finish >= f.arrival + min_duration - 1e-6,
+                "seed {seed}: faster than line rate"
+            );
+            assert!(r.finish.is_finite(), "seed {seed}: unfinished flow");
+        }
+    }
+}
+
+// --------------------------------------------------------------- transfer
+
+/// Invariant: duration grows with payload; per-file reports cover every
+/// file exactly once; throughput never exceeds the fabric cap.
+#[test]
+fn prop_transfer_monotone_and_complete() {
+    for seed in 0..40 {
+        let mut rng = Rng::new(2000 + seed);
+        let files = 1 + rng.below(24);
+        let k = 1 + rng.below(12);
+        let small = rng.uniform(1e7, 1e8) as u64;
+        let big = small * 4;
+
+        let mut run = |bytes: u64| {
+            let mut svc = TransferService::paper(seed);
+            let mut clock = VClock::new();
+            let mut req = TransferRequest::split_even(
+                "prop",
+                "slac#dtn".into(),
+                "alcf#dtn".into(),
+                bytes,
+                files,
+            );
+            req.concurrency = Some(k);
+            svc.execute(&mut clock, &req).unwrap()
+        };
+        let rep_small = run(small);
+        let rep_big = run(big);
+        assert!(
+            rep_big.duration() > rep_small.duration(),
+            "seed {seed}: duration not monotone in bytes"
+        );
+        assert_eq!(rep_small.files.len(), files);
+        assert!(rep_small.files.iter().all(|f| f.finish_vt.is_finite()));
+        assert!(
+            rep_small.throughput_bps() <= 1.25e9 * 1.001,
+            "seed {seed}: throughput above fabric cap"
+        );
+    }
+}
+
+/// Invariant: injected faults never corrupt completion (all files finish
+/// or the task errors), and a fault-free run is never slower.
+#[test]
+fn prop_transfer_fault_injection_safe() {
+    for seed in 0..40 {
+        let mut rng = Rng::new(3000 + seed);
+        let p = rng.uniform(0.05, 0.5);
+        let mut svc = TransferService::paper(seed);
+        svc.faults = xloop::simnet::FaultModel {
+            file_failure_prob: p,
+            retry_backoff_s: 1.0,
+            max_attempts: 8,
+        };
+        let mut clock = VClock::new();
+        let mut req = TransferRequest::split_even(
+            "prop-faulty",
+            "slac#dtn".into(),
+            "alcf#dtn".into(),
+            500_000_000,
+            8,
+        );
+        req.concurrency = Some(4);
+        match svc.execute(&mut clock, &req) {
+            Ok(rep) => {
+                assert!(rep.files.iter().all(|f| f.finish_vt.is_finite()));
+                let mut clean_svc = TransferService::paper(seed);
+                let mut clean_clock = VClock::new();
+                let clean = clean_svc.execute(&mut clean_clock, &req).unwrap();
+                assert!(
+                    rep.duration() >= clean.duration() - 1e-9,
+                    "seed {seed}: faults made the task faster"
+                );
+            }
+            Err(e) => {
+                // hard failure allowed only via exhausted attempts
+                assert!(format!("{e:#}").contains("failed"), "seed {seed}: {e:#}");
+            }
+        }
+    }
+}
+
+// ------------------------------------------------------------------ flows
+
+fn random_dag(rng: &mut Rng) -> FlowDefinition {
+    let n = 2 + rng.below(8);
+    let actions: Vec<ActionDef> = (0..n)
+        .map(|i| {
+            let mut deps = vec![];
+            for j in 0..i {
+                if rng.chance(0.3) {
+                    deps.push(format!("a{j}"));
+                }
+            }
+            ActionDef {
+                id: format!("a{i}"),
+                provider: "noop".into(),
+                params: Json::Null,
+                depends_on: deps,
+                retries: 0,
+                retry_backoff_s: 0.1,
+                on_failure: FailurePolicy::Continue,
+                is_handler: false,
+            }
+        })
+        .collect();
+    FlowDefinition::new("prop", actions).unwrap()
+}
+
+/// Invariant: the execution order of a random DAG is a valid topological
+/// order covering every non-handler action exactly once.
+#[test]
+fn prop_flow_order_is_topological() {
+    for seed in 0..CASES {
+        let mut rng = Rng::new(4000 + seed);
+        let def = random_dag(&mut rng);
+        let order = def.order();
+        assert_eq!(order.len(), def.actions.len(), "seed {seed}");
+        let mut seen = std::collections::BTreeSet::new();
+        for &i in order {
+            for d in &def.actions[i].depends_on {
+                assert!(seen.contains(d.as_str()), "seed {seed}: dep `{d}` after dependent");
+            }
+            assert!(seen.insert(def.actions[i].id.as_str()), "seed {seed}: duplicate");
+        }
+    }
+}
+
+/// Invariant: random extra edges never create acceptance of a cyclic
+/// graph (closing a cycle must be rejected).
+#[test]
+fn prop_flow_cycles_rejected() {
+    for seed in 0..CASES {
+        let mut rng = Rng::new(5000 + seed);
+        let def = random_dag(&mut rng);
+        if def.actions.len() < 2 {
+            continue;
+        }
+        // add a back edge from the first action in topo order to the last
+        let first = def.order()[0];
+        let last = *def.order().last().unwrap();
+        if first == last {
+            continue;
+        }
+        let mut actions = def.actions.clone();
+        let last_id = actions[last].id.clone();
+        actions[first].depends_on.push(last_id);
+        // now last -> ... -> first -> last is a cycle iff first is
+        // reachable from last; adding dep(first -> last) always closes
+        // one since last depends (transitively or not) on nothing after
+        // it — it may still be a DAG when first and last are unrelated.
+        match FlowDefinition::new("maybe-cyclic", actions) {
+            Ok(d) => {
+                // if accepted, the order must still be valid
+                let order = d.order();
+                let mut seen = std::collections::BTreeSet::new();
+                for &i in order {
+                    for dep in &d.actions[i].depends_on {
+                        assert!(seen.contains(dep.as_str()), "seed {seed}");
+                    }
+                    seen.insert(d.actions[i].id.as_str());
+                }
+            }
+            Err(e) => assert!(e.to_string().contains("cycle"), "seed {seed}: {e}"),
+        }
+    }
+}
+
+// -------------------------------------------------------------- costmodel
+
+/// Invariant: when the crossover exists, f_conventional < f_ml strictly
+/// below N* and strictly above it the other way round.
+#[test]
+fn prop_crossover_separates_regimes() {
+    for seed in 0..CASES {
+        let mut rng = Rng::new(6000 + seed);
+        let params = CostParams {
+            c_move_us: rng.uniform(0.01, 1.0),
+            c_analyze_us: rng.uniform(0.5, 10.0),
+            c_return_us: rng.uniform(0.0, 0.1),
+            c_label_return_us: rng.uniform(0.0, 0.1),
+            c_estimate_us: rng.uniform(0.01, 0.5),
+            t_train_us: rng.uniform(1e6, 1e8),
+            t_model_move_us: rng.uniform(1e2, 1e5),
+            p: rng.uniform(0.01, 0.5),
+        };
+        let Ok(cross) = params.crossover() else {
+            continue; // surrogate never wins for this draw — fine
+        };
+        let lo = cross.n_star * 0.9;
+        let hi = cross.n_star * 1.1;
+        assert!(
+            params.f_conventional_us(lo) < params.f_ml_us(lo),
+            "seed {seed}: below N* conventional should win"
+        );
+        assert!(
+            params.f_conventional_us(hi) > params.f_ml_us(hi),
+            "seed {seed}: above N* ML should win"
+        );
+    }
+}
+
+// ------------------------------------------------------------------- json
+
+/// Invariant: serialize → parse is the identity on random JSON values.
+#[test]
+fn prop_json_roundtrip() {
+    fn random_json(rng: &mut Rng, depth: u32) -> Json {
+        match if depth == 0 { rng.below(4) } else { rng.below(6) } {
+            0 => Json::Null,
+            1 => Json::Bool(rng.chance(0.5)),
+            2 => Json::Num((rng.normal() * 1e3).round() / 8.0),
+            3 => {
+                let n = rng.below(12);
+                Json::Str(
+                    (0..n)
+                        .map(|_| {
+                            let c = rng.below(128) as u8;
+                            if c.is_ascii_graphic() || c == b' ' {
+                                c as char
+                            } else {
+                                '\\'
+                            }
+                        })
+                        .collect(),
+                )
+            }
+            4 => Json::Arr((0..rng.below(5)).map(|_| random_json(rng, depth - 1)).collect()),
+            _ => Json::Obj(
+                (0..rng.below(5))
+                    .map(|i| (format!("k{i}"), random_json(rng, depth - 1)))
+                    .collect(),
+            ),
+        }
+    }
+    for seed in 0..CASES {
+        let mut rng = Rng::new(7000 + seed);
+        let v = random_json(&mut rng, 3);
+        let text = v.to_string();
+        let back = Json::parse(&text).unwrap_or_else(|e| panic!("seed {seed}: {e}\n{text}"));
+        assert_eq!(back, v, "seed {seed}: {text}");
+    }
+}
+
+// --------------------------------------------------------------- analysis
+
+/// Invariant: the LM fitter recovers the center of random clean peaks to
+/// sub-0.05 px.
+#[test]
+fn prop_fitter_recovers_random_clean_peaks() {
+    for seed in 0..60 {
+        let mut rng = Rng::new(8000 + seed);
+        let truth = [
+            rng.uniform(50.0, 400.0),
+            rng.uniform(3.0, 7.0),
+            rng.uniform(3.0, 7.0),
+            rng.uniform(0.8, 2.2),
+            rng.uniform(0.8, 2.2),
+            rng.uniform(0.1, 0.9),
+            rng.uniform(0.0, 8.0),
+        ];
+        let mut patch = vec![0.0f32; 121];
+        for r in 0..11 {
+            for c in 0..11 {
+                patch[r * 11 + c] = pseudo_voigt::value(&truth, c as f64, r as f64) as f32;
+            }
+        }
+        let fit = fit_patch(&patch, 11, 11).unwrap();
+        let (x, y) = fit.center();
+        assert!(
+            (x - truth[1]).abs() < 0.05 && (y - truth[2]).abs() < 0.05,
+            "seed {seed}: truth ({}, {}) got ({x}, {y})",
+            truth[1],
+            truth[2]
+        );
+    }
+}
+
+// ------------------------------------------------------------------- rng
+
+/// Invariant: dataset generation is a pure function of its seed.
+#[test]
+fn prop_dataset_determinism() {
+    for seed in 0..20 {
+        let a = xloop::data::bragg::generate(&xloop::data::BraggConfig::default(), 16, seed)
+            .unwrap();
+        let b = xloop::data::bragg::generate(&xloop::data::BraggConfig::default(), 16, seed)
+            .unwrap();
+        assert_eq!(a.x, b.x, "seed {seed}");
+        assert_eq!(a.y, b.y, "seed {seed}");
+    }
+}
