@@ -14,6 +14,10 @@ use xloop::workflow::{Coordinator, Mode, Scenario, TrainingMode};
 
 fn main() -> Result<()> {
     xloop::util::logging::init();
+    println!(
+        "analysis/generation pool: {} worker thread(s) (XLOOP_THREADS to override)",
+        xloop::pool::global().threads()
+    );
 
     // 1. Bring up the paper fabric: SLAC + ALCF, DTNs, faas endpoints,
     //    accelerator models, flow engine, PJRT runtime.

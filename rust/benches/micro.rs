@@ -1,29 +1,151 @@
 //! Micro-benchmarks of the hot paths (the §Perf baseline/after numbers
 //! in EXPERIMENTS.md come from here):
 //!
+//! * conventional analyzer: pseudo-Voigt LM batch labeling, serial
+//!   (the seed path) vs the work-stealing pool, and fused vs split
+//!   residual/Jacobian evaluation
+//! * data generation: render + noise per kilopatch, serial vs pool
 //! * PJRT execution: BraggNN/CookieNetAE train step + batched inference
-//! * conventional analyzer: pseudo-Voigt LM fit per peak
-//! * data generation: render + noise per kilopatch
-//! * fabric: fluid allocation, flow-engine dispatch, JSON parse
+//!   (skipped with a note when `make artifacts` has not been run)
+//! * fabric: fluid allocation, JSON parse
 //!
 //! Run: `cargo bench --bench micro`
+//! Thread count: `XLOOP_THREADS=N cargo bench --bench micro`
 
 #[path = "harness.rs"]
 mod harness;
 
-use xloop::analysis;
+use xloop::analysis::pseudo_voigt::{jacobian, value, N_PARAMS};
+use xloop::analysis::{
+    initial_guess, label_patches_serial, label_patches_timed, lm_solve, LeastSquares, LmOptions,
+};
 use xloop::data::{bragg, BraggConfig};
 use xloop::models::{default_artifacts_dir, ModelMeta, ModelRegistry};
+use xloop::pool::Pool;
 use xloop::runtime::Runtime;
 use xloop::simnet::{max_min_rates, Topology};
 use xloop::training::{TrainState, Trainer};
 use xloop::util::Json;
 
+/// The seed's split evaluation path: residual and Jacobian each
+/// recompute the exp/Lorentzian terms (the `LeastSquares` default).
+/// Kept here as the before-side of the fused-LM comparison.
+struct SplitPatch<'a> {
+    patch: &'a [f32],
+    height: usize,
+    width: usize,
+}
+
+impl LeastSquares<N_PARAMS> for SplitPatch<'_> {
+    fn n_residuals(&self) -> usize {
+        self.patch.len()
+    }
+    fn residual(&self, p: &[f64; N_PARAMS], i: usize) -> f64 {
+        let y = (i / self.width) as f64;
+        let x = (i % self.width) as f64;
+        value(p, x, y) - self.patch[i] as f64
+    }
+    fn jacobian_row(&self, p: &[f64; N_PARAMS], i: usize) -> [f64; N_PARAMS] {
+        let y = (i / self.width) as f64;
+        let x = (i % self.width) as f64;
+        jacobian(p, x, y)
+    }
+    fn project(&self, p: &mut [f64; N_PARAMS]) {
+        p[0] = p[0].max(1e-3);
+        p[1] = p[1].clamp(0.0, (self.width - 1) as f64);
+        p[2] = p[2].clamp(0.0, (self.height - 1) as f64);
+        p[3] = p[3].clamp(0.2, self.width as f64);
+        p[4] = p[4].clamp(0.2, self.height as f64);
+        p[5] = p[5].clamp(0.0, 1.0);
+        p[6] = p[6].max(0.0);
+    }
+}
+
 fn main() {
+    let pool = Pool::global();
+    println!(
+        "pool: {} worker thread(s) (override with XLOOP_THREADS)\n",
+        pool.threads()
+    );
+
+    // ---- conventional analyzer A: batch pseudo-Voigt labeling ----
+    harness::group("conventional analyzer A — batch labeling (n = 256 noisy peaks)");
+    let ds = bragg::generate(&BraggConfig::default(), 256, 3).unwrap();
+    let px = 11 * 11;
+    let serial = harness::bench("fit 256 peaks, serial (seed path)", 1, 5, || {
+        std::hint::black_box(label_patches_serial(&ds.x[..256 * px], 256, 11, 11).unwrap());
+    });
+    let pooled = harness::bench("fit 256 peaks, work-stealing pool", 1, 5, || {
+        std::hint::black_box(label_patches_timed(&ds.x[..256 * px], 256, 11, 11).unwrap());
+    });
+    println!(
+        "    -> {:.0} µs/peak serial vs {:.0} µs/peak pooled = {:.2}x on {} threads",
+        serial.mean_s / 256.0 * 1e6,
+        pooled.mean_s / 256.0 * 1e6,
+        serial.mean_s / pooled.mean_s,
+        pool.threads()
+    );
+    println!("    (paper A: 2.44 µs on 1024 cores = 2500 µs/core)");
+
+    // ---- fused vs split LM inner loop, single thread ----
+    harness::group("LM inner loop — fused residual_jacobian vs split (64 fits, 1 thread)");
+    let split = harness::bench("64 fits, split eval (seed path)", 1, 5, || {
+        for i in 0..64 {
+            let patch = &ds.x[i * px..(i + 1) * px];
+            let prob = SplitPatch {
+                patch,
+                height: 11,
+                width: 11,
+            };
+            let init = initial_guess(patch, 11, 11);
+            std::hint::black_box(lm_solve(&prob, init, LmOptions::default()).unwrap());
+        }
+    });
+    let fused = harness::bench("64 fits, fused eval", 1, 5, || {
+        std::hint::black_box(label_patches_serial(&ds.x[..64 * px], 64, 11, 11).unwrap());
+    });
+    println!(
+        "    -> {:.0} µs/fit split vs {:.0} µs/fit fused = {:.2}x single-thread",
+        split.mean_s / 64.0 * 1e6,
+        fused.mean_s / 64.0 * 1e6,
+        split.mean_s / fused.mean_s
+    );
+
+    // ---- data generation S: per kilopatch ----
+    harness::group("data generation S — render+noise per kilopatch");
+    let cfg = BraggConfig::default();
+    let gen_serial = harness::bench("1024 patches, serial (seed path)", 1, 10, || {
+        std::hint::black_box(bragg::generate_with_pool(&Pool::new(1), &cfg, 1024, 9).unwrap());
+    });
+    let gen_pooled = harness::bench("1024 patches, work-stealing pool", 1, 10, || {
+        std::hint::black_box(bragg::generate(&cfg, 1024, 9).unwrap());
+    });
+    println!(
+        "    -> {:.2} ms/kilopatch serial vs {:.2} ms/kilopatch pooled = {:.2}x",
+        gen_serial.mean_s * 1e3,
+        gen_pooled.mean_s * 1e3,
+        gen_serial.mean_s / gen_pooled.mean_s
+    );
+
+    // ---- fabric micro (no artifacts needed) ----
+    harness::group("fabric micro");
+    let topo = Topology::paper();
+    let slac = topo.facility("slac").unwrap();
+    let alcf = topo.facility("alcf").unwrap();
+    let route = topo.route(slac, alcf).unwrap().to_vec();
+    let routes: Vec<&[_]> = (0..64).map(|_| route.as_slice()).collect();
+    harness::bench("max-min fair allocation, 64 flows", 100, 1000, || {
+        std::hint::black_box(max_min_rates(&topo, &routes));
+    });
+
+    // ---- PJRT paths: only with built artifacts ----
     let dir = default_artifacts_dir();
     if !dir.join("manifest.json").exists() {
-        eprintln!("artifacts missing — run `make artifacts` first");
-        std::process::exit(1);
+        println!(
+            "\n[skip] PJRT benches: artifacts missing — run `make artifacts` to include\n\
+             the BraggNN/CookieNetAE train-step and inference measurements"
+        );
+        return;
     }
     let registry = ModelRegistry::load(&dir).unwrap();
     let rt = Runtime::cpu().unwrap();
@@ -85,35 +207,12 @@ fn main() {
         );
     }
 
-    harness::group("conventional analyzer A — pseudo-Voigt LM fit");
-    let ds = bragg::generate(&BraggConfig::default(), 256, 3).unwrap();
-    let stats = harness::bench("fit 64 noisy peaks", 1, 5, || {
-        std::hint::black_box(analysis::label_patches(&ds.x[..64 * 121], 64, 11, 11).unwrap());
-    });
-    println!(
-        "    -> {:.0} µs/peak single-core (paper A: 2.44 µs on 1024 cores = 2500 µs/core)",
-        stats.mean_s / 64.0 * 1e6
-    );
-
-    harness::group("data generation S");
-    harness::bench("render+noise 1024 patches (rust)", 1, 10, || {
-        std::hint::black_box(bragg::generate(&BraggConfig::default(), 1024, 9).unwrap());
-    });
+    harness::group("pallas render via PJRT");
     let pv = registry.pv().unwrap().clone();
     let mut rng = xloop::util::Rng::new(4);
     let params = bragg::sample_params(&BraggConfig::default(), 1024, &mut rng);
     harness::bench("render 1024 patches (Pallas kernel via PJRT)", 1, 10, || {
         std::hint::black_box(bragg::render_pjrt(&rt, &pv, &params).unwrap());
-    });
-
-    harness::group("fabric micro");
-    let topo = Topology::paper();
-    let slac = topo.facility("slac").unwrap();
-    let alcf = topo.facility("alcf").unwrap();
-    let route = topo.route(slac, alcf).unwrap().to_vec();
-    let routes: Vec<&[_]> = (0..64).map(|_| route.as_slice()).collect();
-    harness::bench("max-min fair allocation, 64 flows", 100, 1000, || {
-        std::hint::black_box(max_min_rates(&topo, &routes));
     });
     let meta_text = std::fs::read_to_string(dir.join("braggnn_meta.json")).unwrap();
     harness::bench("parse braggnn_meta.json", 100, 1000, || {

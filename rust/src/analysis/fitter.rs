@@ -3,13 +3,27 @@
 //! "positions are typically computed by fitting the observed intensities
 //! ... to a theoretical peak shape such as pseudo-Voigt").
 //!
-//! Real compute, really run: `label_patches` measures its own wallclock
-//! so EXPERIMENTS.md reports an honest C(A) on this machine.
+//! Real compute, really run: `label_patches` fits on the process-wide
+//! work-stealing pool (`XLOOP_THREADS` to override) and measures both
+//! its wallclock and the summed per-worker busy time, so EXPERIMENTS.md
+//! reports an honest C(A) on this machine — delivered latency *and*
+//! per-peak CPU cost, which stays thread-count independent.
+
+use std::time::Instant;
 
 use anyhow::Result;
 
-use super::lm::{solve, LeastSquares, LmOptions, LmResult};
-use super::pseudo_voigt::{jacobian, value, N_PARAMS, P_AMP, P_BG, P_ETA, P_SX, P_SY, P_X0, P_Y0};
+use super::lm::{solve, LeastSquares, LmOptions, LmOutcome, LmResult};
+use super::pseudo_voigt::{
+    value, value_jacobian, N_PARAMS, P_AMP, P_BG, P_ETA, P_SX, P_SY, P_X0, P_Y0,
+};
+use crate::pool::Pool;
+
+/// Patches per pool task. Small enough that work stealing levels the
+/// iteration-count skew between easy and hard peaks, large enough that
+/// claim/merge overhead vanishes; fixed so scheduling never depends on
+/// the thread count.
+pub const FIT_CHUNK: usize = 8;
 
 /// One fitted peak.
 #[derive(Debug, Clone, Copy)]
@@ -24,6 +38,39 @@ pub struct PeakFit {
 impl PeakFit {
     pub fn center(&self) -> (f64, f64) {
         (self.params[P_X0], self.params[P_Y0])
+    }
+}
+
+/// Timing of one batch-labeling run.
+#[derive(Debug, Clone, Copy)]
+pub struct BatchTiming {
+    pub n: usize,
+    /// end-to-end wallclock of the batch
+    pub wall_s: f64,
+    /// busy time summed over every worker's chunks — the thread-count
+    /// independent compute cost of the conventional analyzer
+    pub cpu_s: f64,
+    pub threads: usize,
+}
+
+impl BatchTiming {
+    /// Delivered latency per peak (what the beamline experiences).
+    pub fn per_peak_wall_s(&self) -> f64 {
+        self.wall_s / self.n.max(1) as f64
+    }
+
+    /// CPU cost per peak (the paper's per-core C(A)).
+    pub fn per_peak_cpu_s(&self) -> f64 {
+        self.cpu_s / self.n.max(1) as f64
+    }
+
+    /// Effective parallel speedup actually realized by this run.
+    pub fn speedup(&self) -> f64 {
+        if self.wall_s > 0.0 {
+            self.cpu_s / self.wall_s
+        } else {
+            1.0
+        }
     }
 }
 
@@ -45,9 +92,15 @@ impl LeastSquares<N_PARAMS> for PatchProblem<'_> {
     }
 
     fn jacobian_row(&self, p: &[f64; N_PARAMS], i: usize) -> [f64; N_PARAMS] {
+        self.residual_jacobian(p, i).1
+    }
+
+    // fused path: one exp + one Lorentzian feed both residual and row
+    fn residual_jacobian(&self, p: &[f64; N_PARAMS], i: usize) -> (f64, [f64; N_PARAMS]) {
         let y = (i / self.width) as f64;
         let x = (i % self.width) as f64;
-        jacobian(p, x, y)
+        let (v, row) = value_jacobian(p, x, y);
+        (v - self.patch[i] as f64, row)
     }
 
     fn project(&self, p: &mut [f64; N_PARAMS]) {
@@ -129,14 +182,76 @@ pub fn fit_patch(patch: &[f32], height: usize, width: usize) -> Result<PeakFit> 
         params,
         cost,
         iterations,
-        converged,
+        outcome,
     } = solve(&prob, init, LmOptions::default())?;
     Ok(PeakFit {
         params,
         cost,
         iterations,
-        converged,
+        converged: outcome == LmOutcome::Converged,
     })
+}
+
+/// Batch labeling on an explicit pool. Fits are returned in patch order
+/// and are bit-identical for any thread count (each fit is an
+/// independent, deterministic computation; the pool only changes *where*
+/// it runs).
+pub fn label_patches_with(
+    pool: &Pool,
+    patches: &[f32],
+    n: usize,
+    height: usize,
+    width: usize,
+) -> Result<(Vec<PeakFit>, BatchTiming)> {
+    let px = height * width;
+    assert_eq!(patches.len(), n * px, "patch buffer size mismatch");
+    let started = Instant::now();
+    let n_chunks = n.div_ceil(FIT_CHUNK);
+    let per_chunk: Vec<Result<(Vec<PeakFit>, f64)>> = pool.map_tasks(n_chunks, |ci| {
+        let busy = Instant::now();
+        let lo = ci * FIT_CHUNK;
+        let hi = ((ci + 1) * FIT_CHUNK).min(n);
+        let mut fits = Vec::with_capacity(hi - lo);
+        for i in lo..hi {
+            fits.push(fit_patch(&patches[i * px..(i + 1) * px], height, width)?);
+        }
+        Ok((fits, busy.elapsed().as_secs_f64()))
+    });
+    let mut fits = Vec::with_capacity(n);
+    let mut cpu_s = 0.0;
+    for chunk in per_chunk {
+        let (f, busy) = chunk?;
+        fits.extend(f);
+        cpu_s += busy;
+    }
+    let timing = BatchTiming {
+        n,
+        wall_s: started.elapsed().as_secs_f64(),
+        cpu_s,
+        threads: pool.threads(),
+    };
+    Ok((fits, timing))
+}
+
+/// Batch labeling on the process-wide pool, with full timing.
+pub fn label_patches_timed(
+    patches: &[f32],
+    n: usize,
+    height: usize,
+    width: usize,
+) -> Result<(Vec<PeakFit>, BatchTiming)> {
+    label_patches_with(Pool::global(), patches, n, height, width)
+}
+
+/// Strictly serial batch labeling — the seed baseline, kept as the
+/// reference path `cargo bench --bench micro` compares the pool against.
+pub fn label_patches_serial(
+    patches: &[f32],
+    n: usize,
+    height: usize,
+    width: usize,
+) -> Result<(Vec<PeakFit>, BatchTiming)> {
+    label_patches_with(&Pool::new(1), patches, n, height, width)
 }
 
 /// Batch labeling (the paper's A over a staged dataset): returns fits and
@@ -147,14 +262,8 @@ pub fn label_patches(
     height: usize,
     width: usize,
 ) -> Result<(Vec<PeakFit>, f64)> {
-    let px = height * width;
-    assert_eq!(patches.len(), n * px, "patch buffer size mismatch");
-    let started = std::time::Instant::now();
-    let fits = (0..n)
-        .map(|i| fit_patch(&patches[i * px..(i + 1) * px], height, width))
-        .collect::<Result<Vec<_>>>()?;
-    let per_peak = started.elapsed().as_secs_f64() / n.max(1) as f64;
-    Ok((fits, per_peak))
+    let (fits, timing) = label_patches_timed(patches, n, height, width)?;
+    Ok((fits, timing.per_peak_wall_s()))
 }
 
 #[cfg(test)]
@@ -226,5 +335,62 @@ mod tests {
         let (fits, per_peak) = label_patches(&all, 16, 11, 11).unwrap();
         assert_eq!(fits.len(), 16);
         assert!(per_peak > 0.0 && per_peak < 0.1, "{per_peak}");
+    }
+
+    /// The acceptance property of the parallel path: same fits, same
+    /// order, bit for bit, whatever the thread count.
+    #[test]
+    fn parallel_labeling_is_bit_identical_to_serial() {
+        // 37 noisy patches: not a multiple of FIT_CHUNK, several chunks
+        let mut rng = crate::util::Rng::new(21);
+        let mut all = Vec::new();
+        for _ in 0..37 {
+            let truth = [
+                rng.uniform(80.0, 300.0),
+                rng.uniform(3.0, 7.0),
+                rng.uniform(3.0, 7.0),
+                rng.uniform(0.9, 2.0),
+                rng.uniform(0.9, 2.0),
+                rng.uniform(0.1, 0.9),
+                rng.uniform(1.0, 6.0),
+            ];
+            let clean = render(&truth, 11, 11);
+            all.extend(clean.iter().map(|&v| rng.poisson(v as f64) as f32));
+        }
+        let (serial, st) = label_patches_with(&Pool::new(1), &all, 37, 11, 11).unwrap();
+        let (parallel, pt) = label_patches_with(&Pool::new(4), &all, 37, 11, 11).unwrap();
+        assert_eq!(serial.len(), parallel.len());
+        for (a, b) in serial.iter().zip(&parallel) {
+            assert_eq!(a.params, b.params);
+            assert_eq!(a.cost, b.cost);
+            assert_eq!(a.iterations, b.iterations);
+        }
+        assert_eq!(st.threads, 1);
+        assert_eq!(pt.threads, 4);
+        assert!(st.cpu_s > 0.0 && pt.cpu_s > 0.0);
+    }
+
+    #[test]
+    fn timing_fields_are_consistent() {
+        let truth = [150.0, 5.0, 5.0, 1.5, 1.5, 0.4, 3.0];
+        let one = render(&truth, 11, 11);
+        let mut all = Vec::new();
+        for _ in 0..24 {
+            all.extend_from_slice(&one);
+        }
+        let (fits, t) = label_patches_timed(&all, 24, 11, 11).unwrap();
+        assert_eq!(fits.len(), 24);
+        assert_eq!(t.n, 24);
+        assert!(t.wall_s > 0.0 && t.cpu_s > 0.0);
+        assert!(t.per_peak_wall_s() < 0.1);
+        assert!(t.speedup() > 0.0);
+    }
+
+    #[test]
+    fn empty_batch_is_fine() {
+        let (fits, t) = label_patches_timed(&[], 0, 11, 11).unwrap();
+        assert!(fits.is_empty());
+        assert_eq!(t.n, 0);
+        assert_eq!(t.per_peak_wall_s(), t.wall_s);
     }
 }

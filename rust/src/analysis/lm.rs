@@ -1,6 +1,12 @@
 //! Levenberg–Marquardt nonlinear least squares.
 //!
-//! Generic over the model: the caller supplies residual + Jacobian rows.
+//! Generic over the model: the caller supplies residual + Jacobian rows,
+//! or (for the hot paths) a fused `residual_jacobian` that shares the
+//! expensive subexpressions between value and gradient. One sweep per
+//! iteration accumulates JtJ, Jtr *and* the cost; the accepted trial
+//! cost is reused instead of recomputed; the damped normal equations are
+//! solved by Cholesky factorization (they are SPD by construction).
+//!
 //! Used by the pseudo-Voigt fitter (the conventional baseline **A**);
 //! written dimension-generically so tests can exercise it on independent
 //! problems.
@@ -18,6 +24,14 @@ pub trait LeastSquares<const N: usize> {
     /// d r_i / d params.
     fn jacobian_row(&self, params: &[f64; N], i: usize) -> [f64; N];
 
+    /// Fused residual + Jacobian row. The solver's accumulation sweep
+    /// calls only this; the default just delegates, so overriding it to
+    /// share work (e.g. one exp/Lorentzian evaluation feeding both value
+    /// and gradient) speeds the whole fit up without touching the solver.
+    fn residual_jacobian(&self, params: &[f64; N], i: usize) -> (f64, [f64; N]) {
+        (self.residual(params, i), self.jacobian_row(params, i))
+    }
+
     /// Clamp parameters into their feasible region after each step.
     fn project(&self, _params: &mut [f64; N]) {}
 }
@@ -31,6 +45,10 @@ pub struct LmOptions {
     pub lambda_down: f64,
     /// stop when the relative cost improvement falls below this
     pub ftol: f64,
+    /// a stalled step search only counts as converged when the gradient
+    /// inf-norm is below `gtol * max(1, cost)` (i.e. we are actually at a
+    /// stationary point, not merely unable to find a descent step)
+    pub gtol: f64,
 }
 
 impl Default for LmOptions {
@@ -41,8 +59,23 @@ impl Default for LmOptions {
             lambda_up: 10.0,
             lambda_down: 0.3,
             ftol: 1e-10,
+            gtol: 1e-8,
         }
     }
+}
+
+/// How the solve ended.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LmOutcome {
+    /// ftol satisfied, or the step search stalled at a stationary point.
+    Converged,
+    /// The step search could not find a descent direction even after
+    /// escalating lambda, and the gradient is *not* small: the iterate is
+    /// stuck, not at a minimum. (The seed conflated this with
+    /// convergence.)
+    Stalled,
+    /// Iteration budget exhausted while still improving.
+    MaxIters,
 }
 
 /// Fit outcome.
@@ -51,7 +84,13 @@ pub struct LmResult<const N: usize> {
     pub params: [f64; N],
     pub cost: f64,
     pub iterations: u32,
-    pub converged: bool,
+    pub outcome: LmOutcome,
+}
+
+impl<const N: usize> LmResult<N> {
+    pub fn converged(&self) -> bool {
+        self.outcome == LmOutcome::Converged
+    }
 }
 
 fn cost<const N: usize>(prob: &impl LeastSquares<N>, p: &[f64; N]) -> f64 {
@@ -62,6 +101,33 @@ fn cost<const N: usize>(prob: &impl LeastSquares<N>, p: &[f64; N]) -> f64 {
         })
         .sum::<f64>()
         * 0.5
+}
+
+/// One fused sweep: cost, JtJ and Jtr from a single residual+Jacobian
+/// pass over the data.
+fn normal_equations<const N: usize>(
+    prob: &impl LeastSquares<N>,
+    p: &[f64; N],
+) -> (f64, [[f64; N]; N], [f64; N]) {
+    let mut c = 0.0f64;
+    let mut jtj = [[0.0f64; N]; N];
+    let mut jtr = [0.0f64; N];
+    for i in 0..prob.n_residuals() {
+        let (r, row) = prob.residual_jacobian(p, i);
+        c += r * r;
+        for a in 0..N {
+            jtr[a] += row[a] * r;
+            for b in a..N {
+                jtj[a][b] += row[a] * row[b];
+            }
+        }
+    }
+    for a in 0..N {
+        for b in 0..a {
+            jtj[a][b] = jtj[b][a];
+        }
+    }
+    (c * 0.5, jtj, jtr)
 }
 
 /// Solve the damped normal equations (JtJ + λ diag(JtJ)) δ = -Jt r.
@@ -78,30 +144,27 @@ pub fn solve<const N: usize>(
     }
     let mut params = init;
     prob.project(&mut params);
+    if opts.max_iters == 0 {
+        return Ok(LmResult {
+            cost: cost(prob, &params),
+            params,
+            iterations: 0,
+            outcome: LmOutcome::MaxIters,
+        });
+    }
     let mut lambda = opts.lambda_init;
-    let mut current_cost = cost(prob, &params);
-    let mut converged = false;
+    let mut current_cost = f64::INFINITY;
+    let mut outcome = LmOutcome::MaxIters;
     let mut iters = 0;
 
-    for _ in 0..opts.max_iters {
+    'outer: for _ in 0..opts.max_iters {
         iters += 1;
-        // accumulate JtJ and Jt r
-        let mut jtj = [[0.0f64; N]; N];
-        let mut jtr = [0.0f64; N];
-        for i in 0..prob.n_residuals() {
-            let r = prob.residual(&params, i);
-            let row = prob.jacobian_row(&params, i);
-            for a in 0..N {
-                jtr[a] += row[a] * r;
-                for b in a..N {
-                    jtj[a][b] += row[a] * row[b];
-                }
-            }
-        }
-        for a in 0..N {
-            for b in 0..a {
-                jtj[a][b] = jtj[b][a];
-            }
+        // single fused pass: cost + JtJ + Jtr. After an accepted step the
+        // cost term merely re-confirms the trial cost we already hold, so
+        // only the first sweep's cost is consumed.
+        let (sweep_cost, jtj, jtr) = normal_equations(prob, &params);
+        if iters == 1 {
+            current_cost = sweep_cost;
         }
 
         // try steps until one reduces the cost (or lambda explodes)
@@ -124,21 +187,27 @@ pub fn solve<const N: usize>(
             if trial_cost < current_cost {
                 let rel = (current_cost - trial_cost) / current_cost.max(1e-300);
                 params = trial;
+                // reuse the accepted trial cost — never recomputed
                 current_cost = trial_cost;
                 lambda = (lambda * opts.lambda_down).max(1e-12);
                 improved = true;
                 if rel < opts.ftol {
-                    converged = true;
+                    outcome = LmOutcome::Converged;
+                    break 'outer;
                 }
                 break;
             }
             lambda *= opts.lambda_up;
         }
         if !improved {
-            // cannot improve: local minimum (or flat) — call it converged
-            converged = true;
-        }
-        if converged {
+            // step search stalled: convergence only if we are at a
+            // stationary point; otherwise report the stall honestly
+            let gmax = jtr.iter().fold(0.0f64, |m, &g| m.max(g.abs()));
+            outcome = if gmax <= opts.gtol * current_cost.max(1.0) {
+                LmOutcome::Converged
+            } else {
+                LmOutcome::Stalled
+            };
             break;
         }
     }
@@ -147,36 +216,53 @@ pub fn solve<const N: usize>(
         params,
         cost: current_cost,
         iterations: iters,
-        converged,
+        outcome,
     })
 }
 
-/// Gaussian elimination with partial pivoting for the (small) SPD system.
+/// Cholesky solve of the (small) damped-normal-equation system. The
+/// damped matrix is SPD whenever JtJ has full numerical rank, so LLᵀ
+/// factorization is both faster than elimination with pivoting and a
+/// built-in positive-definiteness check: a non-positive pivot returns
+/// `None` and the caller escalates lambda.
 fn solve_spd<const N: usize>(a: &[[f64; N]; N], b: &[f64; N]) -> Option<[f64; N]> {
-    let mut m = *a;
-    let mut rhs = *b;
-    for col in 0..N {
-        let piv = (col..N).max_by(|&i, &j| m[i][col].abs().total_cmp(&m[j][col].abs()))?;
-        if m[piv][col].abs() < 1e-300 {
+    let mut l = [[0.0f64; N]; N];
+    for j in 0..N {
+        let mut d = a[j][j];
+        for k in 0..j {
+            d -= l[j][k] * l[j][k];
+        }
+        // `!(d > ...)` also rejects NaN
+        if !(d > 1e-300) {
             return None;
         }
-        m.swap(col, piv);
-        rhs.swap(col, piv);
-        for row in col + 1..N {
-            let f = m[row][col] / m[col][col];
-            for k in col..N {
-                m[row][k] -= f * m[col][k];
+        let ljj = d.sqrt();
+        l[j][j] = ljj;
+        for i in j + 1..N {
+            let mut s = a[i][j];
+            for k in 0..j {
+                s -= l[i][k] * l[j][k];
             }
-            rhs[row] -= f * rhs[col];
+            l[i][j] = s / ljj;
         }
     }
-    let mut x = [0.0; N];
-    for row in (0..N).rev() {
-        let mut acc = rhs[row];
-        for k in row + 1..N {
-            acc -= m[row][k] * x[k];
+    // L y = b
+    let mut y = [0.0f64; N];
+    for i in 0..N {
+        let mut s = b[i];
+        for k in 0..i {
+            s -= l[i][k] * y[k];
         }
-        x[row] = acc / m[row][row];
+        y[i] = s / l[i][i];
+    }
+    // Lᵀ x = y
+    let mut x = [0.0f64; N];
+    for i in (0..N).rev() {
+        let mut s = y[i];
+        for k in i + 1..N {
+            s -= l[k][i] * x[k];
+        }
+        x[i] = s / l[i][i];
     }
     Some(x)
 }
@@ -208,14 +294,48 @@ mod tests {
         }
     }
 
+    /// Same model, but with the fused path overridden to share the exp —
+    /// must be numerically identical to the default split evaluation.
+    struct FusedExpDecay(ExpDecay);
+
+    impl LeastSquares<2> for FusedExpDecay {
+        fn n_residuals(&self) -> usize {
+            self.0.n_residuals()
+        }
+        fn residual(&self, p: &[f64; 2], i: usize) -> f64 {
+            self.0.residual(p, i)
+        }
+        fn jacobian_row(&self, p: &[f64; 2], i: usize) -> [f64; 2] {
+            self.0.jacobian_row(p, i)
+        }
+        fn residual_jacobian(&self, p: &[f64; 2], i: usize) -> (f64, [f64; 2]) {
+            let e = (-p[1] * self.0.xs[i]).exp();
+            (p[0] * e - self.0.ys[i], [e, -p[0] * self.0.xs[i] * e])
+        }
+        fn project(&self, p: &mut [f64; 2]) {
+            self.0.project(p)
+        }
+    }
+
+    fn decay_problem(n: usize, dt: f64, noise: Option<u64>) -> ExpDecay {
+        let truth = [5.0, 0.7];
+        let xs: Vec<f64> = (0..n).map(|i| i as f64 * dt).collect();
+        let mut rng = noise.map(crate::util::Rng::new);
+        let ys: Vec<f64> = xs
+            .iter()
+            .map(|&x| {
+                truth[0] * (-truth[1] * x).exp()
+                    + rng.as_mut().map(|r| 0.02 * r.normal()).unwrap_or(0.0)
+            })
+            .collect();
+        ExpDecay { xs, ys }
+    }
+
     #[test]
     fn recovers_exponential_decay() {
-        let truth = [5.0, 0.7];
-        let xs: Vec<f64> = (0..50).map(|i| i as f64 * 0.1).collect();
-        let ys: Vec<f64> = xs.iter().map(|&x| truth[0] * (-truth[1] * x).exp()).collect();
-        let prob = ExpDecay { xs, ys };
+        let prob = decay_problem(50, 0.1, None);
         let fit = solve(&prob, [1.0, 0.1], LmOptions::default()).unwrap();
-        assert!(fit.converged);
+        assert!(fit.converged(), "{:?}", fit.outcome);
         assert!((fit.params[0] - 5.0).abs() < 1e-6, "{:?}", fit.params);
         assert!((fit.params[1] - 0.7).abs() < 1e-6, "{:?}", fit.params);
         assert!(fit.cost < 1e-12);
@@ -223,17 +343,22 @@ mod tests {
 
     #[test]
     fn noisy_fit_stays_close() {
-        let truth = [5.0, 0.7];
-        let mut rng = crate::util::Rng::new(9);
-        let xs: Vec<f64> = (0..200).map(|i| i as f64 * 0.05).collect();
-        let ys: Vec<f64> = xs
-            .iter()
-            .map(|&x| truth[0] * (-truth[1] * x).exp() + 0.02 * rng.normal())
-            .collect();
-        let prob = ExpDecay { xs, ys };
+        let prob = decay_problem(200, 0.05, Some(9));
         let fit = solve(&prob, [2.0, 0.2], LmOptions::default()).unwrap();
         assert!((fit.params[0] - 5.0).abs() < 0.05, "{:?}", fit.params);
         assert!((fit.params[1] - 0.7).abs() < 0.02, "{:?}", fit.params);
+    }
+
+    #[test]
+    fn fused_override_matches_default_path_exactly() {
+        let split = decay_problem(200, 0.05, Some(9));
+        let fused = FusedExpDecay(decay_problem(200, 0.05, Some(9)));
+        let a = solve(&split, [2.0, 0.2], LmOptions::default()).unwrap();
+        let b = solve(&fused, [2.0, 0.2], LmOptions::default()).unwrap();
+        assert_eq!(a.params, b.params);
+        assert_eq!(a.cost, b.cost);
+        assert_eq!(a.iterations, b.iterations);
+        assert_eq!(a.outcome, b.outcome);
     }
 
     #[test]
@@ -248,10 +373,63 @@ mod tests {
     #[test]
     fn projection_respected() {
         // start outside the feasible box; solution must stay inside
-        let xs: Vec<f64> = (0..20).map(|i| i as f64 * 0.1).collect();
-        let ys: Vec<f64> = xs.iter().map(|&x| 5.0 * (-0.7f64 * x).exp()).collect();
-        let prob = ExpDecay { xs, ys };
+        let prob = decay_problem(20, 0.1, None);
         let fit = solve(&prob, [-3.0, -5.0], LmOptions::default()).unwrap();
         assert!(fit.params[0] > 0.0 && fit.params[1] > 0.0);
+    }
+
+    /// Cost is flat in the parameters but the (deliberately inconsistent)
+    /// Jacobian promises descent: every trial step leaves the cost
+    /// unchanged, so the step search stalls with a large gradient. The
+    /// seed reported this as `converged = true`; it must be `Stalled`.
+    struct FlatCostLyingJacobian;
+
+    impl LeastSquares<1> for FlatCostLyingJacobian {
+        fn n_residuals(&self) -> usize {
+            8
+        }
+        fn residual(&self, _p: &[f64; 1], _i: usize) -> f64 {
+            1.0
+        }
+        fn jacobian_row(&self, _p: &[f64; 1], _i: usize) -> [f64; 1] {
+            [1.0]
+        }
+    }
+
+    #[test]
+    fn stalled_step_search_is_not_convergence() {
+        let fit = solve(&FlatCostLyingJacobian, [0.0], LmOptions::default()).unwrap();
+        assert_eq!(fit.outcome, LmOutcome::Stalled);
+        assert!(!fit.converged());
+        assert_eq!(fit.iterations, 1);
+        assert!((fit.cost - 4.0).abs() < 1e-12, "{}", fit.cost); // 0.5 * 8 * 1^2
+    }
+
+    #[test]
+    fn stall_at_stationary_point_is_convergence() {
+        // start exactly at the global minimum of a perfect-data problem:
+        // no step can strictly improve, but the gradient is ~0, so the
+        // stall is genuine convergence
+        let prob = decay_problem(50, 0.1, None);
+        let fit = solve(&prob, [5.0, 0.7], LmOptions::default()).unwrap();
+        assert_eq!(fit.outcome, LmOutcome::Converged);
+        assert!(fit.cost < 1e-20);
+    }
+
+    #[test]
+    fn cholesky_matches_known_solution() {
+        // A = [[4,2],[2,3]], b = [10, 9] -> x = [1.5, 2]
+        let a = [[4.0, 2.0], [2.0, 3.0]];
+        let b = [10.0, 9.0];
+        let x = solve_spd::<2>(&a, &b).unwrap();
+        assert!((x[0] - 1.5).abs() < 1e-12, "{x:?}");
+        assert!((x[1] - 2.0).abs() < 1e-12, "{x:?}");
+    }
+
+    #[test]
+    fn cholesky_rejects_indefinite() {
+        // negative-definite and rank-deficient matrices must both fail
+        assert!(solve_spd::<2>(&[[-1.0, 0.0], [0.0, 1.0]], &[1.0, 1.0]).is_none());
+        assert!(solve_spd::<2>(&[[1.0, 1.0], [1.0, 1.0]], &[1.0, 1.0]).is_none());
     }
 }

@@ -29,9 +29,19 @@ pub fn value(p: &[f64; N_PARAMS], x: f64, y: f64) -> f64 {
 
 /// Analytic partial derivatives at pixel (x, y), in parameter order.
 pub fn jacobian(p: &[f64; N_PARAMS], x: f64, y: f64) -> [f64; N_PARAMS] {
+    value_jacobian(p, x, y).1
+}
+
+/// Fused value + Jacobian at pixel (x, y): the exp, the Lorentzian and
+/// the shared shape factors are evaluated once and feed both outputs.
+/// This is the `LeastSquares::residual_jacobian` specialization the LM
+/// accumulation sweep runs on — the single most executed scalar kernel
+/// in the conventional analyzer.
+pub fn value_jacobian(p: &[f64; N_PARAMS], x: f64, y: f64) -> (f64, [f64; N_PARAMS]) {
     let (amp, x0, y0, sx, sy, eta) = (p[P_AMP], p[P_X0], p[P_Y0], p[P_SX], p[P_SY], p[P_ETA]);
     let dx = x - x0;
     let dy = y - y0;
+    // same operation order as `value` so surfaces stay bit-identical
     let gx = dx * dx / (sx * sx);
     let gy = dy * dy / (sy * sy);
     let g = (-0.5 * (gx + gy)).exp();
@@ -48,7 +58,7 @@ pub fn jacobian(p: &[f64; N_PARAMS], x: f64, y: f64) -> [f64; N_PARAMS] {
     out[P_SY] = amp * df_dg * 2.0 * dy * dy / (sy * sy * sy);
     out[P_ETA] = amp * (l - g);
     out[P_BG] = 1.0;
-    out
+    (amp * shape + p[P_BG], out)
 }
 
 #[cfg(test)]
@@ -93,6 +103,16 @@ mod tests {
                     jac[i]
                 );
             }
+        }
+    }
+
+    #[test]
+    fn fused_value_jacobian_is_bit_identical_to_split() {
+        let p = sample_params();
+        for (x, y) in [(4.0, 6.0), (0.0, 0.0), (10.0, 3.0), (4.3, 6.1), (7.7, 0.2)] {
+            let (v, j) = value_jacobian(&p, x, y);
+            assert_eq!(v, value(&p, x, y), "value at ({x},{y})");
+            assert_eq!(j, jacobian(&p, x, y), "jacobian at ({x},{y})");
         }
     }
 

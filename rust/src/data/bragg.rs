@@ -16,10 +16,16 @@ use anyhow::{bail, Result};
 use super::container::Dataset;
 use crate::analysis::pseudo_voigt::{value, N_PARAMS};
 use crate::models::PvMeta;
+use crate::pool::Pool;
 use crate::runtime::{Runtime, Tensor};
 use crate::util::Rng;
 
 pub const PATCH: usize = 11;
+
+/// Patches per render+noise chunk, each with its own RNG stream. Fixed —
+/// never derived from the thread count — so a dataset is a pure function
+/// of (config, n, seed) no matter how many workers render it.
+pub const GEN_CHUNK: usize = 256;
 
 /// Peak parameter sampling ranges (kept well inside the patch so the
 /// conventional fitter and BraggNN both have a fair task).
@@ -138,16 +144,49 @@ pub fn labels(params: &[[f64; N_PARAMS]]) -> Vec<f32> {
         .collect()
 }
 
-/// Generate a full dataset (CPU render path).
-pub fn generate(cfg: &BraggConfig, n: usize, seed: u64) -> Result<Dataset> {
+/// Per-chunk noise seeds, drawn serially from the root stream so they
+/// depend only on (seed, n) — the parallel render replays them in chunk
+/// order on any number of workers.
+fn chunk_seeds(rng: &mut Rng, n_chunks: usize) -> Vec<u64> {
+    (0..n_chunks).map(|_| rng.next_u64()).collect()
+}
+
+/// Render + noise + normalize one chunk with its own RNG stream.
+fn finish_chunk(cfg: &BraggConfig, params: &[[f64; N_PARAMS]], seed: u64) -> Vec<f32> {
+    let mut x = render_cpu(params);
     let mut rng = Rng::new(seed);
-    let params = sample_params(cfg, n, &mut rng);
-    let mut x = render_cpu(&params);
     if cfg.poisson_noise {
         add_poisson_noise(&mut x, &mut rng);
     }
     if cfg.normalize {
         normalize_patches(&mut x);
+    }
+    x
+}
+
+/// Generate a full dataset (CPU render path) on the process-wide pool.
+pub fn generate(cfg: &BraggConfig, n: usize, seed: u64) -> Result<Dataset> {
+    generate_with_pool(Pool::global(), cfg, n, seed)
+}
+
+/// Generate on an explicit pool. Output is identical for any thread
+/// count: parameters are sampled serially from the root stream, and each
+/// `GEN_CHUNK`-patch chunk renders + noises with its own substream whose
+/// seed was drawn serially up front.
+pub fn generate_with_pool(pool: &Pool, cfg: &BraggConfig, n: usize, seed: u64) -> Result<Dataset> {
+    let mut rng = Rng::new(seed);
+    let params = sample_params(cfg, n, &mut rng);
+    let n_chunks = n.div_ceil(GEN_CHUNK);
+    let seeds = chunk_seeds(&mut rng, n_chunks);
+    let params_ref = &params;
+    let chunks: Vec<Vec<f32>> = pool.map_tasks(n_chunks, |ci| {
+        let lo = ci * GEN_CHUNK;
+        let hi = ((ci + 1) * GEN_CHUNK).min(n);
+        finish_chunk(cfg, &params_ref[lo..hi], seeds[ci])
+    });
+    let mut x = Vec::with_capacity(n * PATCH * PATCH);
+    for c in chunks {
+        x.extend_from_slice(&c);
     }
     let y = labels(&params);
     Dataset::new(
@@ -159,7 +198,9 @@ pub fn generate(cfg: &BraggConfig, n: usize, seed: u64) -> Result<Dataset> {
     )
 }
 
-/// Generate via the PJRT Pallas kernel (noise still rust-side).
+/// Generate via the PJRT Pallas kernel (noise still rust-side, with the
+/// same per-chunk streams as the CPU path so the two datasets share one
+/// noise model).
 pub fn generate_pjrt(
     rt: &Runtime,
     pv: &PvMeta,
@@ -169,12 +210,20 @@ pub fn generate_pjrt(
 ) -> Result<Dataset> {
     let mut rng = Rng::new(seed);
     let params = sample_params(cfg, n, &mut rng);
+    let n_chunks = n.div_ceil(GEN_CHUNK);
+    let seeds = chunk_seeds(&mut rng, n_chunks);
     let mut x = render_pjrt(rt, pv, &params)?;
-    if cfg.poisson_noise {
-        add_poisson_noise(&mut x, &mut rng);
-    }
-    if cfg.normalize {
-        normalize_patches(&mut x);
+    for ci in 0..n_chunks {
+        let lo = ci * GEN_CHUNK * PATCH * PATCH;
+        let hi = (((ci + 1) * GEN_CHUNK) * PATCH * PATCH).min(x.len());
+        let chunk = &mut x[lo..hi];
+        let mut crng = Rng::new(seeds[ci]);
+        if cfg.poisson_noise {
+            add_poisson_noise(chunk, &mut crng);
+        }
+        if cfg.normalize {
+            normalize_patches(chunk);
+        }
     }
     let y = labels(&params);
     Dataset::new(
@@ -208,6 +257,19 @@ mod tests {
         assert_eq!(a.x, b.x);
         let c = generate(&BraggConfig::default(), 8, 43).unwrap();
         assert_ne!(a.x, c.x);
+    }
+
+    #[test]
+    fn reproducible_across_thread_counts() {
+        // 600 patches spans three GEN_CHUNK streams; every pool size must
+        // produce the identical dataset for one root seed
+        let cfg = BraggConfig::default();
+        let a = generate_with_pool(&Pool::new(1), &cfg, 600, 42).unwrap();
+        for threads in [2, 4, 7] {
+            let b = generate_with_pool(&Pool::new(threads), &cfg, 600, 42).unwrap();
+            assert_eq!(a.x, b.x, "{threads} threads changed the patches");
+            assert_eq!(a.y, b.y, "{threads} threads changed the labels");
+        }
     }
 
     #[test]

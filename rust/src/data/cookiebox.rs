@@ -14,10 +14,15 @@
 use anyhow::Result;
 
 use super::container::Dataset;
+use crate::pool::Pool;
 use crate::util::Rng;
 
 pub const CHANNELS: usize = 16;
 pub const BINS: usize = 128;
+
+/// Shots per generation chunk, each with its own RNG stream (fixed, so
+/// datasets are thread-count independent — same scheme as `bragg`).
+pub const GEN_CHUNK: usize = 64;
 
 #[derive(Debug, Clone)]
 pub struct CookieConfig {
@@ -101,16 +106,37 @@ fn sample_histogram(pdf: &[f32], electrons: f64, rng: &mut Rng) -> Vec<f32> {
 }
 
 /// Generate a CookieNetAE dataset: x = sparse histograms, y = true pdfs,
-/// both [n, 16, 128, 1].
+/// both [n, 16, 128, 1]. Runs on the process-wide pool.
 pub fn generate(cfg: &CookieConfig, n: usize, seed: u64) -> Result<Dataset> {
+    generate_with_pool(Pool::global(), cfg, n, seed)
+}
+
+/// Generate on an explicit pool: chunk seeds are drawn serially from the
+/// root stream, then each `GEN_CHUNK`-shot chunk simulates with its own
+/// substream — identical output for any worker count.
+pub fn generate_with_pool(pool: &Pool, cfg: &CookieConfig, n: usize, seed: u64) -> Result<Dataset> {
     let mut rng = Rng::new(seed);
+    let n_chunks = n.div_ceil(GEN_CHUNK);
+    let seeds: Vec<u64> = (0..n_chunks).map(|_| rng.next_u64()).collect();
+    let chunks: Vec<(Vec<f32>, Vec<f32>)> = pool.map_tasks(n_chunks, |ci| {
+        let lo = ci * GEN_CHUNK;
+        let hi = ((ci + 1) * GEN_CHUNK).min(n);
+        let mut crng = Rng::new(seeds[ci]);
+        let mut cx = Vec::with_capacity((hi - lo) * CHANNELS * BINS);
+        let mut cy = Vec::with_capacity((hi - lo) * CHANNELS * BINS);
+        for _ in lo..hi {
+            let pdf = shot_pdf(cfg, &mut crng);
+            let hist = sample_histogram(&pdf, cfg.electrons_per_channel, &mut crng);
+            cx.extend_from_slice(&hist);
+            cy.extend_from_slice(&pdf);
+        }
+        (cx, cy)
+    });
     let mut x = Vec::with_capacity(n * CHANNELS * BINS);
     let mut y = Vec::with_capacity(n * CHANNELS * BINS);
-    for _ in 0..n {
-        let pdf = shot_pdf(cfg, &mut rng);
-        let hist = sample_histogram(&pdf, cfg.electrons_per_channel, &mut rng);
-        x.extend_from_slice(&hist);
-        y.extend_from_slice(&pdf);
+    for (cx, cy) in chunks {
+        x.extend_from_slice(&cx);
+        y.extend_from_slice(&cy);
     }
     Dataset::new(
         format!("cookiebox-{n}"),
@@ -188,5 +214,17 @@ mod tests {
         let a = generate(&CookieConfig::default(), 2, 11).unwrap();
         let b = generate(&CookieConfig::default(), 2, 11).unwrap();
         assert_eq!(a.x, b.x);
+    }
+
+    #[test]
+    fn reproducible_across_thread_counts() {
+        // 130 shots spans three GEN_CHUNK streams
+        let cfg = CookieConfig::default();
+        let a = generate_with_pool(&Pool::new(1), &cfg, 130, 17).unwrap();
+        for threads in [2, 5] {
+            let b = generate_with_pool(&Pool::new(threads), &cfg, 130, 17).unwrap();
+            assert_eq!(a.x, b.x, "{threads} threads changed the histograms");
+            assert_eq!(a.y, b.y, "{threads} threads changed the pdfs");
+        }
     }
 }

@@ -173,6 +173,15 @@ impl<C> FaasService<C> {
     pub fn records(&self) -> &[TaskRecord] {
         &self.tasks
     }
+
+    /// Fan independent *real* CPU work out on the process-wide
+    /// work-stealing pool (results in task order). Function bodies that
+    /// do heavy compute — batch fitting, rendering — call this so one
+    /// knob (`XLOOP_THREADS`) governs parallelism across the whole
+    /// fabric; virtual-time accounting stays with the caller.
+    pub fn scope<'env, R: Send>(&self, tasks: Vec<crate::pool::ScopeTask<'env, R>>) -> Vec<R> {
+        crate::pool::scope(tasks)
+    }
 }
 
 #[cfg(test)]
@@ -265,6 +274,16 @@ mod tests {
         assert!(svc
             .submit(&mut ctx, &mut clock, "alcf#gpu", &bad, &Json::Null)
             .is_err());
+    }
+
+    #[test]
+    fn scope_fans_real_compute_out_in_order() {
+        let (svc, _) = setup();
+        let tasks: Vec<crate::pool::ScopeTask<u64>> = (0..16)
+            .map(|i| Box::new(move || (i as u64 + 1) * 10) as crate::pool::ScopeTask<u64>)
+            .collect();
+        let out = svc.scope(tasks);
+        assert_eq!(out, (1..=16).map(|i| i * 10).collect::<Vec<u64>>());
     }
 
     #[test]

@@ -158,6 +158,16 @@ impl<C> FlowEngine<C> {
         self.providers.keys().copied().collect()
     }
 
+    /// Fan independent *real* CPU work out on the process-wide
+    /// work-stealing pool, returning results in task order. Virtual-time
+    /// accounting stays with the caller — this is the entry point action
+    /// providers (labeling, rendering, future engine stages) use for the
+    /// compute that actually burns cycles; `XLOOP_THREADS=1` forces the
+    /// deterministic serial mode.
+    pub fn scope<'env, R: Send>(&self, tasks: Vec<crate::pool::ScopeTask<'env, R>>) -> Vec<R> {
+        crate::pool::scope(tasks)
+    }
+
     /// Execute a flow to completion (callers persist the report).
     pub fn run(
         &mut self,
@@ -530,6 +540,18 @@ mod tests {
         let mut ctx = Ctx::default();
         let mut clock = VClock::new();
         assert!(e.run(&def, &Json::Null, &token, &mut ctx, &mut clock).is_err());
+    }
+
+    #[test]
+    fn scope_fans_real_compute_out_in_order() {
+        let (e, _) = engine();
+        let weights = vec![3.0f64, 1.0, 4.0, 1.0, 5.0];
+        let w = weights.as_slice();
+        let tasks: Vec<crate::pool::ScopeTask<f64>> = (0..w.len())
+            .map(|i| Box::new(move || w[i] * w[i]) as crate::pool::ScopeTask<f64>)
+            .collect();
+        let out = e.scope(tasks);
+        assert_eq!(out, vec![9.0, 1.0, 16.0, 1.0, 25.0]);
     }
 
     #[test]

@@ -25,6 +25,7 @@ pub mod config;
 pub mod faas;
 pub mod flows;
 pub mod models;
+pub mod pool;
 pub mod simnet;
 pub mod training;
 pub mod transfer;

@@ -1,0 +1,315 @@
+//! Chunked work-stealing thread pool for the crate's CPU hot paths.
+//!
+//! Dependency-free: std scoped threads + atomics, no channels. The three
+//! hot paths — pseudo-Voigt batch fitting (`analysis::fitter`), dataset
+//! generation (`data::bragg` / `data::cookiebox`), and real compute
+//! fanned out from the flows/faas layer — all schedule through here, so
+//! one knob (`XLOOP_THREADS`) governs the whole process.
+//!
+//! Scheduling model: the task index space `0..n` is split into one
+//! contiguous range per worker, each with an atomic claim cursor. A
+//! worker drains its own range with `fetch_add`, then *steals* from the
+//! other ranges' cursors round-robin until every range is exhausted —
+//! classic chunked self-scheduling with stealing, which keeps skewed
+//! workloads (some peaks take 3x the LM iterations of others) balanced
+//! without a global lock on the fast path.
+//!
+//! Determinism: task granularity is fixed by the *caller* (chunk
+//! constants in the fitter / generators), never by the thread count, and
+//! results are always returned in task order. With `XLOOP_THREADS=1`
+//! (or `Pool::new(1)`) everything runs inline on the caller thread — the
+//! deterministic single-thread mode tests pin down.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Mutex, OnceLock};
+
+/// A heterogeneous task for [`Pool::scope`] / [`scope`].
+pub type ScopeTask<'env, R> = Box<dyn FnOnce() -> R + Send + 'env>;
+
+/// Worker-count handle. Threads are scoped per call, so each `run_tasks`
+/// pays (workers - 1) spawns plus a join — tens of microseconds per
+/// thread. That is noise against the millisecond-scale batches the hot
+/// paths submit, but callers with sub-millisecond work should batch it
+/// up rather than fan out per item.
+#[derive(Debug, Clone)]
+pub struct Pool {
+    threads: usize,
+}
+
+/// One worker's contiguous slice of the task index space.
+struct Range {
+    next: AtomicUsize,
+    end: usize,
+}
+
+impl Pool {
+    /// A pool with exactly `threads` workers (clamped to >= 1).
+    pub fn new(threads: usize) -> Pool {
+        Pool {
+            threads: threads.max(1),
+        }
+    }
+
+    /// Sized from `XLOOP_THREADS` if set, else `available_parallelism`.
+    pub fn from_env() -> Pool {
+        Pool::new(default_threads())
+    }
+
+    /// The process-wide pool (first use wins; `XLOOP_THREADS` is read
+    /// once).
+    pub fn global() -> &'static Pool {
+        static GLOBAL: OnceLock<Pool> = OnceLock::new();
+        GLOBAL.get_or_init(Pool::from_env)
+    }
+
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// True when work runs inline on the caller thread (deterministic
+    /// single-thread mode).
+    pub fn is_serial(&self) -> bool {
+        self.threads == 1
+    }
+
+    /// Run `work(i)` for every `i in 0..n`, work-stealing across the
+    /// pool's workers. The caller thread participates, so `threads == 1`
+    /// degenerates to a plain loop with no thread spawned at all.
+    pub fn run_tasks<F: Fn(usize) + Sync>(&self, n: usize, work: F) {
+        if n == 0 {
+            return;
+        }
+        let workers = self.threads.min(n);
+        if workers <= 1 {
+            for i in 0..n {
+                work(i);
+            }
+            return;
+        }
+        let ranges = split_ranges(n, workers);
+        let ranges = &ranges;
+        let work = &work;
+        std::thread::scope(|s| {
+            for w in 1..workers {
+                s.spawn(move || drain(w, ranges, work));
+            }
+            drain(0, ranges, work);
+        });
+    }
+
+    /// Map `0..n` through `f` in parallel; results come back **in task
+    /// order** regardless of which worker ran what.
+    pub fn map_tasks<U: Send, F: Fn(usize) -> U + Sync>(&self, n: usize, f: F) -> Vec<U> {
+        let slots: Vec<Mutex<Option<U>>> = (0..n).map(|_| Mutex::new(None)).collect();
+        self.run_tasks(n, |i| {
+            *slots[i].lock().unwrap() = Some(f(i));
+        });
+        slots
+            .into_iter()
+            .map(|m| {
+                m.into_inner()
+                    .unwrap()
+                    .expect("pool task produced no value")
+            })
+            .collect()
+    }
+
+    /// Run a set of heterogeneous one-shot tasks to completion, returning
+    /// their results in input order. The entry point engine stages fan
+    /// out through (`flows`/`faas` re-expose it).
+    pub fn scope<'env, R: Send>(&self, tasks: Vec<ScopeTask<'env, R>>) -> Vec<R> {
+        let pending: Vec<Mutex<Option<ScopeTask<'env, R>>>> =
+            tasks.into_iter().map(|t| Mutex::new(Some(t))).collect();
+        let slots: Vec<Mutex<Option<R>>> = (0..pending.len()).map(|_| Mutex::new(None)).collect();
+        self.run_tasks(pending.len(), |i| {
+            let task = pending[i]
+                .lock()
+                .unwrap()
+                .take()
+                .expect("scope task claimed twice");
+            *slots[i].lock().unwrap() = Some(task());
+        });
+        slots
+            .into_iter()
+            .map(|m| {
+                m.into_inner()
+                    .unwrap()
+                    .expect("scope task produced no value")
+            })
+            .collect()
+    }
+}
+
+/// Fan heterogeneous tasks out on the global pool (results in input
+/// order).
+pub fn scope<'env, R: Send>(tasks: Vec<ScopeTask<'env, R>>) -> Vec<R> {
+    Pool::global().scope(tasks)
+}
+
+/// The global pool (convenience alias for `Pool::global()`).
+pub fn global() -> &'static Pool {
+    Pool::global()
+}
+
+/// Worker count from the environment: `XLOOP_THREADS` wins, else the
+/// machine's available parallelism, else 1.
+pub fn default_threads() -> usize {
+    parse_threads(std::env::var("XLOOP_THREADS").ok().as_deref()).unwrap_or_else(|| {
+        std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1)
+    })
+}
+
+fn parse_threads(raw: Option<&str>) -> Option<usize> {
+    raw?.trim().parse::<usize>().ok().filter(|&n| n >= 1)
+}
+
+fn split_ranges(n: usize, workers: usize) -> Vec<Range> {
+    let base = n / workers;
+    let rem = n % workers;
+    let mut start = 0;
+    (0..workers)
+        .map(|w| {
+            let len = base + usize::from(w < rem);
+            let r = Range {
+                next: AtomicUsize::new(start),
+                end: start + len,
+            };
+            start += len;
+            r
+        })
+        .collect()
+}
+
+/// Worker loop: drain own range, then steal from the others until no
+/// range has work left. `fetch_add` hands out each index exactly once;
+/// overshooting a drained range is harmless (cursors only grow).
+fn drain<F: Fn(usize) + Sync>(me: usize, ranges: &[Range], work: &F) {
+    loop {
+        let i = ranges[me].next.fetch_add(1, Ordering::Relaxed);
+        if i >= ranges[me].end {
+            break;
+        }
+        work(i);
+    }
+    let workers = ranges.len();
+    loop {
+        let mut stole = false;
+        for off in 1..workers {
+            let victim = &ranges[(me + off) % workers];
+            if victim.next.load(Ordering::Relaxed) >= victim.end {
+                continue;
+            }
+            let i = victim.next.fetch_add(1, Ordering::Relaxed);
+            if i < victim.end {
+                work(i);
+                stole = true;
+            }
+        }
+        if !stole {
+            break;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn every_task_runs_exactly_once() {
+        for threads in [1, 2, 4, 7] {
+            for n in [0, 1, 5, 64, 257] {
+                let counts: Vec<AtomicUsize> = (0..n).map(|_| AtomicUsize::new(0)).collect();
+                Pool::new(threads).run_tasks(n, |i| {
+                    counts[i].fetch_add(1, Ordering::Relaxed);
+                });
+                for (i, c) in counts.iter().enumerate() {
+                    assert_eq!(c.load(Ordering::Relaxed), 1, "threads={threads} task {i}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn map_tasks_preserves_order() {
+        let out = Pool::new(4).map_tasks(100, |i| i * i);
+        assert_eq!(out, (0..100).map(|i| i * i).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn skewed_workload_is_stolen() {
+        // all the heavy work lands in worker 0's initial range; with
+        // stealing the others must pick some of it up
+        let pool = Pool::new(4);
+        let done = AtomicU64::new(0);
+        pool.run_tasks(64, |i| {
+            // tasks 0..16 are ~100x the others
+            let spins: u64 = if i < 16 { 20_000 } else { 200 };
+            let mut acc = 0u64;
+            for k in 0..spins {
+                acc = acc.wrapping_mul(6364136223846793005).wrapping_add(k);
+            }
+            done.fetch_add(std::hint::black_box(acc) | 1, Ordering::Relaxed);
+        });
+        assert_ne!(done.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn single_thread_mode_runs_inline() {
+        let caller = std::thread::current().id();
+        let ids = Pool::new(1).map_tasks(8, |_| std::thread::current().id());
+        assert!(ids.iter().all(|&id| id == caller));
+    }
+
+    #[test]
+    fn scope_runs_heterogeneous_tasks_in_order() {
+        let base = 10usize;
+        let tasks: Vec<ScopeTask<usize>> = (0..20)
+            .map(|i| Box::new(move || base + i * i) as ScopeTask<usize>)
+            .collect();
+        let out = Pool::new(3).scope(tasks);
+        assert_eq!(out, (0..20).map(|i| 10 + i * i).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn scope_can_borrow_the_environment() {
+        let data = vec![1.0f64, 2.0, 3.0];
+        let slice = data.as_slice();
+        let out = Pool::new(2).scope(vec![
+            Box::new(move || slice.iter().sum::<f64>()) as ScopeTask<f64>,
+            Box::new(move || slice.iter().product::<f64>()) as ScopeTask<f64>,
+        ]);
+        assert_eq!(out, vec![6.0, 6.0]);
+    }
+
+    #[test]
+    fn thread_override_parsing() {
+        assert_eq!(parse_threads(None), None);
+        assert_eq!(parse_threads(Some("")), None);
+        assert_eq!(parse_threads(Some("0")), None);
+        assert_eq!(parse_threads(Some("1")), Some(1));
+        assert_eq!(parse_threads(Some(" 8 ")), Some(8));
+        assert_eq!(parse_threads(Some("lots")), None);
+    }
+
+    #[test]
+    fn ranges_cover_the_index_space() {
+        for n in [1usize, 2, 7, 64, 101] {
+            for w in 1..=n.min(9) {
+                let ranges = split_ranges(n, w);
+                let mut covered = 0;
+                let mut expect_start = 0;
+                for r in &ranges {
+                    assert_eq!(r.next.load(Ordering::Relaxed), expect_start);
+                    covered += r.end - r.next.load(Ordering::Relaxed);
+                    expect_start = r.end;
+                }
+                assert_eq!(covered, n, "n={n} w={w}");
+                assert_eq!(ranges.last().unwrap().end, n);
+            }
+        }
+    }
+}

@@ -310,6 +310,73 @@ mod tests {
     }
 
     #[test]
+    fn zero_byte_flow_among_active_flows() {
+        // a zero-byte flow arriving mid-transfer completes instantly at
+        // its arrival and must not perturb the bulk flow sharing its route
+        let t = topo();
+        let route = slac_alcf_route(&t);
+        let gb = 1e9;
+        let res = simulate(
+            &t,
+            &[
+                FlowSpec {
+                    route: route.clone(),
+                    bytes: 10.0 * gb,
+                    arrival: 0.0,
+                },
+                FlowSpec {
+                    route,
+                    bytes: 0.0,
+                    arrival: 1.0,
+                },
+            ],
+        );
+        assert_eq!(res[1].finish, 1.0);
+        assert_eq!(res[1].duration(), 0.0);
+        // bulk flow keeps the full 1.25 GB/s bottleneck: 8 s exactly
+        assert!((res[0].finish - 8.0).abs() < 1e-6, "{res:?}");
+    }
+
+    #[test]
+    fn simultaneous_arrivals_split_exactly() {
+        // three flows arriving at the same nonzero instant must all be
+        // admitted together and share the bottleneck three ways exactly
+        let t = topo();
+        let route = slac_alcf_route(&t);
+        let gb = 1e9;
+        let flows: Vec<FlowSpec> = (0..3)
+            .map(|_| FlowSpec {
+                route: route.clone(),
+                bytes: 1.25 * gb,
+                arrival: 5.0,
+            })
+            .collect();
+        let res = simulate(&t, &flows);
+        // 1.25 GB each at (1.25 GB/s) / 3: duration 3 s, finish t = 8 s
+        for r in &res {
+            assert_eq!(r.start, 5.0);
+            assert!((r.finish - 8.0).abs() < 1e-9, "{res:?}");
+        }
+        // identical flows must finish at the identical instant, bit-exact
+        assert_eq!(res[0].finish, res[1].finish);
+        assert_eq!(res[1].finish, res[2].finish);
+    }
+
+    #[test]
+    fn full_route_overlap_split_is_exact() {
+        // a flow whose route shares EVERY link with another: the max-min
+        // split of the bottleneck must be exact — equal rates, bit-exact,
+        // summing to the bottleneck capacity
+        let t = topo();
+        let route = slac_alcf_route(&t);
+        let rates = max_min_rates(&t, &[&route, &route]);
+        assert_eq!(rates[0], rates[1], "{rates:?}");
+        let bottleneck = 10.0 * GBPS; // the 10 Gbps NIC
+        assert!((rates[0] + rates[1] - bottleneck).abs() < 1e-6, "{rates:?}");
+        assert!((rates[0] - 0.5 * bottleneck).abs() < 1e-6, "{rates:?}");
+    }
+
+    #[test]
     fn zero_byte_flow_finishes_at_arrival() {
         let t = topo();
         let route = slac_alcf_route(&t);

@@ -65,9 +65,10 @@ fn generate_data(world: &mut World, clock: &mut VClock, args: &Json) -> Result<J
 ///
 /// BraggNN datasets are *really* labeled: the Levenberg–Marquardt
 /// pseudo-Voigt fitter runs on up to `real_cap` patches (replacing their
-/// targets with fitted centers) and its measured per-peak cost is
-/// recorded; virtual time is charged at the paper's 1024-core cluster
-/// rate for the full set. CookieNetAE targets come from simulation, so
+/// targets with fitted centers) and its measured per-peak *CPU* cost —
+/// worker busy time, independent of the pool's thread count — is
+/// recorded as C(A); virtual time is charged at the paper's 1024-core
+/// cluster rate for the full set. CookieNetAE targets come from simulation, so
 /// labeling is a pass-through (the paper notes simulation provides the
 /// ground truth for single-particle-imaging-like cases).
 /// args: {dataset, real_cap?}
@@ -79,19 +80,24 @@ fn label_data(world: &mut World, clock: &mut VClock, args: &Json) -> Result<Json
     let is_bragg = ds.input_shape == vec![11, 11, 1];
 
     let mut real_per_peak = 0.0;
+    let mut real_per_peak_wall = 0.0;
     if is_bragg {
         let k = real_cap.min(n);
         let px = 11 * 11;
         let patches: Vec<f32> = world.dataset(name)?.x[..k * px].to_vec();
-        let (fits, per_peak) = crate::analysis::label_patches(&patches, k, 11, 11)?;
-        real_per_peak = per_peak;
+        let (fits, timing) = crate::analysis::label_patches_timed(&patches, k, 11, 11)?;
+        // C(A) is the per-*core* analyzer cost, so record the summed
+        // worker busy time per peak (thread-count independent); the
+        // delivered wallclock rides along for the latency view
+        real_per_peak = timing.per_peak_cpu_s();
+        real_per_peak_wall = timing.per_peak_wall_s();
         let ds = world.datasets.get_mut(name).unwrap();
         for (i, fit) in fits.iter().enumerate() {
             let (x, y) = fit.center();
             ds.y[2 * i] = (x / 10.0) as f32;
             ds.y[2 * i + 1] = (y / 10.0) as f32;
         }
-        world.last_label_cost_s = Some(per_peak);
+        world.last_label_cost_s = Some(real_per_peak);
     }
     clock.advance(n as f64 * CLUSTER_LABEL_S_PER_SAMPLE);
     Ok(Json::obj(vec![
@@ -99,6 +105,7 @@ fn label_data(world: &mut World, clock: &mut VClock, args: &Json) -> Result<Json
         ("n", Json::num(n as f64)),
         ("real_labeled", Json::num(if is_bragg { real_cap.min(n) } else { 0 } as f64)),
         ("real_s_per_peak", Json::num(real_per_peak)),
+        ("real_s_per_peak_wall", Json::num(real_per_peak_wall)),
     ]))
 }
 
