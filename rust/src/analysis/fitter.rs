@@ -243,6 +243,54 @@ pub fn label_patches_timed(
     label_patches_with(Pool::global(), patches, n, height, width)
 }
 
+/// Batch labeling routed through [`crate::pool::scope`] stage fan-out:
+/// the batch is cut into `FIT_CHUNK`-sized one-shot tasks on the
+/// process-wide pool — the same entry point the flows/faas layers expose
+/// (`FlowEngine::scope` / `FaasService::scope`), so callers living at
+/// that layer (e.g. `workflow::functions::label_data`) share the one
+/// `XLOOP_THREADS` knob. Chunking matches `label_patches_with`, so the
+/// fits are bit-identical to the serial path for any thread count.
+pub fn label_patches_scoped(
+    patches: &[f32],
+    n: usize,
+    height: usize,
+    width: usize,
+) -> Result<(Vec<PeakFit>, BatchTiming)> {
+    let px = height * width;
+    assert_eq!(patches.len(), n * px, "patch buffer size mismatch");
+    let started = Instant::now();
+    let n_chunks = n.div_ceil(FIT_CHUNK);
+    let tasks: Vec<crate::pool::ScopeTask<Result<(Vec<PeakFit>, f64)>>> = (0..n_chunks)
+        .map(|ci| {
+            Box::new(move || {
+                let busy = Instant::now();
+                let lo = ci * FIT_CHUNK;
+                let hi = ((ci + 1) * FIT_CHUNK).min(n);
+                let mut fits = Vec::with_capacity(hi - lo);
+                for i in lo..hi {
+                    fits.push(fit_patch(&patches[i * px..(i + 1) * px], height, width)?);
+                }
+                Ok((fits, busy.elapsed().as_secs_f64()))
+            }) as crate::pool::ScopeTask<Result<(Vec<PeakFit>, f64)>>
+        })
+        .collect();
+    let per_chunk = crate::pool::scope(tasks);
+    let mut fits = Vec::with_capacity(n);
+    let mut cpu_s = 0.0;
+    for chunk in per_chunk {
+        let (f, busy) = chunk?;
+        fits.extend(f);
+        cpu_s += busy;
+    }
+    let timing = BatchTiming {
+        n,
+        wall_s: started.elapsed().as_secs_f64(),
+        cpu_s,
+        threads: Pool::global().threads(),
+    };
+    Ok((fits, timing))
+}
+
 /// Strictly serial batch labeling — the seed baseline, kept as the
 /// reference path `cargo bench --bench micro` compares the pool against.
 pub fn label_patches_serial(
@@ -368,6 +416,35 @@ mod tests {
         assert_eq!(st.threads, 1);
         assert_eq!(pt.threads, 4);
         assert!(st.cpu_s > 0.0 && pt.cpu_s > 0.0);
+    }
+
+    /// The scope-routed entry point must produce the same fits as the
+    /// serial path, bit for bit (same FIT_CHUNK decomposition).
+    #[test]
+    fn scoped_labeling_is_bit_identical_to_serial() {
+        let mut rng = crate::util::Rng::new(33);
+        let mut all = Vec::new();
+        for _ in 0..21 {
+            let truth = [
+                rng.uniform(80.0, 300.0),
+                rng.uniform(3.0, 7.0),
+                rng.uniform(3.0, 7.0),
+                rng.uniform(0.9, 2.0),
+                rng.uniform(0.9, 2.0),
+                rng.uniform(0.1, 0.9),
+                rng.uniform(1.0, 6.0),
+            ];
+            let clean = render(&truth, 11, 11);
+            all.extend(clean.iter().map(|&v| rng.poisson(v as f64) as f32));
+        }
+        let (serial, _) = label_patches_with(&Pool::new(1), &all, 21, 11, 11).unwrap();
+        let (scoped, t) = label_patches_scoped(&all, 21, 11, 11).unwrap();
+        assert_eq!(serial.len(), scoped.len());
+        for (a, b) in serial.iter().zip(&scoped) {
+            assert_eq!(a.params, b.params);
+            assert_eq!(a.cost, b.cost);
+        }
+        assert!(t.cpu_s > 0.0 && t.wall_s > 0.0);
     }
 
     #[test]

@@ -7,7 +7,7 @@ pub mod lm;
 pub mod pseudo_voigt;
 
 pub use fitter::{
-    fit_patch, initial_guess, label_patches, label_patches_serial, label_patches_timed,
-    label_patches_with, BatchTiming, PeakFit, FIT_CHUNK,
+    fit_patch, initial_guess, label_patches, label_patches_scoped, label_patches_serial,
+    label_patches_timed, label_patches_with, BatchTiming, PeakFit, FIT_CHUNK,
 };
 pub use lm::{solve as lm_solve, LeastSquares, LmOptions, LmOutcome, LmResult};

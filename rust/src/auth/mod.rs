@@ -76,6 +76,13 @@ impl AuthService {
     /// Validate a token for a scope, charging introspection latency.
     pub fn validate(&mut self, clock: &mut VClock, token: &TokenId, scope: &str) -> Result<()> {
         clock.advance(self.introspection_s);
+        self.check(clock.now(), token, scope)
+    }
+
+    /// Validate at an explicit virtual instant without touching a clock —
+    /// the flow engine charges `introspection_s` on the action timeline
+    /// itself and checks at the post-introspection time.
+    pub fn check(&mut self, now: f64, token: &TokenId, scope: &str) -> Result<()> {
         self.validations += 1;
         if self.revoked.contains(token) {
             bail!("token {token:?} revoked");
@@ -83,7 +90,7 @@ impl AuthService {
         let Some(t) = self.tokens.get(token) else {
             bail!("unknown token {token:?}");
         };
-        if clock.now() > t.expires_vt {
+        if now > t.expires_vt {
             bail!("token {token:?} expired");
         }
         if !t.scopes.iter().any(|s| s == scope) {
@@ -148,5 +155,15 @@ mod tests {
         let mut clock = VClock::new();
         let mut auth = AuthService::new();
         assert!(auth.validate(&mut clock, &TokenId(99), "x").is_err());
+    }
+
+    #[test]
+    fn check_validates_at_explicit_instant() {
+        let clock = VClock::new();
+        let mut auth = AuthService::new();
+        let t = auth.issue(&clock, "s", &["x"], 10.0);
+        assert!(auth.check(5.0, &t.id, "x").is_ok());
+        assert!(auth.check(20.0, &t.id, "x").is_err()); // expired by then
+        assert_eq!(auth.validations, 2);
     }
 }

@@ -14,13 +14,19 @@ pub enum EndpointStatus {
 pub struct FaasEndpoint {
     pub id: String,
     pub facility: FacilityId,
-    /// seconds a task waits in the endpoint's queue before starting
+    /// fixed dispatch latency every task pays before it can start
+    /// (broker round trip + endpoint poll interval)
     pub queue_latency_s: f64,
     /// first-task worker spin-up (container/venv activation)
     pub cold_start_s: f64,
     pub status: EndpointStatus,
     /// tasks executed so far (cold start applies only to the first)
     pub tasks_run: u64,
+    /// concurrent execution slots — a Cerebras endpoint runs one training
+    /// job at a time (capacity 1, the default), a cluster endpoint can
+    /// run many. Tasks beyond capacity wait in a FIFO queue; that wait
+    /// is the multi-tenant queue time the campaign layer measures.
+    pub capacity: usize,
 }
 
 impl FaasEndpoint {
@@ -32,7 +38,14 @@ impl FaasEndpoint {
             cold_start_s: 2.0,
             status: EndpointStatus::Online,
             tasks_run: 0,
+            capacity: 1,
         }
+    }
+
+    /// Builder: set the number of concurrent execution slots.
+    pub fn with_capacity(mut self, capacity: usize) -> FaasEndpoint {
+        self.capacity = capacity.max(1);
+        self
     }
 
     /// Dispatch overhead for the next task, then mark it counted.
@@ -57,5 +70,15 @@ mod tests {
         assert_eq!(ep.next_dispatch_overhead(), 3.0);
         assert_eq!(ep.next_dispatch_overhead(), 1.0);
         assert_eq!(ep.next_dispatch_overhead(), 1.0);
+    }
+
+    #[test]
+    fn capacity_defaults_to_one_slot() {
+        let ep = FaasEndpoint::new("alcf#cerebras", FacilityId(1));
+        assert_eq!(ep.capacity, 1);
+        let ep = FaasEndpoint::new("alcf#cluster", FacilityId(1)).with_capacity(64);
+        assert_eq!(ep.capacity, 64);
+        let ep = FaasEndpoint::new("x", FacilityId(0)).with_capacity(0);
+        assert_eq!(ep.capacity, 1); // clamped
     }
 }

@@ -5,10 +5,14 @@
 //! systems into a function-serving endpoint" (paper §3). Here:
 //!
 //! * a **function** is registered once and addressed by `FuncId`;
-//! * an **endpoint** binds a facility + dispatch overheads (queue wait,
-//!   cold start) and can be taken offline for failure injection;
-//! * **submit** runs the function against the caller's context, charging
-//!   dispatch overheads to the virtual clock, and records a task whose
+//! * an **endpoint** binds a facility + dispatch overheads (dispatch
+//!   latency, cold start) + capacity slots, and can be taken offline for
+//!   failure injection;
+//! * **enqueue/advance_to** drive tasks through FIFO queues under the
+//!   discrete-event scheduler — concurrent tenants contend for capacity
+//!   slots and experience queue wait (DESIGN.md §4);
+//! * **submit** is the single-tenant convenience: it drives one task to
+//!   completion against the caller's clock, recording a task whose
 //!   status/result can be polled later (fire-and-forget semantics).
 //!
 //! The service is generic over the context type `C` so the workflow layer

@@ -1,6 +1,17 @@
-//! The funcX service: function registry, task submission, result store.
+//! The funcX service: function registry, task submission, per-endpoint
+//! capacity slots with FIFO queues, and the result store.
+//!
+//! Discrete-event execution (DESIGN.md §4): `enqueue` records a task and
+//! schedules its eligibility (dispatch latency + cold start); the task
+//! *starts* only when one of its endpoint's capacity slots is free — the
+//! gap between eligibility and start is multi-tenant queue wait, the
+//! quantity the campaign layer studies. `advance_to` drives queued tasks
+//! through start and completion up to a virtual time; the synchronous
+//! `submit` drives a single task to completion over the same machinery
+//! (the degenerate single-tenant case, bit-identical to the pre-DES
+//! behaviour).
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, VecDeque};
 
 use anyhow::{bail, Context, Result};
 
@@ -19,17 +30,30 @@ pub struct TaskId(pub u64);
 /// Task lifecycle.
 #[derive(Debug, Clone, PartialEq)]
 pub enum TaskStatus {
+    /// waiting for dispatch latency and/or a free capacity slot
+    Queued,
+    /// body executing (observable only mid-`advance_to`)
+    Running,
     Success(Json),
     Failed(String),
 }
 
-/// Accounting record for one executed task.
+impl TaskStatus {
+    pub fn is_complete(&self) -> bool {
+        matches!(self, TaskStatus::Success(_) | TaskStatus::Failed(_))
+    }
+}
+
+/// Accounting record for one task.
 #[derive(Debug, Clone)]
 pub struct TaskRecord {
     pub id: TaskId,
     pub func: FuncId,
     pub endpoint: String,
     pub submitted_vt: f64,
+    /// when dispatch latency (+cold start) ended and the task could have
+    /// started had a slot been free
+    pub eligible_vt: f64,
     pub started_vt: f64,
     pub finished_vt: f64,
     pub status: TaskStatus,
@@ -41,9 +65,15 @@ impl TaskRecord {
         self.finished_vt - self.started_vt
     }
 
-    /// Dispatch overhead (queue wait + cold start).
+    /// Dispatch overhead (fixed latency + cold start + slot queue wait).
     pub fn overhead_secs(&self) -> f64 {
         self.started_vt - self.submitted_vt
+    }
+
+    /// Pure multi-tenant queue wait: time spent eligible but waiting for
+    /// a capacity slot. Zero whenever the endpoint is uncontended.
+    pub fn queue_wait_secs(&self) -> f64 {
+        (self.started_vt - self.eligible_vt).max(0.0)
     }
 }
 
@@ -54,6 +84,23 @@ pub struct FaasService<C> {
     funcs: BTreeMap<FuncId, FuncBody<C>>,
     endpoints: BTreeMap<String, FaasEndpoint>,
     tasks: Vec<TaskRecord>,
+    /// FIFO queue of not-yet-started tasks per endpoint
+    queues: BTreeMap<String, VecDeque<TaskId>>,
+    /// per-endpoint slot free-at times (len == endpoint capacity)
+    slots: BTreeMap<String, Vec<f64>>,
+    /// started tasks whose completion has not been reported yet
+    running: BTreeMap<String, Vec<(TaskId, f64)>>,
+    /// per-endpoint start time of the most recently started task: the
+    /// queue is strictly FIFO, so no task starts before the one ahead of
+    /// it did (keeps start events monotone even though the first task
+    /// pays the cold start and is eligible *later* than the second)
+    last_start: BTreeMap<String, f64>,
+    /// queued args awaiting start
+    args: BTreeMap<u64, Json>,
+    /// completions a sync `submit` drained on other tasks' behalf —
+    /// re-delivered by the next `advance_to` so fabric drivers never
+    /// miss one when the sync and queued APIs are mixed
+    unclaimed: Vec<(f64, TaskId)>,
 }
 
 impl<C> Default for FaasService<C> {
@@ -62,6 +109,12 @@ impl<C> Default for FaasService<C> {
             funcs: BTreeMap::new(),
             endpoints: BTreeMap::new(),
             tasks: Vec::new(),
+            queues: BTreeMap::new(),
+            slots: BTreeMap::new(),
+            running: BTreeMap::new(),
+            last_start: BTreeMap::new(),
+            args: BTreeMap::new(),
+            unclaimed: Vec::new(),
         }
     }
 }
@@ -91,6 +144,10 @@ impl<C> FaasService<C> {
         if self.endpoints.contains_key(&ep.id) {
             bail!("faas endpoint `{}` already registered", ep.id);
         }
+        self.queues.insert(ep.id.clone(), VecDeque::new());
+        self.slots.insert(ep.id.clone(), vec![0.0; ep.capacity]);
+        self.running.insert(ep.id.clone(), Vec::new());
+        self.last_start.insert(ep.id.clone(), 0.0);
         self.endpoints.insert(ep.id.clone(), ep);
         Ok(())
     }
@@ -101,19 +158,20 @@ impl<C> FaasService<C> {
             .with_context(|| format!("unknown faas endpoint `{id}`"))
     }
 
-    /// Submit a function to an endpoint and run it to completion in
-    /// virtual time. Returns the task handle; failures are recorded (and
-    /// surfaced via `result()`), not panicked, mirroring funcX's
-    /// fire-and-forget model.
-    pub fn submit(
+    /// Queue a task at virtual time `now`. The body runs when the
+    /// dispatch latency has elapsed *and* a capacity slot is free (driven
+    /// by `advance_to`). Offline endpoints fail the task immediately —
+    /// recorded, not panicked, mirroring funcX's fire-and-forget model.
+    pub fn enqueue(
         &mut self,
-        ctx: &mut C,
-        clock: &mut VClock,
+        now: f64,
         endpoint_id: &str,
         func: &FuncId,
         args: &Json,
     ) -> Result<TaskId> {
-        let submitted_vt = clock.now();
+        if !self.funcs.contains_key(func) {
+            bail!("unknown function `{}`", func.0);
+        }
         let ep = self
             .endpoints
             .get_mut(endpoint_id)
@@ -124,35 +182,193 @@ impl<C> FaasService<C> {
                 id: task_id,
                 func: func.clone(),
                 endpoint: endpoint_id.to_string(),
-                submitted_vt,
-                started_vt: submitted_vt,
-                finished_vt: submitted_vt,
+                submitted_vt: now,
+                eligible_vt: now,
+                started_vt: now,
+                finished_vt: now,
                 status: TaskStatus::Failed(format!("endpoint `{endpoint_id}` offline")),
             });
             return Ok(task_id);
         }
         let overhead = ep.next_dispatch_overhead();
-        clock.advance(overhead);
-        let started_vt = clock.now();
-
-        let body = self
-            .funcs
-            .get(func)
-            .with_context(|| format!("unknown function `{}`", func.0))?;
-        let status = match body(ctx, clock, args) {
-            Ok(v) => TaskStatus::Success(v),
-            Err(e) => TaskStatus::Failed(format!("{e:#}")),
-        };
         self.tasks.push(TaskRecord {
             id: task_id,
             func: func.clone(),
             endpoint: endpoint_id.to_string(),
-            submitted_vt,
-            started_vt,
-            finished_vt: clock.now(),
-            status,
+            submitted_vt: now,
+            eligible_vt: now + overhead,
+            started_vt: f64::NAN,
+            finished_vt: f64::NAN,
+            status: TaskStatus::Queued,
         });
+        self.queues
+            .get_mut(endpoint_id)
+            .expect("queue exists for registered endpoint")
+            .push_back(task_id);
+        self.args.insert(task_id.0, args.clone());
         Ok(task_id)
+    }
+
+    /// Earliest future virtual time at which the fabric changes state: a
+    /// queued head starting, or a running task completing.
+    pub fn next_event_time(&self) -> Option<f64> {
+        let mut t = f64::INFINITY;
+        for (ep_id, q) in &self.queues {
+            if let Some(&head) = q.front() {
+                t = t.min(self.start_instant(ep_id, head));
+            }
+        }
+        for running in self.running.values() {
+            for &(_, finish) in running {
+                t = t.min(finish);
+            }
+        }
+        t.is_finite().then_some(t)
+    }
+
+    /// Drive the fabric to virtual time `t`: start every queued task whose
+    /// start instant (eligible + slot availability) is <= `t`, in global
+    /// start-time order (deterministic tie-break by endpoint id), and
+    /// return the tasks that completed by `t` in completion order.
+    pub fn advance_to(&mut self, ctx: &mut C, t: f64) -> Vec<TaskId> {
+        loop {
+            // earliest startable head across endpoints
+            let mut best: Option<(f64, String)> = None;
+            for (ep_id, q) in &self.queues {
+                if let Some(&head) = q.front() {
+                    let st = self.start_instant(ep_id, head);
+                    if st <= t && best.as_ref().map(|(bt, _)| st < *bt).unwrap_or(true) {
+                        best = Some((st, ep_id.clone()));
+                    }
+                }
+            }
+            let Some((st, ep_id)) = best else { break };
+            self.start_task(ctx, &ep_id, st);
+        }
+        // report completions due by t
+        let mut done: Vec<(f64, TaskId)> = Vec::new();
+        for running in self.running.values_mut() {
+            running.retain(|&(id, finish)| {
+                if finish <= t {
+                    done.push((finish, id));
+                    false
+                } else {
+                    true
+                }
+            });
+        }
+        // plus any a sync `submit` consumed on other tasks' behalf
+        let mut i = 0;
+        while i < self.unclaimed.len() {
+            if self.unclaimed[i].0 <= t {
+                done.push(self.unclaimed.swap_remove(i));
+            } else {
+                i += 1;
+            }
+        }
+        done.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1 .0.cmp(&b.1 .0)));
+        done.into_iter().map(|(_, id)| id).collect()
+    }
+
+    /// When the queue head of `ep_id` can start: its eligibility, the
+    /// earliest slot, and the FIFO constraint (never before the task
+    /// ahead of it started).
+    fn start_instant(&self, ep_id: &str, head: TaskId) -> f64 {
+        let free = self.slots[ep_id]
+            .iter()
+            .cloned()
+            .fold(f64::INFINITY, f64::min);
+        self.rec(head)
+            .eligible_vt
+            .max(free)
+            .max(self.last_start[ep_id])
+    }
+
+    /// Run the queue head of `ep_id` at start time `st`.
+    fn start_task(&mut self, ctx: &mut C, ep_id: &str, st: f64) {
+        let id = self
+            .queues
+            .get_mut(ep_id)
+            .expect("queue")
+            .pop_front()
+            .expect("head");
+        let args = self.args.remove(&id.0).expect("queued args");
+        let idx = (id.0 - 1) as usize;
+        self.tasks[idx].started_vt = st;
+        self.tasks[idx].status = TaskStatus::Running;
+        let func = self.tasks[idx].func.clone();
+        // measure the body's virtual duration on a scratch clock anchored
+        // at the start instant (bodies advance time; they never see the
+        // global clock under the DES scheduler)
+        let mut scratch = VClock::starting_at(st);
+        let status = {
+            let body = self.funcs.get(&func).expect("checked at enqueue");
+            match body(ctx, &mut scratch, &args) {
+                Ok(v) => TaskStatus::Success(v),
+                Err(e) => TaskStatus::Failed(format!("{e:#}")),
+            }
+        };
+        let finish = scratch.now();
+        self.tasks[idx].finished_vt = finish;
+        self.tasks[idx].status = status;
+        // occupy the earliest-free slot until the body's finish time
+        let slots = self.slots.get_mut(ep_id).expect("slots");
+        let si = slots
+            .iter()
+            .enumerate()
+            .min_by(|a, b| a.1.total_cmp(b.1))
+            .map(|(i, _)| i)
+            .expect("capacity >= 1");
+        slots[si] = finish;
+        *self.last_start.get_mut(ep_id).expect("last_start") = st;
+        self.running
+            .get_mut(ep_id)
+            .expect("running")
+            .push((id, finish));
+    }
+
+    /// Submit a function to an endpoint and run it to completion in
+    /// virtual time — the single-tenant convenience over the queue
+    /// machinery. Returns the task handle; failures are recorded (and
+    /// surfaced via `result()`), not panicked.
+    pub fn submit(
+        &mut self,
+        ctx: &mut C,
+        clock: &mut VClock,
+        endpoint_id: &str,
+        func: &FuncId,
+        args: &Json,
+    ) -> Result<TaskId> {
+        let id = self.enqueue(clock.now(), endpoint_id, func, args)?;
+        let mut reclaim = |svc: &mut Self, reported: Vec<TaskId>| {
+            for tid in reported {
+                if tid != id {
+                    let ft = svc.rec(tid).finished_vt;
+                    svc.unclaimed.push((ft, tid));
+                }
+            }
+        };
+        while !self.rec(id).status.is_complete() {
+            let Some(t) = self.next_event_time() else {
+                bail!("faas fabric stalled driving task {id:?}");
+            };
+            let reported = self.advance_to(ctx, t);
+            reclaim(self, reported);
+        }
+        let finished = self.rec(id).finished_vt;
+        // flush our own completion report so no stale event lingers for a
+        // later fabric driver; completions of *other* queued tasks that
+        // this drive happened to consume go back to `unclaimed`
+        let reported = self.advance_to(ctx, finished);
+        reclaim(self, reported);
+        if finished > clock.now() {
+            clock.advance_to(finished);
+        }
+        Ok(id)
+    }
+
+    fn rec(&self, id: TaskId) -> &TaskRecord {
+        &self.tasks[(id.0 - 1) as usize]
     }
 
     pub fn record(&self, id: TaskId) -> Result<&TaskRecord> {
@@ -162,16 +378,24 @@ impl<C> FaasService<C> {
             .with_context(|| format!("unknown task {id:?}"))
     }
 
-    /// The task's output, or an error if it failed.
+    /// The task's output, or an error if it failed (or has not run yet).
     pub fn result(&self, id: TaskId) -> Result<&Json> {
         match &self.record(id)?.status {
             TaskStatus::Success(v) => Ok(v),
             TaskStatus::Failed(msg) => bail!("task {id:?} failed: {msg}"),
+            TaskStatus::Queued | TaskStatus::Running => {
+                bail!("task {id:?} has not completed")
+            }
         }
     }
 
     pub fn records(&self) -> &[TaskRecord] {
         &self.tasks
+    }
+
+    /// Tasks currently queued (not yet started) on an endpoint.
+    pub fn queue_depth(&self, endpoint_id: &str) -> usize {
+        self.queues.get(endpoint_id).map(|q| q.len()).unwrap_or(0)
     }
 
     /// Fan independent *real* CPU work out on the process-wide
@@ -219,6 +443,7 @@ mod tests {
         let rec = svc.record(t).unwrap();
         assert_eq!(rec.overhead_secs(), 3.0); // queue 1 + cold start 2
         assert_eq!(rec.exec_secs(), 19.0);
+        assert_eq!(rec.queue_wait_secs(), 0.0); // uncontended
         assert_eq!(clock.now(), 22.0);
         assert_eq!(ctx.calls, 1);
         assert!(svc.result(t).unwrap().get("trained").as_bool().unwrap());
@@ -274,6 +499,121 @@ mod tests {
         assert!(svc
             .submit(&mut ctx, &mut clock, "alcf#gpu", &bad, &Json::Null)
             .is_err());
+    }
+
+    /// Capacity 1 + concurrent submissions = FIFO queue wait: the second
+    /// task is eligible long before the first finishes and must wait for
+    /// the slot; the third waits for both.
+    #[test]
+    fn fifo_queue_wait_on_contended_endpoint() {
+        let (mut svc, f) = setup();
+        let mut ctx = Ctx::default();
+        // three 10 s tasks all submitted at t=0
+        let args = Json::obj(vec![("secs", Json::num(10.0))]);
+        let t1 = svc.enqueue(0.0, "alcf#gpu", &f, &args).unwrap();
+        let t2 = svc.enqueue(0.0, "alcf#gpu", &f, &args).unwrap();
+        let t3 = svc.enqueue(0.0, "alcf#gpu", &f, &args).unwrap();
+        assert_eq!(svc.queue_depth("alcf#gpu"), 3);
+
+        // drive the fabric to completion
+        while let Some(t) = svc.next_event_time() {
+            svc.advance_to(&mut ctx, t);
+        }
+        // t1: eligible at 3 (queue 1 + cold 2), starts 3, ends 13
+        let r1 = svc.record(t1).unwrap().clone();
+        assert_eq!(r1.eligible_vt, 3.0);
+        assert_eq!(r1.started_vt, 3.0);
+        assert_eq!(r1.finished_vt, 13.0);
+        assert_eq!(r1.queue_wait_secs(), 0.0);
+        // t2: eligible at 1, waits for the slot until 13, ends 23
+        let r2 = svc.record(t2).unwrap().clone();
+        assert_eq!(r2.eligible_vt, 1.0);
+        assert_eq!(r2.started_vt, 13.0);
+        assert_eq!(r2.queue_wait_secs(), 12.0);
+        assert_eq!(r2.finished_vt, 23.0);
+        // t3: waits for t2's completion
+        let r3 = svc.record(t3).unwrap().clone();
+        assert_eq!(r3.started_vt, 23.0);
+        assert_eq!(r3.queue_wait_secs(), 22.0);
+        assert_eq!(ctx.calls, 3);
+    }
+
+    /// More capacity slots admit more tasks at once.
+    #[test]
+    fn capacity_two_runs_pairs_concurrently() {
+        let mut svc = FaasService::<Ctx>::new();
+        svc.register_endpoint(
+            FaasEndpoint::new("alcf#cluster", FacilityId(1)).with_capacity(2),
+        )
+        .unwrap();
+        let f = svc
+            .register_function("work", |ctx: &mut Ctx, clock, _| {
+                ctx.calls += 1;
+                clock.advance(10.0);
+                Ok(Json::Null)
+            })
+            .unwrap();
+        let mut ctx = Ctx::default();
+        let ids: Vec<TaskId> = (0..4)
+            .map(|_| svc.enqueue(0.0, "alcf#cluster", &f, &Json::Null).unwrap())
+            .collect();
+        while let Some(t) = svc.next_event_time() {
+            svc.advance_to(&mut ctx, t);
+        }
+        // FIFO: the head pays the cold start (eligible 3); the second is
+        // eligible at 1 but never starts before the task ahead of it, so
+        // both slots fill at t=3; the next pair starts when the slots
+        // free at 13
+        let starts: Vec<f64> = ids
+            .iter()
+            .map(|&i| svc.record(i).unwrap().started_vt)
+            .collect();
+        assert_eq!(starts, vec![3.0, 3.0, 13.0, 13.0]);
+    }
+
+    /// Mixing the sync and queued APIs must not lose completions: a
+    /// `submit` that drives the fabric past another queued task's finish
+    /// re-delivers that completion to the next `advance_to` caller.
+    #[test]
+    fn sync_submit_does_not_swallow_queued_completions() {
+        let (mut svc, f) = setup();
+        let mut ctx = Ctx::default();
+        let t1 = svc
+            .enqueue(0.0, "alcf#gpu", &f, &Json::obj(vec![("secs", Json::num(5.0))]))
+            .unwrap();
+        let mut clock = VClock::new();
+        let t2 = svc
+            .submit(
+                &mut ctx,
+                &mut clock,
+                "alcf#gpu",
+                &f,
+                &Json::obj(vec![("secs", Json::num(1.0))]),
+            )
+            .unwrap();
+        // t1 (queued first, capacity 1) ran to completion during the drive
+        assert!(svc.record(t1).unwrap().status.is_complete());
+        // ...but its completion is still delivered to the fabric driver
+        let done = svc.advance_to(&mut ctx, clock.now());
+        assert!(done.contains(&t1), "{done:?}");
+        assert!(!done.contains(&t2), "own task reported twice: {done:?}");
+    }
+
+    /// advance_to only reports completions due by the horizon; partial
+    /// advances leave later completions pending.
+    #[test]
+    fn advance_to_respects_horizon() {
+        let (mut svc, f) = setup();
+        let mut ctx = Ctx::default();
+        let args = Json::obj(vec![("secs", Json::num(10.0))]);
+        let t1 = svc.enqueue(0.0, "alcf#gpu", &f, &args).unwrap();
+        let done = svc.advance_to(&mut ctx, 5.0);
+        assert!(done.is_empty()); // started at 3, finishes at 13
+        assert_eq!(svc.record(t1).unwrap().started_vt, 3.0);
+        let done = svc.advance_to(&mut ctx, 13.0);
+        assert_eq!(done, vec![t1]);
+        // no double reporting
+        assert!(svc.advance_to(&mut ctx, 20.0).is_empty());
     }
 
     #[test]

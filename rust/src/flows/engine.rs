@@ -1,7 +1,20 @@
-//! The flow run engine: executes a validated `FlowDefinition` against a
+//! The flow run engine: executes validated `FlowDefinition`s against a
 //! set of registered action providers, with template parameter passing,
 //! per-action authentication, retries, failure policies, and a full
 //! event log whose virtual-time spans become the Table 1 breakdown.
+//!
+//! Discrete-event execution model (DESIGN.md §3): action providers never
+//! touch the clock. `ActionProvider::start` fires at a virtual instant
+//! and returns an [`Effect`] — either a scheduled completion (`Done`
+//! with a duration) or a [`Ticket`] for work submitted to a shared
+//! fabric (WAN transfers, faas queues) whose completion time depends on
+//! contention and is resolved later through the [`FabricHost`] context.
+//! A [`FlowRun`] is therefore resumable: `FlowEngine::poll` advances it
+//! as far as the current virtual time allows and reports what it is
+//! waiting for, so N runs interleave correctly under one event loop
+//! (`workflow::campaign`). The synchronous `run` drives a single run to
+//! completion over the same machinery — the degenerate N=1 case, with
+//! bit-identical timings to the pre-DES engine.
 
 use std::collections::BTreeMap;
 
@@ -13,6 +26,36 @@ use crate::auth::{AuthService, TokenId};
 use crate::simnet::VClock;
 use crate::util::Json;
 
+/// Handle for work submitted to a shared fabric; resolved by the
+/// context's [`FabricHost::take_ready`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct Ticket(pub u64);
+
+/// How an action started at time `t` completes.
+#[derive(Debug)]
+pub enum Effect {
+    /// Completes `duration` virtual seconds after its start.
+    Done { duration: f64, output: Json },
+    /// Submitted to a shared fabric; the run parks until the ticket
+    /// resolves (completion time depends on contention).
+    Pending(Ticket),
+}
+
+impl Effect {
+    /// A completion with no virtual-time cost.
+    pub fn instant(output: Json) -> Effect {
+        Effect::Done {
+            duration: 0.0,
+            output,
+        }
+    }
+
+    /// A completion `duration` seconds after the action body fired.
+    pub fn after(duration: f64, output: Json) -> Effect {
+        Effect::Done { duration, output }
+    }
+}
+
 /// One pluggable action kind (Transfer, Compute, Deploy, ...).
 pub trait ActionProvider<C> {
     /// Provider name referenced by `ActionDef::provider`.
@@ -23,8 +66,26 @@ pub trait ActionProvider<C> {
         format!("{}:use", self.name())
     }
 
-    /// Run the action. Advance `clock` by however long it takes.
-    fn execute(&self, ctx: &mut C, clock: &mut VClock, params: &Json) -> Result<Json>;
+    /// Begin the action at virtual time `now` and return its scheduled
+    /// completion. Providers must not advance any clock: fixed-cost work
+    /// returns `Effect::Done { duration, .. }`, shared-fabric work
+    /// submits and returns `Effect::Pending`.
+    fn start(&self, ctx: &mut C, now: f64, params: &Json) -> Result<Effect>;
+}
+
+/// Capability the engine needs from its context to resolve `Pending`
+/// effects: shared fabrics that advance in virtual time and complete
+/// tickets. Contexts without fabrics implement this trivially (every
+/// method returning "nothing pending").
+pub trait FabricHost {
+    /// Earliest future virtual time at which any fabric changes state.
+    fn next_fabric_event(&mut self) -> Option<f64>;
+
+    /// Advance all fabrics to `t`, completing work due by then.
+    fn advance_fabrics(&mut self, t: f64);
+
+    /// Consume the outcome of a ticket if complete: `(finish_vt, result)`.
+    fn take_ready(&mut self, ticket: Ticket) -> Option<(f64, Result<Json>)>;
 }
 
 /// Outcome of one action inside a run.
@@ -122,6 +183,108 @@ impl RunReport {
     }
 }
 
+/// What a poll left the run doing.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum RunPoll {
+    /// Blocked until this absolute virtual time (a scheduled completion).
+    WaitUntil(f64),
+    /// Blocked on a fabric ticket; progress requires `advance_fabrics`.
+    Blocked,
+    Finished,
+}
+
+/// Where an in-flight action stands.
+enum Phase {
+    /// Provider not yet invoked; the body fires at `InFlight::body_at`.
+    Start,
+    /// `Done` effect completing at `t`.
+    FinishAt { t: f64, output: Json },
+    /// Waiting on a fabric ticket.
+    Await { ticket: Ticket },
+    /// A failed attempt; the next attempt fires at `t`.
+    RetryAt { t: f64 },
+    /// Terminal failure at `t` with the recorded message.
+    FailAt { t: f64, msg: String },
+}
+
+/// One action being executed (possibly a catch handler).
+struct InFlight {
+    action_id: String,
+    provider: String,
+    /// order position to resume at once this action settles
+    resume_pos: usize,
+    is_handler: bool,
+    /// action start (dispatch begins here)
+    start_vt: f64,
+    /// when auth fires and attempts begin: start + dispatch + introspection
+    body_at: f64,
+    attempts: u32,
+    params: Option<Json>,
+    phase: Phase,
+}
+
+/// A resumable flow run. Owns its definition/input so N runs can
+/// interleave without lifetime entanglement.
+pub struct FlowRun {
+    def: FlowDefinition,
+    input: Json,
+    token: TokenId,
+    start_vt: f64,
+    /// the run's frontier: end of the last settled step
+    t: f64,
+    order_pos: usize,
+    statuses: BTreeMap<String, ActionStatus>,
+    outputs: BTreeMap<String, Json>,
+    records: Vec<ActionRecord>,
+    aborted: bool,
+    in_flight: Option<InFlight>,
+    finished: bool,
+}
+
+impl FlowRun {
+    pub fn flow_name(&self) -> &str {
+        &self.def.name
+    }
+
+    pub fn start_vt(&self) -> f64 {
+        self.start_vt
+    }
+
+    /// End of the last settled step (final end time once finished).
+    pub fn end_vt(&self) -> f64 {
+        self.t
+    }
+
+    pub fn is_finished(&self) -> bool {
+        self.finished
+    }
+
+    /// Consume the run into its report (meaningful once finished).
+    pub fn into_report(self) -> RunReport {
+        let succeeded = self.finished
+            && !self.aborted
+            && self
+                .records
+                .iter()
+                .all(|r| matches!(r.status, ActionStatus::Success));
+        RunReport {
+            flow: self.def.name.clone(),
+            start_vt: self.start_vt,
+            end_vt: self.t,
+            succeeded,
+            records: self.records,
+            outputs: self.outputs,
+        }
+    }
+}
+
+/// Internal step outcome while polling.
+enum StepOut {
+    Progress,
+    Wait(f64),
+    Blocked,
+}
+
 /// The engine: providers + auth + dispatch overhead accounting.
 pub struct FlowEngine<C> {
     providers: BTreeMap<&'static str, Box<dyn ActionProvider<C>>>,
@@ -168,15 +331,14 @@ impl<C> FlowEngine<C> {
         crate::pool::scope(tasks)
     }
 
-    /// Execute a flow to completion (callers persist the report).
-    pub fn run(
-        &mut self,
+    /// Validate and open a resumable run starting at virtual time `now`.
+    pub fn begin(
+        &self,
         def: &FlowDefinition,
         input: &Json,
         token: &TokenId,
-        ctx: &mut C,
-        clock: &mut VClock,
-    ) -> Result<RunReport> {
+        now: f64,
+    ) -> Result<FlowRun> {
         // all providers referenced must exist before we start
         for a in &def.actions {
             if !self.providers.contains_key(a.provider.as_str()) {
@@ -188,158 +350,316 @@ impl<C> FlowEngine<C> {
                 );
             }
         }
-
-        let start_vt = clock.now();
-        let mut outputs: BTreeMap<String, Json> = BTreeMap::new();
-        let mut statuses: BTreeMap<String, ActionStatus> = BTreeMap::new();
-        let mut records: Vec<ActionRecord> = Vec::new();
-        let mut aborted = false;
-
-        for &idx in def.order() {
-            let action = &def.actions[idx];
-            let dep_ok = action
-                .depends_on
-                .iter()
-                .all(|d| matches!(statuses.get(d.as_str()), Some(ActionStatus::Success)));
-            if aborted || !dep_ok {
-                statuses.insert(action.id.clone(), ActionStatus::Skipped);
-                records.push(ActionRecord {
-                    id: action.id.clone(),
-                    provider: action.provider.clone(),
-                    attempts: 0,
-                    start_vt: clock.now(),
-                    end_vt: clock.now(),
-                    status: ActionStatus::Skipped,
-                });
-                continue;
-            }
-
-            let (record, output) =
-                self.run_action(def, &action.id, input, &outputs, token, ctx, clock)?;
-            let failed = matches!(record.status, ActionStatus::Failed(_));
-            statuses.insert(action.id.clone(), record.status.clone());
-            if let Some(v) = output {
-                outputs.insert(action.id.clone(), v);
-            }
-            records.push(record);
-
-            if failed {
-                match &action.on_failure {
-                    FailurePolicy::Abort => aborted = true,
-                    FailurePolicy::Continue => {}
-                    FailurePolicy::Catch(handler) => {
-                        let (h, hout) =
-                            self.run_action(def, handler, input, &outputs, token, ctx, clock)?;
-                        statuses.insert(handler.clone(), h.status.clone());
-                        if let Some(v) = hout {
-                            outputs.insert(handler.clone(), v);
-                        }
-                        records.push(h);
-                        aborted = true;
-                    }
-                }
-            }
-        }
-
-        let succeeded = !aborted
-            && records
-                .iter()
-                .all(|r| matches!(r.status, ActionStatus::Success));
-        Ok(RunReport {
-            flow: def.name.clone(),
-            start_vt,
-            end_vt: clock.now(),
-            succeeded,
-            records,
-            outputs,
+        Ok(FlowRun {
+            def: def.clone(),
+            input: input.clone(),
+            token: *token,
+            start_vt: now,
+            t: now,
+            order_pos: 0,
+            statuses: BTreeMap::new(),
+            outputs: BTreeMap::new(),
+            records: Vec::new(),
+            aborted: false,
+            in_flight: None,
+            finished: false,
         })
     }
 
-    #[allow(clippy::too_many_arguments)]
-    fn run_action(
-        &mut self,
-        def: &FlowDefinition,
-        id: &str,
-        input: &Json,
-        outputs: &BTreeMap<String, Json>,
-        token: &TokenId,
-        ctx: &mut C,
-        clock: &mut VClock,
-    ) -> Result<(ActionRecord, Option<Json>)> {
-        let action = def.action(id)?;
-        let provider = self
-            .providers
-            .get(action.provider.as_str())
-            .with_context(|| format!("no provider `{}`", action.provider))?;
-
-        let start_vt = clock.now();
-        clock.advance(self.dispatch_overhead_s);
-
-        let fail = |status: String, clock: &VClock| {
-            (
-                ActionRecord {
+    /// Advance a run as far as the current virtual time `now` allows.
+    /// Idempotent at a fixed `now`; call again after time advances or
+    /// fabrics complete work.
+    pub fn poll(&mut self, run: &mut FlowRun, ctx: &mut C, now: f64) -> Result<RunPoll>
+    where
+        C: FabricHost,
+    {
+        loop {
+            if run.finished {
+                return Ok(RunPoll::Finished);
+            }
+            if run.in_flight.is_some() {
+                match self.step_in_flight(run, ctx, now)? {
+                    StepOut::Progress => continue,
+                    StepOut::Wait(t) => return Ok(RunPoll::WaitUntil(t)),
+                    StepOut::Blocked => return Ok(RunPoll::Blocked),
+                }
+            }
+            // nothing in flight: settle skips, launch the next action, or
+            // finish the run
+            if run.order_pos >= run.def.order().len() {
+                run.finished = true;
+                return Ok(RunPoll::Finished);
+            }
+            let idx = run.def.order()[run.order_pos];
+            let action = &run.def.actions[idx];
+            let dep_ok = action
+                .depends_on
+                .iter()
+                .all(|d| matches!(run.statuses.get(d.as_str()), Some(ActionStatus::Success)));
+            if run.aborted || !dep_ok {
+                run.statuses
+                    .insert(action.id.clone(), ActionStatus::Skipped);
+                run.records.push(ActionRecord {
                     id: action.id.clone(),
                     provider: action.provider.clone(),
                     attempts: 0,
-                    start_vt,
-                    end_vt: clock.now(),
-                    status: ActionStatus::Failed(status),
-                },
-                None,
-            )
-        };
-
-        // authenticate this action (paper: every interaction goes through
-        // Globus Auth)
-        if let Err(e) = self.auth.validate(clock, token, &provider.scope()) {
-            return Ok(fail(format!("auth: {e:#}"), clock));
-        }
-
-        let params = match resolve_params(&action.params, input, outputs) {
-            Ok(p) => p,
-            Err(e) => return Ok(fail(format!("template: {e:#}"), clock)),
-        };
-
-        let mut attempts = 0;
-        let outcome = loop {
-            attempts += 1;
-            match provider.execute(ctx, clock, &params) {
-                Ok(v) => break Ok(v),
-                Err(e) if attempts <= action.retries => {
-                    log::warn!(
-                        "action `{}` attempt {attempts} failed, retrying: {e:#}",
-                        action.id
-                    );
-                    clock.advance(action.retry_backoff_s);
-                }
-                Err(e) => break Err(e),
+                    start_vt: run.t,
+                    end_vt: run.t,
+                    status: ActionStatus::Skipped,
+                });
+                run.order_pos += 1;
+                continue;
             }
-        };
+            let id = action.id.clone();
+            let resume = run.order_pos + 1;
+            self.launch(run, &id, resume, false);
+        }
+    }
 
-        Ok(match outcome {
-            Ok(v) => (
-                ActionRecord {
-                    id: action.id.clone(),
-                    provider: action.provider.clone(),
-                    attempts,
-                    start_vt,
-                    end_vt: clock.now(),
-                    status: ActionStatus::Success,
+    /// Put an action in flight starting at the run's frontier.
+    fn launch(&self, run: &mut FlowRun, action_id: &str, resume_pos: usize, is_handler: bool) {
+        let provider = run
+            .def
+            .action(action_id)
+            .map(|a| a.provider.clone())
+            .unwrap_or_default();
+        // same accumulation order as the pre-DES engine: dispatch is
+        // charged first, then token introspection
+        let body_at = (run.t + self.dispatch_overhead_s) + self.auth.introspection_s;
+        run.in_flight = Some(InFlight {
+            action_id: action_id.to_string(),
+            provider,
+            resume_pos,
+            is_handler,
+            start_vt: run.t,
+            body_at,
+            attempts: 0,
+            params: None,
+            phase: Phase::Start,
+        });
+    }
+
+    fn step_in_flight(&mut self, run: &mut FlowRun, ctx: &mut C, now: f64) -> Result<StepOut>
+    where
+        C: FabricHost,
+    {
+        let mut fl = run.in_flight.take().expect("in-flight action");
+        loop {
+            match std::mem::replace(&mut fl.phase, Phase::Start) {
+                Phase::Start => {
+                    if now < fl.body_at {
+                        let at = fl.body_at;
+                        fl.phase = Phase::Start;
+                        run.in_flight = Some(fl);
+                        return Ok(StepOut::Wait(at));
+                    }
+                    let body_at = fl.body_at;
+                    // authenticate this action (paper: every interaction
+                    // goes through Globus Auth)
+                    let scope = self
+                        .providers
+                        .get(fl.provider.as_str())
+                        .with_context(|| format!("no provider `{}`", fl.provider))?
+                        .scope();
+                    if let Err(e) = self.auth.check(body_at, &run.token, &scope) {
+                        return self.settle_failure(run, fl, body_at, format!("auth: {e:#}"));
+                    }
+                    let action = run.def.action(&fl.action_id)?;
+                    let params = match resolve_params(&action.params, &run.input, &run.outputs)
+                    {
+                        Ok(p) => p,
+                        Err(e) => {
+                            return self.settle_failure(
+                                run,
+                                fl,
+                                body_at,
+                                format!("template: {e:#}"),
+                            )
+                        }
+                    };
+                    fl.params = Some(params);
+                    fl.phase = self.attempt(run, &mut fl, ctx, body_at)?;
+                }
+                Phase::FinishAt { t, output } => {
+                    if now < t {
+                        fl.phase = Phase::FinishAt { t, output };
+                        run.in_flight = Some(fl);
+                        return Ok(StepOut::Wait(t));
+                    }
+                    return Ok(self.settle_success(run, fl, t, output));
+                }
+                Phase::Await { ticket } => match ctx.take_ready(ticket) {
+                    None => {
+                        fl.phase = Phase::Await { ticket };
+                        run.in_flight = Some(fl);
+                        return Ok(StepOut::Blocked);
+                    }
+                    Some((tf, Ok(output))) => {
+                        return Ok(self.settle_success(run, fl, tf, output));
+                    }
+                    Some((tf, Err(e))) => {
+                        let action = run.def.action(&fl.action_id)?;
+                        if fl.attempts <= action.retries {
+                            log::warn!(
+                                "action `{}` attempt {} failed, retrying: {e:#}",
+                                action.id,
+                                fl.attempts
+                            );
+                            fl.phase = Phase::RetryAt {
+                                t: tf + action.retry_backoff_s,
+                            };
+                        } else {
+                            return self.settle_failure(run, fl, tf, format!("{e:#}"));
+                        }
+                    }
                 },
-                Some(v),
-            ),
-            Err(e) => (
-                ActionRecord {
-                    id: action.id.clone(),
-                    provider: action.provider.clone(),
-                    attempts,
-                    start_vt,
-                    end_vt: clock.now(),
-                    status: ActionStatus::Failed(format!("{e:#}")),
-                },
-                None,
-            ),
-        })
+                Phase::RetryAt { t } => {
+                    if now < t {
+                        fl.phase = Phase::RetryAt { t };
+                        run.in_flight = Some(fl);
+                        return Ok(StepOut::Wait(t));
+                    }
+                    fl.phase = self.attempt(run, &mut fl, ctx, t)?;
+                }
+                Phase::FailAt { t, msg } => {
+                    return self.settle_failure(run, fl, t, msg);
+                }
+            }
+        }
+    }
+
+    /// Invoke the provider for one attempt at virtual time `at`.
+    fn attempt(
+        &mut self,
+        run: &FlowRun,
+        fl: &mut InFlight,
+        ctx: &mut C,
+        at: f64,
+    ) -> Result<Phase> {
+        fl.attempts += 1;
+        let action = run.def.action(&fl.action_id)?;
+        let provider = self
+            .providers
+            .get(fl.provider.as_str())
+            .with_context(|| format!("no provider `{}`", fl.provider))?;
+        let params = fl.params.as_ref().expect("params resolved before attempt");
+        match provider.start(ctx, at, params) {
+            Ok(Effect::Done { duration, output }) => {
+                anyhow::ensure!(
+                    duration >= 0.0 && duration.is_finite(),
+                    "action `{}` returned a bad duration {duration}",
+                    action.id
+                );
+                Ok(Phase::FinishAt {
+                    t: at + duration,
+                    output,
+                })
+            }
+            Ok(Effect::Pending(ticket)) => Ok(Phase::Await { ticket }),
+            Err(e) if fl.attempts <= action.retries => {
+                log::warn!(
+                    "action `{}` attempt {} failed, retrying: {e:#}",
+                    action.id,
+                    fl.attempts
+                );
+                Ok(Phase::RetryAt {
+                    t: at + action.retry_backoff_s,
+                })
+            }
+            Err(e) => Ok(Phase::FailAt {
+                t: at,
+                msg: format!("{e:#}"),
+            }),
+        }
+    }
+
+    fn settle_success(&self, run: &mut FlowRun, fl: InFlight, tf: f64, output: Json) -> StepOut {
+        run.statuses
+            .insert(fl.action_id.clone(), ActionStatus::Success);
+        run.records.push(ActionRecord {
+            id: fl.action_id.clone(),
+            provider: fl.provider,
+            attempts: fl.attempts,
+            start_vt: fl.start_vt,
+            end_vt: tf,
+            status: ActionStatus::Success,
+        });
+        run.outputs.insert(fl.action_id, output);
+        run.t = tf;
+        run.order_pos = fl.resume_pos;
+        if fl.is_handler {
+            // a handler only runs on failure; the run is failed either way
+            run.aborted = true;
+        }
+        run.in_flight = None;
+        StepOut::Progress
+    }
+
+    /// Record a terminal action failure at `tf` and apply its policy.
+    fn settle_failure(
+        &self,
+        run: &mut FlowRun,
+        fl: InFlight,
+        tf: f64,
+        msg: String,
+    ) -> Result<StepOut> {
+        run.statuses
+            .insert(fl.action_id.clone(), ActionStatus::Failed(msg.clone()));
+        run.records.push(ActionRecord {
+            id: fl.action_id.clone(),
+            provider: fl.provider.clone(),
+            attempts: fl.attempts,
+            start_vt: fl.start_vt,
+            end_vt: tf,
+            status: ActionStatus::Failed(msg),
+        });
+        run.t = tf;
+        run.order_pos = fl.resume_pos;
+        run.in_flight = None;
+        if fl.is_handler {
+            run.aborted = true;
+            return Ok(StepOut::Progress);
+        }
+        match run.def.action(&fl.action_id)?.on_failure.clone() {
+            FailurePolicy::Abort => run.aborted = true,
+            FailurePolicy::Continue => {}
+            FailurePolicy::Catch(handler) => {
+                self.launch(run, &handler, fl.resume_pos, true);
+            }
+        }
+        Ok(StepOut::Progress)
+    }
+
+    /// Execute a flow to completion (callers persist the report). Drives
+    /// the resumable machinery synchronously — the degenerate N=1 case.
+    pub fn run(
+        &mut self,
+        def: &FlowDefinition,
+        input: &Json,
+        token: &TokenId,
+        ctx: &mut C,
+        clock: &mut VClock,
+    ) -> Result<RunReport>
+    where
+        C: FabricHost,
+    {
+        let mut fr = self.begin(def, input, token, clock.now())?;
+        loop {
+            match self.poll(&mut fr, ctx, clock.now())? {
+                RunPoll::Finished => {
+                    clock.advance_to(fr.end_vt());
+                    return Ok(fr.into_report());
+                }
+                RunPoll::WaitUntil(t) => clock.advance_to(t),
+                RunPoll::Blocked => {
+                    let t = ctx
+                        .next_fabric_event()
+                        .context("flow run blocked on a fabric with no pending events")?;
+                    ctx.advance_fabrics(t);
+                    clock.advance_to(t);
+                }
+            }
+        }
     }
 }
 
@@ -348,11 +668,53 @@ mod tests {
     use super::*;
     use crate::flows::definition::ActionDef;
 
-    /// Test context: a scratch value + a failure switch.
+    /// Test context: a scratch value, a failure switch, and a one-shot
+    /// "timer fabric" for Pending effects.
     #[derive(Default)]
     struct Ctx {
         log: Vec<String>,
         fail_times: u32,
+        /// ticket -> (fires_at, Ok-output or Err-message, fired)
+        timers: Vec<(f64, Result<Json, String>, bool)>,
+        fabric_now: f64,
+    }
+
+    impl Ctx {
+        fn arm_timer(&mut self, fires_at: f64, outcome: Result<Json, String>) -> Ticket {
+            self.timers.push((fires_at, outcome, false));
+            Ticket(self.timers.len() as u64 - 1)
+        }
+    }
+
+    impl FabricHost for Ctx {
+        fn next_fabric_event(&mut self) -> Option<f64> {
+            self.timers
+                .iter()
+                .filter(|(_, _, fired)| !fired)
+                .map(|(t, _, _)| *t)
+                .fold(None, |acc, t| {
+                    Some(acc.map_or(t, |a: f64| a.min(t)))
+                })
+        }
+
+        fn advance_fabrics(&mut self, t: f64) {
+            self.fabric_now = self.fabric_now.max(t);
+        }
+
+        fn take_ready(&mut self, ticket: Ticket) -> Option<(f64, Result<Json>)> {
+            let (t, outcome, fired) = self.timers.get_mut(ticket.0 as usize)?;
+            if *fired || *t > self.fabric_now {
+                return None;
+            }
+            *fired = true;
+            Some((
+                *t,
+                match outcome {
+                    Ok(v) => Ok(v.clone()),
+                    Err(m) => Err(anyhow::anyhow!("{m}")),
+                },
+            ))
+        }
     }
 
     struct Work;
@@ -360,15 +722,15 @@ mod tests {
         fn name(&self) -> &'static str {
             "work"
         }
-        fn execute(&self, ctx: &mut Ctx, clock: &mut VClock, params: &Json) -> Result<Json> {
+        fn start(&self, ctx: &mut Ctx, _now: f64, params: &Json) -> Result<Effect> {
             let label = params.get("label").as_str().unwrap_or("?").to_string();
             if ctx.fail_times > 0 {
                 ctx.fail_times -= 1;
                 bail!("transient failure");
             }
-            clock.advance(params.get("secs").as_f64().unwrap_or(1.0));
+            let secs = params.get("secs").as_f64().unwrap_or(1.0);
             ctx.log.push(label.clone());
-            Ok(Json::obj(vec![("did", Json::str(label))]))
+            Ok(Effect::after(secs, Json::obj(vec![("did", Json::str(label))])))
         }
     }
 
@@ -377,9 +739,30 @@ mod tests {
         fn name(&self) -> &'static str {
             "cleanup"
         }
-        fn execute(&self, ctx: &mut Ctx, _: &mut VClock, _: &Json) -> Result<Json> {
+        fn start(&self, ctx: &mut Ctx, _: f64, _: &Json) -> Result<Effect> {
             ctx.log.push("cleanup".into());
-            Ok(Json::Null)
+            Ok(Effect::instant(Json::Null))
+        }
+    }
+
+    /// A fabric-backed provider: arms a timer `secs` out and parks.
+    struct Slow;
+    impl ActionProvider<Ctx> for Slow {
+        fn name(&self) -> &'static str {
+            "slow"
+        }
+        fn start(&self, ctx: &mut Ctx, now: f64, params: &Json) -> Result<Effect> {
+            let secs = params.get("secs").as_f64().unwrap_or(1.0);
+            if ctx.fail_times > 0 {
+                ctx.fail_times -= 1;
+                let t = ctx.arm_timer(now + secs, Err("fabric task failed".into()));
+                return Ok(Effect::Pending(t));
+            }
+            let t = ctx.arm_timer(
+                now + secs,
+                Ok(Json::obj(vec![("fabric", Json::Bool(true))])),
+            );
+            Ok(Effect::Pending(t))
         }
     }
 
@@ -387,10 +770,11 @@ mod tests {
         let mut e = FlowEngine::<Ctx>::new();
         e.register_provider(Box::new(Work)).unwrap();
         e.register_provider(Box::new(Cleanup)).unwrap();
+        e.register_provider(Box::new(Slow)).unwrap();
         let clock = VClock::new();
         let token = e
             .auth
-            .issue(&clock, "user", &["work:use", "cleanup:use"], 1e9)
+            .issue(&clock, "user", &["work:use", "cleanup:use", "slow:use"], 1e9)
             .id;
         (e, token)
     }
@@ -447,6 +831,7 @@ mod tests {
             rep.output("b").unwrap().get("did").as_str(),
             Some("stage-next")
         );
+        assert_eq!(clock.now(), rep.end_vt);
     }
 
     #[test]
@@ -569,5 +954,99 @@ mod tests {
         let parsed = Json::parse(&j).unwrap();
         assert_eq!(parsed.get("flow").as_str(), Some("f"));
         assert_eq!(parsed.get("actions").at(0).get("status").as_str(), Some("success"));
+    }
+
+    /// The tentpole property: two independent runs interleave correctly
+    /// under poll — the shorter one finishes first in virtual time even
+    /// though both were started together and polled in a fixed order.
+    #[test]
+    fn two_runs_interleave_under_poll() {
+        let (mut e, token) = engine();
+        let def_a = FlowDefinition::new(
+            "fa",
+            vec![action(
+                "a",
+                &[],
+                Json::obj(vec![("label", Json::str("a")), ("secs", Json::num(5.0))]),
+            )],
+        )
+        .unwrap();
+        let def_b = FlowDefinition::new(
+            "fb",
+            vec![action(
+                "b",
+                &[],
+                Json::obj(vec![("label", Json::str("b")), ("secs", Json::num(2.0))]),
+            )],
+        )
+        .unwrap();
+        let mut ctx = Ctx::default();
+        let mut ra = e.begin(&def_a, &Json::Null, &token, 0.0).unwrap();
+        let mut rb = e.begin(&def_b, &Json::Null, &token, 0.0).unwrap();
+
+        // both dispatch first at 0.25
+        assert_eq!(e.poll(&mut ra, &mut ctx, 0.0).unwrap(), RunPoll::WaitUntil(0.25));
+        assert_eq!(e.poll(&mut rb, &mut ctx, 0.0).unwrap(), RunPoll::WaitUntil(0.25));
+        // at 0.25 both bodies fire (in poll order) and park until done
+        assert_eq!(e.poll(&mut ra, &mut ctx, 0.25).unwrap(), RunPoll::WaitUntil(5.25));
+        assert_eq!(e.poll(&mut rb, &mut ctx, 0.25).unwrap(), RunPoll::WaitUntil(2.25));
+        assert_eq!(ctx.log, vec!["a", "b"]);
+        // b completes while a is still in flight
+        assert_eq!(e.poll(&mut rb, &mut ctx, 2.25).unwrap(), RunPoll::Finished);
+        assert_eq!(e.poll(&mut ra, &mut ctx, 2.25).unwrap(), RunPoll::WaitUntil(5.25));
+        assert_eq!(e.poll(&mut ra, &mut ctx, 5.25).unwrap(), RunPoll::Finished);
+
+        let rep_a = ra.into_report();
+        let rep_b = rb.into_report();
+        assert!(rep_a.succeeded && rep_b.succeeded);
+        assert!(rep_b.end_vt < rep_a.end_vt);
+        assert_eq!(rep_b.end_vt, 2.25);
+        assert_eq!(rep_a.end_vt, 5.25);
+    }
+
+    /// Pending effects park the run until the fabric resolves the ticket.
+    #[test]
+    fn pending_effect_resolves_through_fabric() {
+        let (mut e, token) = engine();
+        let mut a = action("a", &[], Json::obj(vec![("secs", Json::num(3.0))]));
+        a.provider = "slow".into();
+        let def = FlowDefinition::new("f", vec![a]).unwrap();
+        let mut ctx = Ctx::default();
+        let mut clock = VClock::new();
+        let rep = e
+            .run(&def, &Json::Null, &token, &mut ctx, &mut clock)
+            .unwrap();
+        assert!(rep.succeeded);
+        // 0.25 dispatch+auth, then 3 s in the fabric
+        assert!((rep.duration() - 3.25).abs() < 1e-9, "{}", rep.duration());
+        assert_eq!(
+            rep.output("a").unwrap().get("fabric").as_bool(),
+            Some(true)
+        );
+        assert_eq!(clock.now(), 3.25);
+    }
+
+    /// A ticket that resolves to an error consumes an attempt and is
+    /// retried with backoff, exactly like an inline failure.
+    #[test]
+    fn fabric_failure_is_retried() {
+        let (mut e, token) = engine();
+        let mut a = action("a", &[], Json::obj(vec![("secs", Json::num(2.0))]));
+        a.provider = "slow".into();
+        a.retries = 1;
+        a.retry_backoff_s = 1.0;
+        let def = FlowDefinition::new("f", vec![a]).unwrap();
+        let mut ctx = Ctx {
+            fail_times: 1,
+            ..Default::default()
+        };
+        let mut clock = VClock::new();
+        let rep = e
+            .run(&def, &Json::Null, &token, &mut ctx, &mut clock)
+            .unwrap();
+        assert!(rep.succeeded, "{:?}", rep.records);
+        assert_eq!(rep.record("a").unwrap().attempts, 2);
+        // 0.25 overhead + 2 s failed attempt + 1 s backoff + 2 s retry
+        assert!((rep.duration() - 5.25).abs() < 1e-9, "{}", rep.duration());
     }
 }

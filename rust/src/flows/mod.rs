@@ -13,5 +13,8 @@ pub mod engine;
 pub mod template;
 
 pub use definition::{ActionDef, FailurePolicy, FlowDefinition};
-pub use engine::{ActionProvider, ActionRecord, ActionStatus, FlowEngine, RunReport};
+pub use engine::{
+    ActionProvider, ActionRecord, ActionStatus, Effect, FabricHost, FlowEngine, FlowRun,
+    RunPoll, RunReport, Ticket,
+};
 pub use template::resolve_params;

@@ -7,7 +7,10 @@
 //! * **L3 (this crate)** — the paper's system contribution: a
 //!   geographically distributed workflow fabric (flows engine, federated
 //!   FaaS, WAN transfer service) that retrains DNNs on remote
-//!   data-center AI systems and deploys them to edge hosts.
+//!   data-center AI systems and deploys them to edge hosts. A
+//!   discrete-event scheduler core (`simnet::des`, DESIGN.md §3) lets N
+//!   tenants' flows interleave over the shared fabric —
+//!   `workflow::campaign` studies turnaround under load.
 //! * **L2/L1 (python/, build-time only)** — BraggNN and CookieNetAE in
 //!   JAX on Pallas kernels, AOT-lowered to `artifacts/*.hlo.txt`.
 //! * **runtime** — PJRT CPU bridge executing those artifacts from rust.

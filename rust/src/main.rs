@@ -4,6 +4,7 @@
 //! Subcommands:
 //!   table1    reproduce Table 1 (end-to-end retraining breakdown grid)
 //!   retrain   run one DNNTrainerFlow scenario (real PJRT training)
+//!   campaign  N concurrent users on the shared fabric (queueing study)
 //!   fig3      transfer-throughput sweep (Fig. 3)
 //!   fig4      conventional-vs-ML crossover curves (Fig. 4)
 //!   serve     retrain, deploy, then stream inference at the edge
@@ -17,7 +18,7 @@ use xloop::transfer::{TransferRequest, TransferService};
 use xloop::util::cli::Options;
 use xloop::util::stats::{human_bytes, human_secs};
 use xloop::workflow::{
-    render_table1, Coordinator, Mode, Scenario, TrainingMode,
+    render_table1, run_campaign, CampaignConfig, Coordinator, Mode, Scenario, TrainingMode,
 };
 
 fn main() {
@@ -42,6 +43,7 @@ fn run(args: &[String]) -> Result<()> {
     match cmd.as_str() {
         "table1" => cmd_table1(rest),
         "retrain" => cmd_retrain(rest),
+        "campaign" => cmd_campaign(rest),
         "fig3" => cmd_fig3(rest),
         "fig4" => cmd_fig4(rest),
         "serve" => cmd_serve(rest),
@@ -63,6 +65,8 @@ fn print_usage() {
          commands:\n\
            table1    reproduce Table 1 (retraining time breakdown grid)\n\
            retrain   run one retraining flow (--model, --mode, --real-steps)\n\
+           campaign  N users' retrainings on the shared fabric (--users,\n\
+                     --interarrival, --loads for a crossover sweep)\n\
            fig3      WAN transfer throughput vs concurrency (Fig. 3)\n\
            fig4      conventional vs ML-surrogate crossover (Fig. 4)\n\
            serve     retrain + deploy + stream edge inference\n\
@@ -162,6 +166,166 @@ fn cmd_retrain(args: &[String]) -> Result<()> {
     if p.get_bool("events") {
         println!("\nevent log:\n{}", outcome.report.to_json());
     }
+    Ok(())
+}
+
+fn cmd_campaign(args: &[String]) -> Result<()> {
+    let opts = Options::new()
+        .opt("users", "8", "number of concurrent users")
+        .opt("model", "braggnn", "model to retrain (braggnn|cookienetae)")
+        .opt("mode", "remote-cerebras", "training mode")
+        .opt(
+            "interarrival",
+            "60",
+            "mean seconds between user arrivals (Poisson; 0 = all at once)",
+        )
+        .opt(
+            "loads",
+            "",
+            "comma-separated mean inter-arrival sweep; prints remote-vs-local \
+             turnaround vs load (crossover study)",
+        )
+        .opt("seed", "42", "arrival/fabric seed");
+    if args.iter().any(|a| a == "--help") {
+        print!("{}", opts.usage("xloop campaign"));
+        return Ok(());
+    }
+    let p = opts.parse(args).map_err(anyhow::Error::msg)?;
+    let users = p.get_usize("users")?.max(1);
+    let seed = p.get_usize("seed")? as u64;
+    let mode = Mode::parse(p.get("mode"))?;
+    let scenario = Scenario::table1(p.get("model"), mode)?;
+
+    if !p.get("loads").is_empty() {
+        return campaign_load_sweep(p.get("loads"), users, &scenario, seed);
+    }
+
+    let report = run_campaign(&CampaignConfig {
+        users,
+        scenario: scenario.clone(),
+        mean_interarrival_s: p.get_f64("interarrival")?,
+        seed,
+    })?;
+
+    println!(
+        "\nCampaign — {} user(s), {} / {}, mean inter-arrival {}\n",
+        users,
+        scenario.model,
+        mode.label(),
+        human_secs(report.mean_interarrival_s),
+    );
+    println!(
+        "{:>5} {:>12} {:>14} {:>13} {:>15} {:>14}",
+        "user", "arrival (s)", "data xfer (s)", "train (s)", "model xfer (s)", "turnaround (s)"
+    );
+    for u in &report.users {
+        let fmt = |v: Option<f64>| match v {
+            Some(s) => format!("{s:.1}"),
+            None => "N/A".to_string(),
+        };
+        println!(
+            "{:>5} {:>12.1} {:>14} {:>13.1} {:>15} {:>14.1}",
+            u.user,
+            u.arrival_vt,
+            fmt(u.breakdown.data_transfer_s),
+            u.breakdown.training_s,
+            fmt(u.breakdown.model_transfer_s),
+            u.turnaround_s
+        );
+    }
+    println!(
+        "\nturnaround: p50 {} | p95 {} | max {} | makespan {}",
+        human_secs(report.turnaround_percentile(50.0)),
+        human_secs(report.turnaround_percentile(95.0)),
+        human_secs(report.max_turnaround_s()),
+        human_secs(report.makespan_s),
+    );
+    if report.mean_task_throughput_bps > 0.0 {
+        println!(
+            "mean per-task transfer goodput: {:.3} GB/s",
+            report.mean_task_throughput_bps / 1e9
+        );
+    }
+    println!("\nfaas endpoint load (queue wait from capacity contention):");
+    println!(
+        "{:>16} {:>7} {:>16} {:>16}",
+        "endpoint", "tasks", "mean wait (s)", "max wait (s)"
+    );
+    for l in &report.endpoint_loads {
+        println!(
+            "{:>16} {:>7} {:>16.1} {:>16.1}",
+            l.endpoint,
+            l.tasks,
+            l.mean_queue_wait_s(),
+            l.max_queue_wait_s
+        );
+    }
+    Ok(())
+}
+
+/// Sweep arrival load and compare the chosen remote mode against the
+/// local V100 — the loaded-facility extension of Table 1/Fig. 4: at what
+/// load does queue wait erase the remote DCAI's raw-speed advantage?
+fn campaign_load_sweep(
+    loads: &str,
+    users: usize,
+    scenario: &Scenario,
+    seed: u64,
+) -> Result<()> {
+    let local_scenario = Scenario::table1(&scenario.model, Mode::LocalV100)?;
+    println!(
+        "\nCampaign load sweep — {} users, {} remote ({}) vs local V100\n",
+        users,
+        scenario.model,
+        scenario.mode.label()
+    );
+    println!(
+        "{:>16} {:>12} {:>12} {:>12} {:>12} {:>8}",
+        "interarrival (s)", "remote p50", "remote p95", "local p50", "local p95", "winner"
+    );
+    for tok in loads.split(',') {
+        let tok = tok.trim();
+        if tok.is_empty() {
+            continue;
+        }
+        let mean: f64 = tok
+            .parse()
+            .map_err(|_| anyhow::anyhow!("bad load `{tok}` (mean inter-arrival seconds)"))?;
+        let remote = run_campaign(&CampaignConfig {
+            users,
+            scenario: scenario.clone(),
+            mean_interarrival_s: mean,
+            seed,
+        })?;
+        let local = run_campaign(&CampaignConfig {
+            users,
+            scenario: local_scenario.clone(),
+            mean_interarrival_s: mean,
+            seed,
+        })?;
+        let (rp50, rp95) = (
+            remote.turnaround_percentile(50.0),
+            remote.turnaround_percentile(95.0),
+        );
+        let (lp50, lp95) = (
+            local.turnaround_percentile(50.0),
+            local.turnaround_percentile(95.0),
+        );
+        println!(
+            "{:>16.1} {:>12.1} {:>12.1} {:>12.1} {:>12.1} {:>8}",
+            mean,
+            rp50,
+            rp95,
+            lp50,
+            lp95,
+            if rp50 <= lp50 { "remote" } else { "local" }
+        );
+    }
+    println!(
+        "\n(p50/p95 of arrival-to-deployed turnaround, virtual seconds; queue wait\n\
+         on the capacity-1 DCAI endpoints plus shared-WAN slowdown vs the local\n\
+         V100's slow-but-private training)"
+    );
     Ok(())
 }
 

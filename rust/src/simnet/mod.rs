@@ -1,5 +1,6 @@
-//! Discrete-event WAN simulator: virtual clock, facility/link topology,
-//! max-min fair fluid bandwidth sharing, and fault injection.
+//! Discrete-event WAN simulator: virtual clock, event-queue scheduler,
+//! facility/link topology, max-min fair fluid bandwidth sharing, and
+//! fault injection.
 //!
 //! Substitutes for the physical ESnet SLAC<->ALCF path of the paper
 //! (DESIGN.md §2) while preserving the behaviours the evaluation depends
@@ -7,11 +8,13 @@
 //! scaling (Fig. 3), and transfer fault recovery.
 
 pub mod clock;
+pub mod des;
 pub mod fault;
 pub mod fluid;
 pub mod topology;
 
 pub use clock::{VClock, VSpan};
+pub use des::{EventId, Scheduler};
 pub use fault::FaultModel;
 pub use fluid::{max_min_rates, simulate, FlowResult, FlowSpec};
 pub use topology::{Facility, FacilityId, Link, LinkId, Topology, GBPS};

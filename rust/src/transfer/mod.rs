@@ -1,6 +1,8 @@
 //! WAN transfer service (Globus Transfer analog): endpoints, windowed
 //! multi-file tasks over the simnet fabric, checksums, fault recovery,
-//! and the paper's `T = x/v + S` predictive model.
+//! concurrent tasks sharing bandwidth max-min fairly under the
+//! discrete-event scheduler, and the paper's `T = x/v + S` predictive
+//! model.
 
 pub mod endpoint;
 pub mod model;
@@ -9,5 +11,5 @@ pub mod task;
 
 pub use endpoint::{Endpoint, EndpointId, EndpointRegistry};
 pub use model::{LinearModel, Observation};
-pub use service::{TransferParams, TransferService};
+pub use service::{TransferHandle, TransferParams, TransferService};
 pub use task::{FileReport, FileSpec, TransferReport, TransferRequest};

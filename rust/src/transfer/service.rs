@@ -9,14 +9,22 @@
 //!   files amortize poorly (the paper's `S` term in `T = x/v + S`);
 //! * the aggregate saturates at min(NIC, storage read, storage write).
 //!
-//! The simulation is an exact event loop over per-slot state machines,
-//! advancing the shared virtual clock.
+//! Each task is an exact event loop over per-slot state machines
+//! ([`TaskSim`]). Under the discrete-event scheduler (DESIGN.md §3) the
+//! service runs **multiple tasks concurrently**: every streaming slot of
+//! every active task is a fluid flow, and the per-stream rates are the
+//! max-min fair (water-filling) allocation over the WAN links it
+//! crosses, the source/destination storage throughputs, and its own TCP
+//! window cap. Simultaneous tasks therefore share bandwidth exactly the
+//! way `simnet::fluid` shares links. A single active task degenerates to
+//! the pre-DES allocation formula — `execute` (the synchronous
+//! single-task path) produces bit-identical timings to the old engine.
 
 use anyhow::{bail, Result};
 
 use super::endpoint::{Endpoint, EndpointRegistry};
 use super::task::{FileReport, TransferReport, TransferRequest};
-use crate::simnet::{FaultModel, Topology, VClock};
+use crate::simnet::{FaultModel, LinkId, Topology, VClock};
 use crate::util::Rng;
 
 /// Tunables of the transfer fabric.
@@ -57,14 +65,9 @@ impl Default for TransferParams {
     }
 }
 
-/// The service itself. One instance simulates one fabric.
-pub struct TransferService {
-    pub topo: Topology,
-    pub endpoints: EndpointRegistry,
-    pub params: TransferParams,
-    pub faults: FaultModel,
-    rng: Rng,
-}
+/// Handle for a task submitted to the concurrent fabric.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct TransferHandle(pub u64);
 
 #[derive(Debug, Clone, Copy)]
 enum SlotState {
@@ -87,6 +90,334 @@ struct Slot {
     prefetch: Option<(usize, f64)>,
 }
 
+/// Incremental simulation of one transfer task. Driven either to
+/// completion by `TransferService::execute` (exclusive fabric) or event
+/// by event alongside other tasks under the shared allocation.
+struct TaskSim {
+    req: TransferRequest,
+    route: Vec<LinkId>,
+    /// min(route bottleneck, src read, dst write) — the solo aggregate cap
+    total_cap: f64,
+    read_bps: f64,
+    write_bps: f64,
+    one_way: f64,
+    concurrency: usize,
+    start_vt: f64,
+    data_start: f64,
+    /// task-local frontier of simulated virtual time
+    t: f64,
+    slots: Vec<Slot>,
+    pending: std::collections::VecDeque<usize>,
+    reports: Vec<FileReport>,
+    /// destination checksums run off-slot (pipelined): (file, done_at)
+    checksums: Vec<(usize, f64)>,
+    done: usize,
+    retried_bytes: u64,
+    /// final completion event (data_end + detect) consumed
+    delivered: bool,
+}
+
+impl TaskSim {
+    fn new(svc: &TransferService, now: f64, req: &TransferRequest) -> Result<TaskSim> {
+        if req.files.is_empty() {
+            bail!("transfer `{}` has no files", req.label);
+        }
+        let src: Endpoint = svc.endpoints.get(&req.src)?.clone();
+        let dst: Endpoint = svc.endpoints.get(&req.dst)?.clone();
+        if src.facility == dst.facility {
+            bail!("transfer `{}` is intra-facility; use local staging", req.label);
+        }
+        let route = svc.topo.route(src.facility, dst.facility)?.to_vec();
+        let bottleneck = route
+            .iter()
+            .map(|&l| svc.topo.link(l).capacity_bps)
+            .fold(f64::INFINITY, f64::min);
+        let total_cap = bottleneck.min(src.read_bps).min(dst.write_bps);
+        let rtt = svc.topo.rtt(src.facility, dst.facility)?;
+        let one_way = svc.topo.route_latency(src.facility, dst.facility)?;
+
+        let concurrency = req
+            .concurrency
+            .unwrap_or(svc.params.auto_concurrency)
+            .clamp(1, req.files.len());
+
+        let start_vt = now;
+        // task submission + handshake (auth + negotiation)
+        let data_start = start_vt + svc.params.submit_overhead_s;
+        let t = data_start + svc.params.handshake_rtts * rtt;
+
+        let n = req.files.len();
+        let reports = req
+            .files
+            .iter()
+            .map(|f| FileReport {
+                name: f.name.clone(),
+                bytes: f.bytes,
+                attempts: 0,
+                start_vt: f64::NAN,
+                finish_vt: f64::NAN,
+            })
+            .collect();
+        Ok(TaskSim {
+            req: req.clone(),
+            route,
+            total_cap,
+            read_bps: src.read_bps,
+            write_bps: dst.write_bps,
+            one_way,
+            concurrency,
+            start_vt,
+            data_start,
+            t,
+            slots: (0..concurrency)
+                .map(|_| Slot {
+                    state: SlotState::Idle,
+                    prefetch: None,
+                })
+                .collect(),
+            pending: (0..n).collect(),
+            reports,
+            checksums: Vec::new(),
+            done: 0,
+            retried_bytes: 0,
+            delivered: false,
+        })
+    }
+
+    fn work_done(&self) -> bool {
+        self.done == self.req.files.len()
+    }
+
+    fn data_end(&self) -> f64 {
+        self.reports
+            .iter()
+            .map(|r| r.finish_vt)
+            .fold(f64::NEG_INFINITY, f64::max)
+    }
+
+    /// Fill idle slots at the task's current time (initial window /
+    /// post-drain). Idempotent at a fixed time.
+    fn fill_slots(&mut self, startup: f64) {
+        if self.work_done() {
+            return;
+        }
+        let t = self.t;
+        for slot in self.slots.iter_mut() {
+            if matches!(slot.state, SlotState::Idle) {
+                let next_file = slot
+                    .prefetch
+                    .take()
+                    .or_else(|| self.pending.pop_front().map(|fi| (fi, t + startup)));
+                if let Some((fi, ready)) = next_file {
+                    if self.reports[fi].start_vt.is_nan() {
+                        self.reports[fi].start_vt = t;
+                    }
+                    slot.state = SlotState::Starting(fi, ready.max(t), 1);
+                }
+            }
+        }
+    }
+
+    fn n_streaming(&self) -> usize {
+        self.slots
+            .iter()
+            .filter(|s| matches!(s.state, SlotState::Streaming(..)))
+            .count()
+    }
+
+    /// Next internal event given the per-stream `rate`. Once the data
+    /// phase is done, the single remaining event is task delivery
+    /// (completion detection).
+    fn next_event(&self, rate: f64, completion_detect_s: f64) -> f64 {
+        if self.work_done() {
+            return if self.delivered {
+                f64::INFINITY
+            } else {
+                self.data_end() + completion_detect_s
+            };
+        }
+        let mut next = f64::INFINITY;
+        for s in &self.slots {
+            let ev = match s.state {
+                SlotState::Idle => f64::INFINITY,
+                SlotState::Starting(_, ready, _) => ready,
+                SlotState::Streaming(_, remaining, _, fail_at) => {
+                    // event fires when `remaining` reaches the failure
+                    // point (or zero on a clean stream)
+                    let to_send = (remaining - fail_at.unwrap_or(0.0)).max(0.0);
+                    if rate > 0.0 {
+                        self.t + to_send / rate
+                    } else {
+                        f64::INFINITY
+                    }
+                }
+                SlotState::Backoff(_, until, _) => until,
+            };
+            next = next.min(ev);
+        }
+        for &(_, done_at) in &self.checksums {
+            next = next.min(done_at);
+        }
+        next
+    }
+
+    /// Advance to time `next` streaming at `rate`, then process every
+    /// transition due. `next` earlier than the task's own frontier is a
+    /// no-op (another task's event fired first).
+    fn advance(
+        &mut self,
+        next: f64,
+        rate: f64,
+        params: &TransferParams,
+        faults: &FaultModel,
+        rng: &mut Rng,
+    ) -> Result<()> {
+        if self.work_done() {
+            if !self.delivered && next >= self.data_end() + params.completion_detect_s {
+                self.delivered = true;
+            }
+            return Ok(());
+        }
+        if next < self.t {
+            // another task's event fired before this task's frontier
+            // (fresh task still in submit/handshake): nothing here can
+            // have happened yet — evaluating transitions at the frontier
+            // would fire zero-offset Starting/Backoff slots early and
+            // perturb the fault-RNG draw order
+            return Ok(());
+        }
+        let dt = (next - self.t).max(0.0);
+
+        // advance streams
+        for s in self.slots.iter_mut() {
+            if let SlotState::Streaming(_, ref mut remaining, _, _) = s.state {
+                *remaining -= rate * dt;
+            }
+        }
+        let t = self.t.max(next);
+        self.t = t;
+
+        // checksum completions
+        let one_way = self.one_way;
+        let reports = &mut self.reports;
+        let done = &mut self.done;
+        self.checksums.retain(|&(fi, done_at)| {
+            if done_at <= t + 1e-9 {
+                reports[fi].finish_vt = done_at + one_way;
+                *done += 1;
+                false
+            } else {
+                true
+            }
+        });
+
+        // slot transitions at time t
+        let startup = params.per_file_startup_s;
+        for slot in self.slots.iter_mut() {
+            match slot.state {
+                SlotState::Starting(fi, ready, attempt) if ready <= t + 1e-9 => {
+                    self.reports[fi].attempts = attempt;
+                    let bytes = self.req.files[fi].bytes as f64;
+                    let fail_at = faults
+                        .draw_failure(rng)
+                        .map(|frac| bytes * (1.0 - frac));
+                    slot.state = SlotState::Streaming(fi, bytes, attempt, fail_at);
+                    // pipeline the next file's startup behind this stream
+                    if slot.prefetch.is_none() {
+                        if let Some(nfi) = self.pending.pop_front() {
+                            slot.prefetch = Some((nfi, t + startup));
+                        }
+                    }
+                }
+                SlotState::Streaming(fi, remaining, attempt, fail_at) => {
+                    let threshold = fail_at.unwrap_or(0.0);
+                    // one-byte slack: at large virtual t, `t + dt`
+                    // rounding can leave sub-byte residues that would
+                    // otherwise stall the event loop (dt rounds to 0)
+                    if remaining <= threshold + 1.0 {
+                        if fail_at.is_some() {
+                            // mid-flight failure: bytes sent so far wasted
+                            let sent = self.req.files[fi].bytes as f64 - remaining;
+                            self.retried_bytes += sent.max(0.0) as u64;
+                            if attempt >= faults.max_attempts {
+                                bail!(
+                                    "transfer `{}`: file `{}` failed {} times",
+                                    self.req.label,
+                                    self.req.files[fi].name,
+                                    attempt
+                                );
+                            }
+                            slot.state = SlotState::Backoff(
+                                fi,
+                                t + faults.retry_backoff_s,
+                                attempt + 1,
+                            );
+                        } else {
+                            if self.req.verify_checksum {
+                                let cksum =
+                                    self.req.files[fi].bytes as f64 / params.checksum_bps;
+                                self.checksums.push((fi, t + cksum));
+                            } else {
+                                self.reports[fi].finish_vt = t + self.one_way;
+                                self.done += 1;
+                            }
+                            slot.state = SlotState::Idle; // refilled above
+                        }
+                    }
+                }
+                SlotState::Backoff(fi, until, attempt) if until <= t + 1e-9 => {
+                    slot.state = SlotState::Starting(fi, t + startup, attempt);
+                }
+                _ => {}
+            }
+        }
+        Ok(())
+    }
+
+    fn report(&self, completion_detect_s: f64) -> TransferReport {
+        let data_end = self.data_end();
+        TransferReport {
+            label: self.req.label.clone(),
+            src: self.req.src.clone(),
+            dst: self.req.dst.clone(),
+            bytes: self.req.total_bytes(),
+            concurrency: self.concurrency,
+            start_vt: self.start_vt,
+            data_start_vt: self.data_start,
+            data_end_vt: data_end,
+            finish_vt: data_end + completion_detect_s,
+            files: self.reports.clone(),
+            retried_bytes: self.retried_bytes,
+        }
+    }
+}
+
+struct ActiveTask {
+    handle: u64,
+    sim: TaskSim,
+}
+
+/// Abstract capacity a stream consumes: WAN links, endpoint storage, and
+/// its own TCP window — the link set the shared water-filling runs over.
+#[derive(Debug, Clone, PartialEq, Eq, PartialOrd, Ord)]
+enum CapKey {
+    Wan(usize),
+    Read(String),
+    Write(String),
+    Stream(usize, usize),
+}
+
+/// The service itself. One instance simulates one fabric.
+pub struct TransferService {
+    pub topo: Topology,
+    pub endpoints: EndpointRegistry,
+    pub params: TransferParams,
+    pub faults: FaultModel,
+    rng: Rng,
+    active: Vec<ActiveTask>,
+    next_handle: u64,
+}
+
 impl TransferService {
     pub fn new(topo: Topology, params: TransferParams, faults: FaultModel, seed: u64) -> Self {
         TransferService {
@@ -95,6 +426,8 @@ impl TransferService {
             params,
             faults,
             rng: Rng::new(seed),
+            active: Vec::new(),
+            next_handle: 1,
         }
     }
 
@@ -125,218 +458,222 @@ impl TransferService {
         svc
     }
 
-    /// Execute a transfer, advancing the shared virtual clock to its
-    /// completion. Returns the per-file breakdown.
-    pub fn execute(&mut self, clock: &mut VClock, req: &TransferRequest) -> Result<TransferReport> {
-        if req.files.is_empty() {
-            bail!("transfer `{}` has no files", req.label);
-        }
-        let src = self.endpoints.get(&req.src)?.clone();
-        let dst = self.endpoints.get(&req.dst)?.clone();
-        if src.facility == dst.facility {
-            bail!("transfer `{}` is intra-facility; use local staging", req.label);
-        }
-        let route = self.topo.route(src.facility, dst.facility)?;
-        let bottleneck = route
-            .iter()
-            .map(|&l| self.topo.link(l).capacity_bps)
-            .fold(f64::INFINITY, f64::min);
-        let total_cap = bottleneck.min(src.read_bps).min(dst.write_bps);
-        let rtt = self.topo.rtt(src.facility, dst.facility)?;
-        let one_way = self.topo.route_latency(src.facility, dst.facility)?;
+    /// Submit a task to the concurrent fabric at virtual time `now`.
+    /// It advances (sharing bandwidth with every other active task) as
+    /// the fabric is driven through `advance_to`.
+    pub fn submit_task(&mut self, now: f64, req: &TransferRequest) -> Result<TransferHandle> {
+        let sim = TaskSim::new(self, now, req)?;
+        let handle = TransferHandle(self.next_handle);
+        self.next_handle += 1;
+        self.active.push(ActiveTask {
+            handle: handle.0,
+            sim,
+        });
+        Ok(handle)
+    }
 
-        let concurrency = req
-            .concurrency
-            .unwrap_or(self.params.auto_concurrency)
-            .clamp(1, req.files.len());
+    /// Number of tasks currently in flight on the fabric.
+    pub fn active_tasks(&self) -> usize {
+        self.active.len()
+    }
 
-        let start_vt = clock.now();
-        // task submission + handshake (auth + negotiation)
-        let data_start = start_vt + self.params.submit_overhead_s;
-        let mut t = data_start + self.params.handshake_rtts * rtt;
-
-        let n = req.files.len();
-        let mut pending: std::collections::VecDeque<usize> = (0..n).collect();
-        let mut slots: Vec<Slot> = (0..concurrency)
-            .map(|_| Slot {
-                state: SlotState::Idle,
-                prefetch: None,
-            })
-            .collect();
-        let mut reports: Vec<FileReport> = req
-            .files
-            .iter()
-            .map(|f| FileReport {
-                name: f.name.clone(),
-                bytes: f.bytes,
-                attempts: 0,
-                start_vt: f64::NAN,
-                finish_vt: f64::NAN,
-            })
-            .collect();
-        // destination checksums run off-slot (pipelined): (file, done_at)
-        let mut checksums: Vec<(usize, f64)> = Vec::new();
-        let mut done = 0usize;
-        let mut retried_bytes = 0u64;
-        let startup = self.params.per_file_startup_s;
-
-        while done < n {
-            // fill idle slots (initial window / post-drain)
-            for slot in slots.iter_mut() {
-                if matches!(slot.state, SlotState::Idle) {
-                    let next_file = slot.prefetch.take().or_else(|| {
-                        pending.pop_front().map(|fi| (fi, t + startup))
-                    });
-                    if let Some((fi, ready)) = next_file {
-                        if reports[fi].start_vt.is_nan() {
-                            reports[fi].start_vt = t;
-                        }
-                        slot.state = SlotState::Starting(fi, ready.max(t), 1);
-                    }
-                }
-            }
-
-            let n_streaming = slots
-                .iter()
-                .filter(|s| matches!(s.state, SlotState::Streaming(..)))
-                .count();
-            let rate = if n_streaming > 0 {
-                (total_cap / n_streaming as f64).min(self.params.per_flow_cap_bps)
+    /// Per-active-task per-stream rates under the current contention.
+    ///
+    /// With exactly one active task this is the solo formula the
+    /// pre-DES engine used — `(total_cap / n_streaming).min(window)` —
+    /// so single-tenant runs stay bit-identical. With several, every
+    /// streaming slot becomes a flow in a max-min fair water-fill over
+    /// WAN links, shared storage, and per-stream window caps.
+    fn current_rates(&self) -> Vec<f64> {
+        if self.active.len() == 1 {
+            let sim = &self.active[0].sim;
+            let ns = sim.n_streaming();
+            let rate = if ns > 0 {
+                (sim.total_cap / ns as f64).min(self.params.per_flow_cap_bps)
             } else {
                 0.0
             };
+            return vec![rate];
+        }
+        self.shared_stream_rates()
+    }
 
-            // next event time across slots and checksums
-            let mut next = f64::INFINITY;
-            for s in &slots {
-                let ev = match s.state {
-                    SlotState::Idle => f64::INFINITY,
-                    SlotState::Starting(_, ready, _) => ready,
-                    SlotState::Streaming(_, remaining, _, fail_at) => {
-                        // event fires when `remaining` reaches the failure
-                        // point (or zero on a clean stream)
-                        let to_send = (remaining - fail_at.unwrap_or(0.0)).max(0.0);
-                        if rate > 0.0 {
-                            t + to_send / rate
-                        } else {
-                            f64::INFINITY
-                        }
-                    }
-                    SlotState::Backoff(_, until, _) => until,
-                };
-                next = next.min(ev);
+    fn shared_stream_rates(&self) -> Vec<f64> {
+        use std::collections::BTreeMap;
+        let mut caps: BTreeMap<CapKey, f64> = BTreeMap::new();
+        // one flow per streaming slot: (task idx, route over cap keys)
+        let mut flows: Vec<(usize, Vec<CapKey>)> = Vec::new();
+        for (ti, a) in self.active.iter().enumerate() {
+            let sim = &a.sim;
+            let ns = sim.n_streaming();
+            if ns == 0 {
+                continue;
             }
-            for &(_, done_at) in &checksums {
-                next = next.min(done_at);
+            let read_key = CapKey::Read(sim.req.src.0.clone());
+            let write_key = CapKey::Write(sim.req.dst.0.clone());
+            caps.entry(read_key.clone()).or_insert(sim.read_bps);
+            caps.entry(write_key.clone()).or_insert(sim.write_bps);
+            for &l in &sim.route {
+                caps.entry(CapKey::Wan(l.0))
+                    .or_insert_with(|| self.topo.link(l).capacity_bps);
             }
-            assert!(
-                next.is_finite(),
-                "transfer stalled: {} files pending, slots {slots:?}",
-                pending.len()
-            );
-            let dt = (next - t).max(0.0);
-
-            // advance streams
-            for s in slots.iter_mut() {
-                if let SlotState::Streaming(_, ref mut remaining, _, _) = s.state {
-                    *remaining -= rate * dt;
-                }
-            }
-            t = next;
-
-            // checksum completions
-            checksums.retain(|&(fi, done_at)| {
-                if done_at <= t + 1e-9 {
-                    reports[fi].finish_vt = done_at + one_way;
-                    done += 1;
-                    false
-                } else {
-                    true
-                }
-            });
-
-            // slot transitions at time t
-            for slot in slots.iter_mut() {
-                match slot.state {
-                    SlotState::Starting(fi, ready, attempt) if ready <= t + 1e-9 => {
-                        reports[fi].attempts = attempt;
-                        let bytes = req.files[fi].bytes as f64;
-                        let fail_at = self
-                            .faults
-                            .draw_failure(&mut self.rng)
-                            .map(|frac| bytes * (1.0 - frac));
-                        slot.state = SlotState::Streaming(fi, bytes, attempt, fail_at);
-                        // pipeline the next file's startup behind this stream
-                        if slot.prefetch.is_none() {
-                            if let Some(nfi) = pending.pop_front() {
-                                slot.prefetch = Some((nfi, t + startup));
-                            }
-                        }
-                    }
-                    SlotState::Streaming(fi, remaining, attempt, fail_at) => {
-                        let threshold = fail_at.unwrap_or(0.0);
-                        // one-byte slack: at large virtual t, `t + dt`
-                        // rounding can leave sub-byte residues that would
-                        // otherwise stall the event loop (dt rounds to 0)
-                        if remaining <= threshold + 1.0 {
-                            if fail_at.is_some() {
-                                // mid-flight failure: bytes sent so far wasted
-                                let sent = req.files[fi].bytes as f64 - remaining;
-                                retried_bytes += sent.max(0.0) as u64;
-                                if attempt >= self.faults.max_attempts {
-                                    bail!(
-                                        "transfer `{}`: file `{}` failed {} times",
-                                        req.label,
-                                        req.files[fi].name,
-                                        attempt
-                                    );
-                                }
-                                slot.state = SlotState::Backoff(
-                                    fi,
-                                    t + self.faults.retry_backoff_s,
-                                    attempt + 1,
-                                );
-                            } else {
-                                if req.verify_checksum {
-                                    let cksum =
-                                        req.files[fi].bytes as f64 / self.params.checksum_bps;
-                                    checksums.push((fi, t + cksum));
-                                } else {
-                                    reports[fi].finish_vt = t + one_way;
-                                    done += 1;
-                                }
-                                slot.state = SlotState::Idle; // refilled above
-                            }
-                        }
-                    }
-                    SlotState::Backoff(fi, until, attempt) if until <= t + 1e-9 => {
-                        slot.state = SlotState::Starting(fi, t + startup, attempt);
-                    }
-                    _ => {}
-                }
+            for si in 0..ns {
+                let stream_key = CapKey::Stream(ti, si);
+                caps.insert(stream_key.clone(), self.params.per_flow_cap_bps);
+                let mut route = vec![read_key.clone()];
+                route.extend(sim.route.iter().map(|l| CapKey::Wan(l.0)));
+                route.push(write_key.clone());
+                route.push(stream_key);
+                flows.push((ti, route));
             }
         }
 
-        let data_end = reports
-            .iter()
-            .map(|r| r.finish_vt)
-            .fold(f64::NEG_INFINITY, f64::max);
-        let finish = data_end + self.params.completion_detect_s;
-        clock.advance_to(finish);
+        // water-fill: repeatedly saturate the link with the smallest
+        // fair share (same algorithm as simnet::fluid::max_min_rates)
+        let mut remaining = caps;
+        let mut rates = vec![0.0; flows.len()];
+        let mut unfixed: Vec<usize> = (0..flows.len()).collect();
+        while !unfixed.is_empty() {
+            let mut best: Option<(CapKey, f64)> = None;
+            for (k, &cap) in &remaining {
+                let users = unfixed
+                    .iter()
+                    .filter(|&&f| flows[f].1.contains(k))
+                    .count();
+                if users == 0 {
+                    continue;
+                }
+                let share = cap / users as f64;
+                if best.as_ref().map(|(_, s)| share < *s).unwrap_or(true) {
+                    best = Some((k.clone(), share));
+                }
+            }
+            let Some((bottleneck, share)) = best else { break };
+            let (fixed, rest): (Vec<usize>, Vec<usize>) = unfixed
+                .into_iter()
+                .partition(|&f| flows[f].1.contains(&bottleneck));
+            for &f in &fixed {
+                rates[f] = share;
+                for k in &flows[f].1 {
+                    if let Some(c) = remaining.get_mut(k) {
+                        *c = (*c - share).max(0.0);
+                    }
+                }
+            }
+            remaining.remove(&bottleneck);
+            unfixed = rest;
+        }
 
-        Ok(TransferReport {
-            label: req.label.clone(),
-            src: req.src.clone(),
-            dst: req.dst.clone(),
-            bytes: req.total_bytes(),
-            concurrency,
-            start_vt,
-            data_start_vt: data_start,
-            data_end_vt: data_end,
-            finish_vt: finish,
-            files: reports,
-            retried_bytes,
-        })
+        // streams of one task are symmetric: report one per-stream rate
+        // per task (zero for tasks with nothing streaming)
+        let mut per_task = vec![0.0; self.active.len()];
+        for (fi, (ti, _)) in flows.iter().enumerate() {
+            per_task[*ti] = rates[fi];
+        }
+        per_task
+    }
+
+    /// Earliest future virtual time the fabric changes state, under the
+    /// current allocation. `None` when no task is active.
+    pub fn next_event_time(&mut self) -> Option<f64> {
+        if self.active.is_empty() {
+            return None;
+        }
+        let startup = self.params.per_file_startup_s;
+        for a in &mut self.active {
+            a.sim.fill_slots(startup);
+        }
+        let rates = self.current_rates();
+        let detect = self.params.completion_detect_s;
+        let mut t = f64::INFINITY;
+        for (a, &r) in self.active.iter().zip(&rates) {
+            t = t.min(a.sim.next_event(r, detect));
+        }
+        t.is_finite().then_some(t)
+    }
+
+    /// Drive every active task to virtual time `t`, re-solving the
+    /// shared allocation at each arrival/completion event. Returns tasks
+    /// delivered (or hard-failed) by `t`.
+    pub fn advance_to(&mut self, t: f64) -> Vec<(TransferHandle, Result<TransferReport>)> {
+        let mut out = Vec::new();
+        while !self.active.is_empty() {
+            let startup = self.params.per_file_startup_s;
+            for a in &mut self.active {
+                a.sim.fill_slots(startup);
+            }
+            let rates = self.current_rates();
+            let detect = self.params.completion_detect_s;
+            let mut min_t = f64::INFINITY;
+            for (a, &r) in self.active.iter().zip(&rates) {
+                min_t = min_t.min(a.sim.next_event(r, detect));
+            }
+            assert!(
+                min_t.is_finite(),
+                "transfer fabric stalled with {} active task(s)",
+                self.active.len()
+            );
+            let step_t = if min_t <= t { min_t } else { t };
+            // advance every task (streams flow between events even when
+            // the event belongs to another task)
+            let params = &self.params;
+            let faults = &self.faults;
+            let rng = &mut self.rng;
+            let mut failures: Vec<(usize, anyhow::Error)> = Vec::new();
+            for (i, (a, &r)) in self.active.iter_mut().zip(&rates).enumerate() {
+                if let Err(e) = a.sim.advance(step_t, r, params, faults, rng) {
+                    failures.push((i, e));
+                }
+            }
+            // remove hard failures (highest index first)
+            for (i, e) in failures.into_iter().rev() {
+                let a = self.active.remove(i);
+                out.push((TransferHandle(a.handle), Err(e)));
+            }
+            // collect deliveries
+            let detect_s = detect;
+            let mut i = 0;
+            while i < self.active.len() {
+                if self.active[i].sim.delivered {
+                    let a = self.active.remove(i);
+                    out.push((TransferHandle(a.handle), Ok(a.sim.report(detect_s))));
+                } else {
+                    i += 1;
+                }
+            }
+            if min_t > t {
+                break; // streamed partial progress up to the horizon
+            }
+        }
+        out
+    }
+
+    /// Execute a transfer synchronously, advancing the shared virtual
+    /// clock to its completion — the exclusive single-task path (Table 1,
+    /// Fig. 3). Returns the per-file breakdown.
+    pub fn execute(&mut self, clock: &mut VClock, req: &TransferRequest) -> Result<TransferReport> {
+        let mut sim = TaskSim::new(self, clock.now(), req)?;
+        let startup = self.params.per_file_startup_s;
+        while !sim.work_done() {
+            sim.fill_slots(startup);
+            let n_streaming = sim.n_streaming();
+            let rate = if n_streaming > 0 {
+                (sim.total_cap / n_streaming as f64).min(self.params.per_flow_cap_bps)
+            } else {
+                0.0
+            };
+            let next = sim.next_event(rate, self.params.completion_detect_s);
+            assert!(
+                next.is_finite(),
+                "transfer stalled: {} files pending, slots {:?}",
+                sim.pending.len(),
+                sim.slots
+            );
+            sim.advance(next, rate, &self.params, &self.faults, &mut self.rng)?;
+        }
+        let report = sim.report(self.params.completion_detect_s);
+        clock.advance_to(report.finish_vt);
+        Ok(report)
     }
 
     /// Predict a transfer duration with the paper's linear model
@@ -521,5 +858,153 @@ mod tests {
         let mut unknown = unknown;
         unknown.src = "nowhere#dtn".into();
         assert!(s.execute(&mut clock, &unknown).is_err());
+    }
+
+    /// Drive the fabric until a set of handles complete.
+    fn drive(
+        s: &mut TransferService,
+        want: usize,
+    ) -> Vec<(TransferHandle, Result<TransferReport>)> {
+        let mut done = Vec::new();
+        while done.len() < want {
+            let t = s.next_event_time().expect("fabric has pending events");
+            done.extend(s.advance_to(t));
+        }
+        done
+    }
+
+    /// The N=1 degenerate case of the concurrent fabric must reproduce
+    /// the synchronous `execute` path bit for bit — this is what makes
+    /// `xloop campaign --users 1` match `xloop table1` exactly.
+    #[test]
+    fn fabric_single_task_is_bit_identical_to_execute() {
+        let mut a = svc();
+        let mut clock = VClock::new();
+        let rep = a.execute(&mut clock, &gb_request(16, Some(4))).unwrap();
+
+        let mut b = svc();
+        let h = b.submit_task(0.0, &gb_request(16, Some(4))).unwrap();
+        let mut done = drive(&mut b, 1);
+        let (hh, rep2) = done.pop().unwrap();
+        let rep2 = rep2.unwrap();
+        assert_eq!(hh, h);
+        assert_eq!(rep.finish_vt, rep2.finish_vt);
+        assert_eq!(rep.data_end_vt, rep2.data_end_vt);
+        assert_eq!(rep.data_start_vt, rep2.data_start_vt);
+        for (f1, f2) in rep.files.iter().zip(&rep2.files) {
+            assert_eq!(f1.start_vt, f2.start_vt, "{}", f1.name);
+            assert_eq!(f1.finish_vt, f2.finish_vt, "{}", f1.name);
+        }
+    }
+
+    /// Satellite acceptance: two simultaneous tasks over the paper
+    /// topology each see the max-min fair share (about half the solo
+    /// aggregate) and finish later than either would alone.
+    #[test]
+    fn two_concurrent_tasks_share_bandwidth_max_min() {
+        let mut solo = svc();
+        let mut clock = VClock::new();
+        let alone = solo.execute(&mut clock, &gb_request(16, Some(8))).unwrap();
+
+        let mut s = svc();
+        let h1 = s.submit_task(0.0, &gb_request(16, Some(8))).unwrap();
+        let h2 = s.submit_task(0.0, &gb_request(16, Some(8))).unwrap();
+        assert_eq!(s.active_tasks(), 2);
+        let done = drive(&mut s, 2);
+        let rep = |h: TransferHandle| {
+            done.iter()
+                .find(|(hh, _)| *hh == h)
+                .unwrap()
+                .1
+                .as_ref()
+                .unwrap()
+                .clone()
+        };
+        let r1 = rep(h1);
+        let r2 = rep(h2);
+
+        // both slower than the uncontended task
+        assert!(r1.finish_vt > alone.finish_vt, "{} !> {}", r1.finish_vt, alone.finish_vt);
+        assert!(r2.finish_vt > alone.finish_vt);
+        // identical tasks: symmetric completion
+        assert!((r1.finish_vt - r2.finish_vt).abs() < 1e-6, "{r1:?} vs {r2:?}");
+        // per-task goodput is the fair share: roughly half the solo
+        // aggregate (within startup/checksum overhead effects)
+        let half = alone.throughput_bps() / 2.0;
+        for r in [&r1, &r2] {
+            let tp = r.throughput_bps();
+            assert!(
+                tp > half * 0.8 && tp < half * 1.2,
+                "per-task throughput {tp} not near fair share {half}"
+            );
+        }
+    }
+
+    /// A task arriving mid-flight slows the incumbent down (its finish
+    /// moves later than the uncontended run) — bandwidth is re-allocated
+    /// at arrival events, like `simnet::fluid` does for raw flows.
+    #[test]
+    fn late_arrival_reallocates_bandwidth() {
+        let mut solo = svc();
+        let mut clock = VClock::new();
+        // 4 GB so the data phase is long enough to overlap
+        let mut big = TransferRequest::split_even(
+            "big",
+            "slac#dtn".into(),
+            "alcf#dtn".into(),
+            4_000_000_000,
+            16,
+        );
+        big.concurrency = Some(8);
+        let alone = solo.execute(&mut clock, &big).unwrap();
+
+        let mut s = svc();
+        let h1 = s.submit_task(0.0, &big).unwrap();
+        let h2 = s.submit_task(1.0, &gb_request(16, Some(8))).unwrap();
+        let done = drive(&mut s, 2);
+        let r1 = done
+            .iter()
+            .find(|(h, _)| *h == h1)
+            .unwrap()
+            .1
+            .as_ref()
+            .unwrap()
+            .clone();
+        let r2 = done
+            .iter()
+            .find(|(h, _)| *h == h2)
+            .unwrap()
+            .1
+            .as_ref()
+            .unwrap()
+            .clone();
+        assert!(r1.finish_vt > alone.finish_vt, "incumbent not slowed");
+        assert!(r2.finish_vt.is_finite());
+    }
+
+    /// Tasks in opposite directions share the same bidirectional links
+    /// in this fabric, but storage caps differ per endpoint; both must
+    /// complete and the allocation must never exceed the NIC.
+    #[test]
+    fn opposite_direction_tasks_complete() {
+        let mut s = svc();
+        let mut back = TransferRequest::split_even(
+            "back",
+            "alcf#dtn".into(),
+            "slac#dtn".into(),
+            1_000_000_000,
+            16,
+        );
+        back.concurrency = Some(8);
+        let h1 = s.submit_task(0.0, &gb_request(16, Some(8))).unwrap();
+        let h2 = s.submit_task(0.0, &back).unwrap();
+        let done = drive(&mut s, 2);
+        for (_, r) in &done {
+            let r = r.as_ref().unwrap();
+            assert!(r.throughput_bps() <= 1.25e9 * 1.001);
+            assert!(r.files.iter().all(|f| f.finish_vt.is_finite()));
+        }
+        assert!(done.iter().any(|(h, _)| *h == h1));
+        assert!(done.iter().any(|(h, _)| *h == h2));
     }
 }

@@ -1,0 +1,484 @@
+//! Multi-tenant retraining campaigns: N users' DNNTrainerFlows
+//! interleaved over the shared DCAI + WAN fabric (DESIGN.md §3).
+//!
+//! The paper measures a *single* user's turnaround; a facility serves
+//! many beamlines at once, where DCAI queue wait and shared ESnet
+//! bandwidth dominate. This layer launches N copies of the retraining
+//! scenario with Poisson arrivals and drives them through one
+//! discrete-event loop: flow runs park on fabric tickets, faas endpoints
+//! queue on capacity slots, and concurrent transfers share bandwidth
+//! max-min fairly. The N=1 campaign reproduces `xloop table1`'s
+//! per-phase breakdown bit for bit; at higher loads it answers the
+//! question Table 1 cannot: at what load does the local V100 beat the
+//! remote DCAI?
+
+use anyhow::{Context, Result};
+
+use super::coordinator::{extract_breakdown, RetrainBreakdown};
+use super::flow::{dnn_trainer_flow, FlowShape};
+use super::scenario::Scenario;
+use super::world::{TrainingMode, World};
+use crate::flows::{FabricHost, FlowEngine, FlowRun, RunPoll, RunReport, Ticket};
+use crate::simnet::{Scheduler, VClock};
+use crate::util::{Json, Rng};
+
+/// One campaign: N users retraining the same scenario on one fabric.
+#[derive(Debug, Clone)]
+pub struct CampaignConfig {
+    pub users: usize,
+    pub scenario: Scenario,
+    /// mean seconds between user arrivals (Poisson process; the first
+    /// user arrives at t=0). `<= 0` launches everyone at once.
+    pub mean_interarrival_s: f64,
+    /// seed for the arrival process (the fabric uses `scenario.seed`)
+    pub seed: u64,
+}
+
+/// Outcome for one user's retraining.
+#[derive(Debug, Clone)]
+pub struct UserOutcome {
+    pub user: usize,
+    pub arrival_vt: f64,
+    /// when the user's flow (including deploy) finished
+    pub finished_vt: f64,
+    /// arrival to deployed model, the loaded-facility turnaround
+    pub turnaround_s: f64,
+    /// the Table 1 per-phase breakdown of this user's flow
+    pub breakdown: RetrainBreakdown,
+}
+
+/// Aggregate faas load on one endpoint over the campaign.
+#[derive(Debug, Clone)]
+pub struct EndpointLoad {
+    pub endpoint: String,
+    pub tasks: u64,
+    pub total_queue_wait_s: f64,
+    pub max_queue_wait_s: f64,
+}
+
+impl EndpointLoad {
+    pub fn mean_queue_wait_s(&self) -> f64 {
+        if self.tasks == 0 {
+            0.0
+        } else {
+            self.total_queue_wait_s / self.tasks as f64
+        }
+    }
+}
+
+/// Full campaign outcome.
+#[derive(Debug, Clone)]
+pub struct CampaignReport {
+    pub config_users: usize,
+    pub mean_interarrival_s: f64,
+    pub users: Vec<UserOutcome>,
+    pub endpoint_loads: Vec<EndpointLoad>,
+    /// mean per-task goodput over every WAN transfer in the campaign
+    pub mean_task_throughput_bps: f64,
+    /// first arrival to last deployment
+    pub makespan_s: f64,
+}
+
+impl CampaignReport {
+    /// Nearest-rank percentile of user turnaround (q in [0, 100]).
+    pub fn turnaround_percentile(&self, q: f64) -> f64 {
+        let mut ts: Vec<f64> = self.users.iter().map(|u| u.turnaround_s).collect();
+        if ts.is_empty() {
+            return 0.0;
+        }
+        ts.sort_by(f64::total_cmp);
+        let idx = ((q / 100.0) * (ts.len() - 1) as f64).round() as usize;
+        ts[idx.min(ts.len() - 1)]
+    }
+
+    pub fn max_turnaround_s(&self) -> f64 {
+        self.users
+            .iter()
+            .map(|u| u.turnaround_s)
+            .fold(0.0, f64::max)
+    }
+
+    pub fn load(&self, endpoint: &str) -> Option<&EndpointLoad> {
+        self.endpoint_loads.iter().find(|l| l.endpoint == endpoint)
+    }
+}
+
+/// Per-user progress through the campaign.
+enum UserState {
+    /// not yet arrived
+    Waiting,
+    /// dataset generation queued on `slac#sim`
+    Preparing(Ticket),
+    /// flow in progress
+    Running(FlowRun),
+    Done(RunReport),
+}
+
+/// Events on the campaign's scheduler: user arrivals are static and live
+/// in the heap; `Scan` wake-ups are scheduled each round for the
+/// earliest *dynamic* source (a flow's scheduled completion or a fabric
+/// state change, whose times shift with contention). Spurious or stale
+/// wake-ups are harmless — every firing just re-scans at `now`.
+enum Wake {
+    Arrival,
+    Scan,
+}
+
+/// Run a campaign to completion on a fresh paper fabric.
+///
+/// Every user runs the same scenario (per-user dataset names keep their
+/// data disjoint); training is virtual-only — the campaign is a capacity
+/// study, not a weights producer.
+pub fn run_campaign(cfg: &CampaignConfig) -> Result<CampaignReport> {
+    anyhow::ensure!(cfg.users > 0, "campaign needs at least one user");
+    let mut world = World::paper(cfg.scenario.seed)?;
+    world.training_mode = TrainingMode::VirtualOnly;
+    let mut engine = FlowEngine::<World>::new();
+    super::providers::register_all(&mut engine)?;
+    let clock0 = VClock::new();
+    let token = engine
+        .auth
+        .issue(
+            &clock0,
+            "beamline-scientist",
+            &["transfer:use", "compute:use", "deploy:use", "rollback:use"],
+            30.0 * 24.0 * 3600.0,
+        )
+        .id;
+
+    // Poisson arrivals: exponential inter-arrival gaps, first user at 0
+    let mut arrivals = vec![0.0f64];
+    let mut rng = Rng::new(cfg.seed);
+    for i in 1..cfg.users {
+        let gap = if cfg.mean_interarrival_s > 0.0 {
+            rng.exponential(1.0 / cfg.mean_interarrival_s)
+        } else {
+            0.0
+        };
+        arrivals.push(arrivals[i - 1] + gap);
+    }
+
+    let shape = FlowShape {
+        remote: cfg.scenario.mode.is_remote(),
+        ..Default::default()
+    };
+    let def = dnn_trainer_flow(&shape)?;
+    let datasets: Vec<String> = (0..cfg.users)
+        .map(|i| format!("{}-train-u{}", cfg.scenario.model, i + 1))
+        .collect();
+
+    let mut states: Vec<UserState> = (0..cfg.users).map(|_| UserState::Waiting).collect();
+    let gen = crate::faas::FuncId("generate_data".into());
+
+    // The event-queue scheduler owns the campaign's virtual clock
+    // (single writer): arrivals are scheduled up front, dynamic wake-ups
+    // (flow completions, fabric events) are fed in each round, and every
+    // time step is a deterministic heap pop.
+    let mut sched = Scheduler::<Wake>::new();
+    for &a in &arrivals {
+        sched.schedule_at(a, Wake::Arrival);
+    }
+
+    loop {
+        let now = sched.now();
+        // settle everything possible at the current instant (poll order =
+        // user index order: the deterministic tie-break)
+        loop {
+            let mut progressed = false;
+            for i in 0..cfg.users {
+                match &mut states[i] {
+                    UserState::Waiting => {
+                        if arrivals[i] <= now {
+                            let args = Json::obj(vec![
+                                ("model", Json::str(cfg.scenario.model.clone())),
+                                ("n", Json::num(cfg.scenario.real_samples as f64)),
+                                ("seed", Json::num(cfg.scenario.seed as f64)),
+                                ("name", Json::str(datasets[i].clone())),
+                            ]);
+                            let ticket = world
+                                .submit_compute_ticket(now, "slac#sim", &gen, &args)
+                                .with_context(|| format!("user {i} dataset generation"))?;
+                            states[i] = UserState::Preparing(ticket);
+                            progressed = true;
+                        }
+                    }
+                    UserState::Preparing(ticket) => {
+                        if let Some((tf, res)) = world.take_ready(*ticket) {
+                            res.with_context(|| format!("user {i} dataset generation"))?;
+                            let input = Json::obj(vec![
+                                ("model", Json::str(cfg.scenario.model.clone())),
+                                ("dataset", Json::str(datasets[i].clone())),
+                                (
+                                    "dataset_bytes",
+                                    Json::num(cfg.scenario.staged_bytes as f64),
+                                ),
+                                (
+                                    "train_endpoint",
+                                    Json::str(cfg.scenario.mode.train_endpoint()),
+                                ),
+                            ]);
+                            let run = engine.begin(&def, &input, &token, tf)?;
+                            states[i] = UserState::Running(run);
+                            progressed = true;
+                        }
+                    }
+                    UserState::Running(run) => {
+                        if engine.poll(run, &mut world, now)? == RunPoll::Finished {
+                            let prev = std::mem::replace(&mut states[i], UserState::Waiting);
+                            let UserState::Running(run) = prev else { unreachable!() };
+                            states[i] = UserState::Done(run.into_report());
+                            progressed = true;
+                        }
+                    }
+                    UserState::Done(_) => {}
+                }
+            }
+            if !progressed {
+                break;
+            }
+        }
+        if states.iter().all(|s| matches!(s, UserState::Done(_))) {
+            break;
+        }
+
+        // earliest *dynamic* source: a scheduled flow completion or a
+        // fabric event (queue start/completion, transfer
+        // re-allocation/delivery); arrivals already live in the heap
+        let mut dyn_t = f64::INFINITY;
+        for s in states.iter_mut() {
+            if let UserState::Running(run) = s {
+                if let RunPoll::WaitUntil(t) = engine.poll(run, &mut world, now)? {
+                    dyn_t = dyn_t.min(t);
+                }
+            }
+        }
+        if let Some(t) = world.next_fabric_event() {
+            dyn_t = dyn_t.min(t);
+        }
+        if dyn_t.is_finite() {
+            sched.schedule_at(dyn_t.max(now), Wake::Scan);
+        }
+        let Some((t, _wake)) = sched.pop() else {
+            anyhow::bail!(
+                "campaign stalled at vt {now:.3} ({} users incomplete)",
+                states
+                    .iter()
+                    .filter(|s| !matches!(s, UserState::Done(_)))
+                    .count()
+            );
+        };
+        world.advance_fabrics(t);
+    }
+
+    // per-user outcomes
+    let mut users = Vec::with_capacity(cfg.users);
+    for (i, s) in states.into_iter().enumerate() {
+        let UserState::Done(report) = s else { unreachable!() };
+        anyhow::ensure!(
+            report.succeeded,
+            "user {i} flow failed: {:?}",
+            report
+                .records
+                .iter()
+                .map(|r| format!("{}:{:?}", r.id, r.status))
+                .collect::<Vec<_>>()
+        );
+        let breakdown = extract_breakdown(&report, &cfg.scenario, report.start_vt)?;
+        users.push(UserOutcome {
+            user: i + 1,
+            arrival_vt: arrivals[i],
+            finished_vt: report.end_vt,
+            turnaround_s: report.end_vt - arrivals[i],
+            breakdown,
+        });
+    }
+
+    // endpoint queue statistics from the faas records
+    let mut loads: std::collections::BTreeMap<String, EndpointLoad> =
+        std::collections::BTreeMap::new();
+    if let Some(faas) = world.faas.as_ref() {
+        for rec in faas.records() {
+            if !rec.status.is_complete() {
+                continue;
+            }
+            let wait = rec.queue_wait_secs();
+            let entry = loads
+                .entry(rec.endpoint.clone())
+                .or_insert_with(|| EndpointLoad {
+                    endpoint: rec.endpoint.clone(),
+                    tasks: 0,
+                    total_queue_wait_s: 0.0,
+                    max_queue_wait_s: 0.0,
+                });
+            entry.tasks += 1;
+            entry.total_queue_wait_s += wait;
+            entry.max_queue_wait_s = entry.max_queue_wait_s.max(wait);
+        }
+    }
+
+    let mean_task_throughput_bps = if world.transfer_log.is_empty() {
+        0.0
+    } else {
+        world
+            .transfer_log
+            .iter()
+            .map(|r| r.throughput_bps())
+            .sum::<f64>()
+            / world.transfer_log.len() as f64
+    };
+    let makespan_s = users.iter().map(|u| u.finished_vt).fold(0.0, f64::max);
+
+    Ok(CampaignReport {
+        config_users: cfg.users,
+        mean_interarrival_s: cfg.mean_interarrival_s,
+        users,
+        endpoint_loads: loads.into_values().collect(),
+        mean_task_throughput_bps,
+        makespan_s,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workflow::scenario::Mode;
+    use crate::workflow::{Coordinator, TrainingMode};
+
+    fn artifacts_present() -> bool {
+        crate::models::default_artifacts_dir()
+            .join("manifest.json")
+            .exists()
+    }
+
+    /// Acceptance: the N=1 campaign is the degenerate case of the DES
+    /// machinery and must reproduce the synchronous table1 path's
+    /// per-phase breakdown with bit-identical virtual times.
+    #[test]
+    fn single_user_campaign_matches_table1_bit_for_bit() {
+        if !artifacts_present() {
+            return;
+        }
+        let scenario = Scenario::table1("braggnn", Mode::RemoteCerebras).unwrap();
+
+        let mut c = Coordinator::paper(scenario.seed).unwrap();
+        c.set_training_mode(TrainingMode::VirtualOnly);
+        let table1 = c.run_retraining(&scenario, None).unwrap().breakdown;
+
+        let report = run_campaign(&CampaignConfig {
+            users: 1,
+            scenario,
+            mean_interarrival_s: 60.0,
+            seed: 42,
+        })
+        .unwrap();
+        let b = &report.users[0].breakdown;
+
+        assert_eq!(b.data_transfer_s, table1.data_transfer_s);
+        assert_eq!(b.training_s, table1.training_s);
+        assert_eq!(b.model_transfer_s, table1.model_transfer_s);
+        assert_eq!(b.end_to_end_s, table1.end_to_end_s);
+        // uncontended: no queue wait anywhere
+        for load in &report.endpoint_loads {
+            assert_eq!(load.total_queue_wait_s, 0.0, "{load:?}");
+        }
+    }
+
+    /// Contended campaign: simultaneous users queue on the capacity-1
+    /// DCAI trainer and share WAN bandwidth, so tail turnaround grows
+    /// and per-task transfer throughput drops below the solo value.
+    #[test]
+    fn contention_creates_queue_wait_and_slower_transfers() {
+        if !artifacts_present() {
+            return;
+        }
+        let scenario = Scenario::table1("braggnn", Mode::RemoteCerebras).unwrap();
+        let solo = run_campaign(&CampaignConfig {
+            users: 1,
+            scenario: scenario.clone(),
+            mean_interarrival_s: 1.0,
+            seed: 7,
+        })
+        .unwrap();
+
+        let loaded = run_campaign(&CampaignConfig {
+            users: 4,
+            scenario,
+            mean_interarrival_s: 1.0, // near-simultaneous arrivals
+            seed: 7,
+        })
+        .unwrap();
+
+        // DCAI queue wait appears on the trainer
+        let train_load = loaded.load("alcf#cerebras").expect("trainer used");
+        assert!(
+            train_load.total_queue_wait_s > 0.0,
+            "no queue wait under contention: {train_load:?}"
+        );
+        // the tail is strictly worse than the uncontended turnaround
+        assert!(
+            loaded.max_turnaround_s() > solo.users[0].turnaround_s,
+            "tail {} not above solo {}",
+            loaded.max_turnaround_s(),
+            solo.users[0].turnaround_s
+        );
+        // concurrent staging shares the WAN: per-task goodput drops
+        assert!(
+            loaded.mean_task_throughput_bps < solo.mean_task_throughput_bps,
+            "transfer throughput did not degrade: {} vs {}",
+            loaded.mean_task_throughput_bps,
+            solo.mean_task_throughput_bps
+        );
+        // percentiles are ordered
+        assert!(
+            loaded.turnaround_percentile(95.0) >= loaded.turnaround_percentile(50.0)
+        );
+        assert!((loaded.makespan_s) >= loaded.users[0].turnaround_s);
+    }
+
+    /// The arrival process and the full DES replay are deterministic for
+    /// a given seed.
+    #[test]
+    fn campaign_is_deterministic_for_seed() {
+        if !artifacts_present() {
+            return;
+        }
+        let scenario = Scenario::table1("cookienetae", Mode::RemoteCerebras).unwrap();
+        let cfg = CampaignConfig {
+            users: 3,
+            scenario,
+            mean_interarrival_s: 10.0,
+            seed: 11,
+        };
+        let a = run_campaign(&cfg).unwrap();
+        let b = run_campaign(&cfg).unwrap();
+        for (ua, ub) in a.users.iter().zip(&b.users) {
+            assert_eq!(ua.arrival_vt, ub.arrival_vt);
+            assert_eq!(ua.turnaround_s, ub.turnaround_s);
+            assert_eq!(ua.finished_vt, ub.finished_vt);
+        }
+    }
+
+    /// Local-mode campaigns run with no transfers but still queue on the
+    /// single V100.
+    #[test]
+    fn local_mode_campaign_queues_on_v100() {
+        if !artifacts_present() {
+            return;
+        }
+        let scenario = Scenario::table1("braggnn", Mode::LocalV100).unwrap();
+        let rep = run_campaign(&CampaignConfig {
+            users: 2,
+            scenario,
+            mean_interarrival_s: 1.0,
+            seed: 3,
+        })
+        .unwrap();
+        assert_eq!(rep.mean_task_throughput_bps, 0.0); // no WAN transfers
+        let v100 = rep.load("slac#v100").expect("v100 used");
+        // local training is ~30x slower; the second user queues behind it
+        assert!(v100.total_queue_wait_s > 0.0, "{v100:?}");
+        for u in &rep.users {
+            assert!(u.breakdown.data_transfer_s.is_none());
+        }
+    }
+}

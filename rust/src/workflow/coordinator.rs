@@ -130,31 +130,7 @@ impl Coordinator {
                 .collect::<Vec<_>>()
         );
 
-        let action_secs = |id: &str| -> Option<f64> {
-            report.record(id).ok().map(|r| r.duration())
-        };
-        // paper §5: end-to-end = initiation until the model is received
-        // at the edge host machine (deploy/verify excluded)
-        let received_at = if scenario.mode.is_remote() {
-            report.record("return_model")?.end_vt
-        } else {
-            report.record("train")?.end_vt
-        };
-
-        let train_output = report.output("train")?.get("output").clone();
-        let breakdown = RetrainBreakdown {
-            model: scenario.model.clone(),
-            mode_label: scenario.mode.label().to_string(),
-            data_transfer_s: action_secs("stage_data"),
-            training_s: action_secs("train").context("train action missing")?,
-            model_transfer_s: action_secs("return_model"),
-            end_to_end_s: received_at - run_start,
-            final_loss: train_output
-                .get("final_loss")
-                .as_f64()
-                .map(|v| v as f32),
-            real_steps: train_output.get("real_steps").as_u64().unwrap_or(0),
-        };
+        let breakdown = extract_breakdown(&report, scenario, run_start)?;
         Ok(RetrainOutcome { report, breakdown })
     }
 
@@ -162,6 +138,41 @@ impl Coordinator {
     pub fn set_training_mode(&mut self, mode: TrainingMode) {
         self.world.training_mode = mode;
     }
+}
+
+/// Extract the Table 1 per-phase breakdown from a DNNTrainerFlow run
+/// report (shared by the single-flow coordinator and the multi-tenant
+/// campaign layer, whose N=1 case must match it bit for bit).
+pub fn extract_breakdown(
+    report: &RunReport,
+    scenario: &Scenario,
+    run_start: f64,
+) -> Result<RetrainBreakdown> {
+    let action_secs = |id: &str| -> Option<f64> {
+        report.record(id).ok().map(|r| r.duration())
+    };
+    // paper §5: end-to-end = initiation until the model is received
+    // at the edge host machine (deploy/verify excluded)
+    let received_at = if scenario.mode.is_remote() {
+        report.record("return_model")?.end_vt
+    } else {
+        report.record("train")?.end_vt
+    };
+
+    let train_output = report.output("train")?.get("output").clone();
+    Ok(RetrainBreakdown {
+        model: scenario.model.clone(),
+        mode_label: scenario.mode.label().to_string(),
+        data_transfer_s: action_secs("stage_data"),
+        training_s: action_secs("train").context("train action missing")?,
+        model_transfer_s: action_secs("return_model"),
+        end_to_end_s: received_at - run_start,
+        final_loss: train_output
+            .get("final_loss")
+            .as_f64()
+            .map(|v| v as f32),
+        real_steps: train_output.get("real_steps").as_u64().unwrap_or(0),
+    })
 }
 
 /// Render Table 1 rows as a text table.

@@ -85,7 +85,11 @@ fn label_data(world: &mut World, clock: &mut VClock, args: &Json) -> Result<Json
         let k = real_cap.min(n);
         let px = 11 * 11;
         let patches: Vec<f32> = world.dataset(name)?.x[..k * px].to_vec();
-        let (fits, timing) = crate::analysis::label_patches_timed(&patches, k, 11, 11)?;
+        // Routed through `pool::scope` stage fan-out (the entry point the
+        // flows/faas layers expose), so faas-side labeling shares the one
+        // `XLOOP_THREADS` knob; fits stay bit-identical to the serial
+        // path in any thread count.
+        let (fits, timing) = crate::analysis::label_patches_scoped(&patches, k, 11, 11)?;
         // C(A) is the per-*core* analyzer cost, so record the summed
         // worker busy time per peak (thread-count independent); the
         // delivered wallclock rides along for the latency view

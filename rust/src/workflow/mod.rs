@@ -8,7 +8,9 @@
 //! * `flow`        — the declarative DNNTrainerFlow definition
 //! * `scenario`    — Table 1 scenario grid
 //! * `coordinator` — runs scenarios, extracts the Table 1 breakdown
+//! * `campaign`    — N concurrent users on the shared fabric (DES-driven)
 
+pub mod campaign;
 pub mod coordinator;
 pub mod flow;
 pub mod functions;
@@ -16,7 +18,10 @@ pub mod providers;
 pub mod scenario;
 pub mod world;
 
-pub use coordinator::{render_table1, Coordinator, RetrainBreakdown, RetrainOutcome};
+pub use campaign::{run_campaign, CampaignConfig, CampaignReport, EndpointLoad, UserOutcome};
+pub use coordinator::{
+    extract_breakdown, render_table1, Coordinator, RetrainBreakdown, RetrainOutcome,
+};
 pub use flow::{dnn_trainer_flow, FlowShape};
 pub use scenario::{Mode, Scenario};
 pub use world::{TrainedModel, TrainingMode, World};

@@ -1,11 +1,16 @@
 //! Concrete action providers binding the flows engine to the `World`:
-//! Transfer (Globus Transfer), Compute (funcX), Deploy (edge), Simulate.
+//! Transfer (Globus Transfer), Compute (funcX), Deploy (edge), Rollback.
+//!
+//! Under the discrete-event scheduler providers return *scheduled
+//! completions* instead of advancing a clock: Transfer and Compute
+//! submit to their shared fabrics and return tickets (completion time
+//! depends on contention with other tenants); Deploy and Rollback are
+//! fixed-cost local work and return `Effect::Done` durations.
 
 use anyhow::{Context, Result};
 
 use super::world::World;
-use crate::flows::ActionProvider;
-use crate::simnet::VClock;
+use crate::flows::{ActionProvider, Effect};
 use crate::training::TrainState;
 use crate::transfer::TransferRequest;
 use crate::util::Json;
@@ -20,7 +25,7 @@ impl ActionProvider<World> for TransferProvider {
         "transfer"
     }
 
-    fn execute(&self, world: &mut World, clock: &mut VClock, params: &Json) -> Result<Json> {
+    fn start(&self, world: &mut World, now: f64, params: &Json) -> Result<Effect> {
         let src = params.get("src").as_str().context("transfer params.src")?;
         let dst = params.get("dst").as_str().context("transfer params.dst")?;
         let bytes = world.payload_bytes(params)?;
@@ -37,25 +42,14 @@ impl ActionProvider<World> for TransferProvider {
         if let Some(v) = params.get("verify_checksum").as_bool() {
             req.verify_checksum = v;
         }
-        let rep = world.transfer.execute(clock, &req)?;
 
-        // the payload now exists at the destination facility's storage
+        // bookkeeping applied when the fabric delivers the task: the
+        // payload materializes at the destination facility's storage
         let dst_facility = dst.split('#').next().unwrap_or(dst).to_string();
-        if let Some(ds) = params.get("dataset").as_str() {
-            world.put_file(&dst_facility, ds, bytes);
-        }
-        if let Some(m) = params.get("model").as_str() {
-            world.put_file(&dst_facility, &format!("{m}.weights"), bytes);
-        }
-
-        Ok(Json::obj(vec![
-            ("bytes", Json::num(rep.bytes as f64)),
-            ("seconds", Json::num(rep.duration())),
-            ("data_seconds", Json::num(rep.data_secs())),
-            ("throughput_bps", Json::num(rep.throughput_bps())),
-            ("concurrency", Json::num(rep.concurrency as f64)),
-            ("attempts", Json::num(rep.total_attempts() as f64)),
-        ]))
+        let dataset = params.get("dataset").as_str().map(str::to_string);
+        let model = params.get("model").as_str().map(str::to_string);
+        let ticket = world.submit_transfer_ticket(now, &req, dst_facility, dataset, model)?;
+        Ok(Effect::Pending(ticket))
     }
 }
 
@@ -68,7 +62,7 @@ impl ActionProvider<World> for ComputeProvider {
         "compute"
     }
 
-    fn execute(&self, world: &mut World, clock: &mut VClock, params: &Json) -> Result<Json> {
+    fn start(&self, world: &mut World, now: f64, params: &Json) -> Result<Effect> {
         let endpoint = params
             .get("endpoint")
             .as_str()
@@ -82,28 +76,8 @@ impl ActionProvider<World> for ComputeProvider {
                 .to_string(),
         );
         let args = params.get("args").clone();
-
-        // Take the faas service out of the world so the function body can
-        // borrow the rest of the world mutably (see World::faas docs).
-        let mut faas = world
-            .faas
-            .take()
-            .context("faas service missing (reentrant compute?)")?;
-        let submitted = faas.submit(world, clock, &endpoint, &func, &args);
-        let result = submitted.and_then(|task| {
-            let record = faas.record(task)?;
-            let exec_secs = record.exec_secs();
-            let overhead = record.overhead_secs();
-            let output = faas.result(task)?.clone();
-            Ok(Json::obj(vec![
-                ("endpoint", Json::str(endpoint.clone())),
-                ("exec_seconds", Json::num(exec_secs)),
-                ("dispatch_seconds", Json::num(overhead)),
-                ("output", output),
-            ]))
-        });
-        world.faas = Some(faas);
-        result
+        let ticket = world.submit_compute_ticket(now, &endpoint, &func, &args)?;
+        Ok(Effect::Pending(ticket))
     }
 }
 
@@ -116,7 +90,7 @@ impl ActionProvider<World> for DeployProvider {
         "deploy"
     }
 
-    fn execute(&self, world: &mut World, clock: &mut VClock, params: &Json) -> Result<Json> {
+    fn start(&self, world: &mut World, _now: f64, params: &Json) -> Result<Effect> {
         let model = params.get("model").as_str().context("deploy params.model")?;
         let meta = world.registry.get(model)?.clone();
         let params_copy = world.trained(model)?.params.clone();
@@ -132,11 +106,13 @@ impl ActionProvider<World> for DeployProvider {
         anyhow::ensure!(out.is_finite(), "deployed model produced non-finite output");
 
         // model load + runtime warm-up on the edge box
-        clock.advance(1.0 + meta.param_bytes() as f64 / 200e6);
-        Ok(Json::obj(vec![
-            ("model", Json::str(model)),
-            ("version", Json::num(version as f64)),
-        ]))
+        Ok(Effect::after(
+            1.0 + meta.param_bytes() as f64 / 200e6,
+            Json::obj(vec![
+                ("model", Json::str(model)),
+                ("version", Json::num(version as f64)),
+            ]),
+        ))
     }
 }
 
@@ -149,18 +125,20 @@ impl ActionProvider<World> for RollbackProvider {
         "rollback"
     }
 
-    fn execute(&self, world: &mut World, clock: &mut VClock, params: &Json) -> Result<Json> {
+    fn start(&self, world: &mut World, _now: f64, params: &Json) -> Result<Effect> {
         let model = params.get("model").as_str().context("rollback params.model")?;
         let meta = world.registry.get(model)?.clone();
         let params_init = TrainState::init(&meta)?.params;
         let version = world.edge.deploy(&meta, params_init)?;
-        clock.advance(1.0);
         log::warn!("edge rolled back to pristine `{model}` (v{version})");
-        Ok(Json::obj(vec![
-            ("model", Json::str(model)),
-            ("version", Json::num(version as f64)),
-            ("rolled_back", Json::Bool(true)),
-        ]))
+        Ok(Effect::after(
+            1.0,
+            Json::obj(vec![
+                ("model", Json::str(model)),
+                ("version", Json::num(version as f64)),
+                ("rolled_back", Json::Bool(true)),
+            ]),
+        ))
     }
 }
 
@@ -176,11 +154,23 @@ pub fn register_all(engine: &mut crate::flows::FlowEngine<World>) -> Result<()> 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::flows::FabricHost;
 
     fn artifacts_present() -> bool {
         crate::models::default_artifacts_dir()
             .join("manifest.json")
             .exists()
+    }
+
+    /// Drive the world's fabrics until a ticket resolves.
+    fn resolve(world: &mut World, ticket: crate::flows::Ticket) -> (f64, Result<Json>) {
+        loop {
+            if let Some(done) = world.take_ready(ticket) {
+                return done;
+            }
+            let t = world.next_fabric_event().expect("fabric events pending");
+            world.advance_fabrics(t);
+        }
     }
 
     #[test]
@@ -192,15 +182,23 @@ mod tests {
         let ds = crate::data::bragg::generate(&crate::data::BraggConfig::default(), 128, 1)
             .unwrap();
         w.datasets.insert("d1".into(), ds);
-        let mut clock = VClock::new();
         let p = Json::parse(
             r#"{"src": "slac#dtn", "dst": "alcf#dtn", "dataset": "d1", "files": 4}"#,
         )
         .unwrap();
-        let out = TransferProvider.execute(&mut w, &mut clock, &p).unwrap();
+        let eff = TransferProvider.start(&mut w, 0.0, &p).unwrap();
+        let Effect::Pending(ticket) = eff else {
+            panic!("transfer must submit to the fabric");
+        };
+        // nothing materialized until the fabric delivers
+        assert!(w.file_bytes("alcf", "d1").is_err());
+        let (finish, out) = resolve(&mut w, ticket);
+        let out = out.unwrap();
         assert!(out.get("seconds").as_f64().unwrap() > 0.0);
+        assert!(finish > 0.0);
+        assert_eq!(out.get("seconds").as_f64().unwrap(), finish);
         assert!(w.file_bytes("alcf", "d1").is_ok());
-        assert_eq!(clock.now(), out.get("seconds").as_f64().unwrap());
+        assert_eq!(w.transfer_log.len(), 1);
     }
 
     #[test]
@@ -209,14 +207,64 @@ mod tests {
             return;
         }
         let mut w = World::paper(5).unwrap();
-        let mut clock = VClock::new();
-        // unknown function -> submit errors, faas must be restored
+        // unknown function -> enqueue errors, faas must stay available
         let p = Json::parse(
             r#"{"endpoint": "alcf#cluster", "function": "ghost", "args": {}}"#,
         )
         .unwrap();
-        assert!(ComputeProvider.execute(&mut w, &mut clock, &p).is_err());
+        assert!(ComputeProvider.start(&mut w, 0.0, &p).is_err());
         assert!(w.faas.is_some(), "faas service lost after failure");
+    }
+
+    #[test]
+    fn compute_provider_runs_through_fabric() {
+        if !artifacts_present() {
+            return;
+        }
+        let mut w = World::paper(15).unwrap();
+        let p = Json::parse(
+            r#"{"endpoint": "slac#sim", "function": "generate_data",
+                "args": {"model": "braggnn", "n": 64, "seed": 5, "name": "g1"}}"#,
+        )
+        .unwrap();
+        let Effect::Pending(ticket) = ComputeProvider.start(&mut w, 0.0, &p).unwrap() else {
+            panic!("compute must queue on the fabric");
+        };
+        let (finish, out) = resolve(&mut w, ticket);
+        let out = out.unwrap();
+        assert!(finish > 0.0);
+        assert_eq!(out.get("queue_wait_seconds").as_f64(), Some(0.0));
+        assert!(out.get("dispatch_seconds").as_f64().unwrap() >= 3.0 - 1e-9);
+        assert_eq!(
+            out.get("output").get("dataset").as_str(),
+            Some("g1")
+        );
+        assert!(w.datasets.contains_key("g1"));
+    }
+
+    #[test]
+    fn offline_endpoint_resolves_ticket_immediately() {
+        if !artifacts_present() {
+            return;
+        }
+        let mut w = World::paper(16).unwrap();
+        w.faas
+            .as_mut()
+            .unwrap()
+            .endpoint_mut("alcf#cerebras")
+            .unwrap()
+            .status = crate::faas::EndpointStatus::Offline;
+        let p = Json::parse(
+            r#"{"endpoint": "alcf#cerebras", "function": "train_model", "args": {}}"#,
+        )
+        .unwrap();
+        let Effect::Pending(ticket) = ComputeProvider.start(&mut w, 7.0, &p).unwrap() else {
+            panic!("offline submission still returns a ticket");
+        };
+        // resolves without any fabric event, at the submission instant
+        let (tf, res) = w.take_ready(ticket).expect("instant resolution");
+        assert_eq!(tf, 7.0);
+        assert!(res.unwrap_err().to_string().contains("offline"));
     }
 
     #[test]
@@ -225,9 +273,8 @@ mod tests {
             return;
         }
         let mut w = World::paper(6).unwrap();
-        let mut clock = VClock::new();
         let p = Json::parse(r#"{"model": "braggnn"}"#).unwrap();
-        let err = DeployProvider.execute(&mut w, &mut clock, &p).unwrap_err();
+        let err = DeployProvider.start(&mut w, 0.0, &p).unwrap_err();
         assert!(err.to_string().contains("not been trained"), "{err}");
     }
 
@@ -237,10 +284,14 @@ mod tests {
             return;
         }
         let mut w = World::paper(7).unwrap();
-        let mut clock = VClock::new();
         let p = Json::parse(r#"{"model": "braggnn"}"#).unwrap();
-        let out = RollbackProvider.execute(&mut w, &mut clock, &p).unwrap();
-        assert_eq!(out.get("rolled_back").as_bool(), Some(true));
+        let Effect::Done { duration, output } =
+            RollbackProvider.start(&mut w, 0.0, &p).unwrap()
+        else {
+            panic!("rollback is fixed-cost local work");
+        };
+        assert_eq!(duration, 1.0);
+        assert_eq!(output.get("rolled_back").as_bool(), Some(true));
         assert!(w.edge.deployed().is_some());
     }
 }

@@ -10,11 +10,13 @@ use anyhow::{bail, Context, Result};
 use crate::accel::{cerebras_wse, local_v100, multi_gpu_horovod, sambanova_rdu, AcceleratorModel};
 use crate::data::Dataset;
 use crate::edge::EdgeHost;
-use crate::faas::{FaasEndpoint, FaasService};
+use crate::faas::{FaasEndpoint, FaasService, FuncId, TaskId, TaskStatus};
+use crate::flows::{FabricHost, Ticket};
 use crate::models::ModelRegistry;
 use crate::runtime::{Runtime, Tensor};
 use crate::training::TrainReport;
-use crate::transfer::TransferService;
+use crate::transfer::{TransferHandle, TransferReport, TransferRequest, TransferService};
+use crate::util::Json;
 
 /// A model trained somewhere in the fabric, awaiting deployment.
 pub struct TrainedModel {
@@ -37,13 +39,30 @@ pub enum TrainingMode {
     VirtualOnly,
 }
 
+/// Work submitted to a shared fabric, awaiting completion. The ticket
+/// registry is what lets `ActionProvider::start` return immediately
+/// while the transfer/faas fabrics advance under the DES scheduler.
+enum PendingOp {
+    Transfer {
+        handle: TransferHandle,
+        /// post-completion bookkeeping: the payload materializes at the
+        /// destination facility's storage
+        dst_facility: String,
+        dataset: Option<String>,
+        model: Option<String>,
+    },
+    Faas {
+        task: TaskId,
+    },
+}
+
 /// The execution context threaded through flows and faas functions.
 pub struct World {
     pub rt: Arc<Runtime>,
     pub registry: ModelRegistry,
     pub transfer: TransferService,
-    /// taken out (`Option`) during submission so faas bodies can borrow
-    /// the rest of the world mutably — see `providers::ComputeProvider`
+    /// taken out (`Option`) while fabrics advance so faas bodies can
+    /// borrow the rest of the world mutably — see `advance_fabrics`
     pub faas: Option<FaasService<World>>,
     /// facility storage: facility -> logical file -> bytes
     pub storage: BTreeMap<String, BTreeMap<String, u64>>,
@@ -60,6 +79,13 @@ pub struct World {
     /// versioned checkpoint store (paper §7 future work 1): publishes
     /// every trained model, serves warm starts for fine-tuning
     pub repository: crate::models::ModelRepository,
+    /// every transfer completed through the fabric (campaign statistics)
+    pub transfer_log: Vec<TransferReport>,
+    /// fabric work awaiting completion, by ticket id
+    pending: BTreeMap<u64, PendingOp>,
+    /// resolved tickets: (finish virtual time, outcome)
+    ready: BTreeMap<u64, (f64, Result<Json>)>,
+    next_ticket: u64,
 }
 
 impl World {
@@ -73,15 +99,18 @@ impl World {
         let alcf = transfer.topo.facility("alcf")?;
 
         let mut faas = FaasService::<World>::new();
-        for (id, fac) in [
-            ("slac#v100", slac),
-            ("slac#sim", slac),
-            ("alcf#cerebras", alcf),
-            ("alcf#sambanova", alcf),
-            ("alcf#gpu8", alcf),
-            ("alcf#cluster", alcf),
+        // DCAI training systems serve one job at a time (capacity 1 —
+        // the contended resources of the campaign study); the simulation
+        // host and the 1024-core labeling cluster admit several.
+        for (id, fac, capacity) in [
+            ("slac#v100", slac, 1),
+            ("slac#sim", slac, 4),
+            ("alcf#cerebras", alcf, 1),
+            ("alcf#sambanova", alcf, 1),
+            ("alcf#gpu8", alcf, 1),
+            ("alcf#cluster", alcf, 8),
         ] {
-            faas.register_endpoint(FaasEndpoint::new(id, fac))?;
+            faas.register_endpoint(FaasEndpoint::new(id, fac).with_capacity(capacity))?;
         }
         super::functions::register_all(&mut faas)?;
 
@@ -108,7 +137,72 @@ impl World {
             },
             last_label_cost_s: None,
             repository: crate::models::ModelRepository::new(),
+            transfer_log: Vec::new(),
+            pending: BTreeMap::new(),
+            ready: BTreeMap::new(),
+            next_ticket: 1,
         })
+    }
+
+    fn alloc_ticket(&mut self) -> Ticket {
+        let t = Ticket(self.next_ticket);
+        self.next_ticket += 1;
+        t
+    }
+
+    /// Submit a WAN transfer to the shared fabric; the returned ticket
+    /// resolves (via `advance_fabrics`/`take_ready`) when the task is
+    /// delivered, at which point the payload appears at `dst_facility`.
+    pub fn submit_transfer_ticket(
+        &mut self,
+        now: f64,
+        req: &TransferRequest,
+        dst_facility: String,
+        dataset: Option<String>,
+        model: Option<String>,
+    ) -> Result<Ticket> {
+        let handle = self.transfer.submit_task(now, req)?;
+        let ticket = self.alloc_ticket();
+        self.pending.insert(
+            ticket.0,
+            PendingOp::Transfer {
+                handle,
+                dst_facility,
+                dataset,
+                model,
+            },
+        );
+        Ok(ticket)
+    }
+
+    /// Queue a faas task on an endpoint; the ticket resolves when the
+    /// task completes (queue wait included). Offline endpoints resolve
+    /// immediately with the recorded failure.
+    pub fn submit_compute_ticket(
+        &mut self,
+        now: f64,
+        endpoint: &str,
+        func: &FuncId,
+        args: &Json,
+    ) -> Result<Ticket> {
+        let faas = self
+            .faas
+            .as_mut()
+            .context("faas service missing (reentrant compute?)")?;
+        let task = faas.enqueue(now, endpoint, func, args)?;
+        let status = faas.record(task)?.status.clone();
+        let ticket = self.alloc_ticket();
+        match status {
+            // offline endpoint: failed at enqueue, no fabric event coming
+            TaskStatus::Failed(m) => {
+                self.ready
+                    .insert(ticket.0, (now, Err(anyhow::anyhow!("task {task:?} failed: {m}"))));
+            }
+            _ => {
+                self.pending.insert(ticket.0, PendingOp::Faas { task });
+            }
+        }
+        Ok(ticket)
     }
 
     pub fn dataset(&self, name: &str) -> Result<&Dataset> {
@@ -158,6 +252,105 @@ impl World {
             return Ok(self.registry.get(m)?.param_bytes());
         }
         bail!("transfer params need `bytes`, `dataset`, or `model`")
+    }
+}
+
+impl FabricHost for World {
+    fn next_fabric_event(&mut self) -> Option<f64> {
+        let t1 = self.transfer.next_event_time();
+        let t2 = self.faas.as_ref().and_then(|f| f.next_event_time());
+        match (t1, t2) {
+            (Some(a), Some(b)) => Some(a.min(b)),
+            (a, b) => a.or(b),
+        }
+    }
+
+    fn advance_fabrics(&mut self, t: f64) {
+        // WAN transfers: deliveries resolve tickets and materialize the
+        // payload at the destination facility
+        for (handle, res) in self.transfer.advance_to(t) {
+            let ticket = self.pending.iter().find_map(|(id, op)| match op {
+                PendingOp::Transfer { handle: h, .. } if *h == handle => Some(*id),
+                _ => None,
+            });
+            let Some(tid) = ticket else { continue };
+            let Some(PendingOp::Transfer {
+                dst_facility,
+                dataset,
+                model,
+                ..
+            }) = self.pending.remove(&tid)
+            else {
+                continue;
+            };
+            let resolved = match res {
+                Ok(rep) => {
+                    if let Some(ds) = &dataset {
+                        self.put_file(&dst_facility, ds, rep.bytes);
+                    }
+                    if let Some(m) = &model {
+                        self.put_file(&dst_facility, &format!("{m}.weights"), rep.bytes);
+                    }
+                    let out = Json::obj(vec![
+                        ("bytes", Json::num(rep.bytes as f64)),
+                        ("seconds", Json::num(rep.duration())),
+                        ("data_seconds", Json::num(rep.data_secs())),
+                        ("throughput_bps", Json::num(rep.throughput_bps())),
+                        ("concurrency", Json::num(rep.concurrency as f64)),
+                        ("attempts", Json::num(rep.total_attempts() as f64)),
+                    ]);
+                    let finish = rep.finish_vt;
+                    self.transfer_log.push(rep);
+                    (finish, Ok(out))
+                }
+                Err(e) => (t, Err(e)),
+            };
+            self.ready.insert(tid, resolved);
+        }
+
+        // faas: queue starts run function bodies against this world, so
+        // the service is taken out for the duration (same Option dance
+        // the providers used pre-DES)
+        if let Some(mut faas) = self.faas.take() {
+            let completed = faas.advance_to(self, t);
+            for task in completed {
+                let ticket = self.pending.iter().find_map(|(id, op)| match op {
+                    PendingOp::Faas { task: tk } if *tk == task => Some(*id),
+                    _ => None,
+                });
+                let Some(tid) = ticket else { continue };
+                self.pending.remove(&tid);
+                let rec = faas.record(task).expect("completed task recorded");
+                let resolved = match &rec.status {
+                    TaskStatus::Success(v) => (
+                        rec.finished_vt,
+                        Ok(Json::obj(vec![
+                            ("endpoint", Json::str(rec.endpoint.clone())),
+                            ("exec_seconds", Json::num(rec.exec_secs())),
+                            ("dispatch_seconds", Json::num(rec.overhead_secs())),
+                            ("queue_wait_seconds", Json::num(rec.queue_wait_secs())),
+                            ("output", v.clone()),
+                        ])),
+                    ),
+                    TaskStatus::Failed(m) => (
+                        rec.finished_vt,
+                        Err(anyhow::anyhow!("task {task:?} failed: {m}")),
+                    ),
+                    _ => (
+                        t,
+                        Err(anyhow::anyhow!(
+                            "task {task:?} incomplete after completion event"
+                        )),
+                    ),
+                };
+                self.ready.insert(tid, resolved);
+            }
+            self.faas = Some(faas);
+        }
+    }
+
+    fn take_ready(&mut self, ticket: Ticket) -> Option<(f64, Result<Json>)> {
+        self.ready.remove(&ticket.0)
     }
 }
 
