@@ -6,7 +6,14 @@ use crate::simnet::FacilityId;
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum EndpointStatus {
     Online,
+    /// Deregistered: submissions fail immediately (funcX's
+    /// fire-and-forget error path).
     Offline,
+    /// Temporarily down (a planned `FaultPlan` outage window): the
+    /// facility queue survives — new and queued tasks wait, nothing
+    /// starts, and running tasks were failed-with-retry when the
+    /// outage began (`FaasService::begin_outage`).
+    Down,
 }
 
 /// A function-serving endpoint deployed at a facility.
@@ -24,8 +31,11 @@ pub struct FaasEndpoint {
     pub tasks_run: u64,
     /// concurrent execution slots — a Cerebras endpoint runs one training
     /// job at a time (capacity 1, the default), a cluster endpoint can
-    /// run many. Tasks beyond capacity wait in a FIFO queue; that wait
-    /// is the multi-tenant queue time the campaign layer measures.
+    /// run many. Tasks beyond capacity wait in a queue ordered by the
+    /// service's scheduling policy; that wait is the multi-tenant queue
+    /// time the campaign layer measures. An `Autoscaler` may grow and
+    /// shrink this at runtime — the field always reflects the *current*
+    /// slot count.
     pub capacity: usize,
 }
 

@@ -7,10 +7,15 @@
 //! * a **function** is registered once and addressed by `FuncId`;
 //! * an **endpoint** binds a facility + dispatch overheads (dispatch
 //!   latency, cold start) + capacity slots, and can be taken offline for
-//!   failure injection;
-//! * **enqueue/advance_to** drive tasks through FIFO queues under the
-//!   discrete-event scheduler — concurrent tenants contend for capacity
-//!   slots and experience queue wait (DESIGN.md §4);
+//!   failure injection or `Down` for a planned outage window;
+//! * **enqueue/advance_to** drive tasks through per-endpoint queues
+//!   under the discrete-event scheduler — concurrent tenants contend
+//!   for capacity slots and experience queue wait (DESIGN.md §4), and a
+//!   pluggable **scheduling policy** (`sched`: FIFO, priority+aging,
+//!   shortest-job-first, EASY backfill) decides who takes a freed slot
+//!   (DESIGN.md §9);
+//! * an optional per-endpoint **autoscaler** grows/shrinks capacity
+//!   slots on queue pressure with provisioning delay and cooldown;
 //! * **submit** is the single-tenant convenience: it drives one task to
 //!   completion against the caller's clock, recording a task whose
 //!   status/result can be polled later (fire-and-forget semantics).
@@ -19,7 +24,12 @@
 //! can pass its `World` while unit tests use lightweight mocks.
 
 pub mod endpoint;
+pub mod sched;
 pub mod service;
 
 pub use endpoint::{EndpointStatus, FaasEndpoint};
+pub use sched::{
+    Autoscaler, EasyBackfill, Fifo, Pick, PolicyKind, Priority, QueueView, ScalingEvent,
+    SchedPolicy, SchedTask, ShortestJobFirst, TaskMeta,
+};
 pub use service::{FaasService, FuncId, TaskId, TaskRecord, TaskStatus};

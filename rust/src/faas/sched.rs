@@ -1,0 +1,627 @@
+//! Pluggable scheduling policies and endpoint autoscaling for the faas
+//! fabric (DESIGN.md §9).
+//!
+//! The queueing core of [`super::service::FaasService`] stores tasks in
+//! arrival order; *which* queued task starts when a capacity slot frees
+//! — and at what instant — is delegated to a [`SchedPolicy`]. The
+//! policy sees per-task metadata ([`TaskMeta`]: tenant, priority class,
+//! cost-model duration estimate) plus the endpoint's slot state and
+//! returns a [`Pick`]. Four policies ship:
+//!
+//! * [`Fifo`] — strict arrival order with the start-monotonicity
+//!   constraint the pre-policy service hard-coded; **bit-identical** to
+//!   the PR 2 queueing core (pinned by the service and campaign tests).
+//! * [`Priority`] — highest effective priority first, where waiting
+//!   tasks *age* upward (`aging_s` seconds of wait = one priority
+//!   level) so low-priority work is never starved indefinitely.
+//! * [`ShortestJobFirst`] — smallest duration estimate first among the
+//!   tasks eligible at the decision instant (unknown estimates run
+//!   last).
+//! * [`EasyBackfill`] — FIFO with EASY backfilling: the head of line
+//!   holds a reservation at the earliest instant it could start, and a
+//!   later task may jump ahead only if, by its duration estimate, it
+//!   finishes before that reservation. With accurate estimates the
+//!   head's start is never delayed relative to plain FIFO (test-pinned).
+//!
+//! [`Autoscaler`] is the per-endpoint elasticity config: capacity slots
+//! are added when the waiting queue is deep (after a provisioning
+//! delay) and removed after sustained idleness, with a cooldown between
+//! actions. The service folds provision completions and idle deadlines
+//! into its `next_event_time`, so the same `simnet::des`-driven event
+//! loop that drives queue starts also drives scaling (DESIGN.md §9).
+
+use anyhow::{bail, Result};
+
+use super::service::TaskId;
+
+/// Scheduler-relevant metadata attached to a task at enqueue time.
+#[derive(Debug, Clone, Default)]
+pub struct TaskMeta {
+    /// submitting tenant (campaign user index, 1-based; 0 = untagged)
+    pub user: u32,
+    /// static priority class; larger = more urgent
+    pub priority: i64,
+    /// estimated body duration in virtual seconds (from `costmodel` /
+    /// the accelerator models). `None` = unknown: `ShortestJobFirst`
+    /// runs it last and `EasyBackfill` refuses to gamble on it.
+    pub est_duration_s: Option<f64>,
+}
+
+/// A queued task as a policy sees it.
+#[derive(Debug)]
+pub struct SchedTask<'a> {
+    pub id: TaskId,
+    pub submitted_vt: f64,
+    /// when dispatch latency (+cold start) ends and the body could run
+    pub eligible_vt: f64,
+    pub meta: &'a TaskMeta,
+}
+
+/// Endpoint queue state at a scheduling decision.
+#[derive(Debug)]
+pub struct QueueView<'a> {
+    /// queued tasks in arrival order (index 0 = head of line)
+    pub tasks: &'a [SchedTask<'a>],
+    /// earliest instant any capacity slot is free
+    pub slot_free_vt: f64,
+    /// start time of the most recently started task on this endpoint
+    /// (the FIFO monotonicity floor; only `Fifo` applies it)
+    pub last_start_vt: f64,
+}
+
+impl QueueView<'_> {
+    /// Earliest instant any queued task could start: the first free
+    /// slot, but no earlier than the soonest eligibility.
+    fn decision_vt(&self) -> f64 {
+        let min_elig = self
+            .tasks
+            .iter()
+            .map(|t| t.eligible_vt)
+            .fold(f64::INFINITY, f64::min);
+        self.slot_free_vt.max(min_elig)
+    }
+
+    /// Tasks that are eligible at the decision instant.
+    fn eligible_at<'b>(&'b self, t: f64) -> impl Iterator<Item = (usize, &'b SchedTask<'b>)> {
+        self.tasks
+            .iter()
+            .enumerate()
+            .filter(move |(_, task)| task.eligible_vt <= t + 1e-9)
+    }
+}
+
+/// A policy's decision: which queued task starts, and when.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Pick {
+    /// index into `QueueView::tasks`
+    pub queue_idx: usize,
+    pub start_vt: f64,
+}
+
+/// Decides which queued task starts when a capacity slot frees.
+///
+/// Invariants every policy must uphold: `pick` returns `Some` whenever
+/// the queue is non-empty (the service relies on this for stall
+/// detection), `start_vt >= max(slot_free_vt, chosen task's
+/// eligible_vt)`, and the decision is a pure function of the view (no
+/// interior state), which is what keeps campaign replays deterministic.
+pub trait SchedPolicy {
+    fn name(&self) -> &'static str;
+    fn pick(&self, q: &QueueView) -> Option<Pick>;
+}
+
+/// Strict arrival order — bit-identical to the pre-policy queueing core.
+///
+/// The head starts at `max(eligible, slot_free, last_start)`: the
+/// `last_start` floor keeps start events monotone even though the first
+/// task pays the cold start and is eligible *later* than the second.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Fifo;
+
+impl SchedPolicy for Fifo {
+    fn name(&self) -> &'static str {
+        "fifo"
+    }
+
+    fn pick(&self, q: &QueueView) -> Option<Pick> {
+        let head = q.tasks.first()?;
+        Some(Pick {
+            queue_idx: 0,
+            start_vt: head
+                .eligible_vt
+                .max(q.slot_free_vt)
+                .max(q.last_start_vt),
+        })
+    }
+}
+
+/// Highest effective priority first, with aging: a task's effective
+/// priority is `priority + waited / aging_s`, so anything that waits
+/// `aging_s * Δpriority` seconds overtakes a Δpriority-level gap and
+/// nothing starves indefinitely. `aging_s = f64::INFINITY` disables
+/// aging (pure static priority — starvation-prone, kept for tests).
+/// Ties break by arrival order.
+#[derive(Debug, Clone, Copy)]
+pub struct Priority {
+    pub aging_s: f64,
+}
+
+impl Default for Priority {
+    fn default() -> Self {
+        Priority {
+            aging_s: DEFAULT_AGING_S,
+        }
+    }
+}
+
+/// One priority level per five minutes of wait — long enough that
+/// classes matter under transient contention, short enough that a
+/// low-priority retraining is never parked behind an endless stream of
+/// urgent jobs.
+pub const DEFAULT_AGING_S: f64 = 300.0;
+
+impl SchedPolicy for Priority {
+    fn name(&self) -> &'static str {
+        "priority"
+    }
+
+    fn pick(&self, q: &QueueView) -> Option<Pick> {
+        q.tasks.first()?;
+        let now = q.decision_vt();
+        let effective = |t: &SchedTask| {
+            let aged = if self.aging_s.is_finite() && self.aging_s > 0.0 {
+                (now - t.submitted_vt).max(0.0) / self.aging_s
+            } else {
+                0.0
+            };
+            t.meta.priority as f64 + aged
+        };
+        let (idx, _) = q
+            .eligible_at(now)
+            .fold(None::<(usize, f64)>, |best, (i, t)| {
+                let e = effective(t);
+                match best {
+                    // strictly-greater keeps the earliest arrival on ties
+                    Some((_, be)) if e <= be => best,
+                    _ => Some((i, e)),
+                }
+            })?;
+        Some(Pick {
+            queue_idx: idx,
+            start_vt: now,
+        })
+    }
+}
+
+/// Smallest duration estimate first among the tasks eligible at the
+/// decision instant; unknown estimates sort last; ties break by
+/// arrival order.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ShortestJobFirst;
+
+impl SchedPolicy for ShortestJobFirst {
+    fn name(&self) -> &'static str {
+        "sjf"
+    }
+
+    fn pick(&self, q: &QueueView) -> Option<Pick> {
+        q.tasks.first()?;
+        let now = q.decision_vt();
+        let (idx, _) = q
+            .eligible_at(now)
+            .fold(None::<(usize, f64)>, |best, (i, t)| {
+                let est = t.meta.est_duration_s.unwrap_or(f64::INFINITY);
+                match best {
+                    Some((_, be)) if est >= be => best,
+                    _ => Some((i, est)),
+                }
+            })?;
+        Some(Pick {
+            queue_idx: idx,
+            start_vt: now,
+        })
+    }
+}
+
+/// EASY backfilling: the head of line reserves the earliest instant it
+/// could start (`max(eligible, slot_free)`); while a hole exists before
+/// that reservation (the slot frees before the head is eligible — cold
+/// start, dispatch latency, post-outage re-dispatch), later tasks are
+/// scanned in arrival order and the first whose *estimated* completion
+/// fits inside the hole starts immediately. Tasks without an estimate
+/// never backfill. With accurate estimates the head's start time is
+/// identical to plain FIFO's (test-pinned: `EasyBackfill` never delays
+/// the head of line).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct EasyBackfill;
+
+impl SchedPolicy for EasyBackfill {
+    fn name(&self) -> &'static str {
+        "backfill"
+    }
+
+    fn pick(&self, q: &QueueView) -> Option<Pick> {
+        let head = q.tasks.first()?;
+        let head_start = head.eligible_vt.max(q.slot_free_vt);
+        if head.eligible_vt > q.slot_free_vt {
+            // hole in front of the reservation: [slot_free, head_start)
+            for (i, t) in q.tasks.iter().enumerate().skip(1) {
+                let cand_start = t.eligible_vt.max(q.slot_free_vt);
+                let Some(est) = t.meta.est_duration_s else {
+                    continue;
+                };
+                if cand_start < head_start - 1e-9 && cand_start + est <= head_start + 1e-9 {
+                    return Some(Pick {
+                        queue_idx: i,
+                        start_vt: cand_start,
+                    });
+                }
+            }
+        }
+        Some(Pick {
+            queue_idx: 0,
+            start_vt: head_start,
+        })
+    }
+}
+
+/// Parseable policy selector (CLI `--policy`, campaign config).
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub enum PolicyKind {
+    #[default]
+    Fifo,
+    Priority {
+        aging_s: f64,
+    },
+    Sjf,
+    Backfill,
+}
+
+impl PolicyKind {
+    /// Parse `fifo`, `priority`, `priority:<aging_s>`, `sjf`, `backfill`.
+    pub fn parse(s: &str) -> Result<PolicyKind> {
+        Ok(match s {
+            "fifo" => PolicyKind::Fifo,
+            "sjf" | "shortest" | "shortest-job-first" => PolicyKind::Sjf,
+            "backfill" | "easy-backfill" => PolicyKind::Backfill,
+            "priority" => PolicyKind::Priority {
+                aging_s: DEFAULT_AGING_S,
+            },
+            other => {
+                if let Some(aging) = other.strip_prefix("priority:") {
+                    let aging_s: f64 = aging
+                        .parse()
+                        .map_err(|_| anyhow::anyhow!("bad aging seconds `{aging}`"))?;
+                    if aging_s.is_nan() || aging_s <= 0.0 {
+                        bail!("aging seconds must be positive, got {aging_s}");
+                    }
+                    PolicyKind::Priority { aging_s }
+                } else {
+                    bail!(
+                        "unknown policy `{other}` (fifo, priority[:aging_s], sjf, backfill)"
+                    )
+                }
+            }
+        })
+    }
+
+    pub fn build(&self) -> Box<dyn SchedPolicy> {
+        match *self {
+            PolicyKind::Fifo => Box::new(Fifo),
+            PolicyKind::Priority { aging_s } => Box::new(Priority { aging_s }),
+            PolicyKind::Sjf => Box::new(ShortestJobFirst),
+            PolicyKind::Backfill => Box::new(EasyBackfill),
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            PolicyKind::Fifo => "fifo",
+            PolicyKind::Priority { .. } => "priority",
+            PolicyKind::Sjf => "sjf",
+            PolicyKind::Backfill => "backfill",
+        }
+    }
+}
+
+/// Per-endpoint elasticity: scale capacity slots up under queue
+/// pressure and back down after sustained idleness (DESIGN.md §9).
+///
+/// One action at a time: at most one provision can be in flight, and
+/// `cooldown_s` must elapse between consecutive capacity changes. A new
+/// slot becomes usable `provision_delay_s` after its trigger (node
+/// boot / container spin-up); an idle slot is released only after the
+/// endpoint has had a free slot and an empty queue for
+/// `scale_down_idle_s` continuous virtual seconds.
+#[derive(Debug, Clone)]
+pub struct Autoscaler {
+    pub min_capacity: usize,
+    pub max_capacity: usize,
+    /// scale up when this many tasks are waiting (queued, not started)
+    pub scale_up_waiting: usize,
+    pub provision_delay_s: f64,
+    pub scale_down_idle_s: f64,
+    pub cooldown_s: f64,
+}
+
+impl Autoscaler {
+    /// Elastic from one slot up to `max_capacity`, with defaults sized
+    /// for the campaign fabric (30 s provisioning, 2-deep trigger,
+    /// 120 s idle release, 60 s cooldown).
+    pub fn up_to(max_capacity: usize) -> Autoscaler {
+        Autoscaler {
+            min_capacity: 1,
+            max_capacity: max_capacity.max(1),
+            scale_up_waiting: 2,
+            provision_delay_s: 30.0,
+            scale_down_idle_s: 120.0,
+            cooldown_s: 60.0,
+        }
+    }
+}
+
+/// One capacity change applied by an autoscaler (campaign reporting).
+#[derive(Debug, Clone)]
+pub struct ScalingEvent {
+    pub vt: f64,
+    pub endpoint: String,
+    /// capacity after the change
+    pub capacity: usize,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn meta(priority: i64, est: Option<f64>) -> TaskMeta {
+        TaskMeta {
+            user: 0,
+            priority,
+            est_duration_s: est,
+        }
+    }
+
+    fn view<'a>(
+        tasks: &'a [SchedTask<'a>],
+        slot_free_vt: f64,
+        last_start_vt: f64,
+    ) -> QueueView<'a> {
+        QueueView {
+            tasks,
+            slot_free_vt,
+            last_start_vt,
+        }
+    }
+
+    #[test]
+    fn fifo_matches_legacy_start_formula() {
+        let m = TaskMeta::default();
+        let tasks = vec![
+            SchedTask {
+                id: TaskId(1),
+                submitted_vt: 0.0,
+                eligible_vt: 3.0,
+                meta: &m,
+            },
+            SchedTask {
+                id: TaskId(2),
+                submitted_vt: 0.0,
+                eligible_vt: 1.0,
+                meta: &m,
+            },
+        ];
+        // head not eligible yet: starts at its eligibility
+        let p = Fifo.pick(&view(&tasks, 0.0, 0.0)).unwrap();
+        assert_eq!(p, Pick { queue_idx: 0, start_vt: 3.0 });
+        // slot busy past eligibility: starts when the slot frees
+        let p = Fifo.pick(&view(&tasks, 13.0, 3.0)).unwrap();
+        assert_eq!(p, Pick { queue_idx: 0, start_vt: 13.0 });
+        // last_start floor dominates (second task behind a cold head)
+        let second = &tasks[1..];
+        let p = Fifo.pick(&view(second, 0.0, 3.0)).unwrap();
+        assert_eq!(p, Pick { queue_idx: 0, start_vt: 3.0 });
+    }
+
+    #[test]
+    fn priority_prefers_urgent_but_aging_overtakes() {
+        let low = meta(0, None);
+        let high = meta(2, None);
+        let tasks = vec![
+            SchedTask {
+                id: TaskId(1),
+                submitted_vt: 0.0,
+                eligible_vt: 1.0,
+                meta: &low,
+            },
+            SchedTask {
+                id: TaskId(2),
+                submitted_vt: 100.0,
+                eligible_vt: 101.0,
+                meta: &high,
+            },
+        ];
+        // fresh decision at 101: high wins (0 + ~1 age < 2)
+        let p = Priority { aging_s: 300.0 }
+            .pick(&view(&tasks, 101.0, 0.0))
+            .unwrap();
+        assert_eq!(p.queue_idx, 1);
+        // late decision: the low task has aged 2 levels past the gap
+        let p = Priority { aging_s: 300.0 }
+            .pick(&view(&tasks, 700.0, 0.0))
+            .unwrap();
+        assert_eq!(p.queue_idx, 0);
+        // no aging: high always wins
+        let p = Priority {
+            aging_s: f64::INFINITY,
+        }
+        .pick(&view(&tasks, 700.0, 0.0))
+        .unwrap();
+        assert_eq!(p.queue_idx, 1);
+    }
+
+    #[test]
+    fn priority_ties_break_by_arrival() {
+        let a = meta(1, None);
+        let b = meta(1, None);
+        let tasks = vec![
+            SchedTask {
+                id: TaskId(1),
+                submitted_vt: 5.0,
+                eligible_vt: 6.0,
+                meta: &a,
+            },
+            SchedTask {
+                id: TaskId(2),
+                submitted_vt: 5.0,
+                eligible_vt: 6.0,
+                meta: &b,
+            },
+        ];
+        let p = Priority::default().pick(&view(&tasks, 10.0, 0.0)).unwrap();
+        assert_eq!(p.queue_idx, 0);
+    }
+
+    #[test]
+    fn sjf_picks_shortest_known_estimate() {
+        let long = meta(0, Some(100.0));
+        let short = meta(0, Some(2.0));
+        let unknown = meta(0, None);
+        let tasks = vec![
+            SchedTask {
+                id: TaskId(1),
+                submitted_vt: 0.0,
+                eligible_vt: 1.0,
+                meta: &long,
+            },
+            SchedTask {
+                id: TaskId(2),
+                submitted_vt: 0.0,
+                eligible_vt: 1.0,
+                meta: &unknown,
+            },
+            SchedTask {
+                id: TaskId(3),
+                submitted_vt: 0.0,
+                eligible_vt: 1.0,
+                meta: &short,
+            },
+        ];
+        let p = ShortestJobFirst.pick(&view(&tasks, 5.0, 0.0)).unwrap();
+        assert_eq!(p.queue_idx, 2);
+        assert_eq!(p.start_vt, 5.0);
+    }
+
+    #[test]
+    fn sjf_ignores_tasks_not_yet_eligible() {
+        let short_late = meta(0, Some(1.0));
+        let long_now = meta(0, Some(50.0));
+        let tasks = vec![
+            SchedTask {
+                id: TaskId(1),
+                submitted_vt: 0.0,
+                eligible_vt: 1.0,
+                meta: &long_now,
+            },
+            SchedTask {
+                id: TaskId(2),
+                submitted_vt: 9.0,
+                eligible_vt: 10.0,
+                meta: &short_late,
+            },
+        ];
+        // decision at slot_free=2: only the long task is eligible
+        let p = ShortestJobFirst.pick(&view(&tasks, 2.0, 0.0)).unwrap();
+        assert_eq!(p.queue_idx, 0);
+        assert_eq!(p.start_vt, 2.0);
+    }
+
+    #[test]
+    fn backfill_fills_cold_start_hole_without_delaying_head() {
+        let head = meta(0, Some(10.0));
+        let fits = meta(0, Some(1.5));
+        let too_long = meta(0, Some(5.0));
+        let tasks = vec![
+            SchedTask {
+                id: TaskId(1),
+                submitted_vt: 0.0,
+                eligible_vt: 3.0, // cold start
+                meta: &head,
+            },
+            SchedTask {
+                id: TaskId(2),
+                submitted_vt: 0.0,
+                eligible_vt: 1.0,
+                meta: &too_long,
+            },
+            SchedTask {
+                id: TaskId(3),
+                submitted_vt: 0.0,
+                eligible_vt: 1.0,
+                meta: &fits,
+            },
+        ];
+        // hole is [0, 3): the 5 s task does not fit, the 1.5 s one does
+        let p = EasyBackfill.pick(&view(&tasks, 0.0, 0.0)).unwrap();
+        assert_eq!(p.queue_idx, 2);
+        assert_eq!(p.start_vt, 1.0);
+        // no hole (slot frees after head eligibility): plain FIFO head
+        let p = EasyBackfill.pick(&view(&tasks, 7.0, 0.0)).unwrap();
+        assert_eq!(p, Pick { queue_idx: 0, start_vt: 7.0 });
+    }
+
+    #[test]
+    fn backfill_never_gambles_on_unknown_estimates() {
+        let head = meta(0, Some(10.0));
+        let unknown = meta(0, None);
+        let tasks = vec![
+            SchedTask {
+                id: TaskId(1),
+                submitted_vt: 0.0,
+                eligible_vt: 3.0,
+                meta: &head,
+            },
+            SchedTask {
+                id: TaskId(2),
+                submitted_vt: 0.0,
+                eligible_vt: 1.0,
+                meta: &unknown,
+            },
+        ];
+        let p = EasyBackfill.pick(&view(&tasks, 0.0, 0.0)).unwrap();
+        assert_eq!(p.queue_idx, 0);
+        assert_eq!(p.start_vt, 3.0);
+    }
+
+    #[test]
+    fn policy_kind_parses_and_builds() {
+        assert_eq!(PolicyKind::parse("fifo").unwrap(), PolicyKind::Fifo);
+        assert_eq!(PolicyKind::parse("sjf").unwrap(), PolicyKind::Sjf);
+        assert_eq!(
+            PolicyKind::parse("backfill").unwrap(),
+            PolicyKind::Backfill
+        );
+        assert_eq!(
+            PolicyKind::parse("priority").unwrap(),
+            PolicyKind::Priority {
+                aging_s: DEFAULT_AGING_S
+            }
+        );
+        assert_eq!(
+            PolicyKind::parse("priority:60").unwrap(),
+            PolicyKind::Priority { aging_s: 60.0 }
+        );
+        assert!(PolicyKind::parse("priority:-1").is_err());
+        assert!(PolicyKind::parse("lifo").is_err());
+        assert_eq!(PolicyKind::Backfill.build().name(), "backfill");
+        assert_eq!(PolicyKind::default().label(), "fifo");
+    }
+
+    #[test]
+    fn autoscaler_up_to_clamps() {
+        let a = Autoscaler::up_to(0);
+        assert_eq!(a.max_capacity, 1);
+        assert_eq!(a.min_capacity, 1);
+        let a = Autoscaler::up_to(8);
+        assert_eq!(a.max_capacity, 8);
+    }
+}

@@ -1,21 +1,28 @@
 //! The funcX service: function registry, task submission, per-endpoint
-//! capacity slots with FIFO queues, and the result store.
+//! capacity slots with policy-ordered queues, and the result store.
 //!
 //! Discrete-event execution (DESIGN.md §4): `enqueue` records a task and
 //! schedules its eligibility (dispatch latency + cold start); the task
 //! *starts* only when one of its endpoint's capacity slots is free — the
 //! gap between eligibility and start is multi-tenant queue wait, the
-//! quantity the campaign layer studies. `advance_to` drives queued tasks
-//! through start and completion up to a virtual time; the synchronous
-//! `submit` drives a single task to completion over the same machinery
-//! (the degenerate single-tenant case, bit-identical to the pre-DES
-//! behaviour).
+//! quantity the campaign layer studies. *Which* queued task takes a
+//! freed slot is delegated to a pluggable [`SchedPolicy`] (DESIGN.md
+//! §9); the default [`Fifo`] policy is bit-identical to the pre-policy
+//! strict-FIFO core. `advance_to` drives queued tasks through start and
+//! completion up to a virtual time — interleaving autoscaler capacity
+//! changes ([`Autoscaler`]) and starts in virtual-time order — and the
+//! synchronous `submit` drives a single task to completion over the
+//! same machinery (the degenerate single-tenant case, bit-identical to
+//! the pre-DES behaviour). Planned outages (`begin_outage`/
+//! `end_outage`) fail running tasks for the flow layer to retry while
+//! the queue itself survives the window.
 
 use std::collections::{BTreeMap, VecDeque};
 
 use anyhow::{bail, Context, Result};
 
 use super::endpoint::{EndpointStatus, FaasEndpoint};
+use super::sched::{Autoscaler, Fifo, QueueView, ScalingEvent, SchedPolicy, SchedTask, TaskMeta};
 use crate::simnet::VClock;
 use crate::util::Json;
 
@@ -57,6 +64,8 @@ pub struct TaskRecord {
     pub started_vt: f64,
     pub finished_vt: f64,
     pub status: TaskStatus,
+    /// scheduler-relevant metadata (tenant, priority, duration estimate)
+    pub meta: TaskMeta,
 }
 
 impl TaskRecord {
@@ -79,28 +88,47 @@ impl TaskRecord {
 
 type FuncBody<C> = Box<dyn Fn(&mut C, &mut VClock, &Json) -> Result<Json>>;
 
+/// Autoscaler config plus its runtime state for one endpoint.
+struct AutoState {
+    cfg: Autoscaler,
+    /// a provision in flight completes (slot usable) at this time
+    pending_at: Option<f64>,
+    /// last capacity change (cooldown reference)
+    last_action_vt: f64,
+}
+
 /// The federated FaaS fabric, generic over the execution context `C`.
 pub struct FaasService<C> {
     funcs: BTreeMap<FuncId, FuncBody<C>>,
     endpoints: BTreeMap<String, FaasEndpoint>,
     tasks: Vec<TaskRecord>,
-    /// FIFO queue of not-yet-started tasks per endpoint
+    /// not-yet-started tasks per endpoint, in arrival order; the
+    /// scheduling policy decides which index starts next
     queues: BTreeMap<String, VecDeque<TaskId>>,
     /// per-endpoint slot free-at times (len == endpoint capacity)
     slots: BTreeMap<String, Vec<f64>>,
     /// started tasks whose completion has not been reported yet
     running: BTreeMap<String, Vec<(TaskId, f64)>>,
-    /// per-endpoint start time of the most recently started task: the
-    /// queue is strictly FIFO, so no task starts before the one ahead of
-    /// it did (keeps start events monotone even though the first task
-    /// pays the cold start and is eligible *later* than the second)
+    /// per-endpoint start time of the most recently started task (the
+    /// FIFO policy's start-monotonicity floor: no task starts before the
+    /// one ahead of it did, even though the first task pays the cold
+    /// start and is eligible *later* than the second)
     last_start: BTreeMap<String, f64>,
     /// queued args awaiting start
     args: BTreeMap<u64, Json>,
-    /// completions a sync `submit` drained on other tasks' behalf —
-    /// re-delivered by the next `advance_to` so fabric drivers never
-    /// miss one when the sync and queued APIs are mixed
+    /// completions owed to the next `advance_to` caller: ones a sync
+    /// `submit` drained on other tasks' behalf, and tasks an outage
+    /// failed mid-run — fabric drivers never miss either
     unclaimed: Vec<(f64, TaskId)>,
+    /// which queued task starts when a slot frees (DESIGN.md §9)
+    policy: Box<dyn SchedPolicy>,
+    /// per-endpoint elasticity (absent = fixed capacity)
+    autoscalers: BTreeMap<String, AutoState>,
+    /// last enqueue/start/outage instant per autoscaled endpoint — the
+    /// idle-window reference for scale-down decisions
+    last_activity: BTreeMap<String, f64>,
+    /// every capacity change applied (campaign reporting)
+    scaling: Vec<ScalingEvent>,
 }
 
 impl<C> Default for FaasService<C> {
@@ -115,6 +143,10 @@ impl<C> Default for FaasService<C> {
             last_start: BTreeMap::new(),
             args: BTreeMap::new(),
             unclaimed: Vec::new(),
+            policy: Box::new(Fifo),
+            autoscalers: BTreeMap::new(),
+            last_activity: BTreeMap::new(),
+            scaling: Vec::new(),
         }
     }
 }
@@ -158,16 +190,86 @@ impl<C> FaasService<C> {
             .with_context(|| format!("unknown faas endpoint `{id}`"))
     }
 
+    /// Replace the scheduling policy. Must be called before any task is
+    /// enqueued — switching mid-queue would re-order decisions already
+    /// exposed through `next_event_time`.
+    pub fn set_policy(&mut self, policy: Box<dyn SchedPolicy>) -> Result<()> {
+        if self.tasks.iter().any(|t| !t.status.is_complete()) {
+            bail!("cannot switch scheduling policy with tasks in flight");
+        }
+        self.policy = policy;
+        Ok(())
+    }
+
+    pub fn policy_name(&self) -> &'static str {
+        self.policy.name()
+    }
+
+    /// Attach an autoscaler to an endpoint. The endpoint's current
+    /// capacity is clamped into `[min_capacity, max_capacity]`.
+    pub fn set_autoscaler(&mut self, endpoint_id: &str, cfg: Autoscaler) -> Result<()> {
+        let ep = self
+            .endpoints
+            .get_mut(endpoint_id)
+            .with_context(|| format!("unknown faas endpoint `{endpoint_id}`"))?;
+        let min = cfg.min_capacity.max(1);
+        let max = cfg.max_capacity.max(min);
+        let cfg = Autoscaler {
+            min_capacity: min,
+            max_capacity: max,
+            ..cfg
+        };
+        let slots = self.slots.get_mut(endpoint_id).expect("slots");
+        while slots.len() < min {
+            slots.push(0.0);
+        }
+        while slots.len() > max {
+            slots.pop();
+        }
+        ep.capacity = slots.len();
+        self.autoscalers.insert(
+            endpoint_id.to_string(),
+            AutoState {
+                cfg,
+                pending_at: None,
+                last_action_vt: f64::NEG_INFINITY,
+            },
+        );
+        self.last_activity.entry(endpoint_id.to_string()).or_insert(0.0);
+        Ok(())
+    }
+
+    /// Every capacity change autoscalers have applied, in virtual-time
+    /// order.
+    pub fn scaling_log(&self) -> &[ScalingEvent] {
+        &self.scaling
+    }
+
     /// Queue a task at virtual time `now`. The body runs when the
-    /// dispatch latency has elapsed *and* a capacity slot is free (driven
-    /// by `advance_to`). Offline endpoints fail the task immediately —
-    /// recorded, not panicked, mirroring funcX's fire-and-forget model.
+    /// dispatch latency has elapsed *and* the scheduling policy grants
+    /// it a capacity slot (driven by `advance_to`). Offline endpoints
+    /// fail the task immediately — recorded, not panicked, mirroring
+    /// funcX's fire-and-forget model; endpoints that are `Down` (a
+    /// planned outage) accept the task into the surviving queue.
     pub fn enqueue(
         &mut self,
         now: f64,
         endpoint_id: &str,
         func: &FuncId,
         args: &Json,
+    ) -> Result<TaskId> {
+        self.enqueue_with_meta(now, endpoint_id, func, args, TaskMeta::default())
+    }
+
+    /// `enqueue` with scheduler metadata (tenant, priority class, cost
+    /// model duration estimate) attached for the policy to use.
+    pub fn enqueue_with_meta(
+        &mut self,
+        now: f64,
+        endpoint_id: &str,
+        func: &FuncId,
+        args: &Json,
+        meta: TaskMeta,
     ) -> Result<TaskId> {
         if !self.funcs.contains_key(func) {
             bail!("unknown function `{}`", func.0);
@@ -187,6 +289,7 @@ impl<C> FaasService<C> {
                 started_vt: now,
                 finished_vt: now,
                 status: TaskStatus::Failed(format!("endpoint `{endpoint_id}` offline")),
+                meta,
             });
             return Ok(task_id);
         }
@@ -200,22 +303,26 @@ impl<C> FaasService<C> {
             started_vt: f64::NAN,
             finished_vt: f64::NAN,
             status: TaskStatus::Queued,
+            meta,
         });
         self.queues
             .get_mut(endpoint_id)
             .expect("queue exists for registered endpoint")
             .push_back(task_id);
         self.args.insert(task_id.0, args.clone());
+        self.note_activity(endpoint_id, now);
+        self.autoscale_check(endpoint_id, now);
         Ok(task_id)
     }
 
     /// Earliest future virtual time at which the fabric changes state: a
-    /// queued head starting, or a running task completing.
+    /// queued task starting (per the policy), a running task completing,
+    /// an autoscaler provision finishing, or an idle-release deadline.
     pub fn next_event_time(&self) -> Option<f64> {
         let mut t = f64::INFINITY;
-        for (ep_id, q) in &self.queues {
-            if let Some(&head) = q.front() {
-                t = t.min(self.start_instant(ep_id, head));
+        for ep_id in self.queues.keys() {
+            if let Some((_, st)) = self.pending_start(ep_id) {
+                t = t.min(st);
             }
         }
         for running in self.running.values() {
@@ -223,27 +330,68 @@ impl<C> FaasService<C> {
                 t = t.min(finish);
             }
         }
+        for (ep_id, auto) in &self.autoscalers {
+            if let Some(p) = auto.pending_at {
+                t = t.min(p);
+            }
+            if let Some(d) = self.scale_down_deadline(ep_id) {
+                t = t.min(d);
+            }
+        }
         t.is_finite().then_some(t)
     }
 
-    /// Drive the fabric to virtual time `t`: start every queued task whose
-    /// start instant (eligible + slot availability) is <= `t`, in global
-    /// start-time order (deterministic tie-break by endpoint id), and
+    /// Drive the fabric to virtual time `t`: interleave autoscaler
+    /// capacity changes and policy-granted task starts in global
+    /// virtual-time order (deterministic tie-break by endpoint id;
+    /// provisions apply before same-instant starts so a freshly usable
+    /// slot is visible, starts before same-instant idle releases so a
+    /// claimable slot is never released under a startable task), and
     /// return the tasks that completed by `t` in completion order.
     pub fn advance_to(&mut self, ctx: &mut C, t: f64) -> Vec<TaskId> {
         loop {
-            // earliest startable head across endpoints
-            let mut best: Option<(f64, String)> = None;
-            for (ep_id, q) in &self.queues {
-                if let Some(&head) = q.front() {
-                    let st = self.start_instant(ep_id, head);
-                    if st <= t && best.as_ref().map(|(bt, _)| st < *bt).unwrap_or(true) {
-                        best = Some((st, ep_id.clone()));
+            // earliest due provision completion across endpoints
+            let mut prov: Option<(f64, String)> = None;
+            for (ep_id, auto) in &self.autoscalers {
+                if let Some(p) = auto.pending_at {
+                    if p <= t && prov.as_ref().map(|(bt, _)| p < *bt).unwrap_or(true) {
+                        prov = Some((p, ep_id.clone()));
                     }
                 }
             }
-            let Some((st, ep_id)) = best else { break };
-            self.start_task(ctx, &ep_id, st);
+            // earliest policy-granted start across endpoints
+            let mut best: Option<(f64, usize, String)> = None;
+            for ep_id in self.queues.keys() {
+                if let Some((idx, st)) = self.pending_start(ep_id) {
+                    if st <= t && best.as_ref().map(|(bt, _, _)| st < *bt).unwrap_or(true) {
+                        best = Some((st, idx, ep_id.clone()));
+                    }
+                }
+            }
+            // earliest due idle release
+            let mut down: Option<(f64, String)> = None;
+            for ep_id in self.autoscalers.keys() {
+                if let Some(d) = self.scale_down_deadline(ep_id) {
+                    if d <= t && down.as_ref().map(|(bt, _)| d < *bt).unwrap_or(true) {
+                        down = Some((d, ep_id.clone()));
+                    }
+                }
+            }
+            let pt = prov.as_ref().map(|(p, _)| *p).unwrap_or(f64::INFINITY);
+            let st = best.as_ref().map(|(s, _, _)| *s).unwrap_or(f64::INFINITY);
+            let dt = down.as_ref().map(|(d, _)| *d).unwrap_or(f64::INFINITY);
+            if pt.is_finite() && pt <= st && pt <= dt {
+                let (p, ep_id) = prov.expect("provision chosen");
+                self.apply_provision(&ep_id, p);
+            } else if st.is_finite() && st <= dt {
+                let (st, idx, ep_id) = best.expect("start chosen");
+                self.start_task(ctx, &ep_id, idx, st);
+            } else if dt.is_finite() {
+                let (d, ep_id) = down.expect("release chosen");
+                self.apply_scale_down(&ep_id, d);
+            } else {
+                break;
+            }
         }
         // report completions due by t
         let mut done: Vec<(f64, TaskId)> = Vec::new();
@@ -257,7 +405,7 @@ impl<C> FaasService<C> {
                 }
             });
         }
-        // plus any a sync `submit` consumed on other tasks' behalf
+        // plus completions owed from sync `submit` drives and outages
         let mut i = 0;
         while i < self.unclaimed.len() {
             if self.unclaimed[i].0 <= t {
@@ -270,28 +418,56 @@ impl<C> FaasService<C> {
         done.into_iter().map(|(_, id)| id).collect()
     }
 
-    /// When the queue head of `ep_id` can start: its eligibility, the
-    /// earliest slot, and the FIFO constraint (never before the task
-    /// ahead of it started).
-    fn start_instant(&self, ep_id: &str, head: TaskId) -> f64 {
-        let free = self.slots[ep_id]
+    /// The policy's decision for `ep_id`: which queue index starts next
+    /// and when. `None` when the queue is empty or the endpoint is not
+    /// accepting starts (Down/Offline).
+    ///
+    /// Materializes an O(queue) view per call — priority/SJF/backfill
+    /// genuinely rescan the whole queue at every decision point, and at
+    /// simulation scale (tens of queued tasks, a handful of endpoints)
+    /// the allocation is noise next to the fabric advance. Revisit with
+    /// a cached view if campaigns grow to thousands of queued tasks.
+    fn pending_start(&self, ep_id: &str) -> Option<(usize, f64)> {
+        if self.endpoints[ep_id].status != EndpointStatus::Online {
+            return None;
+        }
+        let q = &self.queues[ep_id];
+        if q.is_empty() {
+            return None;
+        }
+        let tasks: Vec<SchedTask> = q
+            .iter()
+            .map(|&id| {
+                let r = self.rec(id);
+                SchedTask {
+                    id,
+                    submitted_vt: r.submitted_vt,
+                    eligible_vt: r.eligible_vt,
+                    meta: &r.meta,
+                }
+            })
+            .collect();
+        let slot_free_vt = self.slots[ep_id]
             .iter()
             .cloned()
             .fold(f64::INFINITY, f64::min);
-        self.rec(head)
-            .eligible_vt
-            .max(free)
-            .max(self.last_start[ep_id])
+        let view = QueueView {
+            tasks: &tasks,
+            slot_free_vt,
+            last_start_vt: self.last_start[ep_id],
+        };
+        let pick = self.policy.pick(&view)?;
+        Some((pick.queue_idx, pick.start_vt))
     }
 
-    /// Run the queue head of `ep_id` at start time `st`.
-    fn start_task(&mut self, ctx: &mut C, ep_id: &str, st: f64) {
+    /// Run the task at queue index `idx` of `ep_id` at start time `st`.
+    fn start_task(&mut self, ctx: &mut C, ep_id: &str, idx: usize, st: f64) {
         let id = self
             .queues
             .get_mut(ep_id)
             .expect("queue")
-            .pop_front()
-            .expect("head");
+            .remove(idx)
+            .expect("picked index in range");
         let args = self.args.remove(&id.0).expect("queued args");
         let idx = (id.0 - 1) as usize;
         self.tasks[idx].started_vt = st;
@@ -325,6 +501,153 @@ impl<C> FaasService<C> {
             .get_mut(ep_id)
             .expect("running")
             .push((id, finish));
+        self.note_activity(ep_id, st);
+    }
+
+    /// Record queue/slot activity on an autoscaled endpoint (the
+    /// idle-window reference for scale-down).
+    fn note_activity(&mut self, ep_id: &str, vt: f64) {
+        if self.autoscalers.contains_key(ep_id) {
+            let e = self.last_activity.entry(ep_id.to_string()).or_insert(0.0);
+            *e = e.max(vt);
+        }
+    }
+
+    /// Trigger a scale-up provision if the waiting queue is deep enough
+    /// and no provision is in flight. A trigger landing inside the
+    /// cooldown window is deferred, not dropped: the provision is
+    /// scheduled from the cooldown's end, so sustained pressure keeps
+    /// stepping capacity toward the max one cooldown apart. Called
+    /// whenever the waiting count can have grown (enqueue, provision
+    /// completion, outage recovery).
+    fn autoscale_check(&mut self, ep_id: &str, now: f64) {
+        let waiting = self.queues.get(ep_id).map(|q| q.len()).unwrap_or(0);
+        let cap = self.slots.get(ep_id).map(|s| s.len()).unwrap_or(0);
+        let Some(auto) = self.autoscalers.get_mut(ep_id) else {
+            return;
+        };
+        if auto.pending_at.is_some()
+            || waiting < auto.cfg.scale_up_waiting
+            || cap >= auto.cfg.max_capacity
+        {
+            return;
+        }
+        let trigger = now.max(auto.last_action_vt + auto.cfg.cooldown_s);
+        auto.pending_at = Some(trigger + auto.cfg.provision_delay_s);
+    }
+
+    /// A provision completed at `p`: the new slot becomes usable.
+    fn apply_provision(&mut self, ep_id: &str, p: f64) {
+        let auto = self.autoscalers.get_mut(ep_id).expect("autoscaled");
+        auto.pending_at = None;
+        auto.last_action_vt = p;
+        let slots = self.slots.get_mut(ep_id).expect("slots");
+        slots.push(p);
+        let capacity = slots.len();
+        self.endpoints.get_mut(ep_id).expect("endpoint").capacity = capacity;
+        self.scaling.push(ScalingEvent {
+            vt: p,
+            endpoint: ep_id.to_string(),
+            capacity,
+        });
+        self.note_activity(ep_id, p);
+        // the queue may still be deep enough for another step (the
+        // cooldown spaces consecutive provisions out)
+        self.autoscale_check(ep_id, p);
+    }
+
+    /// When the endpoint's excess idle capacity is due for release:
+    /// requires an empty waiting queue, capacity above the floor, and a
+    /// continuously free slot for `scale_down_idle_s` (measured from the
+    /// later of the earliest slot-free time and the last queue/slot
+    /// activity), no earlier than the cooldown allows.
+    fn scale_down_deadline(&self, ep_id: &str) -> Option<f64> {
+        let auto = self.autoscalers.get(ep_id)?;
+        if !auto.cfg.scale_down_idle_s.is_finite() {
+            return None;
+        }
+        let slots = &self.slots[ep_id];
+        if slots.len() <= auto.cfg.min_capacity || !self.queues[ep_id].is_empty() {
+            return None;
+        }
+        let min_free = slots.iter().cloned().fold(f64::INFINITY, f64::min);
+        let idle_from = min_free.max(self.last_activity.get(ep_id).copied().unwrap_or(0.0));
+        Some((idle_from + auto.cfg.scale_down_idle_s).max(auto.last_action_vt + auto.cfg.cooldown_s))
+    }
+
+    /// Release the earliest-free slot at `d` (the idle deadline).
+    fn apply_scale_down(&mut self, ep_id: &str, d: f64) {
+        let slots = self.slots.get_mut(ep_id).expect("slots");
+        let i = slots
+            .iter()
+            .enumerate()
+            .min_by(|a, b| a.1.total_cmp(b.1))
+            .map(|(i, _)| i)
+            .expect("capacity >= 1");
+        slots.remove(i);
+        let capacity = slots.len();
+        self.endpoints.get_mut(ep_id).expect("endpoint").capacity = capacity;
+        let auto = self.autoscalers.get_mut(ep_id).expect("autoscaled");
+        auto.last_action_vt = d;
+        self.last_activity.insert(ep_id.to_string(), d);
+        self.scaling.push(ScalingEvent {
+            vt: d,
+            endpoint: ep_id.to_string(),
+            capacity,
+        });
+    }
+
+    /// Begin a planned outage at `now`: the endpoint stops accepting
+    /// starts (status `Down`), running tasks are failed at `now` — their
+    /// completions are delivered to the next `advance_to` caller so the
+    /// flow layer's retry machinery sees them — and the waiting queue
+    /// survives for re-dispatch after `end_outage`.
+    pub fn begin_outage(&mut self, endpoint_id: &str, now: f64) -> Result<()> {
+        let ep = self
+            .endpoints
+            .get_mut(endpoint_id)
+            .with_context(|| format!("unknown faas endpoint `{endpoint_id}`"))?;
+        if ep.status == EndpointStatus::Down {
+            return Ok(()); // already down: nothing more to interrupt
+        }
+        ep.status = EndpointStatus::Down;
+        let killed: Vec<(TaskId, f64)> = self
+            .running
+            .get_mut(endpoint_id)
+            .expect("running")
+            .drain(..)
+            .collect();
+        for (id, _scheduled_finish) in killed {
+            let idx = (id.0 - 1) as usize;
+            self.tasks[idx].finished_vt = now;
+            self.tasks[idx].status = TaskStatus::Failed(format!(
+                "endpoint `{endpoint_id}` went down mid-run"
+            ));
+            self.unclaimed.push((now, id));
+        }
+        // the interrupted slots free immediately (nothing is running)
+        for s in self.slots.get_mut(endpoint_id).expect("slots") {
+            *s = s.min(now);
+        }
+        self.note_activity(endpoint_id, now);
+        Ok(())
+    }
+
+    /// End a planned outage at `now`: the endpoint accepts starts again.
+    /// Slot availability is floored at `now` so surviving queued tasks
+    /// re-dispatch at recovery, never retroactively inside the window.
+    pub fn end_outage(&mut self, endpoint_id: &str, now: f64) -> Result<()> {
+        let ep = self
+            .endpoints
+            .get_mut(endpoint_id)
+            .with_context(|| format!("unknown faas endpoint `{endpoint_id}`"))?;
+        ep.status = EndpointStatus::Online;
+        for s in self.slots.get_mut(endpoint_id).expect("slots") {
+            *s = s.max(now);
+        }
+        self.note_activity(endpoint_id, now);
+        self.autoscale_check(endpoint_id, now);
+        Ok(())
     }
 
     /// Submit a function to an endpoint and run it to completion in
@@ -393,8 +716,19 @@ impl<C> FaasService<C> {
         &self.tasks
     }
 
-    /// Tasks currently queued (not yet started) on an endpoint.
+    /// Tasks currently *admitted* to an endpoint: waiting for a slot
+    /// **plus** started-but-unfinished. This is the load figure an
+    /// operator (or autoscaler dashboard) sees, and it is policy-
+    /// independent — re-ordering the queue never changes it. Use
+    /// [`waiting_depth`](Self::waiting_depth) for the not-yet-started
+    /// count alone (the autoscaler's scale-up trigger).
     pub fn queue_depth(&self, endpoint_id: &str) -> usize {
+        self.waiting_depth(endpoint_id)
+            + self.running.get(endpoint_id).map(|r| r.len()).unwrap_or(0)
+    }
+
+    /// Tasks admitted but not yet started on an endpoint.
+    pub fn waiting_depth(&self, endpoint_id: &str) -> usize {
         self.queues.get(endpoint_id).map(|q| q.len()).unwrap_or(0)
     }
 
@@ -633,5 +967,261 @@ mod tests {
         assert!(svc
             .register_endpoint(FaasEndpoint::new("alcf#gpu", FacilityId(1)))
             .is_err());
+    }
+
+    // ---- scheduling policies, autoscaling, outages (DESIGN.md §9) ----
+
+    use crate::faas::sched::{Autoscaler, PolicyKind};
+
+    fn drive(svc: &mut FaasService<Ctx>, ctx: &mut Ctx) {
+        while let Some(t) = svc.next_event_time() {
+            svc.advance_to(ctx, t);
+        }
+    }
+
+    fn meta(priority: i64, est: Option<f64>) -> TaskMeta {
+        TaskMeta {
+            user: 0,
+            priority,
+            est_duration_s: est,
+        }
+    }
+
+    fn secs(s: f64) -> Json {
+        Json::obj(vec![("secs", Json::num(s))])
+    }
+
+    /// Satellite pin: an explicitly-set `Fifo` policy replays the
+    /// contended-endpoint trace of the default service bit for bit
+    /// (start/finish/queue-wait of every task identical).
+    #[test]
+    fn explicit_fifo_policy_is_bit_identical_to_default() {
+        let run = |explicit: bool| {
+            let (mut svc, f) = setup();
+            if explicit {
+                svc.set_policy(PolicyKind::Fifo.build()).unwrap();
+            }
+            let mut ctx = Ctx::default();
+            for s in [10.0, 4.0, 7.0] {
+                svc.enqueue(0.0, "alcf#gpu", &f, &secs(s)).unwrap();
+            }
+            drive(&mut svc, &mut ctx);
+            svc.records()
+                .iter()
+                .map(|r| (r.started_vt, r.finished_vt, r.queue_wait_secs()))
+                .collect::<Vec<_>>()
+        };
+        assert_eq!(run(false), run(true));
+    }
+
+    /// `queue_depth` counts waiting + running consistently across
+    /// policies; `waiting_depth` is the not-yet-started subset.
+    #[test]
+    fn queue_depth_counts_waiting_plus_running() {
+        let (mut svc, f) = setup();
+        let mut ctx = Ctx::default();
+        for _ in 0..3 {
+            svc.enqueue(0.0, "alcf#gpu", &f, &secs(10.0)).unwrap();
+        }
+        assert_eq!(svc.queue_depth("alcf#gpu"), 3);
+        assert_eq!(svc.waiting_depth("alcf#gpu"), 3);
+        // first task starts at 3 (finishes 13): one running + two waiting
+        svc.advance_to(&mut ctx, 5.0);
+        assert_eq!(svc.waiting_depth("alcf#gpu"), 2);
+        assert_eq!(svc.queue_depth("alcf#gpu"), 3);
+        // its completion is reported: running drains
+        svc.advance_to(&mut ctx, 13.0);
+        assert_eq!(svc.queue_depth("alcf#gpu"), 2);
+        drive(&mut svc, &mut ctx);
+        assert_eq!(svc.queue_depth("alcf#gpu"), 0);
+        assert_eq!(svc.queue_depth("no-such-endpoint"), 0);
+    }
+
+    /// Satellite: `Priority` with aging never starves the low-priority
+    /// task — it overtakes high-priority work submitted long after it.
+    /// Without aging the same workload runs it dead last.
+    #[test]
+    fn priority_aging_prevents_starvation() {
+        let run = |aging_s: f64| {
+            let (mut svc, f) = setup();
+            svc.set_policy(Box::new(crate::faas::Priority { aging_s })).unwrap();
+            let mut ctx = Ctx::default();
+            // A (pri 1) pays the cold start; L (pri 0) then competes
+            // against a stream of later high-priority arrivals
+            let _a = svc
+                .enqueue_with_meta(0.0, "alcf#gpu", &f, &secs(10.0), meta(1, None))
+                .unwrap();
+            let l = svc
+                .enqueue_with_meta(2.0, "alcf#gpu", &f, &secs(10.0), meta(0, None))
+                .unwrap();
+            let b = svc
+                .enqueue_with_meta(5.0, "alcf#gpu", &f, &secs(10.0), meta(1, None))
+                .unwrap();
+            let c = svc
+                .enqueue_with_meta(15.0, "alcf#gpu", &f, &secs(10.0), meta(1, None))
+                .unwrap();
+            let d = svc
+                .enqueue_with_meta(25.0, "alcf#gpu", &f, &secs(10.0), meta(1, None))
+                .unwrap();
+            drive(&mut svc, &mut ctx);
+            (
+                svc.record(l).unwrap().started_vt,
+                svc.record(b).unwrap().started_vt,
+                svc.record(c).unwrap().started_vt,
+                svc.record(d).unwrap().started_vt,
+            )
+        };
+        // aging 10 s/level: L has out-aged the 1-level gap by the third
+        // decision and starts before C and D
+        let (l, b, c, d) = run(10.0);
+        assert_eq!(b, 13.0);
+        assert_eq!(l, 23.0, "aged low-priority task not scheduled");
+        assert_eq!((c, d), (33.0, 43.0));
+        // no aging: strictly by class — L runs last
+        let (l, _, c, d) = run(f64::INFINITY);
+        assert!(l > c && l > d, "low-priority should starve to the back: {l}");
+        assert_eq!(l, 43.0);
+    }
+
+    /// Shortest-job-first uses the cost-model estimates: the short task
+    /// leapfrogs the long head as soon as the head's cold start opens a
+    /// decision point.
+    #[test]
+    fn sjf_runs_short_eligible_job_first() {
+        let (mut svc, f) = setup();
+        svc.set_policy(PolicyKind::Sjf.build()).unwrap();
+        let mut ctx = Ctx::default();
+        let long = svc
+            .enqueue_with_meta(0.0, "alcf#gpu", &f, &secs(10.0), meta(0, Some(10.0)))
+            .unwrap();
+        let short = svc
+            .enqueue_with_meta(0.0, "alcf#gpu", &f, &secs(1.0), meta(0, Some(1.0)))
+            .unwrap();
+        drive(&mut svc, &mut ctx);
+        // short is eligible at 1 (no cold start: second enqueue), long at
+        // 3; SJF dispatches short at the first decision instant
+        assert_eq!(svc.record(short).unwrap().started_vt, 1.0);
+        assert_eq!(svc.record(long).unwrap().started_vt, 3.0);
+    }
+
+    /// Satellite: EASY backfill fills the cold-start hole with a short
+    /// job but never delays the head of line — the head's start time is
+    /// identical to plain FIFO's.
+    #[test]
+    fn backfill_fills_hole_without_delaying_head() {
+        let run = |kind: PolicyKind| {
+            let (mut svc, f) = setup();
+            svc.set_policy(kind.build()).unwrap();
+            let mut ctx = Ctx::default();
+            let head = svc
+                .enqueue_with_meta(0.0, "alcf#gpu", &f, &secs(10.0), meta(0, Some(10.0)))
+                .unwrap();
+            let mid = svc
+                .enqueue_with_meta(0.0, "alcf#gpu", &f, &secs(5.0), meta(0, Some(5.0)))
+                .unwrap();
+            let short = svc
+                .enqueue_with_meta(0.0, "alcf#gpu", &f, &secs(1.5), meta(0, Some(1.5)))
+                .unwrap();
+            drive(&mut svc, &mut ctx);
+            (
+                svc.record(head).unwrap().started_vt,
+                svc.record(mid).unwrap().started_vt,
+                svc.record(short).unwrap().started_vt,
+            )
+        };
+        let (fifo_head, fifo_mid, fifo_short) = run(PolicyKind::Fifo);
+        assert_eq!((fifo_head, fifo_mid, fifo_short), (3.0, 13.0, 18.0));
+        let (bf_head, bf_mid, bf_short) = run(PolicyKind::Backfill);
+        // the 1.5 s job fits in the [1, 3) cold-start hole; the 5 s job
+        // does not and must wait behind the head
+        assert_eq!(bf_short, 1.0);
+        assert_eq!(bf_head, fifo_head, "backfill delayed the head of line");
+        assert_eq!(bf_mid, 13.0);
+    }
+
+    /// Autoscaler: queue pressure adds a slot after the provisioning
+    /// delay (shrinking the makespan), and sustained idleness releases
+    /// it back to the floor.
+    #[test]
+    fn autoscaler_grows_under_load_and_shrinks_when_idle() {
+        let (mut svc, f) = setup();
+        svc.set_autoscaler(
+            "alcf#gpu",
+            Autoscaler {
+                min_capacity: 1,
+                max_capacity: 2,
+                scale_up_waiting: 2,
+                provision_delay_s: 5.0,
+                scale_down_idle_s: 20.0,
+                cooldown_s: 1.0,
+            },
+        )
+        .unwrap();
+        let mut ctx = Ctx::default();
+        let ids: Vec<TaskId> = (0..4)
+            .map(|_| svc.enqueue(0.0, "alcf#gpu", &f, &secs(10.0)).unwrap())
+            .collect();
+        drive(&mut svc, &mut ctx);
+        let starts: Vec<f64> = ids
+            .iter()
+            .map(|&i| svc.record(i).unwrap().started_vt)
+            .collect();
+        // t1 at 3 (cold start); the slot provisioned at 5 takes t2; the
+        // remaining pair lands as slots free — vs [3, 13, 23, 33] fixed
+        assert_eq!(starts, vec![3.0, 5.0, 13.0, 15.0]);
+        // grown to 2, then released 20 idle seconds after the released
+        // slot last freed (vt 23)
+        let log = svc.scaling_log();
+        assert_eq!(log.len(), 2, "{log:?}");
+        assert_eq!((log[0].vt, log[0].capacity), (5.0, 2));
+        assert_eq!((log[1].vt, log[1].capacity), (43.0, 1));
+        assert_eq!(ctx.calls, 4);
+    }
+
+    /// A planned outage fails the running task (delivered to the next
+    /// `advance_to` for the flow layer to retry), parks the queue, and
+    /// re-dispatches survivors at recovery — never inside the window.
+    #[test]
+    fn outage_fails_running_and_requeues_queued() {
+        let (mut svc, f) = setup();
+        let mut ctx = Ctx::default();
+        let t1 = svc.enqueue(0.0, "alcf#gpu", &f, &secs(10.0)).unwrap();
+        let t2 = svc.enqueue(0.0, "alcf#gpu", &f, &secs(10.0)).unwrap();
+        svc.advance_to(&mut ctx, 3.0); // t1 running (3 -> 13)
+        svc.begin_outage("alcf#gpu", 5.0).unwrap();
+        // t1 failed at the outage instant, reported on the next advance
+        let done = svc.advance_to(&mut ctx, 6.0);
+        assert_eq!(done, vec![t1]);
+        let r1 = svc.record(t1).unwrap();
+        assert_eq!(r1.finished_vt, 5.0);
+        assert!(matches!(&r1.status, TaskStatus::Failed(m) if m.contains("down")));
+        // enqueue during the outage joins the surviving queue
+        let t3 = svc.enqueue(6.0, "alcf#gpu", &f, &secs(10.0)).unwrap();
+        assert_eq!(svc.waiting_depth("alcf#gpu"), 2);
+        assert!(svc.next_event_time().is_none(), "nothing can start while down");
+        svc.end_outage("alcf#gpu", 20.0).unwrap();
+        drive(&mut svc, &mut ctx);
+        assert_eq!(svc.record(t2).unwrap().started_vt, 20.0);
+        assert_eq!(svc.record(t3).unwrap().started_vt, 30.0);
+        assert!(svc.record(t2).unwrap().status.is_complete());
+        // double-begin is a no-op; unknown endpoints error
+        svc.begin_outage("alcf#gpu", 50.0).unwrap();
+        svc.begin_outage("alcf#gpu", 51.0).unwrap();
+        assert!(svc.begin_outage("ghost", 0.0).is_err());
+        assert!(svc.end_outage("ghost", 0.0).is_err());
+        svc.end_outage("alcf#gpu", 60.0).unwrap();
+    }
+
+    /// Policy swaps are rejected while tasks are in flight (decisions
+    /// already exposed through `next_event_time` must not re-order).
+    #[test]
+    fn policy_swap_rejected_mid_queue() {
+        let (mut svc, f) = setup();
+        let mut ctx = Ctx::default();
+        svc.enqueue(0.0, "alcf#gpu", &f, &secs(1.0)).unwrap();
+        assert!(svc.set_policy(PolicyKind::Sjf.build()).is_err());
+        drive(&mut svc, &mut ctx);
+        assert!(svc.set_policy(PolicyKind::Sjf.build()).is_ok());
+        assert_eq!(svc.policy_name(), "sjf");
     }
 }

@@ -13,12 +13,14 @@
 use anyhow::{bail, Result};
 
 use xloop::costmodel::CostParams;
-use xloop::simnet::VClock;
+use xloop::faas::{Autoscaler, PolicyKind};
+use xloop::simnet::{FaultPlan, VClock};
 use xloop::transfer::{TransferRequest, TransferService};
 use xloop::util::cli::Options;
 use xloop::util::stats::{human_bytes, human_secs};
 use xloop::workflow::{
-    render_table1, run_campaign, CampaignConfig, Coordinator, Mode, Scenario, TrainingMode,
+    render_table1, run_campaign, CampaignConfig, CampaignReport, Coordinator, Mode, Scenario,
+    TrainingMode,
 };
 
 fn main() {
@@ -66,7 +68,9 @@ fn print_usage() {
            table1    reproduce Table 1 (retraining time breakdown grid)\n\
            retrain   run one retraining flow (--model, --mode, --real-steps)\n\
            campaign  N users' retrainings on the shared fabric (--users,\n\
-                     --interarrival, --loads for a crossover sweep)\n\
+                     --interarrival, --loads for a crossover sweep; --policy,\n\
+                     --autoscale, --faults, --compare-policies for the\n\
+                     scheduling/elasticity/fault study)\n\
            fig3      WAN transfer throughput vs concurrency (Fig. 3)\n\
            fig4      conventional vs ML-surrogate crossover (Fig. 4)\n\
            serve     retrain + deploy + stream edge inference\n\
@@ -185,6 +189,31 @@ fn cmd_campaign(args: &[String]) -> Result<()> {
             "comma-separated mean inter-arrival sweep; prints remote-vs-local \
              turnaround vs load (crossover study)",
         )
+        .opt(
+            "policy",
+            "fifo",
+            "faas scheduling policy: fifo | priority[:aging_s] | sjf | backfill",
+        )
+        .opt(
+            "priorities",
+            "",
+            "comma-separated per-user priority classes, cycled over users \
+             (empty = uniform; ordering applies under --policy priority)",
+        )
+        .opt(
+            "autoscale",
+            "0",
+            "autoscale the training endpoint up to N capacity slots (0 = off)",
+        )
+        .opt(
+            "faults",
+            "",
+            "fault plan, e.g. outage=alcf#cerebras@500..2000,wan=0.25@100..1500",
+        )
+        .flag(
+            "compare-policies",
+            "run the same campaign under every policy and print a comparison table",
+        )
         .opt("seed", "42", "arrival/fabric seed");
     if args.iter().any(|a| a == "--help") {
         print!("{}", opts.usage("xloop campaign"));
@@ -196,16 +225,41 @@ fn cmd_campaign(args: &[String]) -> Result<()> {
     let mode = Mode::parse(p.get("mode"))?;
     let scenario = Scenario::table1(p.get("model"), mode)?;
 
+    let policy = PolicyKind::parse(p.get("policy"))?;
+    let priorities = parse_priorities(p.get("priorities"))?;
+    let autoscale_max = p.get_usize("autoscale")?;
+    let faults = match p.get("faults") {
+        "" => FaultPlan::default(),
+        spec => FaultPlan::parse(spec)?,
+    };
+    // anything beyond the PR 2 default enables the enriched report
+    let enriched = !matches!(policy, PolicyKind::Fifo)
+        || !priorities.is_empty()
+        || autoscale_max > 0
+        || !faults.is_empty();
+    let mk_cfg = |scenario: &Scenario, mean: f64, kind: PolicyKind| {
+        let mut cfg = CampaignConfig::new(users, scenario.clone(), mean, seed);
+        cfg.policy = kind;
+        cfg.priorities = priorities.clone();
+        if autoscale_max > 0 {
+            cfg.autoscale = vec![(
+                scenario.mode.train_endpoint().to_string(),
+                Autoscaler::up_to(autoscale_max),
+            )];
+        }
+        cfg.faults = faults.clone();
+        cfg
+    };
+
+    let mean = p.get_f64("interarrival")?;
+    if p.get_bool("compare-policies") {
+        return campaign_policy_sweep(&scenario, mean, &mk_cfg);
+    }
     if !p.get("loads").is_empty() {
-        return campaign_load_sweep(p.get("loads"), users, &scenario, seed);
+        return campaign_load_sweep(p.get("loads"), users, &scenario, policy, &mk_cfg);
     }
 
-    let report = run_campaign(&CampaignConfig {
-        users,
-        scenario: scenario.clone(),
-        mean_interarrival_s: p.get_f64("interarrival")?,
-        seed,
-    })?;
+    let report = run_campaign(&mk_cfg(&scenario, mean, policy))?;
 
     println!(
         "\nCampaign — {} user(s), {} / {}, mean inter-arrival {}\n",
@@ -223,15 +277,21 @@ fn cmd_campaign(args: &[String]) -> Result<()> {
             Some(s) => format!("{s:.1}"),
             None => "N/A".to_string(),
         };
-        println!(
-            "{:>5} {:>12.1} {:>14} {:>13.1} {:>15} {:>14.1}",
-            u.user,
-            u.arrival_vt,
-            fmt(u.breakdown.data_transfer_s),
-            u.breakdown.training_s,
-            fmt(u.breakdown.model_transfer_s),
-            u.turnaround_s
-        );
+        match &u.breakdown {
+            Some(b) => println!(
+                "{:>5} {:>12.1} {:>14} {:>13.1} {:>15} {:>14.1}",
+                u.user,
+                u.arrival_vt,
+                fmt(b.data_transfer_s),
+                b.training_s,
+                fmt(b.model_transfer_s),
+                u.turnaround_s
+            ),
+            None => println!(
+                "{:>5} {:>12.1} {:>14} {:>13} {:>15} {:>14.1}",
+                u.user, u.arrival_vt, "-", "FAILED", "-", u.turnaround_s
+            ),
+        }
     }
     println!(
         "\nturnaround: p50 {} | p95 {} | max {} | makespan {}",
@@ -260,6 +320,107 @@ fn cmd_campaign(args: &[String]) -> Result<()> {
             l.max_queue_wait_s
         );
     }
+    if enriched {
+        print_enriched_report(&report);
+    }
+    Ok(())
+}
+
+fn parse_priorities(spec: &str) -> Result<Vec<i64>> {
+    let mut out = Vec::new();
+    for tok in spec.split(',') {
+        let tok = tok.trim();
+        if tok.is_empty() {
+            continue;
+        }
+        out.push(
+            tok.parse()
+                .map_err(|_| anyhow::anyhow!("bad priority class `{tok}`"))?,
+        );
+    }
+    Ok(out)
+}
+
+/// The DESIGN.md §9 additions to the campaign report: scheduling
+/// policy, per-user fairness (slowdown percentiles, Jain's index),
+/// autoscaling events, failed users. Printed only when a non-default
+/// knob is set, keeping `--policy fifo` output byte-identical to the
+/// pre-policy CLI.
+fn print_enriched_report(report: &CampaignReport) {
+    let f = &report.fairness;
+    println!(
+        "\nscheduling policy: {} | per-user slowdown: mean {:.3} | p50 {:.3} | p95 {:.3} | max {:.3}",
+        report.policy.label(),
+        f.mean_slowdown,
+        f.p50_slowdown,
+        f.p95_slowdown,
+        f.max_slowdown,
+    );
+    println!("Jain fairness index over per-user slowdowns: {:.4}", f.jain);
+    if !report.scaling.is_empty() {
+        let peak = report.scaling.iter().map(|e| e.capacity).max().unwrap_or(0);
+        println!(
+            "autoscaling: {} capacity change(s), peak {} slot(s):",
+            report.scaling.len(),
+            peak
+        );
+        for e in &report.scaling {
+            println!("  vt {:>10.1}  {:<16} -> {} slot(s)", e.vt, e.endpoint, e.capacity);
+        }
+    }
+    if !report.failed_users.is_empty() {
+        println!(
+            "users failed under the fault plan (retries exhausted): {:?}",
+            report.failed_users
+        );
+    }
+}
+
+/// Run the identical campaign under every scheduling policy and
+/// compare turnaround tails and fairness — the policy-comparison sweep
+/// (EXPERIMENTS.md §Scheduling).
+fn campaign_policy_sweep(
+    scenario: &Scenario,
+    mean: f64,
+    mk_cfg: &dyn Fn(&Scenario, f64, PolicyKind) -> CampaignConfig,
+) -> Result<()> {
+    println!(
+        "\nPolicy comparison — {} / {}, mean inter-arrival {}\n",
+        scenario.model,
+        scenario.mode.label(),
+        human_secs(mean)
+    );
+    println!(
+        "{:>10} {:>10} {:>10} {:>10} {:>11} {:>10} {:>8} {:>7}",
+        "policy", "p50 (s)", "p95 (s)", "max (s)", "mean slow", "max slow", "jain", "failed"
+    );
+    for kind in [
+        PolicyKind::Fifo,
+        PolicyKind::Sjf,
+        PolicyKind::Backfill,
+        PolicyKind::Priority {
+            aging_s: xloop::faas::sched::DEFAULT_AGING_S,
+        },
+    ] {
+        let report = run_campaign(&mk_cfg(scenario, mean, kind))?;
+        let f = &report.fairness;
+        println!(
+            "{:>10} {:>10.1} {:>10.1} {:>10.1} {:>11.3} {:>10.3} {:>8.4} {:>7}",
+            kind.label(),
+            report.turnaround_percentile(50.0),
+            report.turnaround_percentile(95.0),
+            report.max_turnaround_s(),
+            f.mean_slowdown,
+            f.max_slowdown,
+            f.jain,
+            report.failed_users.len(),
+        );
+    }
+    println!(
+        "\n(identical arrivals/fabric per row; slowdown = turnaround over\n\
+         its queue-wait-free counterfactual, Jain index 1.0 = every user\n\
+         slowed equally)"
+    );
     Ok(())
 }
 
@@ -270,7 +431,8 @@ fn campaign_load_sweep(
     loads: &str,
     users: usize,
     scenario: &Scenario,
-    seed: u64,
+    policy: PolicyKind,
+    mk_cfg: &dyn Fn(&Scenario, f64, PolicyKind) -> CampaignConfig,
 ) -> Result<()> {
     let local_scenario = Scenario::table1(&scenario.model, Mode::LocalV100)?;
     println!(
@@ -291,18 +453,8 @@ fn campaign_load_sweep(
         let mean: f64 = tok
             .parse()
             .map_err(|_| anyhow::anyhow!("bad load `{tok}` (mean inter-arrival seconds)"))?;
-        let remote = run_campaign(&CampaignConfig {
-            users,
-            scenario: scenario.clone(),
-            mean_interarrival_s: mean,
-            seed,
-        })?;
-        let local = run_campaign(&CampaignConfig {
-            users,
-            scenario: local_scenario.clone(),
-            mean_interarrival_s: mean,
-            seed,
-        })?;
+        let remote = run_campaign(&mk_cfg(scenario, mean, policy))?;
+        let local = run_campaign(&mk_cfg(&local_scenario, mean, policy))?;
         let (rp50, rp95) = (
             remote.turnaround_percentile(50.0),
             remote.turnaround_percentile(95.0),

@@ -1,9 +1,19 @@
-//! Fault injection for the WAN fabric.
+//! Fault injection for the WAN and FaaS fabrics.
 //!
 //! The transfer service (paper §3: Globus "provides fault recovery")
-//! needs failures to recover *from*. This model injects per-file transfer
-//! failures and endpoint outages, deterministically seeded so every
-//! experiment is reproducible.
+//! needs failures to recover *from*. Two layers live here:
+//!
+//! * [`FaultModel`] — stochastic per-file transfer failures,
+//!   deterministically seeded so every experiment is reproducible;
+//! * [`FaultPlan`] — *scheduled* campaign-level faults over virtual-time
+//!   windows (DESIGN.md §9): [`EndpointOutage`]s take a faas endpoint
+//!   `Down` (running tasks failed-with-retry, queue survives) and
+//!   [`WanDegradation`]s scale every WAN link's capacity by a factor
+//!   while active (transfers are re-water-filled at the transition).
+//!   The campaign driver turns each window edge into a `simnet::des`
+//!   event.
+
+use anyhow::{bail, Result};
 
 use crate::util::Rng;
 
@@ -49,6 +59,127 @@ impl FaultModel {
     }
 }
 
+/// One faas endpoint taken `Down` over `[from_vt, until_vt)`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct EndpointOutage {
+    pub endpoint: String,
+    pub from_vt: f64,
+    pub until_vt: f64,
+}
+
+/// Every WAN link's capacity scaled by `factor` over `[from_vt,
+/// until_vt)` — a backbone brownout. Overlapping degradations compose
+/// by taking the most severe (smallest) active factor.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WanDegradation {
+    /// capacity multiplier in (0, 1]
+    pub factor: f64,
+    pub from_vt: f64,
+    pub until_vt: f64,
+}
+
+/// Scheduled campaign-level faults (DESIGN.md §9).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct FaultPlan {
+    pub outages: Vec<EndpointOutage>,
+    pub wan: Vec<WanDegradation>,
+}
+
+impl FaultPlan {
+    pub fn is_empty(&self) -> bool {
+        self.outages.is_empty() && self.wan.is_empty()
+    }
+
+    /// Parse a comma-separated spec, e.g.
+    /// `outage=alcf#cerebras@500..2000,wan=0.25@100..1500`.
+    pub fn parse(spec: &str) -> Result<FaultPlan> {
+        let mut plan = FaultPlan::default();
+        for entry in spec.split(',') {
+            let entry = entry.trim();
+            if entry.is_empty() {
+                continue;
+            }
+            let (kind, rest) = entry
+                .split_once('=')
+                .ok_or_else(|| anyhow::anyhow!("bad fault entry `{entry}` (want kind=...)"))?;
+            let (subject, window) = rest
+                .split_once('@')
+                .ok_or_else(|| anyhow::anyhow!("bad fault entry `{entry}` (want ...@from..until)"))?;
+            let (from_s, until_s) = window.split_once("..").ok_or_else(|| {
+                anyhow::anyhow!("bad fault window `{window}` (want from..until)")
+            })?;
+            let from_vt: f64 = from_s
+                .parse()
+                .map_err(|_| anyhow::anyhow!("bad fault window start `{from_s}`"))?;
+            let until_vt: f64 = until_s
+                .parse()
+                .map_err(|_| anyhow::anyhow!("bad fault window end `{until_s}`"))?;
+            match kind.trim() {
+                "outage" => plan.outages.push(EndpointOutage {
+                    endpoint: subject.trim().to_string(),
+                    from_vt,
+                    until_vt,
+                }),
+                "wan" => {
+                    let factor: f64 = subject
+                        .trim()
+                        .parse()
+                        .map_err(|_| anyhow::anyhow!("bad wan factor `{subject}`"))?;
+                    plan.wan.push(WanDegradation {
+                        factor,
+                        from_vt,
+                        until_vt,
+                    });
+                }
+                other => bail!("unknown fault kind `{other}` (outage, wan)"),
+            }
+        }
+        plan.validate()?;
+        Ok(plan)
+    }
+
+    /// Windows must be finite, non-empty, non-negative; wan factors in
+    /// (0, 1]; outage windows on the same endpoint must not overlap
+    /// (the begin/end transitions would cancel each other).
+    pub fn validate(&self) -> Result<()> {
+        for o in &self.outages {
+            if !(o.from_vt.is_finite() && o.until_vt.is_finite())
+                || o.from_vt < 0.0
+                || o.until_vt <= o.from_vt
+            {
+                bail!(
+                    "bad outage window [{}, {}) for `{}`",
+                    o.from_vt,
+                    o.until_vt,
+                    o.endpoint
+                );
+            }
+        }
+        for (i, a) in self.outages.iter().enumerate() {
+            for b in self.outages.iter().skip(i + 1) {
+                if a.endpoint == b.endpoint
+                    && a.from_vt < b.until_vt
+                    && b.from_vt < a.until_vt
+                {
+                    bail!("overlapping outage windows on `{}`", a.endpoint);
+                }
+            }
+        }
+        for w in &self.wan {
+            if !(w.from_vt.is_finite() && w.until_vt.is_finite())
+                || w.from_vt < 0.0
+                || w.until_vt <= w.from_vt
+            {
+                bail!("bad wan window [{}, {})", w.from_vt, w.until_vt);
+            }
+            if !(w.factor > 0.0 && w.factor <= 1.0) {
+                bail!("wan factor must be in (0, 1], got {}", w.factor);
+            }
+        }
+        Ok(())
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -80,5 +211,40 @@ mod tests {
             let f = m.draw_failure(&mut rng).unwrap();
             assert!((0.0..1.0).contains(&f));
         }
+    }
+
+    #[test]
+    fn fault_plan_parses_mixed_spec() {
+        let p = FaultPlan::parse("outage=alcf#cerebras@500..2000, wan=0.25@100..1500").unwrap();
+        assert_eq!(
+            p.outages,
+            vec![EndpointOutage {
+                endpoint: "alcf#cerebras".into(),
+                from_vt: 500.0,
+                until_vt: 2000.0,
+            }]
+        );
+        assert_eq!(
+            p.wan,
+            vec![WanDegradation {
+                factor: 0.25,
+                from_vt: 100.0,
+                until_vt: 1500.0,
+            }]
+        );
+        assert!(!p.is_empty());
+        assert!(FaultPlan::parse("").unwrap().is_empty());
+    }
+
+    #[test]
+    fn fault_plan_rejects_bad_specs() {
+        assert!(FaultPlan::parse("outage=e@5..2").is_err()); // empty window
+        assert!(FaultPlan::parse("wan=1.5@0..10").is_err()); // factor > 1
+        assert!(FaultPlan::parse("wan=0@0..10").is_err()); // factor 0
+        assert!(FaultPlan::parse("brownout=x@0..1").is_err()); // kind
+        assert!(FaultPlan::parse("outage=e@nope..1").is_err());
+        assert!(FaultPlan::parse("outage=e@0..1,outage=e@0.5..2").is_err()); // overlap
+        // same endpoint, disjoint windows: fine
+        assert!(FaultPlan::parse("outage=e@0..1,outage=e@2..3").is_ok());
     }
 }

@@ -15,6 +15,6 @@ pub mod topology;
 
 pub use clock::{VClock, VSpan};
 pub use des::{EventId, Scheduler};
-pub use fault::FaultModel;
+pub use fault::{EndpointOutage, FaultModel, FaultPlan, WanDegradation};
 pub use fluid::{max_min_rates, simulate, FlowResult, FlowSpec};
 pub use topology::{Facility, FacilityId, Link, LinkId, Topology, GBPS};

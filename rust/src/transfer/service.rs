@@ -416,6 +416,10 @@ pub struct TransferService {
     rng: Rng,
     active: Vec<ActiveTask>,
     next_handle: u64,
+    /// WAN brownout factor from an active `FaultPlan` degradation
+    /// window (DESIGN.md §9): every WAN link's capacity is scaled by
+    /// this while the fabric advances. 1.0 = healthy.
+    wan_factor: f64,
 }
 
 impl TransferService {
@@ -428,7 +432,25 @@ impl TransferService {
             rng: Rng::new(seed),
             active: Vec::new(),
             next_handle: 1,
+            wan_factor: 1.0,
         }
+    }
+
+    /// Apply (or clear, with 1.0) a WAN capacity brownout. Active tasks
+    /// are re-water-filled at the next fabric event under the new caps;
+    /// the synchronous `execute` path (exclusive single-task, Table 1)
+    /// deliberately ignores degradations — fault windows are a campaign
+    /// construct.
+    pub fn set_wan_factor(&mut self, factor: f64) {
+        assert!(
+            factor > 0.0 && factor <= 1.0 && factor.is_finite(),
+            "wan factor must be in (0, 1], got {factor}"
+        );
+        self.wan_factor = factor;
+    }
+
+    pub fn wan_factor(&self) -> f64 {
+        self.wan_factor
     }
 
     /// Paper fabric: SLAC and ALCF DTNs on the §5.1 topology.
@@ -479,13 +501,15 @@ impl TransferService {
 
     /// Per-active-task per-stream rates under the current contention.
     ///
-    /// With exactly one active task this is the solo formula the
-    /// pre-DES engine used — `(total_cap / n_streaming).min(window)` —
-    /// so single-tenant runs stay bit-identical. With several, every
-    /// streaming slot becomes a flow in a max-min fair water-fill over
-    /// WAN links, shared storage, and per-stream window caps.
+    /// With exactly one active task on a healthy WAN this is the solo
+    /// formula the pre-DES engine used — `(total_cap /
+    /// n_streaming).min(window)` — so single-tenant runs stay
+    /// bit-identical. With several tasks (or a WAN degradation active,
+    /// whose scaled link caps the cached solo aggregate cannot see),
+    /// every streaming slot becomes a flow in a max-min fair water-fill
+    /// over WAN links, shared storage, and per-stream window caps.
     fn current_rates(&self) -> Vec<f64> {
-        if self.active.len() == 1 {
+        if self.active.len() == 1 && self.wan_factor == 1.0 {
             let sim = &self.active[0].sim;
             let ns = sim.n_streaming();
             let rate = if ns > 0 {
@@ -515,7 +539,7 @@ impl TransferService {
             caps.entry(write_key.clone()).or_insert(sim.write_bps);
             for &l in &sim.route {
                 caps.entry(CapKey::Wan(l.0))
-                    .or_insert_with(|| self.topo.link(l).capacity_bps);
+                    .or_insert_with(|| self.topo.link(l).capacity_bps * self.wan_factor);
             }
             for si in 0..ns {
                 let stream_key = CapKey::Stream(ti, si);
@@ -980,6 +1004,51 @@ mod tests {
             .clone();
         assert!(r1.finish_vt > alone.finish_vt, "incumbent not slowed");
         assert!(r2.finish_vt.is_finite());
+    }
+
+    /// A WAN degradation (FaultPlan brownout) slows active transfers:
+    /// the water-fill re-runs under the scaled link caps, so the same
+    /// task finishes later than on a healthy fabric, and clearing the
+    /// factor mid-flight speeds the remainder back up.
+    #[test]
+    fn wan_degradation_slows_and_recovery_restores() {
+        let mut healthy = svc();
+        healthy.submit_task(0.0, &gb_request(16, Some(8))).unwrap();
+        let base = drive(&mut healthy, 1).pop().unwrap().1.unwrap();
+
+        // degraded for the whole task: strictly slower
+        let mut s = svc();
+        s.set_wan_factor(0.4);
+        s.submit_task(0.0, &gb_request(16, Some(8))).unwrap();
+        let slow = drive(&mut s, 1).pop().unwrap().1.unwrap();
+        assert!(
+            slow.finish_vt > base.finish_vt,
+            "degraded {} !> healthy {}",
+            slow.finish_vt,
+            base.finish_vt
+        );
+
+        // degraded only for the first 10 s: between the two
+        let mut s = svc();
+        s.set_wan_factor(0.4);
+        s.submit_task(0.0, &gb_request(16, Some(8))).unwrap();
+        let mut done = s.advance_to(10.0);
+        assert!(done.is_empty(), "finished during the brownout");
+        s.set_wan_factor(1.0);
+        while done.is_empty() {
+            let t = s.next_event_time().expect("task still active");
+            done = s.advance_to(t);
+        }
+        let mixed = done.pop().unwrap().1.unwrap();
+        assert!(mixed.finish_vt > base.finish_vt);
+        assert!(mixed.finish_vt < slow.finish_vt);
+    }
+
+    #[test]
+    #[should_panic]
+    fn wan_factor_rejects_out_of_range() {
+        let mut s = svc();
+        s.set_wan_factor(0.0);
     }
 
     /// Tasks in opposite directions share the same bidirectional links

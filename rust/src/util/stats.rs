@@ -79,6 +79,21 @@ pub fn percentile(samples: &[f64], p: f64) -> f64 {
     sorted[rank.clamp(0, sorted.len() as isize - 1) as usize]
 }
 
+/// Jain's fairness index over a set of allocations/slowdowns:
+/// `(Σx)² / (n · Σx²)`, 1.0 = perfectly fair, → 1/n as one element
+/// dominates. Empty input returns 1.0 (nothing to be unfair about).
+pub fn jain_index(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 1.0;
+    }
+    let sum: f64 = xs.iter().sum();
+    let sq: f64 = xs.iter().map(|x| x * x).sum();
+    if sq == 0.0 {
+        return 1.0;
+    }
+    (sum * sum) / (xs.len() as f64 * sq)
+}
+
 /// Human-readable byte count.
 pub fn human_bytes(bytes: f64) -> String {
     const UNITS: [&str; 6] = ["B", "KiB", "MiB", "GiB", "TiB", "PiB"];
@@ -134,6 +149,20 @@ mod tests {
         assert_eq!(percentile(&xs, 0.0), 1.0);
         assert_eq!(percentile(&xs, 100.0), 100.0);
         assert!(percentile(&[], 50.0).is_nan());
+    }
+
+    #[test]
+    fn jain_bounds_and_extremes() {
+        // perfectly fair
+        assert!((jain_index(&[2.0, 2.0, 2.0, 2.0]) - 1.0).abs() < 1e-12);
+        // one user hogging: index -> 1/n
+        let skew = jain_index(&[10.0, 0.0, 0.0, 0.0]);
+        assert!((skew - 0.25).abs() < 1e-12, "{skew}");
+        // strictly between for mild skew
+        let mild = jain_index(&[1.0, 2.0]);
+        assert!(mild > 0.25 && mild < 1.0, "{mild}");
+        assert_eq!(jain_index(&[]), 1.0);
+        assert_eq!(jain_index(&[0.0, 0.0]), 1.0);
     }
 
     #[test]

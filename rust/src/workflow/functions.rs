@@ -13,7 +13,9 @@ use crate::training::{Recipe, TrainState, Trainer};
 use crate::util::Json;
 
 /// Detector/simulation sample rates for virtual-time accounting of **S**.
-fn generation_rate(model: &str) -> f64 {
+/// `pub(crate)` so `World::estimate_task_secs` predicts from the same
+/// constants the bodies charge — scheduler estimates stay exact.
+pub(crate) fn generation_rate(model: &str) -> f64 {
     match model {
         "braggnn" => 100_000.0,   // peaks/s out of the HEDM pipeline
         "cookienetae" => 5_000.0, // shots/s of eToF simulation
@@ -22,7 +24,7 @@ fn generation_rate(model: &str) -> f64 {
 }
 
 /// Paper §4.2: the DC cluster labels at 2.44 µs/peak (1024 cores).
-const CLUSTER_LABEL_S_PER_SAMPLE: f64 = 2.44e-6;
+pub(crate) const CLUSTER_LABEL_S_PER_SAMPLE: f64 = 2.44e-6;
 
 pub fn register_all(faas: &mut crate::faas::FaasService<World>) -> Result<()> {
     faas.register_function("generate_data", generate_data)?;
@@ -116,7 +118,7 @@ fn label_data(world: &mut World, clock: &mut VClock, args: &Json) -> Result<Json
 /// Fine-tuning needs fewer steps than from-scratch training; the paper's
 /// §7(1) motivation. Fraction calibrated from the warm-start ablation
 /// test below (loss parity at ~1/4 the steps).
-const FINETUNE_STEP_FRACTION: f64 = 0.25;
+pub(crate) const FINETUNE_STEP_FRACTION: f64 = 0.25;
 
 /// **T**: (re)train a model on a DCAI endpoint.
 ///

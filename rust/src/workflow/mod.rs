@@ -18,10 +18,12 @@ pub mod providers;
 pub mod scenario;
 pub mod world;
 
-pub use campaign::{run_campaign, CampaignConfig, CampaignReport, EndpointLoad, UserOutcome};
+pub use campaign::{
+    run_campaign, CampaignConfig, CampaignReport, EndpointLoad, FairnessSummary, UserOutcome,
+};
 pub use coordinator::{
     extract_breakdown, render_table1, Coordinator, RetrainBreakdown, RetrainOutcome,
 };
 pub use flow::{dnn_trainer_flow, FlowShape};
 pub use scenario::{Mode, Scenario};
-pub use world::{TrainedModel, TrainingMode, World};
+pub use world::{Tenant, TrainedModel, TrainingMode, World};

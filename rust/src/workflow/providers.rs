@@ -54,7 +54,13 @@ impl ActionProvider<World> for TransferProvider {
 }
 
 /// Wrap a funcX submission as a flow action.
-/// params: {endpoint, function, args}
+/// params: {endpoint, function, args, priority?, user?}
+///
+/// A flow definition may pin a scheduler `priority` class (or tenant
+/// `user` tag) directly in the action params; it overrides the world's
+/// ambient [`Tenant`](super::world::Tenant) for this and subsequent
+/// submissions of the same drive (the campaign layer re-asserts its
+/// per-user tenant every poll round).
 pub struct ComputeProvider;
 
 impl ActionProvider<World> for ComputeProvider {
@@ -76,6 +82,12 @@ impl ActionProvider<World> for ComputeProvider {
                 .to_string(),
         );
         let args = params.get("args").clone();
+        if let Some(p) = params.get("priority").as_f64() {
+            world.tenant.priority = p as i64;
+        }
+        if let Some(u) = params.get("user").as_u64() {
+            world.tenant.user = u as u32;
+        }
         let ticket = world.submit_compute_ticket(now, &endpoint, &func, &args)?;
         Ok(Effect::Pending(ticket))
     }

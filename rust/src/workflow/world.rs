@@ -10,7 +10,7 @@ use anyhow::{bail, Context, Result};
 use crate::accel::{cerebras_wse, local_v100, multi_gpu_horovod, sambanova_rdu, AcceleratorModel};
 use crate::data::Dataset;
 use crate::edge::EdgeHost;
-use crate::faas::{FaasEndpoint, FaasService, FuncId, TaskId, TaskStatus};
+use crate::faas::{FaasEndpoint, FaasService, FuncId, TaskId, TaskMeta, TaskStatus};
 use crate::flows::{FabricHost, Ticket};
 use crate::models::ModelRegistry;
 use crate::runtime::{Runtime, Tensor};
@@ -37,6 +37,18 @@ pub enum TrainingMode {
     Real { steps_override: Option<u64> },
     /// virtual-time only (Table 1 benches): params stay at init
     VirtualOnly,
+}
+
+/// Who is submitting fabric work right now. The campaign layer sets
+/// this before driving each user's flow so every faas task carries the
+/// tenant and priority class the scheduling policy needs (DESIGN.md
+/// §9); single-tenant paths leave the untagged default.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Tenant {
+    /// 1-based campaign user index (0 = untagged)
+    pub user: u32,
+    /// static priority class; larger = more urgent
+    pub priority: i64,
 }
 
 /// Work submitted to a shared fabric, awaiting completion. The ticket
@@ -81,6 +93,8 @@ pub struct World {
     pub repository: crate::models::ModelRepository,
     /// every transfer completed through the fabric (campaign statistics)
     pub transfer_log: Vec<TransferReport>,
+    /// submitting tenant for fabric work (campaign layer sets per user)
+    pub tenant: Tenant,
     /// fabric work awaiting completion, by ticket id
     pending: BTreeMap<u64, PendingOp>,
     /// resolved tickets: (finish virtual time, outcome)
@@ -138,6 +152,7 @@ impl World {
             last_label_cost_s: None,
             repository: crate::models::ModelRepository::new(),
             transfer_log: Vec::new(),
+            tenant: Tenant::default(),
             pending: BTreeMap::new(),
             ready: BTreeMap::new(),
             next_ticket: 1,
@@ -177,7 +192,9 @@ impl World {
 
     /// Queue a faas task on an endpoint; the ticket resolves when the
     /// task completes (queue wait included). Offline endpoints resolve
-    /// immediately with the recorded failure.
+    /// immediately with the recorded failure. The task carries the
+    /// current [`Tenant`] plus a cost-model duration estimate so
+    /// SJF/backfill policies can order it (DESIGN.md §9).
     pub fn submit_compute_ticket(
         &mut self,
         now: f64,
@@ -185,11 +202,16 @@ impl World {
         func: &FuncId,
         args: &Json,
     ) -> Result<Ticket> {
+        let meta = TaskMeta {
+            user: self.tenant.user,
+            priority: self.tenant.priority,
+            est_duration_s: self.estimate_task_secs(endpoint, func, args),
+        };
         let faas = self
             .faas
             .as_mut()
             .context("faas service missing (reentrant compute?)")?;
-        let task = faas.enqueue(now, endpoint, func, args)?;
+        let task = faas.enqueue_with_meta(now, endpoint, func, args, meta)?;
         let status = faas.record(task)?.status.clone();
         let ticket = self.alloc_ticket();
         match status {
@@ -237,6 +259,77 @@ impl World {
             .and_then(|m| m.get(name))
             .copied()
             .with_context(|| format!("no file `{name}` at `{facility}`"))
+    }
+
+    /// Predict a faas body's virtual duration from the same cost models
+    /// the bodies charge: accelerator models for training, the paper's
+    /// cluster labeling rate for **A**, the detector/simulation rates
+    /// for **S**. Exact for every registered function (the bodies
+    /// advance their scratch clocks by precisely these amounts), which
+    /// is what lets `EasyBackfill` promise it never delays the head of
+    /// line. `None` for unknown functions — SJF runs those last and
+    /// backfill will not gamble on them.
+    pub fn estimate_task_secs(&self, endpoint: &str, func: &FuncId, args: &Json) -> Option<f64> {
+        match func.0.as_str() {
+            "generate_data" => {
+                let model = args.get("model").as_str()?;
+                let n = args.get("n").as_usize()? as f64;
+                Some(n / super::functions::generation_rate(model))
+            }
+            "label_data" => {
+                let ds = args.get("dataset").as_str()?;
+                let n = self.datasets.get(ds)?.n as f64;
+                Some(n * super::functions::CLUSTER_LABEL_S_PER_SAMPLE)
+            }
+            "train_model" => {
+                let model = args.get("model").as_str()?;
+                let meta = self.registry.get(model).ok()?;
+                let accel = self.accels.get(endpoint)?;
+                let recipe = crate::training::Recipe::standard(model).ok()?;
+                // mirror the body exactly: the step budget shrinks only
+                // when a warm start is requested AND a foundation
+                // checkpoint exists right now. (A checkpoint published
+                // between enqueue and start makes the estimate
+                // conservative — backfill stays safe, it never promises
+                // a job is *shorter* than it runs.)
+                let tag = crate::models::ExperimentTag {
+                    sample: args.get("sample").as_str().unwrap_or("default").to_string(),
+                    setting: args.get("setting").as_f64().unwrap_or(0.0),
+                };
+                let warm = args.get("warm_start").as_bool().unwrap_or(false)
+                    && self.repository.select_foundation(model, &tag).is_some();
+                let steps = if warm {
+                    ((recipe.full_steps as f64 * super::functions::FINETUNE_STEP_FRACTION)
+                        as u64)
+                        .max(1)
+                } else {
+                    recipe.full_steps
+                };
+                Some(
+                    accel
+                        .train_time(meta.train_flops_per_step, meta.param_bytes() as f64, steps)
+                        .total_s,
+                )
+            }
+            "evaluate_model" => Some(0.5),
+            _ => None,
+        }
+    }
+
+    /// Apply a `FaultPlan` window edge to the fabrics (campaign layer;
+    /// DESIGN.md §9).
+    pub fn begin_endpoint_outage(&mut self, endpoint: &str, now: f64) -> Result<()> {
+        self.faas
+            .as_mut()
+            .context("faas service missing")?
+            .begin_outage(endpoint, now)
+    }
+
+    pub fn end_endpoint_outage(&mut self, endpoint: &str, now: f64) -> Result<()> {
+        self.faas
+            .as_mut()
+            .context("faas service missing")?
+            .end_outage(endpoint, now)
     }
 
     /// Resolve the transfer payload size for a provider parameter set:
@@ -376,6 +469,50 @@ mod tests {
         assert!(w.accel("alcf#ghost").is_err());
         assert!(w.dataset("nope").is_err());
         assert!(w.trained("braggnn").is_err());
+    }
+
+    /// The scheduler's duration estimates come from the same cost
+    /// models the bodies charge, so for registered functions they are
+    /// *exact* — the property `EasyBackfill`'s no-delay guarantee
+    /// rests on.
+    #[test]
+    fn duration_estimates_are_exact_for_known_functions() {
+        if !artifacts_present() {
+            return;
+        }
+        let mut w = World::paper(8).unwrap();
+        w.training_mode = TrainingMode::VirtualOnly;
+        let gen = FuncId("generate_data".into());
+        let args = crate::util::Json::parse(
+            r#"{"model": "braggnn", "n": 64, "seed": 5, "name": "est-d"}"#,
+        )
+        .unwrap();
+        let est = w.estimate_task_secs("slac#sim", &gen, &args).unwrap();
+        let ticket = w.submit_compute_ticket(0.0, "slac#sim", &gen, &args).unwrap();
+        loop {
+            if w.take_ready(ticket).is_some() {
+                break;
+            }
+            let t = w.next_fabric_event().expect("generation pending");
+            w.advance_fabrics(t);
+        }
+        let faas = w.faas.as_ref().unwrap();
+        let rec = faas.records().last().unwrap();
+        assert_eq!(rec.exec_secs(), est, "estimate not exact");
+        assert_eq!(rec.meta.est_duration_s, Some(est));
+
+        let train = FuncId("train_model".into());
+        let targs = crate::util::Json::parse(
+            r#"{"model": "braggnn", "dataset": "est-d", "endpoint": "alcf#cerebras"}"#,
+        )
+        .unwrap();
+        let est = w.estimate_task_secs("alcf#cerebras", &train, &targs).unwrap();
+        // Cerebras BraggNN: ~18 s modeled (Table 1: 19 s)
+        assert!((15.0..22.0).contains(&est), "{est}");
+        // unknown functions carry no estimate
+        assert!(w
+            .estimate_task_secs("slac#sim", &FuncId("ghost".into()), &crate::util::Json::Null)
+            .is_none());
     }
 
     #[test]
