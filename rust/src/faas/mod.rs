@@ -12,8 +12,10 @@
 //!   under the discrete-event scheduler — concurrent tenants contend
 //!   for capacity slots and experience queue wait (DESIGN.md §4), and a
 //!   pluggable **scheduling policy** (`sched`: FIFO, priority+aging,
-//!   shortest-job-first, EASY backfill) decides who takes a freed slot
-//!   (DESIGN.md §9);
+//!   shortest-job-first, EASY backfill) decides who takes freed
+//!   capacity (DESIGN.md §9); a **gang** (`TaskMeta::slots > 1`)
+//!   acquires its full width of slots atomically — no partial holds
+//!   (DESIGN.md §10);
 //! * an optional per-endpoint **autoscaler** grows/shrinks capacity
 //!   slots on queue pressure with provisioning delay and cooldown;
 //! * **submit** is the single-tenant convenience: it drives one task to

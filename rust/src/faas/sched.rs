@@ -1,27 +1,41 @@
 //! Pluggable scheduling policies and endpoint autoscaling for the faas
-//! fabric (DESIGN.md §9).
+//! fabric (DESIGN.md §9, §10).
 //!
 //! The queueing core of [`super::service::FaasService`] stores tasks in
-//! arrival order; *which* queued task starts when a capacity slot frees
-//! — and at what instant — is delegated to a [`SchedPolicy`]. The
-//! policy sees per-task metadata ([`TaskMeta`]: tenant, priority class,
-//! cost-model duration estimate) plus the endpoint's slot state and
-//! returns a [`Pick`]. Four policies ship:
+//! arrival order; *which* queued task starts when capacity frees — and
+//! at what instant — is delegated to a [`SchedPolicy`]. The policy sees
+//! per-task metadata ([`TaskMeta`]: tenant, priority class, cost-model
+//! duration estimate, gang width) plus the endpoint's full slot state
+//! and returns a [`Pick`]. Four policies ship:
 //!
 //! * [`Fifo`] — strict arrival order with the start-monotonicity
 //!   constraint the pre-policy service hard-coded; **bit-identical** to
-//!   the PR 2 queueing core (pinned by the service and campaign tests).
+//!   the PR 2 queueing core for single-slot tasks (pinned by the
+//!   service and campaign tests).
 //! * [`Priority`] — highest effective priority first, where waiting
 //!   tasks *age* upward (`aging_s` seconds of wait = one priority
 //!   level) so low-priority work is never starved indefinitely.
 //! * [`ShortestJobFirst`] — smallest duration estimate first among the
-//!   tasks eligible at the decision instant (unknown estimates run
+//!   tasks startable at the decision instant (unknown estimates run
 //!   last).
 //! * [`EasyBackfill`] — FIFO with EASY backfilling: the head of line
 //!   holds a reservation at the earliest instant it could start, and a
-//!   later task may jump ahead only if, by its duration estimate, it
-//!   finishes before that reservation. With accurate estimates the
-//!   head's start is never delayed relative to plain FIFO (test-pinned).
+//!   later task may jump ahead only if it cannot delay that
+//!   reservation — either its *estimated* completion fits inside the
+//!   hole, or it runs entirely on slots the head does not need. With
+//!   accurate estimates the head's start is never delayed relative to
+//!   plain FIFO (test-pinned).
+//!
+//! **Gangs** (DESIGN.md §10): a task whose `TaskMeta::slots` is `k > 1`
+//! acquires `k` capacity slots *atomically* — it starts only at an
+//! instant when `k` slots are simultaneously free, and partial holds
+//! are forbidden (a gang never camps on some slots while waiting for
+//! the rest), which is what keeps FIFO deadlock-free. The widened
+//! [`QueueView`] therefore exposes every slot's free time, and
+//! [`QueueView::free_for`] answers "when are `k` slots free at once"
+//! (the `k`-th order statistic). Draining toward a wide gang opens real
+//! capacity holes — the first situation where `EasyBackfill` genuinely
+//! reorders work rather than just absorbing cold starts.
 //!
 //! [`Autoscaler`] is the per-endpoint elasticity config: capacity slots
 //! are added when the waiting queue is deep (after a provisioning
@@ -34,8 +48,11 @@ use anyhow::{bail, Result};
 
 use super::service::TaskId;
 
+/// Slack tolerance for virtual-time comparisons inside policies.
+const EPS: f64 = 1e-9;
+
 /// Scheduler-relevant metadata attached to a task at enqueue time.
-#[derive(Debug, Clone, Default)]
+#[derive(Debug, Clone)]
 pub struct TaskMeta {
     /// submitting tenant (campaign user index, 1-based; 0 = untagged)
     pub user: u32,
@@ -45,6 +62,29 @@ pub struct TaskMeta {
     /// the accelerator models). `None` = unknown: `ShortestJobFirst`
     /// runs it last and `EasyBackfill` refuses to gamble on it.
     pub est_duration_s: Option<f64>,
+    /// gang width: how many capacity slots the task occupies for its
+    /// whole run. All `slots` entries are acquired atomically at start
+    /// and released together at completion; `0` is normalized to `1`
+    /// at enqueue.
+    pub slots: usize,
+}
+
+impl Default for TaskMeta {
+    fn default() -> Self {
+        TaskMeta {
+            user: 0,
+            priority: 0,
+            est_duration_s: None,
+            slots: 1,
+        }
+    }
+}
+
+impl TaskMeta {
+    /// Gang width with the zero-normalization applied.
+    pub fn width(&self) -> usize {
+        self.slots.max(1)
+    }
 }
 
 /// A queued task as a policy sees it.
@@ -57,36 +97,78 @@ pub struct SchedTask<'a> {
     pub meta: &'a TaskMeta,
 }
 
+impl SchedTask<'_> {
+    pub fn width(&self) -> usize {
+        self.meta.width()
+    }
+}
+
 /// Endpoint queue state at a scheduling decision.
 #[derive(Debug)]
 pub struct QueueView<'a> {
     /// queued tasks in arrival order (index 0 = head of line)
     pub tasks: &'a [SchedTask<'a>],
-    /// earliest instant any capacity slot is free
-    pub slot_free_vt: f64,
+    /// free-at time of every capacity slot, **sorted ascending** —
+    /// `slot_free[k-1]` is the earliest instant `k` slots are all free
+    pub slot_free: &'a [f64],
     /// start time of the most recently started task on this endpoint
     /// (the FIFO monotonicity floor; only `Fifo` applies it)
     pub last_start_vt: f64,
 }
 
 impl QueueView<'_> {
-    /// Earliest instant any queued task could start: the first free
-    /// slot, but no earlier than the soonest eligibility.
-    fn decision_vt(&self) -> f64 {
-        let min_elig = self
-            .tasks
-            .iter()
-            .map(|t| t.eligible_vt)
-            .fold(f64::INFINITY, f64::min);
-        self.slot_free_vt.max(min_elig)
+    /// Current capacity slot count.
+    pub fn capacity(&self) -> usize {
+        self.slot_free.len()
     }
 
-    /// Tasks that are eligible at the decision instant.
-    fn eligible_at<'b>(&'b self, t: f64) -> impl Iterator<Item = (usize, &'b SchedTask<'b>)> {
+    /// Earliest instant at which `width` slots are simultaneously free
+    /// (the `width`-th order statistic of the slot free times).
+    /// `f64::INFINITY` when the endpoint cannot currently provide
+    /// `width` slots — the gang waits (e.g. for an autoscaler
+    /// provision); the service never exposes an infinite start through
+    /// `next_event_time`.
+    pub fn free_for(&self, width: usize) -> f64 {
+        let width = width.max(1);
+        if width > self.slot_free.len() {
+            f64::INFINITY
+        } else {
+            self.slot_free[width - 1]
+        }
+    }
+
+    /// Earliest instant any single slot is free.
+    pub fn slot_free_vt(&self) -> f64 {
+        self.free_for(1)
+    }
+
+    /// Number of slots free at instant `t`.
+    pub fn avail_at(&self, t: f64) -> usize {
+        self.slot_free.iter().filter(|&&f| f <= t + EPS).count()
+    }
+
+    /// The earliest instant `task` could start: its full gang width
+    /// free and its dispatch eligibility elapsed.
+    pub fn earliest_start(&self, task: &SchedTask) -> f64 {
+        task.eligible_vt.max(self.free_for(task.width()))
+    }
+
+    /// Earliest instant *any* queued task could start — the decision
+    /// instant for the reordering policies.
+    fn decision_vt(&self) -> f64 {
+        self.tasks
+            .iter()
+            .map(|t| self.earliest_start(t))
+            .fold(f64::INFINITY, f64::min)
+    }
+
+    /// Tasks that could start at instant `t` (gang width free,
+    /// eligibility elapsed).
+    fn startable_at<'b>(&'b self, t: f64) -> impl Iterator<Item = (usize, &'b SchedTask<'b>)> {
         self.tasks
             .iter()
             .enumerate()
-            .filter(move |(_, task)| task.eligible_vt <= t + 1e-9)
+            .filter(move |(_, task)| self.earliest_start(task) <= t + EPS)
     }
 }
 
@@ -98,23 +180,28 @@ pub struct Pick {
     pub start_vt: f64,
 }
 
-/// Decides which queued task starts when a capacity slot frees.
+/// Decides which queued task starts when capacity frees.
 ///
 /// Invariants every policy must uphold: `pick` returns `Some` whenever
 /// the queue is non-empty (the service relies on this for stall
-/// detection), `start_vt >= max(slot_free_vt, chosen task's
-/// eligible_vt)`, and the decision is a pure function of the view (no
-/// interior state), which is what keeps campaign replays deterministic.
+/// detection; a pick whose `start_vt` is `f64::INFINITY` means
+/// "nothing can start until capacity grows"), `start_vt >=
+/// max(free_for(chosen width), chosen task's eligible_vt)`, and the
+/// decision is a pure function of the view (no interior state), which
+/// is what keeps campaign replays deterministic.
 pub trait SchedPolicy {
     fn name(&self) -> &'static str;
     fn pick(&self, q: &QueueView) -> Option<Pick>;
 }
 
-/// Strict arrival order — bit-identical to the pre-policy queueing core.
+/// Strict arrival order — bit-identical to the pre-policy queueing core
+/// for single-slot tasks.
 ///
-/// The head starts at `max(eligible, slot_free, last_start)`: the
+/// The head starts at `max(eligible, free_for(width), last_start)`: the
 /// `last_start` floor keeps start events monotone even though the first
-/// task pays the cold start and is eligible *later* than the second.
+/// task pays the cold start and is eligible *later* than the second. A
+/// gang at the head blocks everything behind it until its full width
+/// frees — never camping on a partial hold — so FIFO cannot deadlock.
 #[derive(Debug, Clone, Copy, Default)]
 pub struct Fifo;
 
@@ -129,18 +216,26 @@ impl SchedPolicy for Fifo {
             queue_idx: 0,
             start_vt: head
                 .eligible_vt
-                .max(q.slot_free_vt)
+                .max(q.free_for(head.width()))
                 .max(q.last_start_vt),
         })
     }
 }
 
 /// Highest effective priority first, with aging: a task's effective
-/// priority is `priority + waited / aging_s`, so anything that waits
-/// `aging_s * Δpriority` seconds overtakes a Δpriority-level gap and
-/// nothing starves indefinitely. `aging_s = f64::INFINITY` disables
-/// aging (pure static priority — starvation-prone, kept for tests).
-/// Ties break by arrival order.
+/// priority is `priority + waited / aging_s`. Every waiter ages at the
+/// same rate, so what closes a Δpriority gap is the *submit-time* gap:
+/// work submitted `aging_s · Δpriority` seconds before a more urgent
+/// arrival outranks it — a stream of later high-priority submissions
+/// cannot starve parked low-priority work indefinitely (test-pinned at
+/// the service level). `aging_s = f64::INFINITY` disables aging (pure
+/// static priority — starvation-prone, kept for tests). Ties break by
+/// arrival order. Only tasks whose full gang width is free at the
+/// decision instant compete — Priority (like SJF) holds **no width
+/// reservation**, so under sustained narrow load a wide gang can be
+/// bypassed indefinitely regardless of its aged priority; use FIFO or
+/// EasyBackfill (which reserve for the head) when gang service
+/// guarantees matter.
 #[derive(Debug, Clone, Copy)]
 pub struct Priority {
     pub aging_s: f64,
@@ -168,6 +263,14 @@ impl SchedPolicy for Priority {
     fn pick(&self, q: &QueueView) -> Option<Pick> {
         q.tasks.first()?;
         let now = q.decision_vt();
+        if !now.is_finite() {
+            // every queued task is a gang wider than current capacity:
+            // nothing can start until the endpoint scales up
+            return Some(Pick {
+                queue_idx: 0,
+                start_vt: f64::INFINITY,
+            });
+        }
         let effective = |t: &SchedTask| {
             let aged = if self.aging_s.is_finite() && self.aging_s > 0.0 {
                 (now - t.submitted_vt).max(0.0) / self.aging_s
@@ -177,7 +280,7 @@ impl SchedPolicy for Priority {
             t.meta.priority as f64 + aged
         };
         let (idx, _) = q
-            .eligible_at(now)
+            .startable_at(now)
             .fold(None::<(usize, f64)>, |best, (i, t)| {
                 let e = effective(t);
                 match best {
@@ -193,9 +296,12 @@ impl SchedPolicy for Priority {
     }
 }
 
-/// Smallest duration estimate first among the tasks eligible at the
+/// Smallest duration estimate first among the tasks startable at the
 /// decision instant; unknown estimates sort last; ties break by
-/// arrival order.
+/// arrival order. Like [`Priority`], SJF holds no width reservation:
+/// a wide gang competes only at instants where its full width is
+/// free, and sustained narrow load can bypass it indefinitely (the
+/// classic SJF starvation mode, widened).
 #[derive(Debug, Clone, Copy, Default)]
 pub struct ShortestJobFirst;
 
@@ -207,8 +313,14 @@ impl SchedPolicy for ShortestJobFirst {
     fn pick(&self, q: &QueueView) -> Option<Pick> {
         q.tasks.first()?;
         let now = q.decision_vt();
+        if !now.is_finite() {
+            return Some(Pick {
+                queue_idx: 0,
+                start_vt: f64::INFINITY,
+            });
+        }
         let (idx, _) = q
-            .eligible_at(now)
+            .startable_at(now)
             .fold(None::<(usize, f64)>, |best, (i, t)| {
                 let est = t.meta.est_duration_s.unwrap_or(f64::INFINITY);
                 match best {
@@ -223,15 +335,24 @@ impl SchedPolicy for ShortestJobFirst {
     }
 }
 
-/// EASY backfilling: the head of line reserves the earliest instant it
-/// could start (`max(eligible, slot_free)`); while a hole exists before
-/// that reservation (the slot frees before the head is eligible — cold
-/// start, dispatch latency, post-outage re-dispatch), later tasks are
-/// scanned in arrival order and the first whose *estimated* completion
-/// fits inside the hole starts immediately. Tasks without an estimate
-/// never backfill. With accurate estimates the head's start time is
-/// identical to plain FIFO's (test-pinned: `EasyBackfill` never delays
-/// the head of line).
+/// EASY backfilling: the head of line reserves the earliest instant its
+/// full gang width could start (`max(eligible, free_for(width))`);
+/// while a hole exists before that reservation — the head waits for a
+/// cold start, dispatch latency, post-outage re-dispatch, or for
+/// enough slots to drain toward its gang width — later tasks are
+/// scanned in arrival order and the first that provably cannot delay
+/// the reservation starts immediately. A candidate qualifies if either
+///
+/// 1. its *estimated* completion lands before the reservation (the
+///    borrowed slots are back in time), or
+/// 2. it fits entirely on slots the head does not need: at the
+///    reservation instant the endpoint has at least `head_width +
+///    candidate_width` slots free.
+///
+/// Tasks without an estimate never backfill under rule 1 (no
+/// gambling). With exact estimates the head's start time is identical
+/// to plain FIFO's (test-pinned: `EasyBackfill` never delays the head
+/// of line, gang or not).
 #[derive(Debug, Clone, Copy, Default)]
 pub struct EasyBackfill;
 
@@ -242,15 +363,25 @@ impl SchedPolicy for EasyBackfill {
 
     fn pick(&self, q: &QueueView) -> Option<Pick> {
         let head = q.tasks.first()?;
-        let head_start = head.eligible_vt.max(q.slot_free_vt);
-        if head.eligible_vt > q.slot_free_vt {
-            // hole in front of the reservation: [slot_free, head_start)
+        let head_start = head.eligible_vt.max(q.free_for(head.width()));
+        // An infinite reservation (the head gang waits for capacity the
+        // endpoint does not have yet — an autoscaler provision) is an
+        // *unknown* one: backfilling against it could occupy slots past
+        // the provision instant and delay the head arbitrarily, so no
+        // one jumps ahead until the reservation is real.
+        if head_start.is_finite() {
             for (i, t) in q.tasks.iter().enumerate().skip(1) {
-                let cand_start = t.eligible_vt.max(q.slot_free_vt);
-                let Some(est) = t.meta.est_duration_s else {
-                    continue;
-                };
-                if cand_start < head_start - 1e-9 && cand_start + est <= head_start + 1e-9 {
+                let cand_start = q.earliest_start(t);
+                if cand_start >= head_start - EPS {
+                    continue; // no hole in front of the reservation
+                }
+                let fits_in_hole = t
+                    .meta
+                    .est_duration_s
+                    .map(|est| cand_start + est <= head_start + EPS)
+                    .unwrap_or(false);
+                let spare_slots = q.avail_at(head_start) >= head.width() + t.width();
+                if fits_in_hole || spare_slots {
                     return Some(Pick {
                         queue_idx: i,
                         start_vt: cand_start,
@@ -337,7 +468,8 @@ impl PolicyKind {
 pub struct Autoscaler {
     pub min_capacity: usize,
     pub max_capacity: usize,
-    /// scale up when this many tasks are waiting (queued, not started)
+    /// scale up when this many slot-demands are waiting (queued, not
+    /// started; a width-`k` gang counts `k`)
     pub scale_up_waiting: usize,
     pub provision_delay_s: f64,
     pub scale_down_idle_s: f64,
@@ -360,7 +492,8 @@ impl Autoscaler {
     }
 }
 
-/// One capacity change applied by an autoscaler (campaign reporting).
+/// One capacity change applied by an autoscaler (campaign reporting
+/// and slot-hour cost accounting).
 #[derive(Debug, Clone)]
 pub struct ScalingEvent {
     pub vt: f64,
@@ -375,20 +508,29 @@ mod tests {
 
     fn meta(priority: i64, est: Option<f64>) -> TaskMeta {
         TaskMeta {
-            user: 0,
             priority,
             est_duration_s: est,
+            ..TaskMeta::default()
+        }
+    }
+
+    fn gang(est: Option<f64>, slots: usize) -> TaskMeta {
+        TaskMeta {
+            est_duration_s: est,
+            slots,
+            ..TaskMeta::default()
         }
     }
 
     fn view<'a>(
         tasks: &'a [SchedTask<'a>],
-        slot_free_vt: f64,
+        slot_free: &'a [f64],
         last_start_vt: f64,
     ) -> QueueView<'a> {
+        debug_assert!(slot_free.windows(2).all(|w| w[0] <= w[1]), "sorted input");
         QueueView {
             tasks,
-            slot_free_vt,
+            slot_free,
             last_start_vt,
         }
     }
@@ -411,17 +553,65 @@ mod tests {
             },
         ];
         // head not eligible yet: starts at its eligibility
-        let p = Fifo.pick(&view(&tasks, 0.0, 0.0)).unwrap();
+        let p = Fifo.pick(&view(&tasks, &[0.0], 0.0)).unwrap();
         assert_eq!(p, Pick { queue_idx: 0, start_vt: 3.0 });
         // slot busy past eligibility: starts when the slot frees
-        let p = Fifo.pick(&view(&tasks, 13.0, 3.0)).unwrap();
+        let p = Fifo.pick(&view(&tasks, &[13.0], 3.0)).unwrap();
         assert_eq!(p, Pick { queue_idx: 0, start_vt: 13.0 });
         // last_start floor dominates (second task behind a cold head)
         let second = &tasks[1..];
-        let p = Fifo.pick(&view(second, 0.0, 3.0)).unwrap();
+        let p = Fifo.pick(&view(second, &[0.0], 3.0)).unwrap();
         assert_eq!(p, Pick { queue_idx: 0, start_vt: 3.0 });
     }
 
+    #[test]
+    fn free_for_is_the_order_statistic() {
+        let m = TaskMeta::default();
+        let tasks: Vec<SchedTask> = vec![SchedTask {
+            id: TaskId(1),
+            submitted_vt: 0.0,
+            eligible_vt: 0.0,
+            meta: &m,
+        }];
+        let q = view(&tasks, &[2.0, 5.0, 9.0], 0.0);
+        assert_eq!(q.capacity(), 3);
+        assert_eq!(q.free_for(1), 2.0);
+        assert_eq!(q.free_for(2), 5.0);
+        assert_eq!(q.free_for(3), 9.0);
+        assert_eq!(q.free_for(4), f64::INFINITY);
+        assert_eq!(q.avail_at(5.0), 2);
+        assert_eq!(q.avail_at(1.0), 0);
+    }
+
+    /// A gang at the head waits for its full width — it starts when the
+    /// k-th slot frees, not when the first does (no partial holds).
+    #[test]
+    fn fifo_gang_waits_for_full_width() {
+        let g = gang(Some(10.0), 2);
+        let tasks = vec![SchedTask {
+            id: TaskId(1),
+            submitted_vt: 0.0,
+            eligible_vt: 1.0,
+            meta: &g,
+        }];
+        let p = Fifo.pick(&view(&tasks, &[3.0, 8.0], 0.0)).unwrap();
+        assert_eq!(p, Pick { queue_idx: 0, start_vt: 8.0 });
+        // wider than capacity: waits for a provision (infinite for now)
+        let wide = gang(Some(10.0), 3);
+        let tasks = vec![SchedTask {
+            id: TaskId(1),
+            submitted_vt: 0.0,
+            eligible_vt: 1.0,
+            meta: &wide,
+        }];
+        let p = Fifo.pick(&view(&tasks, &[3.0, 8.0], 0.0)).unwrap();
+        assert_eq!(p.start_vt, f64::INFINITY);
+    }
+
+    /// Aging credits each task its *own* wait, so what closes a
+    /// priority gap is the submit-time gap over `aging_s`: a task
+    /// submitted `gap` seconds earlier is `gap / aging_s` effective
+    /// levels ahead of a later arrival, at every decision instant.
     #[test]
     fn priority_prefers_urgent_but_aging_overtakes() {
         let low = meta(0, None);
@@ -440,21 +630,26 @@ mod tests {
                 meta: &high,
             },
         ];
-        // fresh decision at 101: high wins (0 + ~1 age < 2)
-        let p = Priority { aging_s: 300.0 }
-            .pick(&view(&tasks, 101.0, 0.0))
-            .unwrap();
-        assert_eq!(p.queue_idx, 1);
-        // late decision: the low task has aged 2 levels past the gap
-        let p = Priority { aging_s: 300.0 }
-            .pick(&view(&tasks, 700.0, 0.0))
+        // slow aging (300 s/level): the 100 s head start is worth only
+        // a third of a level — the 2-level gap holds, high wins at any
+        // decision instant
+        for slot_free in [101.0, 700.0] {
+            let p = Priority { aging_s: 300.0 }
+                .pick(&view(&tasks, &[slot_free], 0.0))
+                .unwrap();
+            assert_eq!(p.queue_idx, 1, "at slot_free {slot_free}");
+        }
+        // fast aging (40 s/level): the same head start is worth 2.5
+        // levels — the low task overtakes the moment both compete
+        let p = Priority { aging_s: 40.0 }
+            .pick(&view(&tasks, &[101.0], 0.0))
             .unwrap();
         assert_eq!(p.queue_idx, 0);
-        // no aging: high always wins
+        // no aging: strictly by class
         let p = Priority {
             aging_s: f64::INFINITY,
         }
-        .pick(&view(&tasks, 700.0, 0.0))
+        .pick(&view(&tasks, &[700.0], 0.0))
         .unwrap();
         assert_eq!(p.queue_idx, 1);
     }
@@ -477,8 +672,35 @@ mod tests {
                 meta: &b,
             },
         ];
-        let p = Priority::default().pick(&view(&tasks, 10.0, 0.0)).unwrap();
+        let p = Priority::default().pick(&view(&tasks, &[10.0], 0.0)).unwrap();
         assert_eq!(p.queue_idx, 0);
+    }
+
+    /// A gang wider than a freed slot does not compete at a decision
+    /// instant where only narrower work fits — the single-slot task runs
+    /// and the gang keeps waiting for its width.
+    #[test]
+    fn priority_gang_not_startable_yields_to_narrow_work() {
+        let wide = gang(None, 2); // priority 0, width 2
+        let narrow = meta(0, None);
+        let tasks = vec![
+            SchedTask {
+                id: TaskId(1),
+                submitted_vt: 0.0,
+                eligible_vt: 1.0,
+                meta: &wide,
+            },
+            SchedTask {
+                id: TaskId(2),
+                submitted_vt: 0.0,
+                eligible_vt: 1.0,
+                meta: &narrow,
+            },
+        ];
+        // one slot frees at 2, the second only at 50: the gang cannot
+        // start before 50, the narrow task can start at 2
+        let p = Priority::default().pick(&view(&tasks, &[2.0, 50.0], 0.0)).unwrap();
+        assert_eq!(p, Pick { queue_idx: 1, start_vt: 2.0 });
     }
 
     #[test]
@@ -506,7 +728,7 @@ mod tests {
                 meta: &short,
             },
         ];
-        let p = ShortestJobFirst.pick(&view(&tasks, 5.0, 0.0)).unwrap();
+        let p = ShortestJobFirst.pick(&view(&tasks, &[5.0], 0.0)).unwrap();
         assert_eq!(p.queue_idx, 2);
         assert_eq!(p.start_vt, 5.0);
     }
@@ -530,7 +752,7 @@ mod tests {
             },
         ];
         // decision at slot_free=2: only the long task is eligible
-        let p = ShortestJobFirst.pick(&view(&tasks, 2.0, 0.0)).unwrap();
+        let p = ShortestJobFirst.pick(&view(&tasks, &[2.0], 0.0)).unwrap();
         assert_eq!(p.queue_idx, 0);
         assert_eq!(p.start_vt, 2.0);
     }
@@ -561,11 +783,11 @@ mod tests {
             },
         ];
         // hole is [0, 3): the 5 s task does not fit, the 1.5 s one does
-        let p = EasyBackfill.pick(&view(&tasks, 0.0, 0.0)).unwrap();
+        let p = EasyBackfill.pick(&view(&tasks, &[0.0], 0.0)).unwrap();
         assert_eq!(p.queue_idx, 2);
         assert_eq!(p.start_vt, 1.0);
         // no hole (slot frees after head eligibility): plain FIFO head
-        let p = EasyBackfill.pick(&view(&tasks, 7.0, 0.0)).unwrap();
+        let p = EasyBackfill.pick(&view(&tasks, &[7.0], 0.0)).unwrap();
         assert_eq!(p, Pick { queue_idx: 0, start_vt: 7.0 });
     }
 
@@ -587,9 +809,102 @@ mod tests {
                 meta: &unknown,
             },
         ];
-        let p = EasyBackfill.pick(&view(&tasks, 0.0, 0.0)).unwrap();
+        let p = EasyBackfill.pick(&view(&tasks, &[0.0], 0.0)).unwrap();
         assert_eq!(p.queue_idx, 0);
         assert_eq!(p.start_vt, 3.0);
+    }
+
+    /// A gang head draining toward its width opens a hole: the slots
+    /// already free form the eligibility hole a short job can fill.
+    #[test]
+    fn backfill_fills_gang_drain_hole() {
+        let head = gang(Some(100.0), 2);
+        let long = meta(0, Some(50.0));
+        let short = meta(0, Some(3.0));
+        let tasks = vec![
+            SchedTask {
+                id: TaskId(1),
+                submitted_vt: 0.0,
+                eligible_vt: 1.0,
+                meta: &head,
+            },
+            SchedTask {
+                id: TaskId(2),
+                submitted_vt: 0.0,
+                eligible_vt: 1.0,
+                meta: &long,
+            },
+            SchedTask {
+                id: TaskId(3),
+                submitted_vt: 0.0,
+                eligible_vt: 1.0,
+                meta: &short,
+            },
+        ];
+        // slot 0 is free now, slot 1 frees at 10: the gang reserves 10;
+        // the 3 s job fits in the [1, 10) drain hole, the 50 s one not
+        let p = EasyBackfill.pick(&view(&tasks, &[0.0, 10.0], 0.0)).unwrap();
+        assert_eq!(p, Pick { queue_idx: 2, start_vt: 1.0 });
+        // the hole closed (both slots free before eligibility): head runs
+        let p = EasyBackfill.pick(&view(&tasks, &[0.0, 0.5], 0.0)).unwrap();
+        assert_eq!(p, Pick { queue_idx: 0, start_vt: 1.0 });
+    }
+
+    /// Rule 2: a long candidate may run on slots the head does not
+    /// need — even past the reservation — but only when enough slots
+    /// are free at the reservation instant for both.
+    #[test]
+    fn backfill_uses_spare_slots_beyond_the_reservation() {
+        let head = gang(Some(100.0), 1);
+        let long = meta(0, Some(500.0));
+        let tasks = vec![
+            SchedTask {
+                id: TaskId(1),
+                submitted_vt: 0.0,
+                eligible_vt: 6.0, // re-dispatch gap: reservation at 6
+                meta: &head,
+            },
+            SchedTask {
+                id: TaskId(2),
+                submitted_vt: 0.0,
+                eligible_vt: 1.0,
+                meta: &long,
+            },
+        ];
+        // capacity 2, both free: at the reservation (6) two slots are
+        // free, head needs 1 — the 500 s task can take the spare now
+        let p = EasyBackfill.pick(&view(&tasks, &[0.0, 0.0], 0.0)).unwrap();
+        assert_eq!(p, Pick { queue_idx: 1, start_vt: 1.0 });
+        // capacity 1: the same candidate would steal the head's slot
+        let p = EasyBackfill.pick(&view(&tasks, &[0.0], 0.0)).unwrap();
+        assert_eq!(p, Pick { queue_idx: 0, start_vt: 6.0 });
+    }
+
+    /// No backfilling against an *infinite* reservation: while the head
+    /// gang waits for capacity the endpoint does not have yet, an
+    /// estimated candidate could run past the (unknown) provision
+    /// instant and delay the head arbitrarily — so nothing jumps ahead.
+    #[test]
+    fn backfill_refuses_infinite_head_reservation() {
+        let head = gang(Some(10.0), 2); // wider than the 1-slot endpoint
+        let est = meta(0, Some(1000.0));
+        let tasks = vec![
+            SchedTask {
+                id: TaskId(1),
+                submitted_vt: 0.0,
+                eligible_vt: 1.0,
+                meta: &head,
+            },
+            SchedTask {
+                id: TaskId(2),
+                submitted_vt: 0.0,
+                eligible_vt: 1.0,
+                meta: &est,
+            },
+        ];
+        let p = EasyBackfill.pick(&view(&tasks, &[0.0], 0.0)).unwrap();
+        assert_eq!(p.queue_idx, 0);
+        assert_eq!(p.start_vt, f64::INFINITY);
     }
 
     #[test]
@@ -598,6 +913,10 @@ mod tests {
         assert_eq!(PolicyKind::parse("sjf").unwrap(), PolicyKind::Sjf);
         assert_eq!(
             PolicyKind::parse("backfill").unwrap(),
+            PolicyKind::Backfill
+        );
+        assert_eq!(
+            PolicyKind::parse("easy-backfill").unwrap(),
             PolicyKind::Backfill
         );
         assert_eq!(
@@ -614,6 +933,13 @@ mod tests {
         assert!(PolicyKind::parse("lifo").is_err());
         assert_eq!(PolicyKind::Backfill.build().name(), "backfill");
         assert_eq!(PolicyKind::default().label(), "fifo");
+    }
+
+    #[test]
+    fn task_meta_width_normalizes_zero() {
+        assert_eq!(TaskMeta::default().width(), 1);
+        assert_eq!(gang(None, 0).width(), 1);
+        assert_eq!(gang(None, 4).width(), 4);
     }
 
     #[test]

@@ -190,6 +190,38 @@ impl<C> FaasService<C> {
             .with_context(|| format!("unknown faas endpoint `{id}`"))
     }
 
+    /// Every registered endpoint, in id order (cost accounting reads
+    /// base capacities from here).
+    pub fn endpoints(&self) -> impl Iterator<Item = &FaasEndpoint> {
+        self.endpoints.values()
+    }
+
+    /// Resize an endpoint's base capacity (heterogeneous campaigns
+    /// size the trainer to the widest gang in the mix). Like
+    /// `set_policy`, rejected once tasks are in flight — decisions
+    /// already exposed through `next_event_time` must not shift.
+    pub fn set_capacity(&mut self, endpoint_id: &str, capacity: usize) -> Result<()> {
+        // NB: a started task's record is already terminal (the body ran
+        // on a scratch clock at start), so `is_complete` alone would
+        // miss it — `running` is what still holds slot leases
+        if self.tasks.iter().any(|t| !t.status.is_complete())
+            || self.running.values().any(|r| !r.is_empty())
+        {
+            bail!("cannot resize capacity with tasks in flight");
+        }
+        let capacity = capacity.max(1);
+        let ep = self
+            .endpoints
+            .get_mut(endpoint_id)
+            .with_context(|| format!("unknown faas endpoint `{endpoint_id}`"))?;
+        self.slots
+            .get_mut(endpoint_id)
+            .expect("slots exist for registered endpoint")
+            .resize(capacity, 0.0);
+        ep.capacity = capacity;
+        Ok(())
+    }
+
     /// Replace the scheduling policy. Must be called before any task is
     /// enqueued — switching mid-queue would re-order decisions already
     /// exposed through `next_event_time`.
@@ -262,7 +294,12 @@ impl<C> FaasService<C> {
     }
 
     /// `enqueue` with scheduler metadata (tenant, priority class, cost
-    /// model duration estimate) attached for the policy to use.
+    /// model duration estimate, gang width) attached for the policy to
+    /// use. A gang (`meta.slots > 1`) occupies its full width of
+    /// capacity slots atomically for the whole run; widths the endpoint
+    /// can never satisfy (above current capacity and above any attached
+    /// autoscaler's `max_capacity`) are rejected here rather than
+    /// deadlocking the queue.
     pub fn enqueue_with_meta(
         &mut self,
         now: f64,
@@ -273,6 +310,23 @@ impl<C> FaasService<C> {
     ) -> Result<TaskId> {
         if !self.funcs.contains_key(func) {
             bail!("unknown function `{}`", func.0);
+        }
+        let mut meta = meta;
+        meta.slots = meta.width();
+        if let Some(slots) = self.slots.get(endpoint_id) {
+            let limit = self
+                .autoscalers
+                .get(endpoint_id)
+                .map(|a| a.cfg.max_capacity)
+                .unwrap_or(0)
+                .max(slots.len());
+            if meta.slots > limit {
+                bail!(
+                    "gang of {} slot(s) can never fit on `{endpoint_id}` \
+                     (capacity limit {limit})",
+                    meta.slots
+                );
+            }
         }
         let ep = self
             .endpoints
@@ -447,16 +501,20 @@ impl<C> FaasService<C> {
                 }
             })
             .collect();
-        let slot_free_vt = self.slots[ep_id]
-            .iter()
-            .cloned()
-            .fold(f64::INFINITY, f64::min);
+        let mut slot_free: Vec<f64> = self.slots[ep_id].clone();
+        slot_free.sort_by(f64::total_cmp);
         let view = QueueView {
             tasks: &tasks,
-            slot_free_vt,
+            slot_free: &slot_free,
             last_start_vt: self.last_start[ep_id],
         };
         let pick = self.policy.pick(&view)?;
+        // an infinite start means "nothing can run until capacity
+        // grows" (a gang wider than current capacity waiting for a
+        // provision); report no pending start rather than a due event
+        if !pick.start_vt.is_finite() {
+            return None;
+        }
         Some((pick.queue_idx, pick.start_vt))
     }
 
@@ -487,15 +545,17 @@ impl<C> FaasService<C> {
         let finish = scratch.now();
         self.tasks[idx].finished_vt = finish;
         self.tasks[idx].status = status;
-        // occupy the earliest-free slot until the body's finish time
+        // occupy the gang's full width of earliest-free slots until the
+        // body's finish time — acquired together, released together
+        // (never a partial hold)
+        let width = self.tasks[idx].meta.width();
         let slots = self.slots.get_mut(ep_id).expect("slots");
-        let si = slots
-            .iter()
-            .enumerate()
-            .min_by(|a, b| a.1.total_cmp(b.1))
-            .map(|(i, _)| i)
-            .expect("capacity >= 1");
-        slots[si] = finish;
+        debug_assert!(width <= slots.len(), "policy started an unsatisfiable gang");
+        let mut order: Vec<usize> = (0..slots.len()).collect();
+        order.sort_by(|&a, &b| slots[a].total_cmp(&slots[b]).then(a.cmp(&b)));
+        for &si in order.iter().take(width) {
+            slots[si] = finish;
+        }
         *self.last_start.get_mut(ep_id).expect("last_start") = st;
         self.running
             .get_mut(ep_id)
@@ -521,13 +581,23 @@ impl<C> FaasService<C> {
     /// whenever the waiting count can have grown (enqueue, provision
     /// completion, outage recovery).
     fn autoscale_check(&mut self, ep_id: &str, now: f64) {
-        let waiting = self.queues.get(ep_id).map(|q| q.len()).unwrap_or(0);
+        // gang-weighted: a width-k gang is k slots of unmet demand
+        let waiting = self.waiting_depth(ep_id);
         let cap = self.slots.get(ep_id).map(|s| s.len()).unwrap_or(0);
+        // a queued gang wider than current capacity can NEVER start
+        // without a provision — that is unconditional pressure, even
+        // below the configured waiting threshold (otherwise a lone
+        // wide gang under a high `scale_up_waiting` would deadlock)
+        let gang_needs_width = self
+            .queues
+            .get(ep_id)
+            .map(|q| q.iter().any(|&id| self.rec(id).meta.width() > cap))
+            .unwrap_or(false);
         let Some(auto) = self.autoscalers.get_mut(ep_id) else {
             return;
         };
         if auto.pending_at.is_some()
-            || waiting < auto.cfg.scale_up_waiting
+            || (waiting < auto.cfg.scale_up_waiting && !gang_needs_width)
             || cap >= auto.cfg.max_capacity
         {
             return;
@@ -716,20 +786,30 @@ impl<C> FaasService<C> {
         &self.tasks
     }
 
-    /// Tasks currently *admitted* to an endpoint: waiting for a slot
-    /// **plus** started-but-unfinished. This is the load figure an
-    /// operator (or autoscaler dashboard) sees, and it is policy-
-    /// independent — re-ordering the queue never changes it. Use
-    /// [`waiting_depth`](Self::waiting_depth) for the not-yet-started
-    /// count alone (the autoscaler's scale-up trigger).
+    /// Slot demand currently *admitted* to an endpoint: waiting for
+    /// capacity **plus** started-but-unfinished, with a width-`k` gang
+    /// counting `k` (it holds — or will hold — `k` slots, and that is
+    /// the pressure an operator or autoscaler dashboard must see). The
+    /// figure is policy-independent — re-ordering the queue never
+    /// changes it. Use [`waiting_depth`](Self::waiting_depth) for the
+    /// not-yet-started demand alone (the autoscaler's scale-up
+    /// trigger).
     pub fn queue_depth(&self, endpoint_id: &str) -> usize {
-        self.waiting_depth(endpoint_id)
-            + self.running.get(endpoint_id).map(|r| r.len()).unwrap_or(0)
+        let running: usize = self
+            .running
+            .get(endpoint_id)
+            .map(|r| r.iter().map(|&(id, _)| self.rec(id).meta.width()).sum())
+            .unwrap_or(0);
+        self.waiting_depth(endpoint_id) + running
     }
 
-    /// Tasks admitted but not yet started on an endpoint.
+    /// Slot demand admitted but not yet started on an endpoint (a
+    /// width-`k` gang counts `k`).
     pub fn waiting_depth(&self, endpoint_id: &str) -> usize {
-        self.queues.get(endpoint_id).map(|q| q.len()).unwrap_or(0)
+        self.queues
+            .get(endpoint_id)
+            .map(|q| q.iter().map(|&id| self.rec(id).meta.width()).sum())
+            .unwrap_or(0)
     }
 
     /// Fan independent *real* CPU work out on the process-wide
@@ -981,9 +1061,17 @@ mod tests {
 
     fn meta(priority: i64, est: Option<f64>) -> TaskMeta {
         TaskMeta {
-            user: 0,
             priority,
             est_duration_s: est,
+            ..TaskMeta::default()
+        }
+    }
+
+    fn gang(est: Option<f64>, slots: usize) -> TaskMeta {
+        TaskMeta {
+            est_duration_s: est,
+            slots,
+            ..TaskMeta::default()
         }
     }
 
@@ -1223,5 +1311,159 @@ mod tests {
         drive(&mut svc, &mut ctx);
         assert!(svc.set_policy(PolicyKind::Sjf.build()).is_ok());
         assert_eq!(svc.policy_name(), "sjf");
+    }
+
+    // ---- gang scheduling (DESIGN.md §10) ----
+
+    fn setup_wide(capacity: usize) -> (FaasService<Ctx>, FuncId) {
+        let mut svc = FaasService::<Ctx>::new();
+        svc.register_endpoint(
+            FaasEndpoint::new("alcf#wide", FacilityId(1)).with_capacity(capacity),
+        )
+        .unwrap();
+        let f = svc
+            .register_function("train", |ctx: &mut Ctx, clock, args| {
+                ctx.calls += 1;
+                let secs = args.get("secs").as_f64().unwrap_or(1.0);
+                clock.advance(secs);
+                Ok(Json::Null)
+            })
+            .unwrap();
+        (svc, f)
+    }
+
+    /// Tentpole pin: a width-2 gang acquires both capacity slots
+    /// atomically — it waits until they are simultaneously free (no
+    /// partial hold on the idle slot), and work behind it queues in
+    /// FIFO order.
+    #[test]
+    fn gang_acquires_full_width_atomically() {
+        let (mut svc, f) = setup_wide(2);
+        let mut ctx = Ctx::default();
+        let t1 = svc
+            .enqueue_with_meta(0.0, "alcf#wide", &f, &secs(10.0), gang(Some(10.0), 1))
+            .unwrap();
+        let t2 = svc
+            .enqueue_with_meta(0.0, "alcf#wide", &f, &secs(10.0), gang(Some(10.0), 2))
+            .unwrap();
+        let t3 = svc
+            .enqueue_with_meta(0.0, "alcf#wide", &f, &secs(2.0), gang(Some(2.0), 1))
+            .unwrap();
+        // t1 runs 3..13 on one slot; the width-2 gang leaves the other
+        // slot idle (forbidden partial hold) until both free at 13
+        svc.advance_to(&mut ctx, 5.0);
+        assert_eq!(svc.record(t1).unwrap().started_vt, 3.0);
+        assert_eq!(svc.waiting_depth("alcf#wide"), 3); // gang 2 + single 1
+        assert_eq!(svc.queue_depth("alcf#wide"), 4); // + running width 1
+        drive(&mut svc, &mut ctx);
+        assert_eq!(svc.record(t2).unwrap().started_vt, 13.0);
+        assert_eq!(svc.record(t2).unwrap().finished_vt, 23.0);
+        // the single-slot task behind the gang starts only when the
+        // gang releases both slots
+        assert_eq!(svc.record(t3).unwrap().started_vt, 23.0);
+    }
+
+    /// Satellite regression: `queue_depth`/`waiting_depth` count a
+    /// width-k gang as k toward endpoint pressure — the demand figure
+    /// the autoscaler's scale-up trigger reads.
+    #[test]
+    fn queue_depth_counts_gang_width() {
+        let (mut svc, f) = setup_wide(2);
+        let mut ctx = Ctx::default();
+        svc.enqueue_with_meta(0.0, "alcf#wide", &f, &secs(10.0), gang(Some(10.0), 2))
+            .unwrap();
+        svc.enqueue_with_meta(0.0, "alcf#wide", &f, &secs(10.0), gang(Some(10.0), 1))
+            .unwrap();
+        assert_eq!(svc.waiting_depth("alcf#wide"), 3);
+        assert_eq!(svc.queue_depth("alcf#wide"), 3);
+        // gang starts at 3 (cold start) on both slots: 2 running + 1 waiting
+        svc.advance_to(&mut ctx, 5.0);
+        assert_eq!(svc.waiting_depth("alcf#wide"), 1);
+        assert_eq!(svc.queue_depth("alcf#wide"), 3);
+        drive(&mut svc, &mut ctx);
+        assert_eq!(svc.queue_depth("alcf#wide"), 0);
+    }
+
+    /// Satellite pin: EASY backfill fills the drain hole in front of a
+    /// multi-slot gang with a short job, but the gang at head-of-line
+    /// starts at exactly its FIFO instant — never delayed.
+    #[test]
+    fn backfill_never_delays_gang_at_head() {
+        let run = |kind: PolicyKind| {
+            let (mut svc, f) = setup_wide(2);
+            svc.set_policy(kind.build()).unwrap();
+            let mut ctx = Ctx::default();
+            let long = svc
+                .enqueue_with_meta(0.0, "alcf#wide", &f, &secs(20.0), gang(Some(20.0), 1))
+                .unwrap();
+            let wide = svc
+                .enqueue_with_meta(0.0, "alcf#wide", &f, &secs(10.0), gang(Some(10.0), 2))
+                .unwrap();
+            let short = svc
+                .enqueue_with_meta(0.0, "alcf#wide", &f, &secs(2.0), gang(Some(2.0), 1))
+                .unwrap();
+            drive(&mut svc, &mut ctx);
+            (
+                svc.record(long).unwrap().started_vt,
+                svc.record(wide).unwrap().started_vt,
+                svc.record(short).unwrap().started_vt,
+            )
+        };
+        // FIFO: long 3..23 on one slot, the gang waits for both (23),
+        // the short job trails the gang
+        let (f_long, f_wide, f_short) = run(PolicyKind::Fifo);
+        assert_eq!((f_long, f_wide, f_short), (3.0, 23.0, 33.0));
+        // backfill: the 2 s job fits the [1, 3) cold-start hole; the
+        // gang still starts at 23 — its reservation is untouched
+        let (b_long, b_wide, b_short) = run(PolicyKind::Backfill);
+        assert_eq!(b_short, 1.0);
+        assert_eq!(b_long, f_long);
+        assert_eq!(b_wide, f_wide, "backfill delayed the gang at head-of-line");
+    }
+
+    /// A gang wider than the endpoint can ever provide is rejected at
+    /// enqueue (deadlock prevention); with an autoscaler whose max
+    /// covers the width, the gang instead waits for provisions — and
+    /// an unsatisfiable gang is *unconditional* scale-up pressure,
+    /// even below the configured waiting threshold (a lone wide gang
+    /// under a high `scale_up_waiting` must not deadlock).
+    #[test]
+    fn gang_wider_than_capacity_waits_for_autoscaler() {
+        let (mut svc, f) = setup_wide(2);
+        let err = svc
+            .enqueue_with_meta(0.0, "alcf#wide", &f, &secs(1.0), gang(Some(1.0), 3))
+            .unwrap_err();
+        assert!(err.to_string().contains("can never fit"), "{err}");
+
+        let (mut svc, f) = setup_wide(2);
+        svc.set_autoscaler(
+            "alcf#wide",
+            Autoscaler {
+                min_capacity: 2,
+                max_capacity: 4,
+                // deliberately above the gang's weighted demand of 3:
+                // only the unsatisfiable-width pressure can trigger
+                scale_up_waiting: 10,
+                provision_delay_s: 5.0,
+                scale_down_idle_s: f64::INFINITY,
+                cooldown_s: 1.0,
+            },
+        )
+        .unwrap();
+        let mut ctx = Ctx::default();
+        let t = svc
+            .enqueue_with_meta(0.0, "alcf#wide", &f, &secs(10.0), gang(Some(10.0), 3))
+            .unwrap();
+        drive(&mut svc, &mut ctx);
+        // the slot lands at 5 and the gang starts the instant its
+        // width is satisfiable (eligibility 3 < 5); capacity stops at
+        // exactly the needed width — the threshold still gates growth
+        // beyond it
+        let rec = svc.record(t).unwrap();
+        assert_eq!(rec.started_vt, 5.0);
+        assert_eq!(rec.finished_vt, 15.0);
+        let log = svc.scaling_log();
+        assert_eq!(log.len(), 1, "{log:?}");
+        assert_eq!((log[0].vt, log[0].capacity), (5.0, 3));
     }
 }

@@ -19,8 +19,8 @@ use xloop::transfer::{TransferRequest, TransferService};
 use xloop::util::cli::Options;
 use xloop::util::stats::{human_bytes, human_secs};
 use xloop::workflow::{
-    render_table1, run_campaign, CampaignConfig, CampaignReport, Coordinator, Mode, Scenario,
-    TrainingMode,
+    parse_mix, render_table1, run_campaign, CampaignConfig, CampaignReport, Coordinator, Mode,
+    MixEntry, Scenario, TrainingMode,
 };
 
 fn main() {
@@ -69,8 +69,8 @@ fn print_usage() {
            retrain   run one retraining flow (--model, --mode, --real-steps)\n\
            campaign  N users' retrainings on the shared fabric (--users,\n\
                      --interarrival, --loads for a crossover sweep; --policy,\n\
-                     --autoscale, --faults, --compare-policies for the\n\
-                     scheduling/elasticity/fault study)\n\
+                     --autoscale, --faults, --mix, --compare-policies for the\n\
+                     scheduling/elasticity/fault/cost study)\n\
            fig3      WAN transfer throughput vs concurrency (Fig. 3)\n\
            fig4      conventional vs ML-surrogate crossover (Fig. 4)\n\
            serve     retrain + deploy + stream edge inference\n\
@@ -210,6 +210,12 @@ fn cmd_campaign(args: &[String]) -> Result<()> {
             "",
             "fault plan, e.g. outage=alcf#cerebras@500..2000,wan=0.25@100..1500",
         )
+        .opt(
+            "mix",
+            "",
+            "heterogeneous tenant mix: model:weight[:gang_slots] entries, e.g. \
+             braggnn:0.7:1,cookienetae:0.3:4 (empty = every user runs --model)",
+        )
         .flag(
             "compare-policies",
             "run the same campaign under every policy and print a comparison table",
@@ -232,11 +238,13 @@ fn cmd_campaign(args: &[String]) -> Result<()> {
         "" => FaultPlan::default(),
         spec => FaultPlan::parse(spec)?,
     };
+    let mix: Vec<MixEntry> = parse_mix(p.get("mix"))?;
     // anything beyond the PR 2 default enables the enriched report
     let enriched = !matches!(policy, PolicyKind::Fifo)
         || !priorities.is_empty()
         || autoscale_max > 0
-        || !faults.is_empty();
+        || !faults.is_empty()
+        || !mix.is_empty();
     let mk_cfg = |scenario: &Scenario, mean: f64, kind: PolicyKind| {
         let mut cfg = CampaignConfig::new(users, scenario.clone(), mean, seed);
         cfg.policy = kind;
@@ -248,6 +256,7 @@ fn cmd_campaign(args: &[String]) -> Result<()> {
             )];
         }
         cfg.faults = faults.clone();
+        cfg.mix = mix.clone();
         cfg
     };
 
@@ -268,19 +277,40 @@ fn cmd_campaign(args: &[String]) -> Result<()> {
         mode.label(),
         human_secs(report.mean_interarrival_s),
     );
-    println!(
-        "{:>5} {:>12} {:>14} {:>13} {:>15} {:>14}",
-        "user", "arrival (s)", "data xfer (s)", "train (s)", "model xfer (s)", "turnaround (s)"
-    );
+    // the model/gang columns exist only under --mix, keeping the
+    // default table byte-identical to the pre-mix CLI
+    let show_mix = !mix.is_empty();
+    if show_mix {
+        println!(
+            "{:>5} {:>13} {:>5} {:>12} {:>14} {:>13} {:>15} {:>14}",
+            "user",
+            "model",
+            "gang",
+            "arrival (s)",
+            "data xfer (s)",
+            "train (s)",
+            "model xfer (s)",
+            "turnaround (s)"
+        );
+    } else {
+        println!(
+            "{:>5} {:>12} {:>14} {:>13} {:>15} {:>14}",
+            "user", "arrival (s)", "data xfer (s)", "train (s)", "model xfer (s)", "turnaround (s)"
+        );
+    }
     for u in &report.users {
         let fmt = |v: Option<f64>| match v {
             Some(s) => format!("{s:.1}"),
             None => "N/A".to_string(),
         };
+        if show_mix {
+            print!("{:>5} {:>13} {:>5} ", u.user, u.model, u.gang_slots);
+        } else {
+            print!("{:>5} ", u.user);
+        }
         match &u.breakdown {
             Some(b) => println!(
-                "{:>5} {:>12.1} {:>14} {:>13.1} {:>15} {:>14.1}",
-                u.user,
+                "{:>12.1} {:>14} {:>13.1} {:>15} {:>14.1}",
                 u.arrival_vt,
                 fmt(b.data_transfer_s),
                 b.training_s,
@@ -288,8 +318,8 @@ fn cmd_campaign(args: &[String]) -> Result<()> {
                 u.turnaround_s
             ),
             None => println!(
-                "{:>5} {:>12.1} {:>14} {:>13} {:>15} {:>14.1}",
-                u.user, u.arrival_vt, "-", "FAILED", "-", u.turnaround_s
+                "{:>12.1} {:>14} {:>13} {:>15} {:>14.1}",
+                u.arrival_vt, "-", "FAILED", "-", u.turnaround_s
             ),
         }
     }
@@ -357,6 +387,35 @@ fn print_enriched_report(report: &CampaignReport) {
         f.max_slowdown,
     );
     println!("Jain fairness index over per-user slowdowns: {:.4}", f.jain);
+    let c = &report.cost;
+    println!(
+        "\ncost — provisioned {:.3} slot-h | used {:.3} slot-h | scale-up waste {:.3} slot-h",
+        c.total_provisioned_slot_s() / 3600.0,
+        c.total_used_slot_s() / 3600.0,
+        c.total_scaleup_waste_slot_s() / 3600.0,
+    );
+    println!(
+        "{:>16} {:>10} {:>12} {:>12} {:>6} {:>14}",
+        "endpoint", "base→peak", "prov (sl-h)", "used (sl-h)", "util", "waste (sl-h)"
+    );
+    for e in &c.endpoints {
+        println!(
+            "{:>16} {:>10} {:>12.4} {:>12.4} {:>5.0}% {:>14.4}",
+            e.endpoint,
+            format!("{}→{}", e.base_capacity, e.peak_capacity),
+            e.provisioned_slot_s / 3600.0,
+            e.used_slot_s / 3600.0,
+            e.utilization() * 100.0,
+            e.scaleup_waste_slot_s() / 3600.0,
+        );
+    }
+    let attributed: Vec<String> = c
+        .per_user_slot_s
+        .iter()
+        .enumerate()
+        .map(|(i, s)| format!("u{} {:.4}", i + 1, s / 3600.0))
+        .collect();
+    println!("per-tenant attributed slot-h: {}", attributed.join(" | "));
     if !report.scaling.is_empty() {
         let peak = report.scaling.iter().map(|e| e.capacity).max().unwrap_or(0);
         println!(
@@ -391,8 +450,9 @@ fn campaign_policy_sweep(
         human_secs(mean)
     );
     println!(
-        "{:>10} {:>10} {:>10} {:>10} {:>11} {:>10} {:>8} {:>7}",
-        "policy", "p50 (s)", "p95 (s)", "max (s)", "mean slow", "max slow", "jain", "failed"
+        "{:>10} {:>10} {:>10} {:>10} {:>11} {:>10} {:>8} {:>11} {:>7}",
+        "policy", "p50 (s)", "p95 (s)", "max (s)", "mean slow", "max slow", "jain",
+        "slot-h prov", "failed"
     );
     for kind in [
         PolicyKind::Fifo,
@@ -405,7 +465,7 @@ fn campaign_policy_sweep(
         let report = run_campaign(&mk_cfg(scenario, mean, kind))?;
         let f = &report.fairness;
         println!(
-            "{:>10} {:>10.1} {:>10.1} {:>10.1} {:>11.3} {:>10.3} {:>8.4} {:>7}",
+            "{:>10} {:>10.1} {:>10.1} {:>10.1} {:>11.3} {:>10.3} {:>8.4} {:>11.3} {:>7}",
             kind.label(),
             report.turnaround_percentile(50.0),
             report.turnaround_percentile(95.0),
@@ -413,13 +473,16 @@ fn campaign_policy_sweep(
             f.mean_slowdown,
             f.max_slowdown,
             f.jain,
+            report.cost.total_provisioned_slot_s() / 3600.0,
             report.failed_users.len(),
         );
     }
     println!(
         "\n(identical arrivals/fabric per row; slowdown = turnaround over\n\
          its queue-wait-free counterfactual, Jain index 1.0 = every user\n\
-         slowed equally)"
+         slowed equally; slot-h prov = total capacity the fabric had to\n\
+         keep powered over the campaign — the dollars-proxy a policy's\n\
+         makespan drives)"
     );
     Ok(())
 }

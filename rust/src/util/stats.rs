@@ -94,6 +94,36 @@ pub fn jain_index(xs: &[f64]) -> f64 {
     (sum * sum) / (xs.len() as f64 * sq)
 }
 
+/// Integrate a right-continuous step function over `[t0, t1]`.
+///
+/// The function holds `initial` from `t0` until the first change, then
+/// each `(vt, value)` change takes effect at its instant. Changes must
+/// be in non-decreasing `vt` order; changes outside `[t0, t1]` are
+/// handled (before `t0`: the latest one replaces `initial`; after
+/// `t1`: ignored). Used by the campaign cost accounting to turn an
+/// autoscaler's `ScalingEvent` log into provisioned slot-seconds.
+pub fn integrate_step(t0: f64, t1: f64, initial: f64, changes: &[(f64, f64)]) -> f64 {
+    if t1 <= t0 {
+        return 0.0;
+    }
+    let mut acc = 0.0;
+    let mut cur_t = t0;
+    let mut cur_v = initial;
+    for &(vt, value) in changes {
+        if vt <= t0 {
+            cur_v = value;
+            continue;
+        }
+        if vt >= t1 {
+            break;
+        }
+        acc += cur_v * (vt - cur_t);
+        cur_t = vt;
+        cur_v = value;
+    }
+    acc + cur_v * (t1 - cur_t)
+}
+
 /// Human-readable byte count.
 pub fn human_bytes(bytes: f64) -> String {
     const UNITS: [&str; 6] = ["B", "KiB", "MiB", "GiB", "TiB", "PiB"];
@@ -163,6 +193,24 @@ mod tests {
         assert!(mild > 0.25 && mild < 1.0, "{mild}");
         assert_eq!(jain_index(&[]), 1.0);
         assert_eq!(jain_index(&[0.0, 0.0]), 1.0);
+    }
+
+    #[test]
+    fn integrate_step_segments() {
+        // constant over the window
+        assert_eq!(integrate_step(0.0, 10.0, 2.0, &[]), 20.0);
+        // one mid-window step: 2×4 + 5×6
+        assert_eq!(integrate_step(0.0, 10.0, 2.0, &[(4.0, 5.0)]), 38.0);
+        // change before the window replaces the initial value
+        assert_eq!(integrate_step(10.0, 20.0, 1.0, &[(5.0, 3.0)]), 30.0);
+        // change after the window is ignored
+        assert_eq!(integrate_step(0.0, 10.0, 2.0, &[(15.0, 9.0)]), 20.0);
+        // autoscale trace: up at 5 (cap 2), down at 8 (cap 1) over [0, 10]
+        let trace = [(5.0, 2.0), (8.0, 1.0)];
+        assert_eq!(integrate_step(0.0, 10.0, 1.0, &trace), 5.0 + 6.0 + 2.0);
+        // empty/inverted window
+        assert_eq!(integrate_step(3.0, 3.0, 7.0, &[]), 0.0);
+        assert_eq!(integrate_step(5.0, 3.0, 7.0, &[]), 0.0);
     }
 
     #[test]

@@ -19,7 +19,8 @@ pub mod scenario;
 pub mod world;
 
 pub use campaign::{
-    run_campaign, CampaignConfig, CampaignReport, EndpointLoad, FairnessSummary, UserOutcome,
+    parse_mix, run_campaign, CampaignConfig, CampaignReport, CostSummary, EndpointCost,
+    EndpointLoad, FairnessSummary, MixEntry, UserOutcome,
 };
 pub use coordinator::{
     extract_breakdown, render_table1, Coordinator, RetrainBreakdown, RetrainOutcome,

@@ -54,11 +54,12 @@ impl ActionProvider<World> for TransferProvider {
 }
 
 /// Wrap a funcX submission as a flow action.
-/// params: {endpoint, function, args, priority?, user?}
+/// params: {endpoint, function, args, priority?, user?, slots?}
 ///
-/// A flow definition may pin a scheduler `priority` class (or tenant
-/// `user` tag) directly in the action params; it overrides the world's
-/// ambient [`Tenant`](super::world::Tenant) for this and subsequent
+/// A flow definition may pin a scheduler `priority` class, tenant
+/// `user` tag, or training gang width (`slots`) directly in the action
+/// params; each overrides the world's ambient
+/// [`Tenant`](super::world::Tenant) for this and subsequent
 /// submissions of the same drive (the campaign layer re-asserts its
 /// per-user tenant every poll round).
 pub struct ComputeProvider;
@@ -87,6 +88,9 @@ impl ActionProvider<World> for ComputeProvider {
         }
         if let Some(u) = params.get("user").as_u64() {
             world.tenant.user = u as u32;
+        }
+        if let Some(s) = params.get("slots").as_u64() {
+            world.tenant.train_slots = (s as usize).max(1);
         }
         let ticket = world.submit_compute_ticket(now, &endpoint, &func, &args)?;
         Ok(Effect::Pending(ticket))

@@ -41,14 +41,30 @@ pub enum TrainingMode {
 
 /// Who is submitting fabric work right now. The campaign layer sets
 /// this before driving each user's flow so every faas task carries the
-/// tenant and priority class the scheduling policy needs (DESIGN.md
-/// §9); single-tenant paths leave the untagged default.
-#[derive(Debug, Clone, Copy, Default)]
+/// tenant, priority class, and gang width the scheduling policy needs
+/// (DESIGN.md §9, §10); single-tenant paths leave the untagged default.
+#[derive(Debug, Clone, Copy)]
 pub struct Tenant {
     /// 1-based campaign user index (0 = untagged)
     pub user: u32,
     /// static priority class; larger = more urgent
     pub priority: i64,
+    /// gang width of this tenant's *training* jobs: `train_model`
+    /// tasks occupy this many capacity slots atomically (a multi-node
+    /// or multi-wafer-section allocation). All other functions stay
+    /// single-slot — dataset generation and labeling model as ordinary
+    /// tasks.
+    pub train_slots: usize,
+}
+
+impl Default for Tenant {
+    fn default() -> Self {
+        Tenant {
+            user: 0,
+            priority: 0,
+            train_slots: 1,
+        }
+    }
 }
 
 /// Work submitted to a shared fabric, awaiting completion. The ticket
@@ -206,6 +222,13 @@ impl World {
             user: self.tenant.user,
             priority: self.tenant.priority,
             est_duration_s: self.estimate_task_secs(endpoint, func, args),
+            // only training jobs gang up (multi-node allocations);
+            // generation/labeling/evaluation stay single-slot
+            slots: if func.0 == "train_model" {
+                self.tenant.train_slots.max(1)
+            } else {
+                1
+            },
         };
         let faas = self
             .faas

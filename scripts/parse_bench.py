@@ -1,0 +1,88 @@
+#!/usr/bin/env python3
+"""Parse `cargo bench --bench micro` output into BENCH_ci.json.
+
+The bench harness (rust/benches/harness.rs) prints one line per bench:
+
+    <name padded to 52>  time: [<min> <mean> <mean+std>]  (p95 <p95>, <N> iters)
+
+with times humanized as ns/µs/ms/s, grouped under `=== <title> ===`
+section headers. This script turns that into a JSON document the CI
+uploads as an artifact, with the runner's CPU recorded next to the
+numbers (runner hardware varies run to run — these are trend lines for
+EXPERIMENTS.md §Perf, not absolute truth).
+
+Usage: parse_bench.py <bench-output.txt> <out.json>
+"""
+
+import json
+import os
+import re
+import sys
+
+UNIT = {"ns": 1e-9, "µs": 1e-6, "us": 1e-6, "ms": 1e-3, "s": 1.0}
+
+LINE = re.compile(
+    r"^(?P<name>.*?)\s+time:\s+\["
+    r"(?P<min>[\d.]+)\s+(?P<minu>ns|µs|us|ms|s)\s+"
+    r"(?P<mean>[\d.]+)\s+(?P<meanu>ns|µs|us|ms|s)\s+"
+    r"(?P<hi>[\d.]+)\s+(?P<hiu>ns|µs|us|ms|s)\]\s+"
+    r"\(p95\s+(?P<p95>[\d.]+)\s+(?P<p95u>ns|µs|us|ms|s),\s+(?P<iters>\d+)\s+iters\)"
+)
+GROUP = re.compile(r"^===\s+(?P<title>.*?)\s+===$")
+
+
+def cpu_model():
+    try:
+        with open("/proc/cpuinfo") as f:
+            for line in f:
+                if line.lower().startswith("model name"):
+                    return line.split(":", 1)[1].strip()
+    except OSError:
+        pass
+    return "unknown"
+
+
+def main():
+    if len(sys.argv) != 3:
+        sys.exit(__doc__)
+    src, dst = sys.argv[1], sys.argv[2]
+    group = None
+    benches = []
+    with open(src, encoding="utf-8") as f:
+        for raw in f:
+            line = raw.rstrip("\n")
+            g = GROUP.match(line.strip())
+            if g:
+                group = g.group("title")
+                continue
+            m = LINE.match(line)
+            if not m:
+                continue
+            to_s = lambda v, u: float(v) * UNIT[u]
+            benches.append(
+                {
+                    "group": group,
+                    "name": m.group("name").strip(),
+                    "min_s": to_s(m.group("min"), m.group("minu")),
+                    "mean_s": to_s(m.group("mean"), m.group("meanu")),
+                    "mean_plus_std_s": to_s(m.group("hi"), m.group("hiu")),
+                    "p95_s": to_s(m.group("p95"), m.group("p95u")),
+                    "iters": int(m.group("iters")),
+                }
+            )
+    doc = {
+        "source": os.path.basename(src),
+        "cpu": cpu_model(),
+        "nproc": os.cpu_count(),
+        "threads_env": os.environ.get("XLOOP_THREADS", ""),
+        "benches": benches,
+    }
+    with open(dst, "w", encoding="utf-8") as f:
+        json.dump(doc, f, indent=1)
+    print(f"[parse_bench] {len(benches)} benches -> {dst} (cpu: {doc['cpu']})")
+    if not benches:
+        sys.exit("no bench lines parsed — harness output format changed?")
+
+
+if __name__ == "__main__":
+    main()
