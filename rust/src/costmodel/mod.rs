@@ -13,7 +13,16 @@
 //!
 //! `paper()` uses the exact §4.2 constants (BraggNN / HEDM on a 1024-core
 //! cluster, 1 GB/s WAN, Cerebras 19 s training).
+//!
+//! `pricing` (DESIGN.md §11) adds the *dollar* axis the paper's
+//! economics argument implies: a [`PriceBook`] maps endpoint classes to
+//! $/slot-hour (plus $/GB WAN egress), which is what lets the campaign
+//! layer's slot-time accounting (DESIGN.md §10) be expressed as
+//! provisioned/used/waste dollars and per-tenant bills instead of
+//! incomparable slot-hours.
 
 pub mod eqs;
+pub mod pricing;
 
 pub use eqs::{overlapped_label_train_s, CostParams, CrossoverReport};
+pub use pricing::PriceBook;

@@ -1,0 +1,208 @@
+//! Dollar-denominated pricing of the fabric (DESIGN.md §11).
+//!
+//! The slot-hour cost accounting of DESIGN.md §10 deliberately stops
+//! short of money: a Cerebras slot-hour and a 1024-core-cluster
+//! slot-hour are incomparable quantities, so summing them across
+//! endpoints produces a number with no unit. [`PriceBook`] closes the
+//! gap: it maps each endpoint *class* (the part of the endpoint id
+//! after `#` — `cerebras`, `cluster`, `v100`, …) to a dollar rate per
+//! slot-hour, plus a dollar rate per GB of WAN egress, so the campaign
+//! layer can convert its `CostSummary` into provisioned/used/waste
+//! dollars and per-tenant bills (`--prices` on `xloop campaign`).
+//!
+//! Rates are *list-price stand-ins*, not measurements: the point of the
+//! paper's economics argument (remote DCAI turns a retraining around
+//! ~30× faster than the local GPU *despite* data movement) is only
+//! testable once both sides carry the same unit. `PriceBook::paper()`
+//! ships defaults in the ballpark of published cloud/DCAI rental rates
+//! circa the paper; every study that matters sweeps or overrides them.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+/// Endpoint classes the paper fabric registers (`World::paper`). A
+/// `--prices` spec naming anything else is rejected up front — a typo'd
+/// class would otherwise silently price nothing.
+pub const KNOWN_CLASSES: &[&str] = &["v100", "sim", "cerebras", "sambanova", "gpu8", "cluster"];
+
+/// The reserved `--prices` key for WAN egress ($/GB), priced separately
+/// from slot time.
+pub const EGRESS_KEY: &str = "egress";
+
+/// Endpoint-class → dollar rates (DESIGN.md §11).
+///
+/// Unpriced classes cost $0/slot-hour — a book may deliberately price
+/// only the endpoints under study (e.g. `cerebras` vs `v100` for the
+/// remote-vs-local crossover) without the idle simulation host
+/// polluting the totals.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct PriceBook {
+    /// class → $/slot-hour
+    rates: BTreeMap<String, f64>,
+    /// $/GB for WAN egress (bytes that crossed the wide-area network,
+    /// retransmissions included — the wire does not refund retries)
+    pub egress_per_gb: f64,
+}
+
+impl PriceBook {
+    /// An empty book: every class $0, egress $0.
+    pub fn new() -> PriceBook {
+        PriceBook::default()
+    }
+
+    /// Ballpark list prices for the paper fabric, used when a cost
+    /// study needs *some* dollar axis and none was given
+    /// (`--cost-sweep` without `--prices`):
+    ///
+    /// * `cerebras` $42/slot-h — wafer-scale rental is the premium tier
+    /// * `sambanova` $30/slot-h, `gpu8` $12/slot-h — DCAI mid-tier
+    /// * `v100` $3/slot-h — single cloud V100 on-demand
+    /// * `cluster` $1.80/slot-h, `sim` $0.40/slot-h — commodity CPU
+    /// * egress $0.09/GB — the classic cloud egress list price
+    pub fn paper() -> PriceBook {
+        let mut book = PriceBook::new();
+        for (class, rate) in [
+            ("cerebras", 42.0),
+            ("sambanova", 30.0),
+            ("gpu8", 12.0),
+            ("v100", 3.0),
+            ("cluster", 1.8),
+            ("sim", 0.4),
+        ] {
+            book.rates.insert(class.to_string(), rate);
+        }
+        book.egress_per_gb = 0.09;
+        book
+    }
+
+    /// Parse a `--prices` spec: comma-joined `class:rate` entries with
+    /// rates in $/slot-hour, plus an optional `egress:rate` in $/GB —
+    /// e.g. `cerebras:42.0,cluster:1.8,egress:0.09`. Unknown classes,
+    /// non-finite or negative rates, and duplicate entries are all
+    /// rejected.
+    pub fn parse(spec: &str) -> Result<PriceBook> {
+        let mut book = PriceBook::new();
+        let mut saw_egress = false;
+        for tok in spec.split(',') {
+            let tok = tok.trim();
+            if tok.is_empty() {
+                continue;
+            }
+            let Some((class, rate)) = tok.split_once(':') else {
+                bail!("bad price entry `{tok}` (want class:dollars_per_slot_hour)");
+            };
+            let rate: f64 = rate
+                .parse()
+                .map_err(|_| anyhow::anyhow!("bad price `{rate}` in `{tok}`"))?;
+            if !rate.is_finite() || rate < 0.0 {
+                bail!("price must be finite and >= 0 in `{tok}`");
+            }
+            if class == EGRESS_KEY {
+                if saw_egress {
+                    bail!("duplicate price entry for `{EGRESS_KEY}`");
+                }
+                saw_egress = true;
+                book.egress_per_gb = rate;
+                continue;
+            }
+            if !KNOWN_CLASSES.contains(&class) {
+                bail!(
+                    "unknown endpoint class `{class}` (known: {}, plus `{EGRESS_KEY}`)",
+                    KNOWN_CLASSES.join(", ")
+                );
+            }
+            if book.rates.insert(class.to_string(), rate).is_some() {
+                bail!("duplicate price entry for class `{class}`");
+            }
+        }
+        Ok(book)
+    }
+
+    /// The class of an endpoint id: the part after `#` (`alcf#cerebras`
+    /// → `cerebras`), or the whole id when there is no `#`.
+    pub fn class_of(endpoint: &str) -> &str {
+        endpoint.split_once('#').map(|(_, c)| c).unwrap_or(endpoint)
+    }
+
+    /// $/slot-hour for an endpoint (0.0 when its class is unpriced).
+    pub fn rate_per_slot_hour(&self, endpoint: &str) -> f64 {
+        self.rates
+            .get(Self::class_of(endpoint))
+            .copied()
+            .unwrap_or(0.0)
+    }
+
+    /// Whether the endpoint's class carries an explicit price.
+    pub fn has_price(&self, endpoint: &str) -> bool {
+        self.rates.contains_key(Self::class_of(endpoint))
+    }
+
+    /// Dollars for `slot_s` slot-seconds on an endpoint.
+    pub fn slot_dollars(&self, endpoint: &str, slot_s: f64) -> f64 {
+        self.rate_per_slot_hour(endpoint) * slot_s / 3600.0
+    }
+
+    /// Dollars for `bytes` of WAN egress.
+    pub fn egress_dollars(&self, bytes: f64) -> f64 {
+        self.egress_per_gb * bytes / 1e9
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_classes_and_egress() {
+        let b = PriceBook::parse("cerebras:42.0,cluster:1.8,egress:0.09").unwrap();
+        assert_eq!(b.rate_per_slot_hour("alcf#cerebras"), 42.0);
+        assert_eq!(b.rate_per_slot_hour("alcf#cluster"), 1.8);
+        assert_eq!(b.egress_per_gb, 0.09);
+        // unpriced class defaults to $0 but is distinguishable
+        assert_eq!(b.rate_per_slot_hour("slac#v100"), 0.0);
+        assert!(!b.has_price("slac#v100"));
+        assert!(b.has_price("alcf#cerebras"));
+        // empty spec is a valid (all-zero) book
+        assert_eq!(PriceBook::parse("").unwrap(), PriceBook::new());
+        // an hour of one slot at $42/slot-h is $42; 10 GB at $0.09
+        assert!((b.slot_dollars("alcf#cerebras", 3600.0) - 42.0).abs() < 1e-12);
+        assert!((b.egress_dollars(10e9) - 0.9).abs() < 1e-12);
+    }
+
+    #[test]
+    fn rejects_bad_specs() {
+        // unknown class
+        assert!(PriceBook::parse("tpu:9.0").unwrap_err().to_string().contains("unknown"));
+        // negative and non-finite prices
+        assert!(PriceBook::parse("cerebras:-1").is_err());
+        assert!(PriceBook::parse("cerebras:inf").is_err());
+        assert!(PriceBook::parse("cerebras:abc").is_err());
+        // duplicate entries (class and egress alike)
+        assert!(PriceBook::parse("cerebras:1,cerebras:2")
+            .unwrap_err()
+            .to_string()
+            .contains("duplicate"));
+        assert!(PriceBook::parse("egress:0.1,egress:0.2").is_err());
+        // shapeless tokens
+        assert!(PriceBook::parse("cerebras").is_err());
+    }
+
+    #[test]
+    fn class_extraction() {
+        assert_eq!(PriceBook::class_of("alcf#cerebras"), "cerebras");
+        assert_eq!(PriceBook::class_of("cerebras"), "cerebras");
+        assert_eq!(PriceBook::class_of("a#b#c"), "b#c");
+    }
+
+    #[test]
+    fn paper_book_prices_every_fabric_class() {
+        let b = PriceBook::paper();
+        for class in KNOWN_CLASSES {
+            assert!(b.has_price(&format!("x#{class}")), "{class} unpriced");
+        }
+        assert!(b.egress_per_gb > 0.0);
+        // the premium ordering the crossover study leans on
+        assert!(b.rate_per_slot_hour("alcf#cerebras") > b.rate_per_slot_hour("slac#v100"));
+    }
+}

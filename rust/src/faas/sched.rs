@@ -43,6 +43,11 @@
 //! actions. The service folds provision completions and idle deadlines
 //! into its `next_event_time`, so the same `simnet::des`-driven event
 //! loop that drives queue starts also drives scaling (DESIGN.md §9).
+//! Each applied change is logged as a [`ScalingEvent`] carrying the
+//! tenant whose demand fired it — the hook the campaign layer's
+//! slot-hour and dollar cost accounting (provisioned / used /
+//! scale-up-waste integrals, per-tenant waste attribution) hangs off
+//! (DESIGN.md §10–§11).
 
 use anyhow::{bail, Result};
 
@@ -493,13 +498,20 @@ impl Autoscaler {
 }
 
 /// One capacity change applied by an autoscaler (campaign reporting
-/// and slot-hour cost accounting).
+/// and slot-hour / dollar cost accounting, DESIGN.md §10–§11).
 #[derive(Debug, Clone)]
 pub struct ScalingEvent {
     pub vt: f64,
     pub endpoint: String,
     /// capacity after the change
     pub capacity: usize,
+    /// tenant whose queued demand fired the scale-up trigger (the first
+    /// waiting task at the trigger instant — or, when a too-wide gang
+    /// forced unconditional pressure, that gang's tenant). `0` for
+    /// scale-downs and untagged work. This is what lets the campaign's
+    /// cost accounting attribute scale-up *waste* to the tenant who
+    /// asked for the capacity (DESIGN.md §11).
+    pub trigger_user: u32,
 }
 
 #[cfg(test)]

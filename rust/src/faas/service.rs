@@ -93,6 +93,9 @@ struct AutoState {
     cfg: Autoscaler,
     /// a provision in flight completes (slot usable) at this time
     pending_at: Option<f64>,
+    /// tenant whose waiting demand fired the in-flight provision
+    /// (recorded into the `ScalingEvent` when it completes; 0 = untagged)
+    pending_user: u32,
     /// last capacity change (cooldown reference)
     last_action_vt: f64,
 }
@@ -264,6 +267,7 @@ impl<C> FaasService<C> {
             AutoState {
                 cfg,
                 pending_at: None,
+                pending_user: 0,
                 last_action_vt: f64::NEG_INFINITY,
             },
         );
@@ -581,29 +585,39 @@ impl<C> FaasService<C> {
     /// whenever the waiting count can have grown (enqueue, provision
     /// completion, outage recovery).
     fn autoscale_check(&mut self, ep_id: &str, now: f64) {
+        let Some(auto) = self.autoscalers.get(ep_id) else {
+            return;
+        };
+        let cap = self.slots.get(ep_id).map(|s| s.len()).unwrap_or(0);
+        if auto.pending_at.is_some() || cap >= auto.cfg.max_capacity {
+            return;
+        }
         // gang-weighted: a width-k gang is k slots of unmet demand
         let waiting = self.waiting_depth(ep_id);
-        let cap = self.slots.get(ep_id).map(|s| s.len()).unwrap_or(0);
         // a queued gang wider than current capacity can NEVER start
         // without a provision — that is unconditional pressure, even
         // below the configured waiting threshold (otherwise a lone
-        // wide gang under a high `scale_up_waiting` would deadlock)
-        let gang_needs_width = self
+        // wide gang under a high `scale_up_waiting` would deadlock).
+        // One scan finds it; it doubles as the attribution candidate.
+        let too_wide = self
             .queues
             .get(ep_id)
-            .map(|q| q.iter().any(|&id| self.rec(id).meta.width() > cap))
-            .unwrap_or(false);
-        let Some(auto) = self.autoscalers.get_mut(ep_id) else {
-            return;
-        };
-        if auto.pending_at.is_some()
-            || (waiting < auto.cfg.scale_up_waiting && !gang_needs_width)
-            || cap >= auto.cfg.max_capacity
-        {
+            .and_then(|q| q.iter().find(|&&id| self.rec(id).meta.width() > cap));
+        if waiting < auto.cfg.scale_up_waiting && too_wide.is_none() {
             return;
         }
+        // whose demand is this? the unsatisfiable gang when one forced
+        // the trigger, else the head of the waiting queue — recorded so
+        // the eventual ScalingEvent (and its waste) is attributable to
+        // a tenant (DESIGN.md §11)
+        let trigger_user = too_wide
+            .or_else(|| self.queues.get(ep_id).and_then(|q| q.front()))
+            .map(|&id| self.rec(id).meta.user)
+            .unwrap_or(0);
+        let auto = self.autoscalers.get_mut(ep_id).expect("checked above");
         let trigger = now.max(auto.last_action_vt + auto.cfg.cooldown_s);
         auto.pending_at = Some(trigger + auto.cfg.provision_delay_s);
+        auto.pending_user = trigger_user;
     }
 
     /// A provision completed at `p`: the new slot becomes usable.
@@ -611,6 +625,7 @@ impl<C> FaasService<C> {
         let auto = self.autoscalers.get_mut(ep_id).expect("autoscaled");
         auto.pending_at = None;
         auto.last_action_vt = p;
+        let trigger_user = auto.pending_user;
         let slots = self.slots.get_mut(ep_id).expect("slots");
         slots.push(p);
         let capacity = slots.len();
@@ -619,6 +634,7 @@ impl<C> FaasService<C> {
             vt: p,
             endpoint: ep_id.to_string(),
             capacity,
+            trigger_user,
         });
         self.note_activity(ep_id, p);
         // the queue may still be deep enough for another step (the
@@ -664,6 +680,9 @@ impl<C> FaasService<C> {
             vt: d,
             endpoint: ep_id.to_string(),
             capacity,
+            // releases are the facility reclaiming idle capacity, not
+            // any tenant's demand
+            trigger_user: 0,
         });
     }
 
@@ -1264,6 +1283,51 @@ mod tests {
         assert_eq!((log[0].vt, log[0].capacity), (5.0, 2));
         assert_eq!((log[1].vt, log[1].capacity), (43.0, 1));
         assert_eq!(ctx.calls, 4);
+    }
+
+    /// Scale-ups are attributable: the `ScalingEvent` records the
+    /// tenant whose waiting demand fired the trigger (the head of the
+    /// waiting queue at that instant), and idle releases record no
+    /// tenant — the hook the campaign's per-tenant waste attribution
+    /// hangs off (DESIGN.md §11).
+    #[test]
+    fn scale_up_trigger_attributed_to_waiting_tenant() {
+        let (mut svc, f) = setup();
+        svc.set_autoscaler(
+            "alcf#gpu",
+            Autoscaler {
+                min_capacity: 1,
+                max_capacity: 2,
+                scale_up_waiting: 2,
+                provision_delay_s: 5.0,
+                scale_down_idle_s: 20.0,
+                cooldown_s: 1.0,
+            },
+        )
+        .unwrap();
+        let mut ctx = Ctx::default();
+        let user = |u: u32| TaskMeta {
+            user: u,
+            ..TaskMeta::default()
+        };
+        svc.enqueue_with_meta(0.0, "alcf#gpu", &f, &secs(10.0), user(7))
+            .unwrap();
+        // this enqueue crosses the waiting threshold while user 7's
+        // task heads the queue
+        svc.enqueue_with_meta(0.0, "alcf#gpu", &f, &secs(10.0), user(8))
+            .unwrap();
+        drive(&mut svc, &mut ctx);
+        let log = svc.scaling_log();
+        assert!(
+            log.iter().any(|e| e.capacity == 2 && e.trigger_user == 7),
+            "scale-up not attributed to the queue head: {log:?}"
+        );
+        assert!(
+            log.iter()
+                .filter(|e| e.capacity == 1)
+                .all(|e| e.trigger_user == 0),
+            "idle release attributed to a tenant: {log:?}"
+        );
     }
 
     /// A planned outage fails the running task (delivered to the next

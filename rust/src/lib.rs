@@ -15,7 +15,9 @@
 //!   JAX on Pallas kernels, AOT-lowered to `artifacts/*.hlo.txt`.
 //! * **runtime** — PJRT CPU bridge executing those artifacts from rust.
 //!
-//! See DESIGN.md for the system inventory and experiment index, and
+//! See the top-level README.md for the architecture map and the
+//! campaign CLI cookbook, DESIGN.md for the system inventory and
+//! experiment index (doc comments cite it as `DESIGN.md §N`), and
 //! EXPERIMENTS.md for paper-vs-measured results.
 
 pub mod accel;

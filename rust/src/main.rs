@@ -12,7 +12,7 @@
 
 use anyhow::{bail, Result};
 
-use xloop::costmodel::CostParams;
+use xloop::costmodel::{CostParams, PriceBook};
 use xloop::faas::{Autoscaler, PolicyKind};
 use xloop::simnet::{FaultPlan, VClock};
 use xloop::transfer::{TransferRequest, TransferService};
@@ -70,7 +70,8 @@ fn print_usage() {
            campaign  N users' retrainings on the shared fabric (--users,\n\
                      --interarrival, --loads for a crossover sweep; --policy,\n\
                      --autoscale, --faults, --mix, --compare-policies for the\n\
-                     scheduling/elasticity/fault/cost study)\n\
+                     scheduling/elasticity/fault study; --prices and\n\
+                     --cost-sweep for the dollar-denominated cost study)\n\
            fig3      WAN transfer throughput vs concurrency (Fig. 3)\n\
            fig4      conventional vs ML-surrogate crossover (Fig. 4)\n\
            serve     retrain + deploy + stream edge inference\n\
@@ -213,12 +214,25 @@ fn cmd_campaign(args: &[String]) -> Result<()> {
         .opt(
             "mix",
             "",
-            "heterogeneous tenant mix: model:weight[:gang_slots] entries, e.g. \
-             braggnn:0.7:1,cookienetae:0.3:4 (empty = every user runs --model)",
+            "heterogeneous tenant mix: model:weight[:gang_slots[:rate_s[:burst=F@D]]] \
+             entries, e.g. braggnn:0.7:1,cookienetae:0.3:4 (empty = every user runs \
+             --model); a rate/burst on any entry switches to per-class arrival streams",
+        )
+        .opt(
+            "prices",
+            "",
+            "price the fabric in dollars: class:$_per_slot_hour entries plus optional \
+             egress:$_per_GB, e.g. cerebras:42.0,cluster:1.8,egress:0.09 (`paper` = \
+             built-in list prices; empty = slot-hours only)",
         )
         .flag(
             "compare-policies",
             "run the same campaign under every policy and print a comparison table",
+        )
+        .flag(
+            "cost-sweep",
+            "sweep arrival load (--loads or a default grid) and print the remote-vs-\
+             local crossover in dollars AND turnaround (uses --prices, default `paper`)",
         )
         .opt("seed", "42", "arrival/fabric seed");
     if args.iter().any(|a| a == "--help") {
@@ -239,12 +253,18 @@ fn cmd_campaign(args: &[String]) -> Result<()> {
         spec => FaultPlan::parse(spec)?,
     };
     let mix: Vec<MixEntry> = parse_mix(p.get("mix"))?;
+    let prices: Option<PriceBook> = match p.get("prices") {
+        "" => None,
+        "paper" => Some(PriceBook::paper()),
+        spec => Some(PriceBook::parse(spec)?),
+    };
     // anything beyond the PR 2 default enables the enriched report
     let enriched = !matches!(policy, PolicyKind::Fifo)
         || !priorities.is_empty()
         || autoscale_max > 0
         || !faults.is_empty()
-        || !mix.is_empty();
+        || !mix.is_empty()
+        || prices.is_some();
     let mk_cfg = |scenario: &Scenario, mean: f64, kind: PolicyKind| {
         let mut cfg = CampaignConfig::new(users, scenario.clone(), mean, seed);
         cfg.policy = kind;
@@ -261,8 +281,16 @@ fn cmd_campaign(args: &[String]) -> Result<()> {
     };
 
     let mean = p.get_f64("interarrival")?;
+    if p.get_bool("cost-sweep") {
+        let book = prices.clone().unwrap_or_else(PriceBook::paper);
+        let loads = match p.get("loads") {
+            "" => "600,120,60,30,15",
+            spec => spec,
+        };
+        return campaign_cost_sweep(loads, users, &scenario, policy, &book, &mk_cfg);
+    }
     if p.get_bool("compare-policies") {
-        return campaign_policy_sweep(&scenario, mean, &mk_cfg);
+        return campaign_policy_sweep(&scenario, mean, prices.as_ref(), &mk_cfg);
     }
     if !p.get("loads").is_empty() {
         return campaign_load_sweep(p.get("loads"), users, &scenario, policy, &mk_cfg);
@@ -351,7 +379,7 @@ fn cmd_campaign(args: &[String]) -> Result<()> {
         );
     }
     if enriched {
-        print_enriched_report(&report);
+        print_enriched_report(&report, prices.as_ref());
     }
     Ok(())
 }
@@ -373,10 +401,12 @@ fn parse_priorities(spec: &str) -> Result<Vec<i64>> {
 
 /// The DESIGN.md §9 additions to the campaign report: scheduling
 /// policy, per-user fairness (slowdown percentiles, Jain's index),
-/// autoscaling events, failed users. Printed only when a non-default
-/// knob is set, keeping `--policy fifo` output byte-identical to the
-/// pre-policy CLI.
-fn print_enriched_report(report: &CampaignReport) {
+/// autoscaling events, failed users — plus, under `--prices`, the
+/// DESIGN.md §11 dollar block (provisioned/used/waste/egress dollars
+/// and the per-tenant bills that sum to the fabric total). Printed only
+/// when a non-default knob is set, keeping `--policy fifo` output
+/// byte-identical to the pre-policy CLI.
+fn print_enriched_report(report: &CampaignReport, prices: Option<&PriceBook>) {
     let f = &report.fairness;
     println!(
         "\nscheduling policy: {} | per-user slowdown: mean {:.3} | p50 {:.3} | p95 {:.3} | max {:.3}",
@@ -416,6 +446,53 @@ fn print_enriched_report(report: &CampaignReport) {
         .map(|(i, s)| format!("u{} {:.4}", i + 1, s / 3600.0))
         .collect();
     println!("per-tenant attributed slot-h: {}", attributed.join(" | "));
+    if let Some(book) = prices {
+        let d = report.cost.dollars(book);
+        println!(
+            "\ncost ($) — provisioned ${:.2} | used ${:.2} | scale-up waste ${:.2} | \
+             egress ${:.2} ({:.2} GB) | fabric total ${:.2}",
+            d.provisioned_usd(),
+            d.used_usd(),
+            d.scaleup_waste_usd(),
+            d.egress_usd,
+            d.egress_bytes / 1e9,
+            d.total_usd(),
+        );
+        println!(
+            "{:>16} {:>10} {:>12} {:>12} {:>12}",
+            "endpoint", "$/slot-h", "prov ($)", "used ($)", "waste ($)"
+        );
+        for e in &d.endpoints {
+            println!(
+                "{:>16} {:>10.2} {:>12.2} {:>12.2} {:>12.2}",
+                e.endpoint,
+                e.rate_per_slot_hour,
+                e.provisioned_usd,
+                e.used_usd,
+                e.scaleup_waste_usd,
+            );
+        }
+        let bills: Vec<String> = d
+            .per_tenant
+            .iter()
+            .map(|t| {
+                format!(
+                    "u{} ${:.2} (compute ${:.2} + idle ${:.2} + egress ${:.2}; \
+                     waste memo ${:.2})",
+                    t.user,
+                    t.total_usd(),
+                    t.used_usd,
+                    t.idle_share_usd,
+                    t.egress_usd,
+                    t.scaleup_waste_usd
+                )
+            })
+            .collect();
+        println!(
+            "per-tenant bill (sums to the fabric total): {}",
+            bills.join(" | ")
+        );
+    }
     if !report.scaling.is_empty() {
         let peak = report.scaling.iter().map(|e| e.capacity).max().unwrap_or(0);
         println!(
@@ -437,10 +514,12 @@ fn print_enriched_report(report: &CampaignReport) {
 
 /// Run the identical campaign under every scheduling policy and
 /// compare turnaround tails and fairness — the policy-comparison sweep
-/// (EXPERIMENTS.md §Scheduling).
+/// (EXPERIMENTS.md §Scheduling). With `--prices`, a `$ prov` column
+/// dollarizes each policy's provisioned capacity (DESIGN.md §11).
 fn campaign_policy_sweep(
     scenario: &Scenario,
     mean: f64,
+    prices: Option<&PriceBook>,
     mk_cfg: &dyn Fn(&Scenario, f64, PolicyKind) -> CampaignConfig,
 ) -> Result<()> {
     println!(
@@ -449,11 +528,15 @@ fn campaign_policy_sweep(
         scenario.mode.label(),
         human_secs(mean)
     );
-    println!(
+    print!(
         "{:>10} {:>10} {:>10} {:>10} {:>11} {:>10} {:>8} {:>11} {:>7}",
         "policy", "p50 (s)", "p95 (s)", "max (s)", "mean slow", "max slow", "jain",
         "slot-h prov", "failed"
     );
+    if prices.is_some() {
+        print!(" {:>11}", "$ prov");
+    }
+    println!();
     for kind in [
         PolicyKind::Fifo,
         PolicyKind::Sjf,
@@ -464,7 +547,7 @@ fn campaign_policy_sweep(
     ] {
         let report = run_campaign(&mk_cfg(scenario, mean, kind))?;
         let f = &report.fairness;
-        println!(
+        print!(
             "{:>10} {:>10.1} {:>10.1} {:>10.1} {:>11.3} {:>10.3} {:>8.4} {:>11.3} {:>7}",
             kind.label(),
             report.turnaround_percentile(50.0),
@@ -476,6 +559,10 @@ fn campaign_policy_sweep(
             report.cost.total_provisioned_slot_s() / 3600.0,
             report.failed_users.len(),
         );
+        if let Some(book) = prices {
+            print!(" {:>11.2}", report.cost.dollars(book).provisioned_usd());
+        }
+        println!();
     }
     println!(
         "\n(identical arrivals/fabric per row; slowdown = turnaround over\n\
@@ -483,6 +570,78 @@ fn campaign_policy_sweep(
          slowed equally; slot-h prov = total capacity the fabric had to\n\
          keep powered over the campaign — the dollars-proxy a policy's\n\
          makespan drives)"
+    );
+    Ok(())
+}
+
+/// Parse a `--loads` sweep spec: comma-joined mean inter-arrival
+/// seconds (shared by the load and cost sweeps).
+fn parse_loads(spec: &str) -> Result<Vec<f64>> {
+    let mut out = Vec::new();
+    for tok in spec.split(',') {
+        let tok = tok.trim();
+        if tok.is_empty() {
+            continue;
+        }
+        out.push(tok.parse().map_err(|_| {
+            anyhow::anyhow!("bad load `{tok}` (mean inter-arrival seconds)")
+        })?);
+    }
+    Ok(out)
+}
+
+/// Sweep arrival load and price the remote-vs-local choice in dollars
+/// AND turnaround (DESIGN.md §11, EXPERIMENTS.md §Cost) — the paper's
+/// crossover analysis with real units on both axes: the remote DCAI
+/// turns a retraining around ~30x faster, but its premium slot rate
+/// plus WAN egress means the facility pays for that speed. The table
+/// shows at which load each side of the tradeoff wins.
+fn campaign_cost_sweep(
+    loads: &str,
+    users: usize,
+    scenario: &Scenario,
+    policy: PolicyKind,
+    book: &PriceBook,
+    mk_cfg: &dyn Fn(&Scenario, f64, PolicyKind) -> CampaignConfig,
+) -> Result<()> {
+    let local_scenario = Scenario::table1(&scenario.model, Mode::LocalV100)?;
+    println!(
+        "\nCost sweep — {} users, {} remote ({}) vs local V100, in $ and turnaround\n",
+        users,
+        scenario.model,
+        scenario.mode.label()
+    );
+    println!(
+        "{:>16} {:>12} {:>10} {:>12} {:>10} {:>9} {:>9}",
+        "interarrival (s)", "remote p50", "remote $", "local p50", "local $", "$ winner",
+        "t winner"
+    );
+    for mean in parse_loads(loads)? {
+        let remote = run_campaign(&mk_cfg(scenario, mean, policy))?;
+        let local = run_campaign(&mk_cfg(&local_scenario, mean, policy))?;
+        let remote_usd = remote.cost.dollars(book).total_usd();
+        let local_usd = local.cost.dollars(book).total_usd();
+        let (rp50, lp50) = (
+            remote.turnaround_percentile(50.0),
+            local.turnaround_percentile(50.0),
+        );
+        println!(
+            "{:>16.1} {:>12.1} {:>10.2} {:>12.1} {:>10.2} {:>9} {:>9}",
+            mean,
+            rp50,
+            remote_usd,
+            lp50,
+            local_usd,
+            if remote_usd <= local_usd { "remote" } else { "local" },
+            if rp50 <= lp50 { "remote" } else { "local" },
+        );
+    }
+    println!(
+        "\n(p50 of arrival-to-deployed turnaround in virtual seconds; $ = fabric\n\
+         total — every provisioned slot-dollar over the campaign window plus WAN\n\
+         egress. The remote side buys ~30x turnaround with premium slot rates\n\
+         and egress; the local side pays cheap slot-hours over a much longer\n\
+         makespan. Prices per --prices; see DESIGN.md \u{a7}11.)"
     );
     Ok(())
 }
@@ -508,14 +667,7 @@ fn campaign_load_sweep(
         "{:>16} {:>12} {:>12} {:>12} {:>12} {:>8}",
         "interarrival (s)", "remote p50", "remote p95", "local p50", "local p95", "winner"
     );
-    for tok in loads.split(',') {
-        let tok = tok.trim();
-        if tok.is_empty() {
-            continue;
-        }
-        let mean: f64 = tok
-            .parse()
-            .map_err(|_| anyhow::anyhow!("bad load `{tok}` (mean inter-arrival seconds)"))?;
+    for mean in parse_loads(loads)? {
         let remote = run_campaign(&mk_cfg(scenario, mean, policy))?;
         let local = run_campaign(&mk_cfg(&local_scenario, mean, policy))?;
         let (rp50, rp95) = (

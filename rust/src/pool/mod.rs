@@ -1,4 +1,6 @@
-//! Chunked work-stealing thread pool for the crate's CPU hot paths.
+//! Chunked work-stealing thread pool for the crate's CPU hot paths
+//! (DESIGN.md §1; methodology and measurements in EXPERIMENTS.md
+//! §Perf).
 //!
 //! Dependency-free: std scoped threads + atomics, no channels. The three
 //! hot paths — pseudo-Voigt batch fitting (`analysis::fitter`), dataset

@@ -20,9 +20,16 @@
 //! percentiles, Jain's index) in the report; plus the DESIGN.md §10
 //! knobs: a heterogeneous tenant [`MixEntry`] mix (per-class model and
 //! training gang width sharing one trainer) and slot-hour
-//! [`CostSummary`] accounting. All knobs default off, and the
-//! default-knob campaign is bit-identical to the pre-policy one
-//! (test-pinned, and byte-diffed by the `campaign-golden` CI job).
+//! [`CostSummary`] accounting; plus the DESIGN.md §11 knobs: per-class
+//! arrival processes (each mix entry may carry its own mean
+//! inter-arrival `rate_s` and an optional Markov-modulated [`Burst`]
+//! mode, each class's Poisson stream seeded deterministically from the
+//! root seed) and dollar pricing — [`CostSummary::dollars`] converts
+//! slot-time and WAN egress into provisioned/used/waste dollars with a
+//! per-tenant bill that provably sums to the fabric total. All knobs
+//! default off, and the default-knob campaign is bit-identical to the
+//! pre-policy one (test-pinned, and byte-diffed by the
+//! `campaign-golden` CI job).
 
 use anyhow::{Context, Result};
 
@@ -30,15 +37,37 @@ use super::coordinator::{extract_breakdown, RetrainBreakdown};
 use super::flow::{dnn_trainer_flow, FlowShape};
 use super::scenario::Scenario;
 use super::world::{Tenant, TrainingMode, World};
+use crate::costmodel::PriceBook;
 use crate::faas::{Autoscaler, PolicyKind, ScalingEvent};
 use crate::flows::{FabricHost, FlowEngine, FlowRun, RunPoll, RunReport, Ticket};
 use crate::simnet::{FaultPlan, Scheduler, VClock};
 use crate::util::stats::{integrate_step, jain_index, percentile};
 use crate::util::{Json, Rng};
 
+/// Markov-modulated (bursty) arrival mode for one tenant class
+/// (DESIGN.md §11): the class's Poisson stream alternates
+/// exponentially-distributed *calm* and *burst* phases. During a burst
+/// the arrival rate is multiplied by `factor`; `duty` is the stationary
+/// fraction of time spent bursting. The mean phase cycle is
+/// [`BURST_CYCLE_MEANS`] mean inter-arrival gaps, so bursts are long
+/// enough to pile users onto the trainer but short against a campaign.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Burst {
+    /// arrival-rate multiplier inside burst phases (must be > 1)
+    pub factor: f64,
+    /// stationary fraction of time in burst phases (0 < duty < 1)
+    pub duty: f64,
+}
+
+/// Mean calm+burst phase cycle, in units of the class's mean
+/// inter-arrival gap (mean burst phase = `duty × cycle`, mean calm
+/// phase = `(1 − duty) × cycle`).
+pub const BURST_CYCLE_MEANS: f64 = 10.0;
+
 /// One tenant class of a heterogeneous campaign: which model its users
-/// retrain, what share of the user population it gets, and how many
-/// trainer capacity slots its training jobs gang over (DESIGN.md §10).
+/// retrain, what share of the user population it gets, how many trainer
+/// capacity slots its training jobs gang over (DESIGN.md §10), and —
+/// optionally — its own arrival process (DESIGN.md §11).
 #[derive(Debug, Clone, PartialEq)]
 pub struct MixEntry {
     pub model: String,
@@ -49,10 +78,58 @@ pub struct MixEntry {
     pub weight: f64,
     /// gang width of this class's `train_model` jobs
     pub slots: usize,
+    /// mean inter-arrival seconds for this class's own Poisson stream
+    /// (`None` = the campaign-wide `mean_interarrival_s`). Setting a
+    /// rate (or a burst) on *any* entry switches the whole campaign to
+    /// per-class arrival streams.
+    pub rate_s: Option<f64>,
+    /// optional Markov-modulated burst mode for this class's stream
+    pub burst: Option<Burst>,
 }
 
-/// Parse a `--mix` spec: `model:weight[:slots]` entries joined by
-/// commas, e.g. `braggnn:0.7:1,cookienetae:0.3:4`.
+impl MixEntry {
+    /// A plain entry (no per-class arrival process) — the DESIGN.md §10
+    /// shape.
+    pub fn new(model: impl Into<String>, weight: f64, slots: usize) -> MixEntry {
+        MixEntry {
+            model: model.into(),
+            weight,
+            slots,
+            rate_s: None,
+            burst: None,
+        }
+    }
+}
+
+/// Parse a burst token: `burst=FACTOR@DUTY`, e.g. `burst=4@0.25`.
+fn parse_burst(tok: &str) -> Result<Burst> {
+    let spec = tok
+        .strip_prefix("burst=")
+        .with_context(|| format!("bad burst spec `{tok}` (want burst=factor@duty)"))?;
+    let (factor, duty) = spec
+        .split_once('@')
+        .with_context(|| format!("bad burst spec `{tok}` (want burst=factor@duty)"))?;
+    let factor: f64 = factor
+        .parse()
+        .map_err(|_| anyhow::anyhow!("bad burst factor `{factor}` in `{tok}`"))?;
+    let duty: f64 = duty
+        .parse()
+        .map_err(|_| anyhow::anyhow!("bad burst duty `{duty}` in `{tok}`"))?;
+    anyhow::ensure!(
+        factor.is_finite() && factor > 1.0,
+        "burst factor must be > 1 in `{tok}`"
+    );
+    anyhow::ensure!(
+        duty.is_finite() && duty > 0.0 && duty < 1.0,
+        "burst duty must be in (0, 1) in `{tok}`"
+    );
+    Ok(Burst { factor, duty })
+}
+
+/// Parse a `--mix` spec: `model:weight[:slots[:rate_s[:burst=F@D]]]`
+/// entries joined by commas — e.g. `braggnn:0.7:1,cookienetae:0.3:4`
+/// (DESIGN.md §10 shape) or `braggnn:0.7:1:30,cookienetae:0.3:4:120:burst=4@0.25`
+/// (per-class arrivals, DESIGN.md §11).
 pub fn parse_mix(spec: &str) -> Result<Vec<MixEntry>> {
     let mut out = Vec::new();
     for tok in spec.split(',') {
@@ -62,8 +139,8 @@ pub fn parse_mix(spec: &str) -> Result<Vec<MixEntry>> {
         }
         let parts: Vec<&str> = tok.split(':').collect();
         anyhow::ensure!(
-            (2..=3).contains(&parts.len()),
-            "bad mix entry `{tok}` (want model:weight[:slots])"
+            (2..=5).contains(&parts.len()),
+            "bad mix entry `{tok}` (want model:weight[:slots[:rate_s[:burst=F@D]]])"
         );
         let weight: f64 = parts[1]
             .parse()
@@ -72,7 +149,7 @@ pub fn parse_mix(spec: &str) -> Result<Vec<MixEntry>> {
             weight.is_finite() && weight > 0.0,
             "mix weight must be positive in `{tok}`"
         );
-        let slots: usize = if parts.len() == 3 {
+        let slots: usize = if parts.len() >= 3 {
             parts[2]
                 .parse()
                 .map_err(|_| anyhow::anyhow!("bad mix slots `{}` in `{tok}`", parts[2]))?
@@ -80,13 +157,87 @@ pub fn parse_mix(spec: &str) -> Result<Vec<MixEntry>> {
             1
         };
         anyhow::ensure!(slots >= 1, "mix slots must be >= 1 in `{tok}`");
+        let rate_s: Option<f64> = if parts.len() >= 4 {
+            let r: f64 = parts[3]
+                .parse()
+                .map_err(|_| anyhow::anyhow!("bad mix rate `{}` in `{tok}`", parts[3]))?;
+            anyhow::ensure!(
+                r.is_finite() && r >= 0.0,
+                "mix rate must be finite and >= 0 in `{tok}` (0 = all at once)"
+            );
+            Some(r)
+        } else {
+            None
+        };
+        let burst = if parts.len() == 5 {
+            Some(parse_burst(parts[4])?)
+        } else {
+            None
+        };
         out.push(MixEntry {
             model: parts[0].to_string(),
             weight,
             slots,
+            rate_s,
+            burst,
         });
     }
     Ok(out)
+}
+
+/// Generate `n` arrival instants for one tenant class (DESIGN.md §11).
+///
+/// Plain mode is a Poisson process: i.i.d. exponential gaps with mean
+/// `mean_gap_s` (unlike the shared default stream, no user is pinned
+/// to t = 0 — each class's first arrival is one drawn gap in). Burst
+/// mode is an exact two-state Markov-modulated Poisson process:
+/// exponential phase lengths, and because the exponential is
+/// memoryless, re-drawing the arrival gap at each phase boundary
+/// samples the MMPP exactly. `mean_gap_s <= 0` launches the whole
+/// class at t = 0.
+fn class_arrivals(n: usize, mean_gap_s: f64, burst: Option<Burst>, rng: &mut Rng) -> Vec<f64> {
+    if mean_gap_s <= 0.0 {
+        return vec![0.0; n];
+    }
+    let base_rate = 1.0 / mean_gap_s;
+    let mut out = Vec::with_capacity(n);
+    match burst {
+        None => {
+            let mut t = 0.0;
+            for _ in 0..n {
+                t += rng.exponential(base_rate);
+                out.push(t);
+            }
+        }
+        Some(b) => {
+            let cycle = BURST_CYCLE_MEANS * mean_gap_s;
+            let mean_phase = |in_burst: bool| {
+                if in_burst {
+                    b.duty * cycle
+                } else {
+                    (1.0 - b.duty) * cycle
+                }
+            };
+            let mut t = 0.0;
+            let mut in_burst = false;
+            let mut phase_end = rng.exponential(1.0 / mean_phase(false));
+            for _ in 0..n {
+                loop {
+                    let rate = if in_burst { base_rate * b.factor } else { base_rate };
+                    let gap = rng.exponential(rate);
+                    if t + gap <= phase_end {
+                        t += gap;
+                        break;
+                    }
+                    t = phase_end;
+                    in_burst = !in_burst;
+                    phase_end = t + rng.exponential(1.0 / mean_phase(in_burst));
+                }
+                out.push(t);
+            }
+        }
+    }
+    out
 }
 
 /// Deterministic largest-remainder apportionment of users to mix
@@ -267,6 +418,8 @@ impl EndpointCost {
 /// Campaign-wide cost accounting: per-endpoint slot-time economics
 /// plus per-tenant attributed usage — the dollars-proxy that lets
 /// autoscaler policies be compared on cost as well as slowdown/Jain.
+/// [`CostSummary::dollars`] turns it into real dollars under a
+/// `PriceBook` (DESIGN.md §11).
 #[derive(Debug, Clone)]
 pub struct CostSummary {
     /// every endpoint of the fabric, in id order (idle endpoints still
@@ -275,6 +428,22 @@ pub struct CostSummary {
     /// used slot-seconds attributed to each user (index = user − 1)
     /// via task metadata
     pub per_user_slot_s: Vec<f64>,
+    /// used slot-seconds per user *per endpoint* (index = user − 1) —
+    /// the resolution dollarization needs, since rates differ per
+    /// endpoint class
+    pub per_user_endpoint_slot_s: Vec<std::collections::BTreeMap<String, f64>>,
+    /// scale-up waste slot-seconds per user per endpoint (index =
+    /// user − 1), attributed to the tenant whose demand fired each
+    /// `ScalingEvent` (its `trigger_user`) via a LIFO above-base slot
+    /// ledger, then scaled so the per-endpoint sums equal that
+    /// endpoint's `scaleup_waste_slot_s()` exactly
+    pub per_user_scaleup_waste: Vec<std::collections::BTreeMap<String, f64>>,
+    /// total bytes that crossed the WAN over the campaign,
+    /// retransmissions included (the wire does not refund retries)
+    pub egress_bytes: f64,
+    /// WAN bytes attributed to each user (index = user − 1) via the
+    /// transfer log's tenant tags
+    pub per_user_egress_bytes: Vec<f64>,
 }
 
 impl CostSummary {
@@ -292,6 +461,158 @@ impl CostSummary {
 
     pub fn total_scaleup_waste_slot_s(&self) -> f64 {
         self.endpoints.iter().map(|e| e.scaleup_waste_slot_s()).sum()
+    }
+
+    /// Scale-up waste slot-seconds attributed to one user (index =
+    /// user − 1), summed across endpoints.
+    pub fn user_scaleup_waste_slot_s(&self, user_idx: usize) -> f64 {
+        self.per_user_scaleup_waste
+            .get(user_idx)
+            .map(|m| m.values().sum())
+            .unwrap_or(0.0)
+    }
+
+    /// Price the campaign in dollars under `book` (DESIGN.md §11).
+    ///
+    /// Per endpoint: provisioned/used/waste slot-seconds × the class's
+    /// $/slot-hour. The **fabric total** is every provisioned
+    /// slot-dollar plus egress dollars — what the facility actually
+    /// paid, idle capacity included. The per-tenant bill partitions
+    /// that total exactly: each endpoint's provisioned dollars are
+    /// split by the tenants' shares of its *used* slot-time (an
+    /// endpoint nobody used is facility overhead, split evenly), and
+    /// egress dollars follow the transfer log's tenant tags (untagged
+    /// bytes, absent in campaigns, split evenly). The shares are a
+    /// partition of unity per endpoint, so
+    /// `Σ per_tenant[i].total_usd() == total_usd()` holds by
+    /// construction — the invariant the cost tests pin.
+    pub fn dollars(&self, book: &PriceBook) -> DollarSummary {
+        let users = self.per_user_slot_s.len();
+        let mut per_tenant: Vec<TenantDollars> = (1..=users)
+            .map(|user| TenantDollars {
+                user,
+                used_usd: 0.0,
+                idle_share_usd: 0.0,
+                scaleup_waste_usd: 0.0,
+                egress_usd: 0.0,
+            })
+            .collect();
+        let mut endpoints = Vec::with_capacity(self.endpoints.len());
+        for e in &self.endpoints {
+            let prov_usd = book.slot_dollars(&e.endpoint, e.provisioned_slot_s);
+            let used_by_user: Vec<f64> = (0..users)
+                .map(|u| {
+                    self.per_user_endpoint_slot_s[u]
+                        .get(&e.endpoint)
+                        .copied()
+                        .unwrap_or(0.0)
+                })
+                .collect();
+            let used_total: f64 = used_by_user.iter().sum();
+            for u in 0..users {
+                let share = if used_total > 0.0 {
+                    used_by_user[u] / used_total
+                } else {
+                    1.0 / users as f64
+                };
+                let used_usd = book.slot_dollars(&e.endpoint, used_by_user[u]);
+                per_tenant[u].used_usd += used_usd;
+                per_tenant[u].idle_share_usd += share * prov_usd - used_usd;
+                per_tenant[u].scaleup_waste_usd += book.slot_dollars(
+                    &e.endpoint,
+                    self.per_user_scaleup_waste[u]
+                        .get(&e.endpoint)
+                        .copied()
+                        .unwrap_or(0.0),
+                );
+            }
+            endpoints.push(EndpointDollars {
+                endpoint: e.endpoint.clone(),
+                rate_per_slot_hour: book.rate_per_slot_hour(&e.endpoint),
+                provisioned_usd: prov_usd,
+                used_usd: book.slot_dollars(&e.endpoint, e.used_slot_s),
+                scaleup_waste_usd: book.slot_dollars(&e.endpoint, e.scaleup_waste_slot_s()),
+            });
+        }
+        let tagged: f64 = self.per_user_egress_bytes.iter().sum();
+        let untagged = (self.egress_bytes - tagged).max(0.0);
+        for u in 0..users {
+            per_tenant[u].egress_usd =
+                book.egress_dollars(self.per_user_egress_bytes[u] + untagged / users as f64);
+        }
+        DollarSummary {
+            endpoints,
+            egress_bytes: self.egress_bytes,
+            egress_usd: book.egress_dollars(self.egress_bytes),
+            per_tenant,
+        }
+    }
+}
+
+/// One endpoint's slot-time economics in dollars (DESIGN.md §11).
+#[derive(Debug, Clone)]
+pub struct EndpointDollars {
+    pub endpoint: String,
+    /// the `PriceBook` rate applied (0.0 = unpriced class)
+    pub rate_per_slot_hour: f64,
+    pub provisioned_usd: f64,
+    pub used_usd: f64,
+    pub scaleup_waste_usd: f64,
+}
+
+/// One tenant's bill (DESIGN.md §11). `used + idle share + egress` is
+/// the tenant's total; the scale-up waste line is a *memo* — the part
+/// of the fabric's waste traceable to scale-ups this tenant's demand
+/// triggered — not an additional charge.
+#[derive(Debug, Clone)]
+pub struct TenantDollars {
+    /// 1-based campaign user index
+    pub user: usize,
+    /// slot-dollars for work this tenant actually ran
+    pub used_usd: f64,
+    /// this tenant's share of provisioned-but-unused capacity dollars
+    /// (split by used-slot-time share per endpoint)
+    pub idle_share_usd: f64,
+    /// memo: waste dollars from scale-ups this tenant triggered
+    pub scaleup_waste_usd: f64,
+    /// WAN egress dollars for this tenant's transfers
+    pub egress_usd: f64,
+}
+
+impl TenantDollars {
+    /// The tenant's bill: used + idle share + egress.
+    pub fn total_usd(&self) -> f64 {
+        self.used_usd + self.idle_share_usd + self.egress_usd
+    }
+}
+
+/// The campaign priced in dollars (DESIGN.md §11): per-endpoint lines,
+/// egress, and the per-tenant bills that partition the fabric total.
+#[derive(Debug, Clone)]
+pub struct DollarSummary {
+    pub endpoints: Vec<EndpointDollars>,
+    pub egress_bytes: f64,
+    pub egress_usd: f64,
+    pub per_tenant: Vec<TenantDollars>,
+}
+
+impl DollarSummary {
+    pub fn provisioned_usd(&self) -> f64 {
+        self.endpoints.iter().map(|e| e.provisioned_usd).sum()
+    }
+
+    pub fn used_usd(&self) -> f64 {
+        self.endpoints.iter().map(|e| e.used_usd).sum()
+    }
+
+    pub fn scaleup_waste_usd(&self) -> f64 {
+        self.endpoints.iter().map(|e| e.scaleup_waste_usd).sum()
+    }
+
+    /// The fabric total: every provisioned slot-dollar plus egress —
+    /// exactly what the per-tenant bills sum to (test-pinned).
+    pub fn total_usd(&self) -> f64 {
+        self.provisioned_usd() + self.egress_usd
     }
 }
 
@@ -428,6 +749,20 @@ pub fn run_campaign(cfg: &CampaignConfig) -> Result<CampaignReport> {
             "bad mix entry `{}`: weight must be finite and positive, slots >= 1",
             e.model
         );
+        if let Some(r) = e.rate_s {
+            anyhow::ensure!(
+                r.is_finite() && r >= 0.0,
+                "bad mix entry `{}`: rate must be finite and >= 0",
+                e.model
+            );
+        }
+        if let Some(b) = e.burst {
+            anyhow::ensure!(
+                b.factor.is_finite() && b.factor > 1.0 && b.duty > 0.0 && b.duty < 1.0,
+                "bad mix entry `{}`: burst factor must be > 1 and duty in (0, 1)",
+                e.model
+            );
+        }
     }
 
     // heterogeneous mix: apportion users to entries and build each
@@ -509,17 +844,57 @@ pub fn run_campaign(cfg: &CampaignConfig) -> Result<CampaignReport> {
         )
         .id;
 
-    // Poisson arrivals: exponential inter-arrival gaps, first user at 0
-    let mut arrivals = vec![0.0f64];
-    let mut rng = Rng::new(cfg.seed);
-    for i in 1..cfg.users {
-        let gap = if cfg.mean_interarrival_s > 0.0 {
-            rng.exponential(1.0 / cfg.mean_interarrival_s)
-        } else {
-            0.0
-        };
-        arrivals.push(arrivals[i - 1] + gap);
-    }
+    // Arrival processes. Default: one shared Poisson stream, first
+    // user at t = 0 — byte-identical to every earlier PR. When any mix
+    // entry carries its own `rate_s` or a `burst` mode, each class
+    // gets its own stream (DESIGN.md §11), seeded deterministically
+    // from the root seed and the class index, so sweep rows that vary
+    // only a policy or a price replay identical arrivals — zero
+    // sampling noise between rows. Class arrivals are handed to that
+    // class's users in apportionment order.
+    let per_class = cfg.mix.iter().any(|e| e.rate_s.is_some() || e.burst.is_some());
+    let arrivals: Vec<f64> = if per_class {
+        let mut streams: Vec<std::vec::IntoIter<f64>> = cfg
+            .mix
+            .iter()
+            .enumerate()
+            .map(|(e, entry)| {
+                let n = assignment.iter().filter(|a| **a == Some(e)).count();
+                // SplitMix-style derivation: independent per-class
+                // streams, each a pure function of (root seed, class)
+                let mut rng =
+                    Rng::new(cfg.seed ^ (e as u64 + 1).wrapping_mul(0x9E3779B97F4A7C15));
+                class_arrivals(
+                    n,
+                    entry.rate_s.unwrap_or(cfg.mean_interarrival_s),
+                    entry.burst,
+                    &mut rng,
+                )
+                .into_iter()
+            })
+            .collect();
+        assignment
+            .iter()
+            .map(|a| {
+                streams[a.expect("per-class arrivals imply a mix")]
+                    .next()
+                    .expect("one arrival per apportioned user")
+            })
+            .collect()
+    } else {
+        // shared Poisson stream: exponential gaps, first user at 0
+        let mut arrivals = vec![0.0f64];
+        let mut rng = Rng::new(cfg.seed);
+        for i in 1..cfg.users {
+            let gap = if cfg.mean_interarrival_s > 0.0 {
+                rng.exponential(1.0 / cfg.mean_interarrival_s)
+            } else {
+                0.0
+            };
+            arrivals.push(arrivals[i - 1] + gap);
+        }
+        arrivals
+    };
 
     let shape = FlowShape {
         remote: cfg.scenario.mode.is_remote(),
@@ -797,8 +1172,12 @@ pub fn run_campaign(cfg: &CampaignConfig) -> Result<CampaignReport> {
     // slot-time cost accounting (DESIGN.md §10): provisioned capacity
     // integrated over [0, makespan] per endpoint (scaling events
     // applied at their instants), usage summed as exec × gang width,
-    // and the used share attributed per tenant via task metadata
+    // and the used share attributed per tenant via task metadata —
+    // both in total and per endpoint (dollarization needs the
+    // per-endpoint resolution, DESIGN.md §11)
     let mut per_user_slot_s = vec![0.0f64; cfg.users];
+    let mut per_user_endpoint_slot_s: Vec<std::collections::BTreeMap<String, f64>> =
+        vec![std::collections::BTreeMap::new(); cfg.users];
     let mut used_by_ep: std::collections::BTreeMap<String, f64> =
         std::collections::BTreeMap::new();
     if let Some(faas) = world.faas.as_ref() {
@@ -811,6 +1190,9 @@ pub fn run_campaign(cfg: &CampaignConfig) -> Result<CampaignReport> {
             let u = rec.meta.user as usize;
             if (1..=cfg.users).contains(&u) {
                 per_user_slot_s[u - 1] += slot_s;
+                *per_user_endpoint_slot_s[u - 1]
+                    .entry(rec.endpoint.clone())
+                    .or_insert(0.0) += slot_s;
             }
         }
     }
@@ -842,9 +1224,84 @@ pub fn run_campaign(cfg: &CampaignConfig) -> Result<CampaignReport> {
             }
         })
         .collect();
+    // per-tenant scale-up waste (DESIGN.md §11): replay each
+    // endpoint's scaling log as a LIFO ledger of above-base slots, each
+    // tagged with its `ScalingEvent` trigger tenant; integrate every
+    // tagged slot's active lifetime over [0, makespan]; then scale the
+    // per-tenant shares so they sum to the endpoint's waste =
+    // min(scale-up, idle) exactly. (All campaign work is tenant-tagged,
+    // so no scale-up trigger is anonymous here; untagged triggers would
+    // leave their share out of the per-tenant view.)
+    let mut per_user_scaleup_waste: Vec<std::collections::BTreeMap<String, f64>> =
+        vec![std::collections::BTreeMap::new(); cfg.users];
+    for ec in &endpoints_cost {
+        let waste = ec.scaleup_waste_slot_s();
+        if waste <= 0.0 {
+            continue;
+        }
+        let mut above: Vec<(u32, f64)> = Vec::new(); // (trigger user, active since)
+        let mut slot_s_by_user: std::collections::BTreeMap<u32, f64> =
+            std::collections::BTreeMap::new();
+        let mut prev = ec.base_capacity;
+        for e in scaling.iter().filter(|e| e.endpoint == ec.endpoint) {
+            let vt = e.vt.min(makespan_s);
+            if e.capacity > prev {
+                // only the above-base portion enters the ledger: a
+                // refill from below base (autoscaler floor < base) is
+                // not scale-up and must not siphon waste shares
+                for _ in prev.max(ec.base_capacity)..e.capacity {
+                    above.push((e.trigger_user, vt));
+                }
+            } else {
+                for _ in 0..(prev - e.capacity) {
+                    // pops below base are no-ops: the ledger only
+                    // tracks above-base slots
+                    if let Some((u, since)) = above.pop() {
+                        *slot_s_by_user.entry(u).or_insert(0.0) += (vt - since).max(0.0);
+                    }
+                }
+            }
+            prev = e.capacity;
+        }
+        for (u, since) in above {
+            *slot_s_by_user.entry(u).or_insert(0.0) += (makespan_s - since).max(0.0);
+        }
+        let total: f64 = slot_s_by_user.values().sum();
+        if total <= 0.0 {
+            continue;
+        }
+        for (u, s) in slot_s_by_user {
+            let u = u as usize;
+            if (1..=cfg.users).contains(&u) {
+                *per_user_scaleup_waste[u - 1]
+                    .entry(ec.endpoint.clone())
+                    .or_insert(0.0) += waste * s / total;
+            }
+        }
+    }
+
+    // WAN egress (DESIGN.md §11): every logged transfer crossed the
+    // wide-area fabric; bill the bytes on the wire, retries included
+    let egress_bytes: f64 = world
+        .transfer_log
+        .iter()
+        .map(|r| (r.bytes + r.retried_bytes) as f64)
+        .sum();
+    let mut per_user_egress_bytes = vec![0.0f64; cfg.users];
+    for (rep, &u) in world.transfer_log.iter().zip(&world.transfer_log_users) {
+        let u = u as usize;
+        if (1..=cfg.users).contains(&u) {
+            per_user_egress_bytes[u - 1] += (rep.bytes + rep.retried_bytes) as f64;
+        }
+    }
+
     let cost = CostSummary {
         endpoints: endpoints_cost,
         per_user_slot_s,
+        per_user_endpoint_slot_s,
+        per_user_scaleup_waste,
+        egress_bytes,
+        per_user_egress_bytes,
     };
 
     Ok(CampaignReport {
@@ -1141,7 +1598,7 @@ mod tests {
     fn mix_spec_parses_and_apportions() {
         let mix = parse_mix("braggnn:0.7:1,cookienetae:0.3:4").unwrap();
         assert_eq!(mix.len(), 2);
-        assert_eq!(mix[0], MixEntry { model: "braggnn".into(), weight: 0.7, slots: 1 });
+        assert_eq!(mix[0], MixEntry::new("braggnn", 0.7, 1));
         assert_eq!(mix[1].slots, 4);
         // slots default to 1
         assert_eq!(parse_mix("braggnn:1").unwrap()[0].slots, 1);
@@ -1159,7 +1616,7 @@ mod tests {
             1.0,
             1,
         );
-        cfg.mix = vec![MixEntry { model: "braggnn".into(), weight: 0.0, slots: 1 }];
+        cfg.mix = vec![MixEntry::new("braggnn", 0.0, 1)];
         assert!(run_campaign(&cfg).unwrap_err().to_string().contains("bad mix entry"));
 
         // largest-remainder apportionment is exact and deterministic:
@@ -1185,11 +1642,7 @@ mod tests {
         let scenario = Scenario::table1("braggnn", Mode::RemoteCerebras).unwrap();
         let default_cfg = CampaignConfig::new(3, scenario.clone(), 5.0, 13);
         let mut mixed = default_cfg.clone();
-        mixed.mix = vec![MixEntry {
-            model: "braggnn".into(),
-            weight: 1.0,
-            slots: 1,
-        }];
+        mixed.mix = vec![MixEntry::new("braggnn", 1.0, 1)];
         let a = run_campaign(&default_cfg).unwrap();
         let b = run_campaign(&mixed).unwrap();
         for (ua, ub) in a.users.iter().zip(&b.users) {
@@ -1336,6 +1789,175 @@ mod tests {
                 "{ep:?}"
             );
         }
+    }
+
+    // ---- pricing, per-class arrivals, dollar attribution (§11) ----
+
+    #[test]
+    fn mix_spec_parses_rates_and_bursts() {
+        let mix =
+            parse_mix("braggnn:0.7:1:30,cookienetae:0.3:4:120:burst=4@0.25").unwrap();
+        assert_eq!(mix[0].rate_s, Some(30.0));
+        assert_eq!(mix[0].burst, None);
+        assert_eq!(mix[1].rate_s, Some(120.0));
+        assert_eq!(
+            mix[1].burst,
+            Some(Burst {
+                factor: 4.0,
+                duty: 0.25
+            })
+        );
+        // the §10 two/three-part shapes still parse with no arrival
+        // process attached
+        let plain = parse_mix("braggnn:0.7:1,cookienetae:0.3:4").unwrap();
+        assert!(plain.iter().all(|e| e.rate_s.is_none() && e.burst.is_none()));
+        // bad rates and bursts are rejected
+        assert!(parse_mix("braggnn:1:1:abc").is_err());
+        assert!(parse_mix("braggnn:1:1:-5").is_err());
+        assert!(parse_mix("braggnn:1:1:30:burst=1@0.5").is_err()); // factor <= 1
+        assert!(parse_mix("braggnn:1:1:30:burst=4@1.5").is_err()); // duty out of range
+        assert!(parse_mix("braggnn:1:1:30:spike=4@0.5").is_err()); // not a burst token
+        assert!(parse_mix("braggnn:1:1:30:burst=4@0.5:extra").is_err()); // too many parts
+    }
+
+    /// Per-class arrival streams (DESIGN.md §11): deterministic in the
+    /// root seed, and each class's arrival tempo follows its own rate
+    /// instead of the shared campaign stream.
+    #[test]
+    fn per_class_arrivals_are_deterministic_and_rate_driven() {
+        if !artifacts_present() {
+            return;
+        }
+        let scenario = Scenario::table1("braggnn", Mode::RemoteCerebras).unwrap();
+        // braggnn users arrive ~100x faster than cookienetae users
+        let mut cfg = CampaignConfig::new(6, scenario.clone(), 60.0, 23);
+        cfg.mix = parse_mix("braggnn:0.5:1:5,cookienetae:0.5:1:500").unwrap();
+        let a = run_campaign(&cfg).unwrap();
+        let b = run_campaign(&cfg).unwrap();
+        for (ua, ub) in a.users.iter().zip(&b.users) {
+            assert_eq!(ua.arrival_vt, ub.arrival_vt);
+            assert_eq!(ua.finished_vt, ub.finished_vt);
+        }
+        // per-class streams do not pin anyone to t = 0
+        assert!(a.users.iter().all(|u| u.arrival_vt > 0.0));
+        // the fast class's mean arrival is far earlier than the slow
+        // class's (means 5 s vs 500 s over 3 users each)
+        let mean = |model: &str| {
+            let xs: Vec<f64> = a
+                .users
+                .iter()
+                .filter(|u| u.model == model)
+                .map(|u| u.arrival_vt)
+                .collect();
+            xs.iter().sum::<f64>() / xs.len() as f64
+        };
+        assert!(
+            mean("braggnn") < mean("cookienetae"),
+            "rates not honored: braggnn mean {} vs cookienetae mean {}",
+            mean("braggnn"),
+            mean("cookienetae")
+        );
+
+        // burst mode replays deterministically too
+        let mut bursty = CampaignConfig::new(4, scenario, 60.0, 23);
+        bursty.mix = parse_mix("braggnn:1.0:1:60:burst=4@0.25").unwrap();
+        let x = run_campaign(&bursty).unwrap();
+        let y = run_campaign(&bursty).unwrap();
+        for (ux, uy) in x.users.iter().zip(&y.users) {
+            assert_eq!(ux.arrival_vt, uy.arrival_vt);
+            assert_eq!(ux.turnaround_s, uy.turnaround_s);
+        }
+    }
+
+    /// Tentpole pin (named in the issue): the per-tenant dollar bill
+    /// partitions the fabric total — used + idle-share + egress summed
+    /// over tenants equals provisioned $ + egress $ — and the scale-up
+    /// waste memo (attributed via `ScalingEvent::trigger_user`) sums to
+    /// the fabric's waste dollars.
+    #[test]
+    fn dollar_attribution_sums_to_fabric_total() {
+        if !artifacts_present() {
+            return;
+        }
+        let scenario = Scenario::table1("braggnn", Mode::RemoteCerebras).unwrap();
+        let mut cfg = CampaignConfig::new(6, scenario, 1.0, 17);
+        cfg.autoscale = vec![(
+            "alcf#cerebras".to_string(),
+            Autoscaler {
+                min_capacity: 1,
+                max_capacity: 3,
+                scale_up_waiting: 2,
+                provision_delay_s: 10.0,
+                scale_down_idle_s: 120.0,
+                cooldown_s: 5.0,
+            },
+        )];
+        let rep = run_campaign(&cfg).unwrap();
+
+        // every scale-up in a campaign is tenant-attributed
+        let mut prev: std::collections::BTreeMap<&str, usize> =
+            rep.cost.endpoints.iter().map(|e| (e.endpoint.as_str(), e.base_capacity)).collect();
+        for e in &rep.scaling {
+            let p = prev.get_mut(e.endpoint.as_str()).expect("known endpoint");
+            if e.capacity > *p {
+                assert!(
+                    (1..=cfg.users).contains(&(e.trigger_user as usize)),
+                    "anonymous scale-up: {e:?}"
+                );
+            } else {
+                assert_eq!(e.trigger_user, 0, "attributed scale-down: {e:?}");
+            }
+            *p = e.capacity;
+        }
+        // per-tenant waste slot-seconds sum to the fabric's waste
+        let waste_attr: f64 = (0..cfg.users)
+            .map(|u| rep.cost.user_scaleup_waste_slot_s(u))
+            .sum();
+        assert!(
+            (waste_attr - rep.cost.total_scaleup_waste_slot_s()).abs() < 1e-6,
+            "waste attribution {waste_attr} vs total {}",
+            rep.cost.total_scaleup_waste_slot_s()
+        );
+        // remote campaigns move data: egress observed and fully tagged
+        assert!(rep.cost.egress_bytes > 0.0);
+        let tagged: f64 = rep.cost.per_user_egress_bytes.iter().sum();
+        assert!(
+            (tagged - rep.cost.egress_bytes).abs() < 1e-6,
+            "untagged egress: {tagged} of {}",
+            rep.cost.egress_bytes
+        );
+
+        // the invariant: Σ per-tenant bills == fabric total
+        let book = PriceBook::paper();
+        let d = rep.cost.dollars(&book);
+        let billed: f64 = d.per_tenant.iter().map(|t| t.total_usd()).sum();
+        assert!(
+            (billed - d.total_usd()).abs() < 1e-6 * d.total_usd().max(1.0),
+            "bills {billed} vs fabric total {}",
+            d.total_usd()
+        );
+        assert!(d.total_usd() > 0.0);
+        assert!(d.egress_usd > 0.0);
+        assert!(d.provisioned_usd() >= d.used_usd() - 1e-9);
+        // the waste memo dollarizes the attributed slot-seconds
+        let memo: f64 = d.per_tenant.iter().map(|t| t.scaleup_waste_usd).sum();
+        assert!(
+            (memo - d.scaleup_waste_usd()).abs() < 1e-6 * d.scaleup_waste_usd().max(1.0),
+            "waste memo {memo} vs {}",
+            d.scaleup_waste_usd()
+        );
+        // the trainer is priced at the premium Cerebras rate
+        let trainer = d
+            .endpoints
+            .iter()
+            .find(|e| e.endpoint == "alcf#cerebras")
+            .expect("trainer priced");
+        assert_eq!(trainer.rate_per_slot_hour, 42.0);
+        assert!(trainer.provisioned_usd > 0.0);
+        // an empty book prices everything at zero
+        let zero = rep.cost.dollars(&PriceBook::new());
+        assert_eq!(zero.total_usd(), 0.0);
+        assert!(zero.per_tenant.iter().all(|t| t.total_usd() == 0.0));
     }
 
     /// Local-mode campaigns run with no transfers but still queue on the

@@ -8,7 +8,11 @@
 //! * `flow`        — the declarative DNNTrainerFlow definition
 //! * `scenario`    — Table 1 scenario grid
 //! * `coordinator` — runs scenarios, extracts the Table 1 breakdown
-//! * `campaign`    — N concurrent users on the shared fabric (DES-driven)
+//! * `campaign`    — N concurrent users on the shared fabric, driven by
+//!   the discrete-event core (DESIGN.md §3) with pluggable scheduling,
+//!   autoscaling, and fault plans (§9), gang-scheduled heterogeneous
+//!   tenant mixes with slot-time cost accounting (§10), and per-class
+//!   arrival processes plus dollar pricing / per-tenant bills (§11)
 
 pub mod campaign;
 pub mod coordinator;
@@ -19,8 +23,9 @@ pub mod scenario;
 pub mod world;
 
 pub use campaign::{
-    parse_mix, run_campaign, CampaignConfig, CampaignReport, CostSummary, EndpointCost,
-    EndpointLoad, FairnessSummary, MixEntry, UserOutcome,
+    parse_mix, run_campaign, Burst, CampaignConfig, CampaignReport, CostSummary, DollarSummary,
+    EndpointCost, EndpointDollars, EndpointLoad, FairnessSummary, MixEntry, TenantDollars,
+    UserOutcome,
 };
 pub use coordinator::{
     extract_breakdown, render_table1, Coordinator, RetrainBreakdown, RetrainOutcome,

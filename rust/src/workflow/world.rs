@@ -78,6 +78,9 @@ enum PendingOp {
         dst_facility: String,
         dataset: Option<String>,
         model: Option<String>,
+        /// submitting tenant at submit time (0 = untagged) — the egress
+        /// dollar attribution key (DESIGN.md §11)
+        user: u32,
     },
     Faas {
         task: TaskId,
@@ -109,6 +112,10 @@ pub struct World {
     pub repository: crate::models::ModelRepository,
     /// every transfer completed through the fabric (campaign statistics)
     pub transfer_log: Vec<TransferReport>,
+    /// submitting tenant of each `transfer_log` entry, in lockstep
+    /// (0 = untagged single-tenant work) — what the campaign's egress
+    /// dollar accounting bills per user (DESIGN.md §11)
+    pub transfer_log_users: Vec<u32>,
     /// submitting tenant for fabric work (campaign layer sets per user)
     pub tenant: Tenant,
     /// fabric work awaiting completion, by ticket id
@@ -168,6 +175,7 @@ impl World {
             last_label_cost_s: None,
             repository: crate::models::ModelRepository::new(),
             transfer_log: Vec::new(),
+            transfer_log_users: Vec::new(),
             tenant: Tenant::default(),
             pending: BTreeMap::new(),
             ready: BTreeMap::new(),
@@ -194,6 +202,7 @@ impl World {
     ) -> Result<Ticket> {
         let handle = self.transfer.submit_task(now, req)?;
         let ticket = self.alloc_ticket();
+        let user = self.tenant.user;
         self.pending.insert(
             ticket.0,
             PendingOp::Transfer {
@@ -201,6 +210,7 @@ impl World {
                 dst_facility,
                 dataset,
                 model,
+                user,
             },
         );
         Ok(ticket)
@@ -394,6 +404,7 @@ impl FabricHost for World {
                 dst_facility,
                 dataset,
                 model,
+                user,
                 ..
             }) = self.pending.remove(&tid)
             else {
@@ -417,6 +428,7 @@ impl FabricHost for World {
                     ]);
                     let finish = rep.finish_vt;
                     self.transfer_log.push(rep);
+                    self.transfer_log_users.push(user);
                     (finish, Ok(out))
                 }
                 Err(e) => (t, Err(e)),
