@@ -60,6 +60,10 @@ impl PriceBook {
     /// * `v100` $3/slot-h — single cloud V100 on-demand
     /// * `cluster` $1.80/slot-h, `sim` $0.40/slot-h — commodity CPU
     /// * egress $0.09/GB — the classic cloud egress list price
+    ///
+    /// Every class also carries a `:spot` (preemptible) tier at 30% of
+    /// list — the classic ~70% spot discount that makes the
+    /// spot-vs-on-demand crossover study interesting (DESIGN.md §12).
     pub fn paper() -> PriceBook {
         let mut book = PriceBook::new();
         for (class, rate) in [
@@ -71,6 +75,7 @@ impl PriceBook {
             ("sim", 0.4),
         ] {
             book.rates.insert(class.to_string(), rate);
+            book.rates.insert(format!("{class}:spot"), rate * 0.3);
         }
         book.egress_per_gb = 0.09;
         book
@@ -78,9 +83,10 @@ impl PriceBook {
 
     /// Parse a `--prices` spec: comma-joined `class:rate` entries with
     /// rates in $/slot-hour, plus an optional `egress:rate` in $/GB —
-    /// e.g. `cerebras:42.0,cluster:1.8,egress:0.09`. Unknown classes,
-    /// non-finite or negative rates, and duplicate entries are all
-    /// rejected.
+    /// e.g. `cerebras:42.0,cluster:1.8,egress:0.09`. A class may also
+    /// price its preemptible tier separately via `class:spot:rate`
+    /// (e.g. `cerebras:spot:12.6`). Unknown classes, non-finite or
+    /// negative rates, and duplicate entries are all rejected.
     pub fn parse(spec: &str) -> Result<PriceBook> {
         let mut book = PriceBook::new();
         let mut saw_egress = false;
@@ -89,8 +95,14 @@ impl PriceBook {
             if tok.is_empty() {
                 continue;
             }
-            let Some((class, rate)) = tok.split_once(':') else {
+            let Some((class, rest)) = tok.split_once(':') else {
                 bail!("bad price entry `{tok}` (want class:dollars_per_slot_hour)");
+            };
+            // `class:spot:rate` prices the preemptible tier of `class`
+            let (key, rate) = match rest.split_once(':') {
+                Some(("spot", rate)) => (format!("{class}:spot"), rate),
+                Some(_) => bail!("bad price entry `{tok}` (want class:rate or class:spot:rate)"),
+                None => (class.to_string(), rest),
             };
             let rate: f64 = rate
                 .parse()
@@ -99,6 +111,9 @@ impl PriceBook {
                 bail!("price must be finite and >= 0 in `{tok}`");
             }
             if class == EGRESS_KEY {
+                if key != class {
+                    bail!("`{EGRESS_KEY}` has no spot tier (`{tok}`)");
+                }
                 if saw_egress {
                     bail!("duplicate price entry for `{EGRESS_KEY}`");
                 }
@@ -112,8 +127,8 @@ impl PriceBook {
                     KNOWN_CLASSES.join(", ")
                 );
             }
-            if book.rates.insert(class.to_string(), rate).is_some() {
-                bail!("duplicate price entry for class `{class}`");
+            if book.rates.insert(key.clone(), rate).is_some() {
+                bail!("duplicate price entry for class `{key}`");
             }
         }
         Ok(book)
@@ -138,9 +153,29 @@ impl PriceBook {
         self.rates.contains_key(Self::class_of(endpoint))
     }
 
+    /// $/slot-hour for an endpoint on a given capacity tier. Spot
+    /// endpoints read the `class:spot` rate when one is priced and fall
+    /// back to the on-demand rate otherwise — a book that does not
+    /// discount spot prices both tiers identically rather than pricing
+    /// the spot tier at $0.
+    pub fn rate_per_slot_hour_tiered(&self, endpoint: &str, spot: bool) -> f64 {
+        if spot {
+            let class = Self::class_of(endpoint);
+            if let Some(rate) = self.rates.get(&format!("{class}:spot")) {
+                return *rate;
+            }
+        }
+        self.rate_per_slot_hour(endpoint)
+    }
+
     /// Dollars for `slot_s` slot-seconds on an endpoint.
     pub fn slot_dollars(&self, endpoint: &str, slot_s: f64) -> f64 {
         self.rate_per_slot_hour(endpoint) * slot_s / 3600.0
+    }
+
+    /// Dollars for `slot_s` slot-seconds on an endpoint, tier-aware.
+    pub fn slot_dollars_tiered(&self, endpoint: &str, slot_s: f64, spot: bool) -> f64 {
+        self.rate_per_slot_hour_tiered(endpoint, spot) * slot_s / 3600.0
     }
 
     /// Dollars for `bytes` of WAN egress.
@@ -186,6 +221,35 @@ mod tests {
         assert!(PriceBook::parse("egress:0.1,egress:0.2").is_err());
         // shapeless tokens
         assert!(PriceBook::parse("cerebras").is_err());
+        // malformed / disallowed three-part tokens
+        assert!(PriceBook::parse("cerebras:ondemand:9.0").is_err());
+        assert!(PriceBook::parse("tpu:spot:9.0").unwrap_err().to_string().contains("unknown"));
+        assert!(PriceBook::parse("egress:spot:0.1").is_err());
+        assert!(PriceBook::parse("cerebras:spot:1,cerebras:spot:2")
+            .unwrap_err()
+            .to_string()
+            .contains("duplicate"));
+    }
+
+    #[test]
+    fn spot_tier_rates() {
+        let b = PriceBook::parse("cerebras:42.0,cerebras:spot:12.6,cluster:1.8").unwrap();
+        // on-demand lookups never see the spot rate
+        assert_eq!(b.rate_per_slot_hour("alcf#cerebras"), 42.0);
+        assert_eq!(b.rate_per_slot_hour_tiered("alcf#cerebras", false), 42.0);
+        // spot lookups read the discounted tier when priced...
+        assert_eq!(b.rate_per_slot_hour_tiered("alcf#cerebras", true), 12.6);
+        // ...and fall back to the on-demand rate when not
+        assert_eq!(b.rate_per_slot_hour_tiered("alcf#cluster", true), 1.8);
+        assert!((b.slot_dollars_tiered("alcf#cerebras", 3600.0, true) - 12.6).abs() < 1e-12);
+        // the paper book discounts every class 70%
+        let p = PriceBook::paper();
+        for class in KNOWN_CLASSES {
+            let ep = format!("x#{class}");
+            let full = p.rate_per_slot_hour(&ep);
+            let spot = p.rate_per_slot_hour_tiered(&ep, true);
+            assert!((spot - full * 0.3).abs() < 1e-12, "{class}: {spot} vs {full}");
+        }
     }
 
     #[test]

@@ -16,6 +16,28 @@ pub enum EndpointStatus {
     Down,
 }
 
+/// How the facility provisions this endpoint's capacity.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum CapacityTier {
+    /// Reserved capacity: slots stay up until a `FaultPlan` outage or
+    /// an explicit status change takes them away.
+    OnDemand,
+    /// Preemptible capacity: cheaper per slot-hour (the `:spot` class
+    /// suffix in `PriceBook`), but the facility may reclaim the whole
+    /// endpoint at any time. Reclaims arrive as a stochastic process
+    /// with exponential inter-preemption gaps of mean `preempt_rate_s`
+    /// virtual seconds, and each reclaim is announced `grace_s` seconds
+    /// ahead — the window a running gang has to drain to its last
+    /// checkpoint boundary before the slots disappear
+    /// (`FaasService::spot_warn` / `reclaim_spot`).
+    Spot {
+        /// mean virtual seconds between preemption announcements
+        preempt_rate_s: f64,
+        /// announced warning-to-reclaim window in virtual seconds
+        grace_s: f64,
+    },
+}
+
 /// A function-serving endpoint deployed at a facility.
 #[derive(Debug, Clone)]
 pub struct FaasEndpoint {
@@ -37,6 +59,8 @@ pub struct FaasEndpoint {
     /// shrink this at runtime — the field always reflects the *current*
     /// slot count.
     pub capacity: usize,
+    /// on-demand (reserved) vs spot (preemptible) capacity
+    pub tier: CapacityTier,
 }
 
 impl FaasEndpoint {
@@ -49,6 +73,7 @@ impl FaasEndpoint {
             status: EndpointStatus::Online,
             tasks_run: 0,
             capacity: 1,
+            tier: CapacityTier::OnDemand,
         }
     }
 
@@ -56,6 +81,17 @@ impl FaasEndpoint {
     pub fn with_capacity(mut self, capacity: usize) -> FaasEndpoint {
         self.capacity = capacity.max(1);
         self
+    }
+
+    /// Builder: set the capacity tier (default `OnDemand`).
+    pub fn with_tier(mut self, tier: CapacityTier) -> FaasEndpoint {
+        self.tier = tier;
+        self
+    }
+
+    /// Whether this endpoint is preemptible spot capacity.
+    pub fn is_spot(&self) -> bool {
+        matches!(self.tier, CapacityTier::Spot { .. })
     }
 
     /// Dispatch overhead for the next task, then mark it counted.
@@ -90,5 +126,17 @@ mod tests {
         assert_eq!(ep.capacity, 64);
         let ep = FaasEndpoint::new("x", FacilityId(0)).with_capacity(0);
         assert_eq!(ep.capacity, 1); // clamped
+    }
+
+    #[test]
+    fn tier_defaults_to_on_demand() {
+        let ep = FaasEndpoint::new("alcf#cerebras", FacilityId(1));
+        assert_eq!(ep.tier, CapacityTier::OnDemand);
+        assert!(!ep.is_spot());
+        let ep = ep.with_tier(CapacityTier::Spot {
+            preempt_rate_s: 900.0,
+            grace_s: 120.0,
+        });
+        assert!(ep.is_spot());
     }
 }

@@ -29,9 +29,9 @@ pub mod endpoint;
 pub mod sched;
 pub mod service;
 
-pub use endpoint::{EndpointStatus, FaasEndpoint};
+pub use endpoint::{CapacityTier, EndpointStatus, FaasEndpoint};
 pub use sched::{
     Autoscaler, EasyBackfill, Fifo, Pick, PolicyKind, Priority, QueueView, ScalingEvent,
     SchedPolicy, SchedTask, ShortestJobFirst, TaskMeta,
 };
-pub use service::{FaasService, FuncId, TaskId, TaskRecord, TaskStatus};
+pub use service::{Displaced, FaasService, FuncId, TaskId, TaskRecord, TaskStatus};

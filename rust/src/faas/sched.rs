@@ -72,6 +72,13 @@ pub struct TaskMeta {
     /// and released together at completion; `0` is normalized to `1`
     /// at enqueue.
     pub slots: usize,
+    /// checkpoint cadence in virtual seconds of *body* progress.
+    /// `Some(c)` means the task persists a resumable checkpoint every
+    /// `c` seconds of execution; on a spot preemption the service can
+    /// drain it to the last whole boundary (`floor(elapsed / c) * c`)
+    /// instead of losing everything (`FaasService::reclaim_spot`).
+    /// `None` = not checkpointable: preemption wastes all progress.
+    pub checkpoint_every_s: Option<f64>,
 }
 
 impl Default for TaskMeta {
@@ -81,6 +88,7 @@ impl Default for TaskMeta {
             priority: 0,
             est_duration_s: None,
             slots: 1,
+            checkpoint_every_s: None,
         }
     }
 }

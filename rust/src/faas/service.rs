@@ -86,6 +86,38 @@ impl TaskRecord {
     }
 }
 
+/// A gang displaced by a spot reclaim (`FaasService::reclaim_spot`):
+/// everything the workflow layer's migration planner needs to reassign
+/// it and resume from its last checkpoint (DESIGN.md §12).
+#[derive(Debug, Clone)]
+pub struct Displaced {
+    pub task: TaskId,
+    /// scheduler metadata of the original enqueue (tenant, priority,
+    /// gang width, checkpoint cadence) — the resume re-enters a queue
+    /// with the same identity, so a re-preemption composes
+    pub meta: TaskMeta,
+    /// body seconds persisted in the last whole checkpoint before the
+    /// reclaim (the resume replays from here; `0.0` when the task was
+    /// not checkpointable — all progress is lost)
+    pub checkpointed_s: f64,
+    /// body seconds actually executed on the source endpoint before
+    /// the reclaim (billed there: the wire does not refund preemption)
+    pub elapsed_s: f64,
+    /// the full body duration of the original run
+    pub full_s: f64,
+    /// the original task's output. Under the run-at-start execution
+    /// model the body's side effects already happened at start; the
+    /// resume replays only the remaining *time* and re-emits this.
+    pub output: Json,
+}
+
+impl Displaced {
+    /// Body seconds the resume still has to execute.
+    pub fn remaining_s(&self) -> f64 {
+        (self.full_s - self.checkpointed_s).max(0.0)
+    }
+}
+
 type FuncBody<C> = Box<dyn Fn(&mut C, &mut VClock, &Json) -> Result<Json>>;
 
 /// Autoscaler config plus its runtime state for one endpoint.
@@ -652,6 +684,12 @@ impl<C> FaasService<C> {
         if !auto.cfg.scale_down_idle_s.is_finite() {
             return None;
         }
+        // a non-Online endpoint's free slots are reclaimed or waiting
+        // capacity, not idleness — a spot reclaim (or outage) must not
+        // double-count as an autoscaler idle release
+        if self.endpoints[ep_id].status != EndpointStatus::Online {
+            return None;
+        }
         let slots = &self.slots[ep_id];
         if slots.len() <= auto.cfg.min_capacity || !self.queues[ep_id].is_empty() {
             return None;
@@ -737,6 +775,134 @@ impl<C> FaasService<C> {
         self.note_activity(endpoint_id, now);
         self.autoscale_check(endpoint_id, now);
         Ok(())
+    }
+
+    /// A spot preemption was *announced* at `now`: the endpoint stops
+    /// accepting new starts (status `Down`) for the grace window, but —
+    /// unlike `begin_outage` — running gangs are NOT killed. They keep
+    /// executing toward their checkpoint boundaries (or completion)
+    /// until [`reclaim_spot`](Self::reclaim_spot) fires at the end of
+    /// the grace period. The waiting queue survives, exactly as for a
+    /// planned outage.
+    pub fn spot_warn(&mut self, endpoint_id: &str, now: f64) -> Result<()> {
+        let ep = self
+            .endpoints
+            .get_mut(endpoint_id)
+            .with_context(|| format!("unknown faas endpoint `{endpoint_id}`"))?;
+        if ep.status == EndpointStatus::Down {
+            return Ok(()); // already down (outage or earlier warning)
+        }
+        ep.status = EndpointStatus::Down;
+        self.note_activity(endpoint_id, now);
+        Ok(())
+    }
+
+    /// The grace window expired at `now`: the facility takes the spot
+    /// slots back. Running gangs that finished inside the window drain
+    /// normally (their completions are still owed to the next
+    /// `advance_to` caller); the rest are cut at their last whole
+    /// checkpoint boundary (`floor(elapsed / checkpoint_every_s) *
+    /// checkpoint_every_s` body seconds survive) and returned as
+    /// [`Displaced`] gangs for the caller's migration planner. Their
+    /// records are rewritten to fail at `now` — the elapsed body time
+    /// stays billed on this endpoint — but they are *not* delivered as
+    /// completions: the caller owns resolving each displaced task
+    /// (resume elsewhere, or give up and deliver the failure).
+    pub fn reclaim_spot(&mut self, endpoint_id: &str, now: f64) -> Result<Vec<Displaced>> {
+        let ep = self
+            .endpoints
+            .get_mut(endpoint_id)
+            .with_context(|| format!("unknown faas endpoint `{endpoint_id}`"))?;
+        ep.status = EndpointStatus::Down;
+        let lease: Vec<(TaskId, f64)> = self
+            .running
+            .get_mut(endpoint_id)
+            .expect("running")
+            .drain(..)
+            .collect();
+        let mut displaced = Vec::new();
+        for (id, finish) in lease {
+            if finish <= now {
+                // finished during the grace window: a normal
+                // completion, still owed to the next advance_to caller
+                self.unclaimed.push((finish, id));
+                continue;
+            }
+            let idx = (id.0 - 1) as usize;
+            let rec = &self.tasks[idx];
+            let full_s = finish - rec.started_vt;
+            let elapsed_s = (now - rec.started_vt).max(0.0);
+            let checkpointed_s = rec
+                .meta
+                .checkpoint_every_s
+                .filter(|c| *c > 0.0)
+                .map(|c| (elapsed_s / c).floor() * c)
+                .unwrap_or(0.0)
+                .min(elapsed_s);
+            let output = match &rec.status {
+                TaskStatus::Success(v) => Some(v.clone()),
+                _ => None,
+            };
+            let meta = rec.meta.clone();
+            self.tasks[idx].finished_vt = now;
+            self.tasks[idx].status = TaskStatus::Failed(format!(
+                "endpoint `{endpoint_id}` spot capacity reclaimed mid-run"
+            ));
+            match output {
+                Some(output) => displaced.push(Displaced {
+                    task: id,
+                    meta,
+                    checkpointed_s,
+                    elapsed_s,
+                    full_s,
+                    output,
+                }),
+                // the body had already failed at start: nothing to
+                // resume — deliver the failure so the flow layer's
+                // retry machinery sees it, as under an outage
+                None => self.unclaimed.push((now, id)),
+            }
+        }
+        // the reclaimed slots free immediately (nothing is running)
+        for s in self.slots.get_mut(endpoint_id).expect("slots") {
+            *s = s.min(now);
+        }
+        self.note_activity(endpoint_id, now);
+        Ok(displaced)
+    }
+
+    /// Predicted multi-tenant queue wait for a width-`width` gang
+    /// enqueued on `ep_id` at `now`: when `width` slots are next
+    /// simultaneously free (the k-th order statistic of slot free-at
+    /// times) plus the queued work already ahead of it spread over the
+    /// endpoint's capacity. `INFINITY` when the gang can never fit.
+    /// This is the sched-side input to the migration planner's cost
+    /// function (DESIGN.md §12) — an estimate, not a promise: the
+    /// policy may reorder.
+    pub fn predicted_gang_wait(&self, ep_id: &str, width: usize, now: f64) -> f64 {
+        let Some(slots) = self.slots.get(ep_id) else {
+            return f64::INFINITY;
+        };
+        let width = width.max(1);
+        if width > slots.len() {
+            return f64::INFINITY;
+        }
+        let mut free: Vec<f64> = slots.clone();
+        free.sort_by(f64::total_cmp);
+        let gang_free = free[width - 1].max(now);
+        let queued_work: f64 = self
+            .queues
+            .get(ep_id)
+            .map(|q| {
+                q.iter()
+                    .map(|&id| {
+                        let r = self.rec(id);
+                        r.meta.est_duration_s.unwrap_or(0.0) * r.meta.width() as f64
+                    })
+                    .sum()
+            })
+            .unwrap_or(0.0);
+        (gang_free - now) + queued_work / slots.len() as f64
     }
 
     /// Submit a function to an endpoint and run it to completion in
@@ -1529,5 +1695,99 @@ mod tests {
         let log = svc.scaling_log();
         assert_eq!(log.len(), 1, "{log:?}");
         assert_eq!((log[0].vt, log[0].capacity), (5.0, 3));
+    }
+
+    // ---- spot capacity tier (DESIGN.md §12) ----
+
+    /// Tentpole pin: a spot warning stops new starts but lets the
+    /// running task keep executing; the reclaim at the end of the grace
+    /// window cuts it at its last whole checkpoint boundary and hands
+    /// it back as a `Displaced` gang — not a delivered completion.
+    #[test]
+    fn spot_reclaim_cuts_running_task_at_checkpoint_boundary() {
+        let (mut svc, f) = setup();
+        let mut ctx = Ctx::default();
+        let m = TaskMeta {
+            est_duration_s: Some(20.0),
+            checkpoint_every_s: Some(3.0),
+            ..TaskMeta::default()
+        };
+        // runs 3..23 (cold start 2 + queue latency 1)
+        let t1 = svc
+            .enqueue_with_meta(0.0, "alcf#gpu", &f, &secs(20.0), m)
+            .unwrap();
+        svc.advance_to(&mut ctx, 5.0);
+        svc.spot_warn("alcf#gpu", 8.0).unwrap();
+        // the warning is not a kill: nothing is reported as failed
+        assert!(svc.advance_to(&mut ctx, 9.0).is_empty());
+        let displaced = svc.reclaim_spot("alcf#gpu", 10.0).unwrap();
+        assert_eq!(displaced.len(), 1);
+        let d = &displaced[0];
+        assert_eq!(d.task, t1);
+        // elapsed 7 s of a 20 s body; checkpoints at 3/6 → 6 s survive
+        assert_eq!(d.elapsed_s, 7.0);
+        assert_eq!(d.full_s, 20.0);
+        assert_eq!(d.checkpointed_s, 6.0);
+        assert_eq!(d.remaining_s(), 14.0);
+        assert!(d.output.get("trained").as_bool().unwrap());
+        // the record bills the elapsed time here and fails at the
+        // reclaim instant, but the completion is NOT delivered — the
+        // caller owns resolving the displaced gang
+        let rec = svc.record(t1).unwrap();
+        assert_eq!(rec.finished_vt, 10.0);
+        assert_eq!(rec.exec_secs(), 7.0);
+        assert!(matches!(&rec.status, TaskStatus::Failed(msg) if msg.contains("reclaimed")));
+        assert!(svc.advance_to(&mut ctx, 50.0).is_empty());
+    }
+
+    /// A task that finishes inside the grace window drains normally —
+    /// its completion is still delivered, and the reclaim displaces
+    /// nothing. A non-checkpointable task loses all progress.
+    #[test]
+    fn grace_window_drain_and_uncheckpointed_loss() {
+        let (mut svc, f) = setup();
+        let mut ctx = Ctx::default();
+        // runs 3..8: the warning at 4 announces a reclaim at 9
+        let t1 = svc.enqueue(0.0, "alcf#gpu", &f, &secs(5.0)).unwrap();
+        svc.advance_to(&mut ctx, 4.0);
+        svc.spot_warn("alcf#gpu", 4.0).unwrap();
+        assert!(svc.reclaim_spot("alcf#gpu", 9.0).unwrap().is_empty());
+        let done = svc.advance_to(&mut ctx, 9.0);
+        assert_eq!(done, vec![t1]);
+        assert!(matches!(svc.record(t1).unwrap().status, TaskStatus::Success(_)));
+        // restore (same machinery as outage recovery), then preempt a
+        // task with no checkpoint cadence: zero progress survives
+        svc.end_outage("alcf#gpu", 10.0).unwrap();
+        svc.enqueue(10.0, "alcf#gpu", &f, &secs(10.0)).unwrap();
+        svc.advance_to(&mut ctx, 12.0); // starts at 11 (no cold start now)
+        svc.spot_warn("alcf#gpu", 12.0).unwrap();
+        let displaced = svc.reclaim_spot("alcf#gpu", 14.0).unwrap();
+        assert_eq!(displaced.len(), 1);
+        assert_eq!(displaced[0].checkpointed_s, 0.0);
+        assert_eq!(displaced[0].remaining_s(), 10.0);
+        // unknown endpoints error on every spot entry point
+        assert!(svc.spot_warn("ghost", 0.0).is_err());
+        assert!(svc.reclaim_spot("ghost", 0.0).is_err());
+    }
+
+    /// `predicted_gang_wait` reads the slot order statistic plus the
+    /// queued backlog, and reports infinity for unsatisfiable widths.
+    #[test]
+    fn predicted_gang_wait_estimates_backlog() {
+        let (mut svc, f) = setup();
+        let mut ctx = Ctx::default();
+        assert_eq!(svc.predicted_gang_wait("alcf#gpu", 1, 0.0), 0.0);
+        assert_eq!(svc.predicted_gang_wait("alcf#gpu", 2, 0.0), f64::INFINITY);
+        assert_eq!(svc.predicted_gang_wait("ghost", 1, 0.0), f64::INFINITY);
+        // one task running 3..13, nothing queued: the wait at 5 is the
+        // 8 s left on the slot
+        svc.enqueue_with_meta(0.0, "alcf#gpu", &f, &secs(10.0), meta(0, Some(10.0)))
+            .unwrap();
+        svc.advance_to(&mut ctx, 5.0);
+        assert_eq!(svc.predicted_gang_wait("alcf#gpu", 1, 5.0), 8.0);
+        // a queued 10 s estimate adds its work over capacity 1
+        svc.enqueue_with_meta(5.0, "alcf#gpu", &f, &secs(10.0), meta(0, Some(10.0)))
+            .unwrap();
+        assert_eq!(svc.predicted_gang_wait("alcf#gpu", 1, 5.0), 18.0);
     }
 }

@@ -11,7 +11,101 @@ use std::collections::{BTreeMap, BTreeSet};
 
 use anyhow::{bail, Context, Result};
 
-use crate::util::Json;
+use crate::util::{Json, Rng};
+
+/// Salt for the retry-jitter RNG stream, mixed with the action id and
+/// attempt number so each (action, attempt) pair draws an independent
+/// but fully reproducible jitter factor.
+const RETRY_JITTER_SALT: u64 = 0x52E7_1A7E_BAC0_FF5A;
+
+/// FNV-1a over the action id: a stable, dependency-free way to fold a
+/// string into the jitter seed.
+fn fnv1a(s: &str) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in s.as_bytes() {
+        h ^= *b as u64;
+        h = h.wrapping_mul(0x100_0000_01b3);
+    }
+    h
+}
+
+/// Backoff schedule for a failed action's retries (capped exponential
+/// with deterministic jitter).
+///
+/// The delay after the `k`-th failed attempt (`k` = 1, 2, …) is
+/// `min(cap_s, base_s · multiplier^(k−1))`, optionally scaled by a
+/// jitter factor uniform in `[1 − jitter, 1 + jitter)`. The jitter draw
+/// is seeded from the action id and attempt number — retry storms
+/// decorrelate across actions, yet every run of the same flow replays
+/// the identical schedule.
+///
+/// The default (`multiplier` 1.0, `jitter` 0.0, `cap_s` ∞) reproduces
+/// the original fixed-interval behavior bit-for-bit.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RetryPolicy {
+    /// delay after the first failed attempt, virtual seconds
+    pub base_s: f64,
+    /// upper bound on any single delay (`f64::INFINITY` = uncapped)
+    pub cap_s: f64,
+    /// geometric growth per failed attempt; 1.0 = fixed interval
+    pub multiplier: f64,
+    /// jitter amplitude in [0, 1); 0.0 = none
+    pub jitter: f64,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        RetryPolicy::fixed(5.0)
+    }
+}
+
+impl RetryPolicy {
+    /// Fixed-interval retries every `base_s` seconds — the pre-policy
+    /// behavior.
+    pub fn fixed(base_s: f64) -> RetryPolicy {
+        RetryPolicy {
+            base_s,
+            cap_s: f64::INFINITY,
+            multiplier: 1.0,
+            jitter: 0.0,
+        }
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if !self.base_s.is_finite() || self.base_s < 0.0 {
+            bail!("retry base_s must be finite and >= 0, got {}", self.base_s);
+        }
+        if !(self.cap_s > 0.0) {
+            bail!("retry cap_s must be > 0, got {}", self.cap_s);
+        }
+        if !self.multiplier.is_finite() || self.multiplier < 1.0 {
+            bail!("retry multiplier must be finite and >= 1, got {}", self.multiplier);
+        }
+        if !self.jitter.is_finite() || !(0.0..1.0).contains(&self.jitter) {
+            bail!("retry jitter must be in [0, 1), got {}", self.jitter);
+        }
+        Ok(())
+    }
+
+    /// The delay to wait after `attempt` attempts have failed
+    /// (`attempt` ≥ 1, as the engine counts them).
+    pub fn delay_after(&self, action_id: &str, attempt: u32) -> f64 {
+        let k = attempt.max(1);
+        let mut delay = self.base_s * self.multiplier.powi(k as i32 - 1);
+        if delay > self.cap_s {
+            delay = self.cap_s;
+        }
+        if self.jitter > 0.0 {
+            let mut rng = Rng::new(
+                RETRY_JITTER_SALT
+                    ^ fnv1a(action_id)
+                    ^ (k as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15),
+            );
+            delay *= 1.0 + self.jitter * (2.0 * rng.f64() - 1.0);
+        }
+        delay
+    }
+}
 
 /// What to do when an action exhausts its retries.
 #[derive(Debug, Clone, PartialEq)]
@@ -34,7 +128,8 @@ pub struct ActionDef {
     pub params: Json,
     pub depends_on: Vec<String>,
     pub retries: u32,
-    pub retry_backoff_s: f64,
+    /// backoff schedule between failed attempts
+    pub retry: RetryPolicy,
     pub on_failure: FailurePolicy,
     /// handler actions only run via `FailurePolicy::Catch`
     pub is_handler: bool,
@@ -105,6 +200,9 @@ impl FlowDefinition {
             if a.is_handler && !a.depends_on.is_empty() {
                 bail!("handler `{}` cannot have dependencies", a.id);
             }
+            a.retry
+                .validate()
+                .with_context(|| format!("action `{}` retry policy", a.id))?;
         }
         // Kahn topological sort over non-handler actions
         let mut indeg: Vec<usize> = self
@@ -160,8 +258,11 @@ impl FlowDefinition {
 
     /// Parse from JSON:
     /// `{"name": ..., "actions": [{"id","provider","params","depends_on",
-    ///   "retries","retry_backoff_s","on_failure","handler"}]}`
+    ///   "retries","retry_backoff_s","retry_cap_s","retry_multiplier",
+    ///   "retry_jitter","on_failure","handler"}]}`
     /// `on_failure`: "abort" (default) | "continue" | {"catch": "id"}.
+    /// The retry keys default to fixed-interval `retry_backoff_s` (5 s)
+    /// with no cap, growth, or jitter — see [`RetryPolicy`].
     pub fn from_json(j: &Json) -> Result<FlowDefinition> {
         let name = j.get("name").as_str().context("flow missing `name`")?;
         let actions = j
@@ -200,7 +301,12 @@ impl FlowDefinition {
                         None => vec![],
                     },
                     retries: a.get("retries").as_u64().unwrap_or(0) as u32,
-                    retry_backoff_s: a.get("retry_backoff_s").as_f64().unwrap_or(5.0),
+                    retry: RetryPolicy {
+                        base_s: a.get("retry_backoff_s").as_f64().unwrap_or(5.0),
+                        cap_s: a.get("retry_cap_s").as_f64().unwrap_or(f64::INFINITY),
+                        multiplier: a.get("retry_multiplier").as_f64().unwrap_or(1.0),
+                        jitter: a.get("retry_jitter").as_f64().unwrap_or(0.0),
+                    },
                     on_failure,
                     is_handler: a.get("handler").as_bool().unwrap_or(false),
                 })
@@ -221,7 +327,7 @@ mod tests {
             params: Json::Null,
             depends_on: deps.iter().map(|s| s.to_string()).collect(),
             retries: 0,
-            retry_backoff_s: 1.0,
+            retry: RetryPolicy::fixed(1.0),
             on_failure: FailurePolicy::Abort,
             is_handler: false,
         }
@@ -294,5 +400,117 @@ mod tests {
             def.action("train").unwrap().on_failure,
             FailurePolicy::Catch("cleanup".into())
         );
+        // retry keys default to the fixed-interval policy
+        assert_eq!(def.action("train").unwrap().retry, RetryPolicy::fixed(5.0));
+    }
+
+    /// The default policy must reproduce the pre-policy fixed-interval
+    /// schedule *bit-for-bit*: `delay_after` returns exactly `base_s`
+    /// for every attempt, which is what `t + retry_backoff_s` computed.
+    #[test]
+    fn default_retry_policy_is_bit_identical_to_fixed_interval() {
+        let p = RetryPolicy::fixed(5.0);
+        for k in 1..=10 {
+            assert_eq!(p.delay_after("any-action", k), 5.0);
+        }
+        let p = RetryPolicy::fixed(0.25);
+        assert_eq!(p.delay_after("stage", 1), 0.25);
+        assert_eq!(p.delay_after("stage", 7), 0.25);
+    }
+
+    #[test]
+    fn retry_policy_grows_caps_and_jitters_deterministically() {
+        let p = RetryPolicy {
+            base_s: 2.0,
+            cap_s: 30.0,
+            multiplier: 2.0,
+            jitter: 0.0,
+        };
+        // 2, 4, 8, 16, then capped
+        assert_eq!(p.delay_after("a", 1), 2.0);
+        assert_eq!(p.delay_after("a", 2), 4.0);
+        assert_eq!(p.delay_after("a", 3), 8.0);
+        assert_eq!(p.delay_after("a", 4), 16.0);
+        assert_eq!(p.delay_after("a", 5), 30.0);
+        assert_eq!(p.delay_after("a", 20), 30.0);
+
+        let j = RetryPolicy {
+            jitter: 0.5,
+            ..p.clone()
+        };
+        for k in 1..=8 {
+            let base = p.delay_after("a", k);
+            let d = j.delay_after("a", k);
+            // jittered delay stays inside [1 − jitter, 1 + jitter) × base
+            assert!(d >= base * 0.5 && d < base * 1.5, "attempt {k}: {d} vs {base}");
+            // pure function of (action id, attempt): replays identically
+            assert_eq!(d, j.delay_after("a", k));
+        }
+        // different actions decorrelate (same attempt, different draw)
+        assert_ne!(j.delay_after("a", 1), j.delay_after("b", 1));
+        // so do successive attempts of one action
+        assert_ne!(
+            j.delay_after("a", 1) / p.delay_after("a", 1),
+            j.delay_after("a", 2) / p.delay_after("a", 2)
+        );
+    }
+
+    #[test]
+    fn retry_policy_validation() {
+        assert!(RetryPolicy::fixed(5.0).validate().is_ok());
+        assert!(RetryPolicy::fixed(-1.0).validate().is_err());
+        assert!(RetryPolicy::fixed(f64::NAN).validate().is_err());
+        let bad_cap = RetryPolicy {
+            cap_s: 0.0,
+            ..RetryPolicy::fixed(1.0)
+        };
+        assert!(bad_cap.validate().is_err());
+        let bad_mult = RetryPolicy {
+            multiplier: 0.5,
+            ..RetryPolicy::fixed(1.0)
+        };
+        assert!(bad_mult.validate().is_err());
+        let bad_jitter = RetryPolicy {
+            jitter: 1.0,
+            ..RetryPolicy::fixed(1.0)
+        };
+        assert!(bad_jitter.validate().is_err());
+        // a bad policy is rejected at flow validation time, with context
+        let mut a = action("a", &[]);
+        a.retry.multiplier = 0.0;
+        let err = FlowDefinition::new("f", vec![a]).unwrap_err();
+        assert!(format!("{err:#}").contains("retry policy"), "{err:#}");
+    }
+
+    #[test]
+    fn parses_retry_policy_keys() {
+        let j = Json::parse(
+            r#"{
+          "name": "demo",
+          "actions": [
+            {"id": "t", "provider": "compute", "retries": 4,
+             "retry_backoff_s": 2.0, "retry_cap_s": 30.0,
+             "retry_multiplier": 2.0, "retry_jitter": 0.25}
+          ]
+        }"#,
+        )
+        .unwrap();
+        let def = FlowDefinition::from_json(&j).unwrap();
+        assert_eq!(
+            def.action("t").unwrap().retry,
+            RetryPolicy {
+                base_s: 2.0,
+                cap_s: 30.0,
+                multiplier: 2.0,
+                jitter: 0.25,
+            }
+        );
+        // invalid values are rejected at load time
+        let j = Json::parse(
+            r#"{"name": "demo", "actions":
+                [{"id": "t", "provider": "compute", "retry_jitter": 2.0}]}"#,
+        )
+        .unwrap();
+        assert!(FlowDefinition::from_json(&j).is_err());
     }
 }

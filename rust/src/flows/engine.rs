@@ -506,7 +506,7 @@ impl<C> FlowEngine<C> {
                                 fl.attempts
                             );
                             fl.phase = Phase::RetryAt {
-                                t: tf + action.retry_backoff_s,
+                                t: tf + action.retry.delay_after(&action.id, fl.attempts),
                             };
                         } else {
                             return self.settle_failure(run, fl, tf, format!("{e:#}"));
@@ -563,7 +563,7 @@ impl<C> FlowEngine<C> {
                     fl.attempts
                 );
                 Ok(Phase::RetryAt {
-                    t: at + action.retry_backoff_s,
+                    t: at + action.retry.delay_after(&action.id, fl.attempts),
                 })
             }
             Err(e) => Ok(Phase::FailAt {
@@ -666,7 +666,7 @@ impl<C> FlowEngine<C> {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::flows::definition::ActionDef;
+    use crate::flows::definition::{ActionDef, RetryPolicy};
 
     /// Test context: a scratch value, a failure switch, and a one-shot
     /// "timer fabric" for Pending effects.
@@ -786,7 +786,7 @@ mod tests {
             params,
             depends_on: deps.iter().map(|s| s.to_string()).collect(),
             retries: 0,
-            retry_backoff_s: 1.0,
+            retry: RetryPolicy::fixed(1.0),
             on_failure: FailurePolicy::Abort,
             is_handler: false,
         }
@@ -839,7 +839,7 @@ mod tests {
         let (mut e, token) = engine();
         let mut a = action("a", &[], Json::obj(vec![("label", Json::str("x"))]));
         a.retries = 3;
-        a.retry_backoff_s = 2.0;
+        a.retry = RetryPolicy::fixed(2.0);
         let def = FlowDefinition::new("f", vec![a]).unwrap();
         let mut ctx = Ctx {
             fail_times: 2,
@@ -852,6 +852,42 @@ mod tests {
         assert!(rep.succeeded);
         assert_eq!(rep.record("a").unwrap().attempts, 3);
         assert!(clock.now() >= 4.0); // two backoffs charged
+    }
+
+    /// Capped exponential backoff with jitter: the nominal 1/2/4 s
+    /// schedule is charged between attempts (±25% jitter), and because
+    /// the jitter stream is seeded by (action id, attempt), the whole
+    /// run replays bit-identically.
+    #[test]
+    fn exponential_backoff_schedule_is_deterministic() {
+        let run_once = || {
+            let (mut e, token) = engine();
+            let mut a = action("a", &[], Json::obj(vec![("label", Json::str("x"))]));
+            a.retries = 3;
+            a.retry = RetryPolicy {
+                base_s: 1.0,
+                cap_s: 8.0,
+                multiplier: 2.0,
+                jitter: 0.25,
+            };
+            let def = FlowDefinition::new("f", vec![a]).unwrap();
+            let mut ctx = Ctx {
+                fail_times: 3,
+                ..Default::default()
+            };
+            let mut clock = VClock::new();
+            let rep = e
+                .run(&def, &Json::Null, &token, &mut ctx, &mut clock)
+                .unwrap();
+            assert!(rep.succeeded);
+            assert_eq!(rep.record("a").unwrap().attempts, 4);
+            rep.duration()
+        };
+        let d1 = run_once();
+        // 1 + 2 + 4 = 7 s nominal backoff, each delay jittered ±25%,
+        // plus the one-time dispatch/auth overhead
+        assert!(d1 > 7.0 * 0.75 && d1 < 0.5 + 7.0 * 1.25, "{d1}");
+        assert_eq!(d1, run_once());
     }
 
     #[test]
@@ -1034,7 +1070,7 @@ mod tests {
         let mut a = action("a", &[], Json::obj(vec![("secs", Json::num(2.0))]));
         a.provider = "slow".into();
         a.retries = 1;
-        a.retry_backoff_s = 1.0;
+        a.retry = RetryPolicy::fixed(1.0);
         let def = FlowDefinition::new("f", vec![a]).unwrap();
         let mut ctx = Ctx {
             fail_times: 1,

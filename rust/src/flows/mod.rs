@@ -12,7 +12,7 @@ pub mod definition;
 pub mod engine;
 pub mod template;
 
-pub use definition::{ActionDef, FailurePolicy, FlowDefinition};
+pub use definition::{ActionDef, FailurePolicy, FlowDefinition, RetryPolicy};
 pub use engine::{
     ActionProvider, ActionRecord, ActionStatus, Effect, FabricHost, FlowEngine, FlowRun,
     RunPoll, RunReport, Ticket,

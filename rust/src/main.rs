@@ -19,8 +19,8 @@ use xloop::transfer::{TransferRequest, TransferService};
 use xloop::util::cli::Options;
 use xloop::util::stats::{human_bytes, human_secs};
 use xloop::workflow::{
-    parse_mix, render_table1, run_campaign, CampaignConfig, CampaignReport, Coordinator, Mode,
-    MixEntry, Scenario, TrainingMode,
+    parse_mix, parse_spot, render_table1, run_campaign, CampaignConfig, CampaignReport,
+    Coordinator, Mode, MixEntry, Scenario, SpotSpec, TrainingMode,
 };
 
 fn main() {
@@ -71,7 +71,9 @@ fn print_usage() {
                      --interarrival, --loads for a crossover sweep; --policy,\n\
                      --autoscale, --faults, --mix, --compare-policies for the\n\
                      scheduling/elasticity/fault study; --prices and\n\
-                     --cost-sweep for the dollar-denominated cost study)\n\
+                     --cost-sweep for the dollar-denominated cost study;\n\
+                     --spot, --checkpoint-every for preemptible capacity\n\
+                     with checkpointed failover)\n\
            fig3      WAN transfer throughput vs concurrency (Fig. 3)\n\
            fig4      conventional vs ML-surrogate crossover (Fig. 4)\n\
            serve     retrain + deploy + stream edge inference\n\
@@ -225,6 +227,20 @@ fn cmd_campaign(args: &[String]) -> Result<()> {
              egress:$_per_GB, e.g. cerebras:42.0,cluster:1.8,egress:0.09 (`paper` = \
              built-in list prices; empty = slot-hours only)",
         )
+        .opt(
+            "spot",
+            "",
+            "preemptible capacity: endpoint:mean_gap_s:grace_s entries, e.g. \
+             alcf#cerebras:900:30 — the endpoint is reclaimed at seeded exponential \
+             intervals after a grace-period warning; running gangs drain to their \
+             last checkpoint and fail over (empty = all capacity on-demand)",
+        )
+        .opt(
+            "checkpoint-every",
+            "0",
+            "checkpoint cadence for training gangs, in body seconds (0 = training is \
+             not checkpointable: a spot preemption loses all progress)",
+        )
         .flag(
             "compare-policies",
             "run the same campaign under every policy and print a comparison table",
@@ -253,6 +269,11 @@ fn cmd_campaign(args: &[String]) -> Result<()> {
         spec => FaultPlan::parse(spec)?,
     };
     let mix: Vec<MixEntry> = parse_mix(p.get("mix"))?;
+    let spot: Vec<SpotSpec> = parse_spot(p.get("spot"))?;
+    let checkpoint_every = match p.get_f64("checkpoint-every")? {
+        s if s == 0.0 => None,
+        s => Some(s),
+    };
     let prices: Option<PriceBook> = match p.get("prices") {
         "" => None,
         "paper" => Some(PriceBook::paper()),
@@ -264,7 +285,9 @@ fn cmd_campaign(args: &[String]) -> Result<()> {
         || autoscale_max > 0
         || !faults.is_empty()
         || !mix.is_empty()
-        || prices.is_some();
+        || prices.is_some()
+        || !spot.is_empty()
+        || checkpoint_every.is_some();
     let mk_cfg = |scenario: &Scenario, mean: f64, kind: PolicyKind| {
         let mut cfg = CampaignConfig::new(users, scenario.clone(), mean, seed);
         cfg.policy = kind;
@@ -277,6 +300,8 @@ fn cmd_campaign(args: &[String]) -> Result<()> {
         }
         cfg.faults = faults.clone();
         cfg.mix = mix.clone();
+        cfg.spot = spot.clone();
+        cfg.checkpoint_every_s = checkpoint_every;
         cfg
     };
 
@@ -493,6 +518,20 @@ fn print_enriched_report(report: &CampaignReport, prices: Option<&PriceBook>) {
             bills.join(" | ")
         );
     }
+    if let Some(s) = &report.spot {
+        println!(
+            "\nspot capacity: {} preemption(s) | {} gang(s) displaced | \
+             {} local + {} WAN migration(s) | {} stranded",
+            s.preemptions, s.displaced, s.local_migrations, s.wan_migrations, s.stranded
+        );
+        println!(
+            "checkpointed work kept {} | lost past last checkpoint {} | \
+             checkpoint bytes over WAN {}",
+            human_secs(s.checkpointed_s),
+            human_secs(s.lost_s),
+            human_bytes(s.migration_bytes as f64),
+        );
+    }
     if !report.scaling.is_empty() {
         let peak = report.scaling.iter().map(|e| e.capacity).max().unwrap_or(0);
         println!(
@@ -506,7 +545,7 @@ fn print_enriched_report(report: &CampaignReport, prices: Option<&PriceBook>) {
     }
     if !report.failed_users.is_empty() {
         println!(
-            "users failed under the fault plan (retries exhausted): {:?}",
+            "users failed under the fault/spot plan (retries exhausted): {:?}",
             report.failed_users
         );
     }
@@ -643,6 +682,51 @@ fn campaign_cost_sweep(
          and egress; the local side pays cheap slot-hours over a much longer\n\
          makespan. Prices per --prices; see DESIGN.md \u{a7}11.)"
     );
+
+    // the spot axis (DESIGN.md §12): with --spot set, re-run the remote
+    // side against an on-demand clone of the same fabric — discounted
+    // spot slot-hours plus migration egress and checkpoint-replay
+    // latency vs full-price uninterrupted capacity
+    let probe = mk_cfg(scenario, 60.0, policy);
+    if !probe.spot.is_empty() {
+        println!(
+            "\nSpot axis — preemptible capacity (checkpoint + failover) vs on-demand\n"
+        );
+        println!(
+            "{:>16} {:>10} {:>12} {:>12} {:>14} {:>9} {:>9}",
+            "interarrival (s)", "spot $", "spot p95", "on-demand $", "on-demand p95", "$ winner",
+            "t winner"
+        );
+        for mean in parse_loads(loads)? {
+            let spot_rep = run_campaign(&mk_cfg(scenario, mean, policy))?;
+            let mut od_cfg = mk_cfg(scenario, mean, policy);
+            od_cfg.spot.clear();
+            od_cfg.checkpoint_every_s = None;
+            let od_rep = run_campaign(&od_cfg)?;
+            let spot_usd = spot_rep.cost.dollars(book).total_usd();
+            let od_usd = od_rep.cost.dollars(book).total_usd();
+            let (sp95, op95) = (
+                spot_rep.turnaround_percentile(95.0),
+                od_rep.turnaround_percentile(95.0),
+            );
+            println!(
+                "{:>16.1} {:>10.2} {:>12.1} {:>12.2} {:>14.1} {:>9} {:>9}",
+                mean,
+                spot_usd,
+                sp95,
+                od_usd,
+                op95,
+                if spot_usd <= od_usd { "spot" } else { "on-dem" },
+                if sp95 <= op95 { "spot" } else { "on-dem" },
+            );
+        }
+        println!(
+            "\n(same arrivals/fabric per row; the spot side bills discounted\n\
+             `class:spot` slot rates but pays preemption tax — checkpoint replay,\n\
+             migration egress, grace-window drain — in its turnaround tail.\n\
+             See DESIGN.md \u{a7}12.)"
+        );
+    }
     Ok(())
 }
 

@@ -22,10 +22,11 @@ use crate::util::Rng;
 pub struct FaultModel {
     /// probability a single file transfer attempt fails mid-flight
     pub file_failure_prob: f64,
-    /// when a failure happens, the fraction of the file already moved is
-    /// uniform in [0, 1) — wasted bytes that must be re-sent
+    /// virtual seconds a failed file waits before its next attempt
+    /// starts (a fixed pause, not exponential — Globus-style polling)
     pub retry_backoff_s: f64,
-    /// maximum attempts per file before the task fails hard
+    /// maximum attempts per file before the whole transfer fails hard
+    /// (so `max_attempts - 1` retries after the first try)
     pub max_attempts: u32,
 }
 
@@ -49,7 +50,10 @@ impl FaultModel {
     }
 
     /// Draw the attempt outcome for one file: `None` = success, or
-    /// `Some(fraction_completed_before_failure)`.
+    /// `Some(fraction_completed_before_failure)` — the fraction of the
+    /// file already moved when the attempt died, uniform in [0, 1).
+    /// Those bytes are wasted and must be re-sent (the wire does not
+    /// refund retries), which is what makes flaky WANs expensive.
     pub fn draw_failure(&self, rng: &mut Rng) -> Option<f64> {
         if self.file_failure_prob > 0.0 && rng.chance(self.file_failure_prob) {
             Some(rng.f64())
@@ -246,5 +250,56 @@ mod tests {
         assert!(FaultPlan::parse("outage=e@0..1,outage=e@0.5..2").is_err()); // overlap
         // same endpoint, disjoint windows: fine
         assert!(FaultPlan::parse("outage=e@0..1,outage=e@2..3").is_ok());
+    }
+
+    /// `validate` edge cases that `parse` can also hand it (and that
+    /// programmatic plans hit directly): degenerate windows, reversed
+    /// bounds, negative starts, non-finite edges, and the exact
+    /// boundaries of the same-endpoint overlap rule.
+    #[test]
+    fn fault_plan_validate_edge_cases() {
+        let outage = |endpoint: &str, from_vt: f64, until_vt: f64| FaultPlan {
+            outages: vec![EndpointOutage {
+                endpoint: endpoint.into(),
+                from_vt,
+                until_vt,
+            }],
+            wan: Vec::new(),
+        };
+        // zero-length window: [5, 5) injects nothing — rejected
+        assert!(outage("e", 5.0, 5.0).validate().is_err());
+        assert!(FaultPlan::parse("outage=e@5..5").is_err());
+        // reversed bounds and negative start
+        assert!(outage("e", 10.0, 2.0).validate().is_err());
+        assert!(outage("e", -1.0, 2.0).validate().is_err());
+        // non-finite edges (unreachable via parse — `inf` parses as f64
+        // — so validate is the only guard)
+        assert!(outage("e", f64::NAN, 2.0).validate().is_err());
+        assert!(outage("e", 0.0, f64::INFINITY).validate().is_err());
+        // back-to-back windows on one endpoint share an instant without
+        // overlapping: the end transition at t=1 precedes the begin
+        assert!(FaultPlan::parse("outage=e@0..1,outage=e@1..2").is_ok());
+        // identical windows on *different* endpoints never conflict
+        assert!(FaultPlan::parse("outage=a@0..5,outage=b@0..5").is_ok());
+        // duplicate-endpoint identical windows are the overlap case
+        assert!(FaultPlan::parse("outage=e@0..5,outage=e@0..5")
+            .unwrap_err()
+            .to_string()
+            .contains("overlapping"));
+        // wan windows get the same window checks plus the factor range
+        let wan = |factor: f64, from_vt: f64, until_vt: f64| FaultPlan {
+            outages: Vec::new(),
+            wan: vec![WanDegradation {
+                factor,
+                from_vt,
+                until_vt,
+            }],
+        };
+        assert!(wan(0.5, 3.0, 3.0).validate().is_err());
+        assert!(wan(f64::NAN, 0.0, 1.0).validate().is_err());
+        assert!(wan(1.0, 0.0, 1.0).validate().is_ok()); // factor 1.0 inclusive
+        // overlapping wan windows are allowed — they compose by
+        // most-severe-factor, unlike outages
+        assert!(FaultPlan::parse("wan=0.5@0..10,wan=0.25@5..15").is_ok());
     }
 }

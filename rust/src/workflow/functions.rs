@@ -30,6 +30,7 @@ pub fn register_all(faas: &mut crate::faas::FaasService<World>) -> Result<()> {
     faas.register_function("generate_data", generate_data)?;
     faas.register_function("label_data", label_data)?;
     faas.register_function("train_model", train_model)?;
+    faas.register_function("resume_train", resume_train)?;
     faas.register_function("evaluate_model", evaluate_model)?;
     Ok(())
 }
@@ -229,6 +230,29 @@ fn train_model(world: &mut World, clock: &mut VClock, args: &Json) -> Result<Jso
             final_loss.map(|l| Json::num(l as f64)).unwrap_or(Json::Null),
         ),
     ]))
+}
+
+/// **T** (resumed): replay the tail of a spot-preempted training run
+/// from its last checkpoint (DESIGN.md §12).
+///
+/// Under the run-at-start execution model the original `train_model`
+/// body already did its side effects (repository publish, `trained`
+/// insert) when the task started — the preemption only invalidated the
+/// *time* the fabric had scheduled past the reclaim instant. The resume
+/// therefore charges exactly the remaining body seconds (full duration
+/// minus the checkpointed prefix) on the failover endpoint and re-emits
+/// the original output, so the flow layer observes a normal `train`
+/// completion. args: {remaining_s, output}
+fn resume_train(_world: &mut World, clock: &mut VClock, args: &Json) -> Result<Json> {
+    let remaining_s = args
+        .get("remaining_s")
+        .as_f64()
+        .context("args.remaining_s")?;
+    if !remaining_s.is_finite() || remaining_s < 0.0 {
+        bail!("bad resume remaining_s {remaining_s}");
+    }
+    clock.advance(remaining_s);
+    Ok(args.get("output").clone())
 }
 
 /// Validation inference on a trained model (used by tests/examples to

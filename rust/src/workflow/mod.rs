@@ -12,7 +12,8 @@
 //!   the discrete-event core (DESIGN.md §3) with pluggable scheduling,
 //!   autoscaling, and fault plans (§9), gang-scheduled heterogeneous
 //!   tenant mixes with slot-time cost accounting (§10), and per-class
-//!   arrival processes plus dollar pricing / per-tenant bills (§11)
+//!   arrival processes plus dollar pricing / per-tenant bills (§11),
+//!   and spot capacity with checkpointed failover migration (§12)
 
 pub mod campaign;
 pub mod coordinator;
@@ -23,13 +24,13 @@ pub mod scenario;
 pub mod world;
 
 pub use campaign::{
-    parse_mix, run_campaign, Burst, CampaignConfig, CampaignReport, CostSummary, DollarSummary,
-    EndpointCost, EndpointDollars, EndpointLoad, FairnessSummary, MixEntry, TenantDollars,
-    UserOutcome,
+    parse_mix, parse_spot, run_campaign, Burst, CampaignConfig, CampaignReport, CostSummary,
+    DollarSummary, EndpointCost, EndpointDollars, EndpointLoad, FairnessSummary, MixEntry,
+    SpotSpec, TenantDollars, UserOutcome,
 };
 pub use coordinator::{
     extract_breakdown, render_table1, Coordinator, RetrainBreakdown, RetrainOutcome,
 };
 pub use flow::{dnn_trainer_flow, FlowShape};
 pub use scenario::{Mode, Scenario};
-pub use world::{Tenant, TrainedModel, TrainingMode, World};
+pub use world::{SpotLedger, Tenant, TrainedModel, TrainingMode, World};

@@ -15,7 +15,9 @@ use crate::flows::{FabricHost, Ticket};
 use crate::models::ModelRegistry;
 use crate::runtime::{Runtime, Tensor};
 use crate::training::TrainReport;
-use crate::transfer::{TransferHandle, TransferReport, TransferRequest, TransferService};
+use crate::transfer::{
+    EndpointId, TransferHandle, TransferReport, TransferRequest, TransferService,
+};
 use crate::util::Json;
 
 /// A model trained somewhere in the fabric, awaiting deployment.
@@ -67,6 +69,29 @@ impl Default for Tenant {
     }
 }
 
+/// Cumulative spot preemption / failover-migration bookkeeping
+/// (DESIGN.md §12). The campaign layer reads this into its report.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct SpotLedger {
+    /// reclaim events that found at least one gang running
+    pub preemptions: u32,
+    /// gangs displaced mid-run across all reclaims
+    pub displaced: u32,
+    /// failover migrations whose checkpoint crossed the WAN
+    pub wan_migrations: u32,
+    /// failover migrations within the source facility (no WAN hop)
+    pub local_migrations: u32,
+    /// checkpoint bytes shipped over the WAN for migrations
+    pub migration_bytes: u64,
+    /// body seconds preserved in checkpoints across all preemptions
+    pub checkpointed_s: f64,
+    /// body seconds executed past the last checkpoint boundary and lost
+    pub lost_s: f64,
+    /// displaced gangs with no live failover candidate: the failure was
+    /// delivered to the flow layer's retry machinery instead
+    pub stranded: u32,
+}
+
 /// Work submitted to a shared fabric, awaiting completion. The ticket
 /// registry is what lets `ActionProvider::start` return immediately
 /// while the transfer/faas fabrics advance under the DES scheduler.
@@ -84,6 +109,22 @@ enum PendingOp {
     },
     Faas {
         task: TaskId,
+    },
+    /// A spot-preempted gang's checkpoint in flight to its failover
+    /// endpoint (DESIGN.md §12). When the transfer delivers, the resume
+    /// task is enqueued on `endpoint` and the ticket is rewired to it;
+    /// the egress is billed to the preempted tenant.
+    Migration {
+        handle: TransferHandle,
+        /// failover endpoint the planner chose
+        endpoint: String,
+        /// `resume_train` args ({remaining_s, output})
+        args: Json,
+        /// scheduler metadata for the resumed gang (same tenant /
+        /// priority / width; estimate = remaining work)
+        meta: TaskMeta,
+        /// preempted tenant (egress attribution)
+        user: u32,
     },
 }
 
@@ -118,6 +159,12 @@ pub struct World {
     pub transfer_log_users: Vec<u32>,
     /// submitting tenant for fabric work (campaign layer sets per user)
     pub tenant: Tenant,
+    /// checkpoint cadence attached to `train_model` tasks (body
+    /// seconds between resumable checkpoints). `None` = training is
+    /// not checkpointable: a spot preemption loses all progress.
+    pub checkpoint_every_s: Option<f64>,
+    /// cumulative spot preemption / migration bookkeeping
+    pub spot: SpotLedger,
     /// fabric work awaiting completion, by ticket id
     pending: BTreeMap<u64, PendingOp>,
     /// resolved tickets: (finish virtual time, outcome)
@@ -177,6 +224,8 @@ impl World {
             transfer_log: Vec::new(),
             transfer_log_users: Vec::new(),
             tenant: Tenant::default(),
+            checkpoint_every_s: None,
+            spot: SpotLedger::default(),
             pending: BTreeMap::new(),
             ready: BTreeMap::new(),
             next_ticket: 1,
@@ -238,6 +287,13 @@ impl World {
                 self.tenant.train_slots.max(1)
             } else {
                 1
+            },
+            // only training persists resumable checkpoints; everything
+            // else restarts from scratch on preemption
+            checkpoint_every_s: if func.0 == "train_model" {
+                self.checkpoint_every_s
+            } else {
+                None
             },
         };
         let faas = self
@@ -345,6 +401,9 @@ impl World {
                 )
             }
             "evaluate_model" => Some(0.5),
+            // a resumed training run replays exactly its remaining body
+            // seconds — the estimate the failover queue orders it by
+            "resume_train" => args.get("remaining_s").as_f64(),
             _ => None,
         }
     }
@@ -363,6 +422,262 @@ impl World {
             .as_mut()
             .context("faas service missing")?
             .end_outage(endpoint, now)
+    }
+
+    /// A spot preemption was announced on `endpoint` at `now`: the
+    /// grace window opens — no new starts, running gangs keep draining
+    /// toward their checkpoint boundaries (DESIGN.md §12).
+    pub fn spot_warn_endpoint(&mut self, endpoint: &str, now: f64) -> Result<()> {
+        self.faas
+            .as_mut()
+            .context("faas service missing")?
+            .spot_warn(endpoint, now)
+    }
+
+    /// The facility of a fabric endpoint id (`alcf#cerebras` → `alcf`).
+    fn facility_of(endpoint: &str) -> &str {
+        endpoint.split_once('#').map(|(f, _)| f).unwrap_or(endpoint)
+    }
+
+    /// The grace window on `endpoint` expired at `now`: reclaim the
+    /// spot slots and run the failover migration planner over the
+    /// displaced gangs (DESIGN.md §12).
+    ///
+    /// Candidates are training-capable endpoints (those carrying an
+    /// accelerator model) currently accepting starts. The cost of
+    /// moving a gang to a candidate is the predicted WAN time for its
+    /// checkpoint bytes through the *shared* transfer fabric (zero
+    /// within the source facility) plus the candidate's predicted
+    /// queue wait; gangs are placed by minimum-cost one-to-one
+    /// assignment (the Kuhn–Munkres optimum — with a handful of
+    /// candidates an exact bitmask DP over candidate subsets is
+    /// trivial), one-to-one so a burst of displaced gangs cannot
+    /// dogpile the single cheapest endpoint; waves handle more gangs
+    /// than candidates. A cross-facility move ships the checkpoint as
+    /// a real transfer task — it contends with campaign transfers and
+    /// its egress is billed to the preempted tenant on delivery. A
+    /// gang with no live candidate is stranded: its failure is
+    /// delivered so the flow layer's retry machinery resubmits it
+    /// (the resubmission queues on the Down endpoint and runs at
+    /// restore).
+    pub fn preempt_spot_endpoint(&mut self, endpoint: &str, now: f64) -> Result<()> {
+        let mut faas = self.faas.take().context("faas service missing")?;
+        let displaced = match faas.reclaim_spot(endpoint, now) {
+            Ok(d) => d,
+            Err(e) => {
+                self.faas = Some(faas);
+                return Err(e);
+            }
+        };
+        if displaced.is_empty() {
+            self.faas = Some(faas);
+            return Ok(());
+        }
+        self.spot.preemptions += 1;
+
+        let candidates: Vec<String> = faas
+            .endpoints()
+            .filter(|ep| {
+                ep.id != endpoint
+                    && ep.status == crate::faas::EndpointStatus::Online
+                    && self.accels.contains_key(&ep.id)
+            })
+            .map(|ep| ep.id.clone())
+            .collect();
+        let src_fac = Self::facility_of(endpoint).to_string();
+
+        // checkpoint artifact size per gang: the published model's
+        // parameter bytes (`models::repository::Checkpoint` stores the
+        // params the original start already published)
+        let ckpt_bytes: Vec<u64> = displaced
+            .iter()
+            .map(|d| {
+                d.output
+                    .get("model")
+                    .as_str()
+                    .and_then(|m| self.registry.get(m).ok())
+                    .map(|meta| meta.param_bytes())
+                    .unwrap_or(0)
+            })
+            .collect();
+
+        // cost matrix: WAN ship time + predicted queue wait (infinite =
+        // infeasible: gang can never fit, or no WAN path)
+        let mut costs = vec![vec![f64::INFINITY; candidates.len()]; displaced.len()];
+        for (gi, d) in displaced.iter().enumerate() {
+            for (ci, cand) in candidates.iter().enumerate() {
+                let wait = faas.predicted_gang_wait(cand, d.meta.width(), now);
+                if !wait.is_finite() {
+                    continue;
+                }
+                let cand_fac = Self::facility_of(cand);
+                let wan = if cand_fac == src_fac {
+                    0.0
+                } else {
+                    let req = TransferRequest::split_even(
+                        "spot-migrate",
+                        EndpointId::from(format!("{src_fac}#dtn").as_str()),
+                        EndpointId::from(format!("{cand_fac}#dtn").as_str()),
+                        ckpt_bytes[gi].max(1),
+                        1,
+                    );
+                    match self.transfer.predict_linear(&req) {
+                        Ok(s) => s,
+                        Err(_) => continue,
+                    }
+                };
+                costs[gi][ci] = wan + wait;
+            }
+        }
+
+        // exact minimum-cost assignment per wave via bitmask DP; a
+        // stranding penalty far above any real cost means a gang goes
+        // unassigned only when it has no feasible candidate at all
+        const STRAND: f64 = 1e18;
+        let n = candidates.len();
+        let mut assignment: Vec<Option<usize>> = vec![None; displaced.len()];
+        if n > 0 {
+            let gangs: Vec<usize> = (0..displaced.len()).collect();
+            for wave in gangs.chunks(n) {
+                let k = wave.len();
+                let full = 1usize << n;
+                let mut dp = vec![vec![f64::INFINITY; full]; k + 1];
+                // (chosen candidate or n = stranded, predecessor mask)
+                let mut from = vec![vec![(usize::MAX, 0usize); full]; k + 1];
+                dp[0][0] = 0.0;
+                for i in 0..k {
+                    let gi = wave[i];
+                    for mask in 0..full {
+                        let base = dp[i][mask];
+                        if !base.is_finite() {
+                            continue;
+                        }
+                        if base + STRAND < dp[i + 1][mask] {
+                            dp[i + 1][mask] = base + STRAND;
+                            from[i + 1][mask] = (n, mask);
+                        }
+                        for ci in 0..n {
+                            if mask & (1 << ci) != 0 || !costs[gi][ci].is_finite() {
+                                continue;
+                            }
+                            let nm = mask | (1 << ci);
+                            if base + costs[gi][ci] < dp[i + 1][nm] {
+                                dp[i + 1][nm] = base + costs[gi][ci];
+                                from[i + 1][nm] = (ci, mask);
+                            }
+                        }
+                    }
+                }
+                let mut best = (f64::INFINITY, 0usize);
+                for mask in 0..full {
+                    if dp[k][mask] < best.0 {
+                        best = (dp[k][mask], mask);
+                    }
+                }
+                let mut mask = best.1;
+                for i in (0..k).rev() {
+                    let (ci, prev) = from[i + 1][mask];
+                    if ci < n {
+                        assignment[wave[i]] = Some(ci);
+                    }
+                    mask = prev;
+                }
+            }
+        }
+
+        for (gi, d) in displaced.iter().enumerate() {
+            self.spot.displaced += 1;
+            self.spot.checkpointed_s += d.checkpointed_s;
+            self.spot.lost_s += (d.elapsed_s - d.checkpointed_s).max(0.0);
+            // the displaced task's compute ticket; a gang driven outside
+            // the ticket machinery has nobody to deliver a resume to
+            let ticket = self.pending.iter().find_map(|(id, op)| match op {
+                PendingOp::Faas { task } if *task == d.task => Some(*id),
+                _ => None,
+            });
+            let Some(tid) = ticket else {
+                self.spot.stranded += 1;
+                continue;
+            };
+            let Some(target) = assignment[gi].map(|ci| candidates[ci].clone()) else {
+                self.spot.stranded += 1;
+                self.pending.remove(&tid);
+                self.ready.insert(
+                    tid,
+                    (
+                        now,
+                        Err(anyhow::anyhow!(
+                            "task {:?} preempted on `{endpoint}`: no failover candidate",
+                            d.task
+                        )),
+                    ),
+                );
+                continue;
+            };
+            let args = Json::obj(vec![
+                ("remaining_s", Json::num(d.remaining_s())),
+                ("output", d.output.clone()),
+            ]);
+            let meta = TaskMeta {
+                user: d.meta.user,
+                priority: d.meta.priority,
+                // the failover queue orders the gang by its REMAINING
+                // work, not the full estimate
+                est_duration_s: Some(d.remaining_s()),
+                slots: d.meta.width(),
+                checkpoint_every_s: d.meta.checkpoint_every_s,
+            };
+            if Self::facility_of(&target) == src_fac {
+                // same facility: the checkpoint moves over local
+                // staging — the resume enqueues immediately
+                let fid = FuncId("resume_train".into());
+                match faas.enqueue_with_meta(now, &target, &fid, &args, meta) {
+                    Ok(task) => {
+                        self.spot.local_migrations += 1;
+                        self.pending.insert(tid, PendingOp::Faas { task });
+                    }
+                    Err(e) => {
+                        self.spot.stranded += 1;
+                        self.pending.remove(&tid);
+                        self.ready.insert(tid, (now, Err(e)));
+                    }
+                }
+            } else {
+                let bytes = ckpt_bytes[gi].max(1);
+                let req = TransferRequest::split_even(
+                    format!("spot-migrate-{}", d.task.0),
+                    EndpointId::from(format!("{src_fac}#dtn").as_str()),
+                    EndpointId::from(
+                        format!("{}#dtn", Self::facility_of(&target)).as_str(),
+                    ),
+                    bytes,
+                    1,
+                );
+                match self.transfer.submit_task(now, &req) {
+                    Ok(handle) => {
+                        self.spot.wan_migrations += 1;
+                        self.spot.migration_bytes += bytes;
+                        self.pending.insert(
+                            tid,
+                            PendingOp::Migration {
+                                handle,
+                                endpoint: target,
+                                args,
+                                meta,
+                                user: d.meta.user,
+                            },
+                        );
+                    }
+                    Err(e) => {
+                        self.spot.stranded += 1;
+                        self.pending.remove(&tid);
+                        self.ready.insert(tid, (now, Err(e)));
+                    }
+                }
+            }
+        }
+        self.faas = Some(faas);
+        Ok(())
     }
 
     /// Resolve the transfer payload size for a provider parameter set:
@@ -397,43 +712,93 @@ impl FabricHost for World {
         for (handle, res) in self.transfer.advance_to(t) {
             let ticket = self.pending.iter().find_map(|(id, op)| match op {
                 PendingOp::Transfer { handle: h, .. } if *h == handle => Some(*id),
+                PendingOp::Migration { handle: h, .. } if *h == handle => Some(*id),
                 _ => None,
             });
             let Some(tid) = ticket else { continue };
-            let Some(PendingOp::Transfer {
-                dst_facility,
-                dataset,
-                model,
-                user,
-                ..
-            }) = self.pending.remove(&tid)
-            else {
-                continue;
-            };
-            let resolved = match res {
-                Ok(rep) => {
-                    if let Some(ds) = &dataset {
-                        self.put_file(&dst_facility, ds, rep.bytes);
-                    }
-                    if let Some(m) = &model {
-                        self.put_file(&dst_facility, &format!("{m}.weights"), rep.bytes);
-                    }
-                    let out = Json::obj(vec![
-                        ("bytes", Json::num(rep.bytes as f64)),
-                        ("seconds", Json::num(rep.duration())),
-                        ("data_seconds", Json::num(rep.data_secs())),
-                        ("throughput_bps", Json::num(rep.throughput_bps())),
-                        ("concurrency", Json::num(rep.concurrency as f64)),
-                        ("attempts", Json::num(rep.total_attempts() as f64)),
-                    ]);
-                    let finish = rep.finish_vt;
-                    self.transfer_log.push(rep);
-                    self.transfer_log_users.push(user);
-                    (finish, Ok(out))
+            match self.pending.remove(&tid) {
+                Some(PendingOp::Transfer {
+                    dst_facility,
+                    dataset,
+                    model,
+                    user,
+                    ..
+                }) => {
+                    let resolved = match res {
+                        Ok(rep) => {
+                            if let Some(ds) = &dataset {
+                                self.put_file(&dst_facility, ds, rep.bytes);
+                            }
+                            if let Some(m) = &model {
+                                self.put_file(&dst_facility, &format!("{m}.weights"), rep.bytes);
+                            }
+                            let out = Json::obj(vec![
+                                ("bytes", Json::num(rep.bytes as f64)),
+                                ("seconds", Json::num(rep.duration())),
+                                ("data_seconds", Json::num(rep.data_secs())),
+                                ("throughput_bps", Json::num(rep.throughput_bps())),
+                                ("concurrency", Json::num(rep.concurrency as f64)),
+                                ("attempts", Json::num(rep.total_attempts() as f64)),
+                            ]);
+                            let finish = rep.finish_vt;
+                            self.transfer_log.push(rep);
+                            self.transfer_log_users.push(user);
+                            (finish, Ok(out))
+                        }
+                        Err(e) => (t, Err(e)),
+                    };
+                    self.ready.insert(tid, resolved);
                 }
-                Err(e) => (t, Err(e)),
-            };
-            self.ready.insert(tid, resolved);
+                Some(PendingOp::Migration {
+                    endpoint,
+                    args,
+                    meta,
+                    user,
+                    ..
+                }) => {
+                    // a preempted gang's checkpoint arriving at its
+                    // failover facility: bill the egress to the
+                    // preempted tenant and enter the target's queue at
+                    // the delivery instant — the same advance picks the
+                    // resume up below if a slot is free by `t`
+                    let resolved = match res {
+                        Ok(rep) => {
+                            let finish = rep.finish_vt;
+                            self.transfer_log.push(rep);
+                            self.transfer_log_users.push(user);
+                            let fid = FuncId("resume_train".into());
+                            let faas =
+                                self.faas.as_mut().expect("faas present before advance");
+                            match faas.enqueue_with_meta(finish, &endpoint, &fid, &args, meta)
+                            {
+                                Ok(task) => {
+                                    match &faas.record(task).expect("enqueued").status {
+                                        // offline failover target: failed
+                                        // at enqueue, no event coming
+                                        TaskStatus::Failed(m) => Some((
+                                            finish,
+                                            Err(anyhow::anyhow!(
+                                                "resume on `{endpoint}` failed: {m}"
+                                            )),
+                                        )),
+                                        _ => {
+                                            self.pending
+                                                .insert(tid, PendingOp::Faas { task });
+                                            None
+                                        }
+                                    }
+                                }
+                                Err(e) => Some((finish, Err(e))),
+                            }
+                        }
+                        Err(e) => Some((t, Err(e))),
+                    };
+                    if let Some(r) = resolved {
+                        self.ready.insert(tid, r);
+                    }
+                }
+                _ => continue,
+            }
         }
 
         // faas: queue starts run function bodies against this world, so
@@ -566,5 +931,108 @@ mod tests {
         assert_eq!(w.payload_bytes(&p).unwrap(), 4 * 36_922);
         let p = crate::util::Json::parse(r#"{"nothing": 1}"#).unwrap();
         assert!(w.payload_bytes(&p).is_err());
+    }
+
+    /// End-to-end spot failover across the WAN (DESIGN.md §12): with
+    /// both local failover candidates down, a preempted Cerebras gang
+    /// must ship its checkpoint to `slac#v100`, wait out the transfer,
+    /// and replay exactly the remaining work — the ticket resolves once,
+    /// from the failover endpoint, with checkpointed progress preserved.
+    #[test]
+    fn spot_preemption_migrates_over_wan_and_resumes() {
+        if !artifacts_present() {
+            return;
+        }
+        let mut w = World::paper(3).unwrap();
+        w.training_mode = TrainingMode::VirtualOnly;
+        w.checkpoint_every_s = Some(4.0);
+        w.tenant = Tenant { user: 1, priority: 0, train_slots: 1 };
+        // only the WAN candidate survives
+        w.begin_endpoint_outage("alcf#sambanova", 0.0).unwrap();
+        w.begin_endpoint_outage("alcf#gpu8", 0.0).unwrap();
+
+        let train = FuncId("train_model".into());
+        let args = crate::util::Json::parse(
+            r#"{"model": "braggnn", "dataset": "virtual-d", "endpoint": "alcf#cerebras"}"#,
+        )
+        .unwrap();
+        let ticket = w
+            .submit_compute_ticket(0.0, "alcf#cerebras", &train, &args)
+            .unwrap();
+        // run past dispatch overhead so the gang is mid-flight
+        w.advance_fabrics(5.0);
+        let (started, full) = {
+            let rec = w
+                .faas
+                .as_ref()
+                .unwrap()
+                .records()
+                .iter()
+                .find(|r| r.endpoint == "alcf#cerebras")
+                .expect("train dispatched");
+            (rec.started_vt, rec.exec_secs())
+        };
+        assert!(started.is_finite() && started < 5.0, "started {started}");
+        assert!(full > 7.0, "cerebras braggnn train modeled at {full} s");
+
+        // grace opens 5 s into the run; capacity reclaimed 2 s later.
+        // 7 s of progress against a 4 s cadence: one checkpoint kept
+        // (4 s), 3 s lost.
+        w.spot_warn_endpoint("alcf#cerebras", started + 5.0).unwrap();
+        w.preempt_spot_endpoint("alcf#cerebras", started + 7.0).unwrap();
+        assert_eq!(w.spot.preemptions, 1);
+        assert_eq!(w.spot.displaced, 1);
+        assert_eq!(w.spot.wan_migrations, 1, "{:?}", w.spot);
+        assert_eq!(w.spot.local_migrations, 0);
+        assert_eq!(w.spot.stranded, 0);
+        assert_eq!(w.spot.checkpointed_s, 4.0);
+        assert!((w.spot.lost_s - 3.0).abs() < 1e-6, "{:?}", w.spot);
+        assert_eq!(w.spot.migration_bytes, 4 * 36_922);
+
+        // drive the WAN transfer and the replay to completion
+        let (finish, res) = loop {
+            if let Some(r) = w.take_ready(ticket) {
+                break r;
+            }
+            let t = w.next_fabric_event().expect("migration pending");
+            w.advance_fabrics(t);
+        };
+        let out = res.expect("resumed train succeeds");
+        assert_eq!(out.get("endpoint").as_str(), Some("slac#v100"));
+        // the failover replays only the remaining work past the
+        // checkpoint
+        let exec = out.get("exec_seconds").as_f64().unwrap();
+        assert!((exec - (full - 4.0)).abs() < 1e-6, "exec {exec} vs full {full}");
+        // checkpoint shipping is real WAN time, billed to the tenant
+        assert!(finish > started + 7.0);
+        let rep = w.transfer_log.last().expect("migration transfer logged");
+        assert_eq!(rep.bytes, 4 * 36_922);
+        assert_eq!(w.transfer_log_users.last(), Some(&1));
+
+        // the fabric records tell the same story: the preempted run
+        // failed at +7 s, the resume succeeded elsewhere, and total
+        // slot-time stays well under a full restart's 2× blowup
+        let faas = w.faas.as_ref().unwrap();
+        let cer = faas
+            .records()
+            .iter()
+            .find(|r| r.endpoint == "alcf#cerebras")
+            .unwrap();
+        assert!(matches!(cer.status, TaskStatus::Failed(_)));
+        assert!((cer.exec_secs() - 7.0).abs() < 1e-6);
+        let v100 = faas
+            .records()
+            .iter()
+            .find(|r| r.endpoint == "slac#v100")
+            .expect("failover record");
+        assert!(matches!(v100.status, TaskStatus::Success(_)));
+        let total: f64 = faas
+            .records()
+            .iter()
+            .filter(|r| r.status.is_complete() && r.exec_secs().is_finite())
+            .map(|r| r.exec_secs().max(0.0))
+            .sum();
+        assert!((total - (full + 3.0)).abs() < 1e-6, "total {total} vs full {full}");
+        assert!(total < 2.0 * full);
     }
 }

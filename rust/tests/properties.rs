@@ -202,7 +202,7 @@ fn random_dag(rng: &mut Rng) -> FlowDefinition {
                 params: Json::Null,
                 depends_on: deps,
                 retries: 0,
-                retry_backoff_s: 0.1,
+                retry: xloop::flows::RetryPolicy::fixed(0.1),
                 on_failure: FailurePolicy::Continue,
                 is_handler: false,
             }
