@@ -23,9 +23,11 @@ use xloop::data::{bragg, BraggConfig};
 use xloop::models::{default_artifacts_dir, ModelMeta, ModelRegistry};
 use xloop::pool::Pool;
 use xloop::runtime::Runtime;
-use xloop::simnet::{max_min_rates, Topology};
+use xloop::simnet::{max_min_rates, DesBackend, Scheduler, Topology};
 use xloop::training::{TrainState, Trainer};
+use xloop::transfer::{TransferRequest, TransferService};
 use xloop::util::Json;
+use xloop::workflow::{run_campaign, CampaignConfig, Mode, Scenario};
 
 /// The seed's split evaluation path: residual and Jacobian each
 /// recompute the exp/Lorentzian terms (the `LeastSquares` default).
@@ -138,6 +140,61 @@ fn main() {
         std::hint::black_box(max_min_rates(&topo, &routes));
     });
 
+    // ---- §13 DES backends: binary heap vs calendar wheel ----
+    harness::group("des schedule/pop, heap vs wheel (1e6 events)");
+    for (label, backend) in [
+        ("1e6 events, heap (BinaryHeap)", DesBackend::Heap),
+        ("1e6 events, wheel (calendar queue)", DesBackend::Wheel),
+    ] {
+        harness::bench(label, 1, 3, || {
+            let mut sched = Scheduler::<u32>::with_backend(backend);
+            let mut rng = xloop::util::Rng::new(0xD35);
+            for i in 0..1_000_000u32 {
+                sched.schedule_at(rng.f64() * 1e4, i);
+            }
+            while sched.pop().is_some() {}
+        });
+    }
+
+    // ---- §13 water-fill: from-scratch reference vs incremental ----
+    // tasks × 8 streaming flows each: 8 tasks = 64 flows, 64 = 512.
+    // The paper fabric is one shared route (a single contention
+    // component), so "incremental, cold" re-solves everything through
+    // the indexed path and "cached" is the steady-state no-change hit.
+    harness::group("water-fill re-solve, full vs incremental (64→512 flows)");
+    for &tasks in &[8usize, 64] {
+        let mut svc = TransferService::paper(1);
+        for i in 0..tasks {
+            let mut req = TransferRequest::split_even(
+                format!("bench-{i}"),
+                "slac#dtn".into(),
+                "alcf#dtn".into(),
+                64_000_000_000,
+                32,
+            );
+            req.concurrency = Some(8);
+            svc.submit_task(0.0, &req).unwrap();
+        }
+        // advance past every handshake so all windows stream
+        svc.advance_to(30.0);
+        let flows = tasks * 8;
+        harness::bench(
+            &format!("{flows} flows, full reference solve"),
+            2,
+            20,
+            || {
+                std::hint::black_box(svc.shared_stream_rates_reference());
+            },
+        );
+        harness::bench(&format!("{flows} flows, incremental, cold"), 2, 20, || {
+            svc.invalidate_rate_cache();
+            std::hint::black_box(svc.current_shared_rates());
+        });
+        harness::bench(&format!("{flows} flows, incremental, cached"), 2, 20, || {
+            std::hint::black_box(svc.current_shared_rates());
+        });
+    }
+
     // ---- PJRT paths: only with built artifacts ----
     let dir = default_artifacts_dir();
     if !dir.join("manifest.json").exists() {
@@ -218,4 +275,24 @@ fn main() {
     harness::bench("parse braggnn_meta.json", 100, 1000, || {
         std::hint::black_box(Json::parse(&meta_text).unwrap());
     });
+
+    // ---- §13 campaign scale: whole-engine users per wall-second ----
+    // Not a harness::bench (one shot per size is the honest number at
+    // this scale); printed in the `campaign-scale:` line format that
+    // scripts/parse_bench.py lifts into `users_per_wall_second`.
+    harness::group("campaign scale — users per wall-clock second");
+    let scenario = Scenario::table1("braggnn", Mode::RemoteCerebras).unwrap();
+    for users in [1_000usize, 10_000, 100_000] {
+        let cfg = CampaignConfig::new(users, scenario.clone(), 30.0, 42);
+        let start = std::time::Instant::now();
+        let rep = run_campaign(&cfg).unwrap();
+        let wall = start.elapsed().as_secs_f64();
+        println!(
+            "campaign-scale: {} users in {:.3} s = {:.1} users/s",
+            users,
+            wall,
+            users as f64 / wall.max(1e-9)
+        );
+        std::hint::black_box(rep);
+    }
 }

@@ -178,7 +178,18 @@ fn cmd_retrain(args: &[String]) -> Result<()> {
 
 fn cmd_campaign(args: &[String]) -> Result<()> {
     let opts = Options::new()
-        .opt("users", "8", "number of concurrent users")
+        .opt(
+            "users",
+            "8",
+            "number of concurrent users (scientific notation accepted, e.g. 1e6)",
+        )
+        .opt(
+            "shards",
+            "0",
+            "partition users across N parallel fabric shards (0 = auto: serial \
+             up to 4096 users, then one shard per 4096; reports are \
+             thread-count-invariant)",
+        )
         .opt("model", "braggnn", "model to retrain (braggnn|cookienetae)")
         .opt("mode", "remote-cerebras", "training mode")
         .opt(
@@ -256,7 +267,8 @@ fn cmd_campaign(args: &[String]) -> Result<()> {
         return Ok(());
     }
     let p = opts.parse(args).map_err(anyhow::Error::msg)?;
-    let users = p.get_usize("users")?.max(1);
+    let users = parse_count(p.get("users"))?.max(1);
+    let shards = parse_count(p.get("shards"))?;
     let seed = p.get_usize("seed")? as u64;
     let mode = Mode::parse(p.get("mode"))?;
     let scenario = Scenario::table1(p.get("model"), mode)?;
@@ -302,6 +314,7 @@ fn cmd_campaign(args: &[String]) -> Result<()> {
         cfg.mix = mix.clone();
         cfg.spot = spot.clone();
         cfg.checkpoint_every_s = checkpoint_every;
+        cfg.shards = shards;
         cfg
     };
 
@@ -321,7 +334,18 @@ fn cmd_campaign(args: &[String]) -> Result<()> {
         return campaign_load_sweep(p.get("loads"), users, &scenario, policy, &mk_cfg);
     }
 
+    let wall_start = std::time::Instant::now();
     let report = run_campaign(&mk_cfg(&scenario, mean, policy))?;
+    // the scale metric goes to stderr so stdout stays byte-diffable
+    // across runs and backends (the campaign-golden / campaign-scale
+    // CI jobs diff stdout only)
+    let wall = wall_start.elapsed().as_secs_f64();
+    eprintln!(
+        "campaign-scale: {} users in {:.3} s = {:.1} users/s",
+        users,
+        wall,
+        users as f64 / wall.max(1e-9)
+    );
 
     println!(
         "\nCampaign — {} user(s), {} / {}, mean inter-arrival {}\n",
@@ -407,6 +431,23 @@ fn cmd_campaign(args: &[String]) -> Result<()> {
         print_enriched_report(&report, prices.as_ref());
     }
     Ok(())
+}
+
+/// Parse a non-negative count, accepting scientific notation (`1e6`)
+/// for the stress sizes the scale study uses.
+fn parse_count(raw: &str) -> Result<usize> {
+    let raw = raw.trim();
+    if let Ok(n) = raw.parse::<usize>() {
+        return Ok(n);
+    }
+    let f: f64 = raw
+        .parse()
+        .map_err(|_| anyhow::anyhow!("bad count `{raw}` (want an integer or 1e6-style float)"))?;
+    anyhow::ensure!(
+        f.is_finite() && (0.0..=1e12).contains(&f) && f.fract() == 0.0,
+        "bad count `{raw}` (want a whole non-negative number)"
+    );
+    Ok(f as usize)
 }
 
 fn parse_priorities(spec: &str) -> Result<Vec<i64>> {
@@ -930,4 +971,22 @@ fn cmd_info() -> Result<()> {
         );
     }
     Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::parse_count;
+
+    #[test]
+    fn counts_parse_plain_and_scientific() {
+        assert_eq!(parse_count("8").unwrap(), 8);
+        assert_eq!(parse_count(" 20000 ").unwrap(), 20000);
+        assert_eq!(parse_count("1e6").unwrap(), 1_000_000);
+        assert_eq!(parse_count("2.5e3").unwrap(), 2500);
+        assert_eq!(parse_count("0").unwrap(), 0);
+        assert!(parse_count("1.5").is_err());
+        assert!(parse_count("-3").is_err());
+        assert!(parse_count("1e13").is_err());
+        assert!(parse_count("lots").is_err());
+    }
 }

@@ -1,13 +1,25 @@
-//! Discrete-event scheduler core (DESIGN.md §3).
+//! Discrete-event scheduler core (DESIGN.md §3, §13).
 //!
-//! A binary heap of timestamped events with deterministic tie-breaking:
-//! events scheduled for the same virtual instant fire in the order they
-//! were scheduled (a monotone sequence number breaks heap ties), so a
-//! multi-tenant simulation replays identically for a given seed no
-//! matter how the heap happens to rebalance. The scheduler owns the
-//! [`VClock`]; popping an event advances it, so time can never run
-//! backwards and no component needs write access to the clock to
-//! schedule future work.
+//! Timestamped events with deterministic tie-breaking: events scheduled
+//! for the same virtual instant fire in the order they were scheduled
+//! (a monotone sequence number breaks ties), so a multi-tenant
+//! simulation replays identically for a given seed no matter how the
+//! queue happens to rebalance. The scheduler owns the [`VClock`];
+//! popping an event advances it, so time can never run backwards and no
+//! component needs write access to the clock to schedule future work.
+//!
+//! Two queue backends sit behind the same API and the same `(time,
+//! seq)` total order (property-tested against each other below):
+//!
+//! * **Heap** — the original `BinaryHeap`, O(log n) per op. Default,
+//!   and bit-identical to every release since the DES landed.
+//! * **Wheel** — the [`super::wheel`] calendar queue, O(1) amortized.
+//!   What a `--users 1e6` campaign schedules its wake-ups on.
+//!
+//! Pick explicitly with [`Scheduler::with_backend`], or let
+//! [`Scheduler::for_load`] choose from the expected event count — with
+//! `XLOOP_DES=wheel|heap` in the environment overriding the heuristic
+//! (the CI byte-diff runs both backends over the same campaign).
 //!
 //! This is the substrate the campaign layer drives N concurrent flow
 //! runs on: flow wake-ups, faas queue starts/completions, and transfer
@@ -17,10 +29,38 @@ use std::cmp::Ordering;
 use std::collections::{BTreeSet, BinaryHeap};
 
 use super::clock::VClock;
+use super::wheel::Wheel;
+
+/// Above this expected event count [`Scheduler::for_load`] picks the
+/// wheel; below it the heap's constant factors win and its bytes are
+/// the historical default.
+pub const WHEEL_THRESHOLD: usize = 4096;
 
 /// Handle to a scheduled event (for cancellation).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
 pub struct EventId(u64);
+
+/// Queue backend selector (DESIGN.md §13).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DesBackend {
+    /// Binary heap: O(log n), the historical default.
+    Heap,
+    /// Calendar queue (`simnet::wheel`): O(1) amortized.
+    Wheel,
+}
+
+impl DesBackend {
+    /// Backend forced by `XLOOP_DES` (`wheel` | `heap`), if any. Unknown
+    /// values are ignored rather than fatal: a typo should not change
+    /// simulation semantics, only (possibly) miss a speedup.
+    pub fn from_env() -> Option<DesBackend> {
+        match std::env::var("XLOOP_DES").ok()?.to_ascii_lowercase().as_str() {
+            "wheel" => Some(DesBackend::Wheel),
+            "heap" => Some(DesBackend::Heap),
+            _ => None,
+        }
+    }
+}
 
 struct Entry<E> {
     time: f64,
@@ -50,10 +90,21 @@ impl<E> Ord for Entry<E> {
     }
 }
 
+enum Queue<E> {
+    Heap(BinaryHeap<Entry<E>>),
+    /// The wheel plus a one-slot stash: `peek_time` on a calendar queue
+    /// is destructive (the cursor sweeps), so the next live entry is
+    /// popped into the stash and served from there.
+    Wheel {
+        wheel: Wheel<E>,
+        stash: Option<(f64, u64, E)>,
+    },
+}
+
 /// Event-queue scheduler owning the virtual clock.
 pub struct Scheduler<E> {
     clock: VClock,
-    heap: BinaryHeap<Entry<E>>,
+    queue: Queue<E>,
     /// seqs of events scheduled but not yet fired or cancelled
     pending: BTreeSet<u64>,
     cancelled: BTreeSet<u64>,
@@ -67,13 +118,44 @@ impl<E> Default for Scheduler<E> {
 }
 
 impl<E> Scheduler<E> {
+    /// Heap-backed scheduler — the historical default.
     pub fn new() -> Scheduler<E> {
+        Scheduler::with_backend(DesBackend::Heap)
+    }
+
+    pub fn with_backend(backend: DesBackend) -> Scheduler<E> {
         Scheduler {
             clock: VClock::new(),
-            heap: BinaryHeap::new(),
+            queue: match backend {
+                DesBackend::Heap => Queue::Heap(BinaryHeap::new()),
+                DesBackend::Wheel => Queue::Wheel {
+                    wheel: Wheel::new(),
+                    stash: None,
+                },
+            },
             pending: BTreeSet::new(),
             cancelled: BTreeSet::new(),
             seq: 0,
+        }
+    }
+
+    /// Pick a backend from the expected total event count: the wheel
+    /// above [`WHEEL_THRESHOLD`], the heap below. `XLOOP_DES` overrides
+    /// the heuristic in either direction.
+    pub fn for_load(expected_events: usize) -> Scheduler<E> {
+        let backend = DesBackend::from_env().unwrap_or(if expected_events >= WHEEL_THRESHOLD {
+            DesBackend::Wheel
+        } else {
+            DesBackend::Heap
+        });
+        Scheduler::with_backend(backend)
+    }
+
+    /// Which backend this scheduler runs on.
+    pub fn backend(&self) -> DesBackend {
+        match self.queue {
+            Queue::Heap(_) => DesBackend::Heap,
+            Queue::Wheel { .. } => DesBackend::Wheel,
         }
     }
 
@@ -94,11 +176,22 @@ impl<E> Scheduler<E> {
             self.clock.now()
         );
         let id = EventId(self.seq);
-        self.heap.push(Entry {
-            time: t,
-            seq: self.seq,
-            payload,
-        });
+        match &mut self.queue {
+            Queue::Heap(heap) => heap.push(Entry {
+                time: t,
+                seq: self.seq,
+                payload,
+            }),
+            Queue::Wheel { wheel, stash } => {
+                // the stash was the minimum when it was popped; the new
+                // event may undercut it, so return it to the wheel and
+                // let the next peek/pop re-derive the minimum
+                if let Some((st, ss, sp)) = stash.take() {
+                    wheel.schedule(st, ss, sp);
+                }
+                wheel.schedule(t, self.seq, payload);
+            }
+        }
         self.pending.insert(self.seq);
         self.seq += 1;
         id
@@ -112,7 +205,8 @@ impl<E> Scheduler<E> {
 
     /// Cancel a scheduled event. Returns whether it was still pending
     /// (an already-fired or already-cancelled event is a no-op `false`).
-    /// Lazy deletion: the entry stays in the heap and is skipped at pop.
+    /// Lazy deletion: the entry stays in the queue and is skipped when
+    /// it surfaces.
     pub fn cancel(&mut self, id: EventId) -> bool {
         if !self.pending.remove(&id.0) {
             return false;
@@ -123,42 +217,94 @@ impl<E> Scheduler<E> {
 
     /// Time of the next (non-cancelled) event without popping it.
     pub fn peek_time(&mut self) -> Option<f64> {
-        self.skim_cancelled();
-        self.heap.peek().map(|e| e.time)
+        match self.backend() {
+            DesBackend::Heap => {
+                self.skim_cancelled();
+                let Queue::Heap(heap) = &self.queue else {
+                    unreachable!()
+                };
+                heap.peek().map(|e| e.time)
+            }
+            DesBackend::Wheel => {
+                self.fill_stash();
+                let Queue::Wheel { stash, .. } = &self.queue else {
+                    unreachable!()
+                };
+                stash.as_ref().map(|&(t, _, _)| t)
+            }
+        }
     }
 
     /// Pop the next event, advancing the clock to its time. `None` when
     /// the queue is empty.
     pub fn pop(&mut self) -> Option<(f64, E)> {
-        self.skim_cancelled();
-        let e = self.heap.pop()?;
-        self.pending.remove(&e.seq);
-        self.clock.advance_to(e.time);
-        Some((e.time, e.payload))
+        let (t, seq, payload) = match self.backend() {
+            DesBackend::Heap => {
+                self.skim_cancelled();
+                let Queue::Heap(heap) = &mut self.queue else {
+                    unreachable!()
+                };
+                let e = heap.pop()?;
+                (e.time, e.seq, e.payload)
+            }
+            DesBackend::Wheel => {
+                self.fill_stash();
+                let Queue::Wheel { stash, .. } = &mut self.queue else {
+                    unreachable!()
+                };
+                stash.take()?
+            }
+        };
+        self.pending.remove(&seq);
+        self.clock.advance_to(t);
+        Some((t, payload))
     }
 
-    pub fn is_empty(&mut self) -> bool {
-        self.skim_cancelled();
-        self.heap.is_empty()
+    pub fn is_empty(&self) -> bool {
+        self.pending.is_empty()
     }
 
-    pub fn len(&mut self) -> usize {
-        // cancelled tombstones may linger deeper in the heap; only the
-        // top is guaranteed live, so count conservatively
-        self.skim_cancelled();
-        self.heap.len() - self
-            .heap
-            .iter()
-            .filter(|e| self.cancelled.contains(&e.seq))
-            .count()
+    /// Live (scheduled, neither fired nor cancelled) event count. Exact:
+    /// cancelled tombstones linger inside the queues but are tracked out
+    /// of `pending` the moment they are cancelled.
+    pub fn len(&self) -> usize {
+        self.pending.len()
     }
 
+    /// Heap backend only: drop cancelled entries off the top.
     fn skim_cancelled(&mut self) {
-        while let Some(e) = self.heap.peek() {
+        let Queue::Heap(heap) = &mut self.queue else {
+            return;
+        };
+        while let Some(e) = heap.peek() {
             if self.cancelled.remove(&e.seq) {
-                self.heap.pop();
+                heap.pop();
             } else {
                 break;
+            }
+        }
+    }
+
+    /// Wheel backend only: pop live entries into the stash, discarding
+    /// cancelled ones as they surface.
+    fn fill_stash(&mut self) {
+        let Queue::Wheel { wheel, stash } = &mut self.queue else {
+            return;
+        };
+        // the stash itself may have been cancelled since it was filled
+        if let Some((_, seq, _)) = stash {
+            if self.cancelled.remove(seq) {
+                *stash = None;
+            }
+        }
+        while stash.is_none() {
+            match wheel.pop_min() {
+                None => break,
+                Some((t, seq, payload)) => {
+                    if !self.cancelled.remove(&seq) {
+                        *stash = Some((t, seq, payload));
+                    }
+                }
             }
         }
     }
@@ -167,6 +313,7 @@ impl<E> Scheduler<E> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::Rng;
 
     #[test]
     fn pops_in_time_order_and_advances_clock() {
@@ -248,28 +395,118 @@ mod tests {
     fn interleaved_schedule_and_pop_stays_deterministic() {
         // two "processes" scheduling reactively: the trace must be the
         // same every run (exercise the seq tie-break under rebalancing)
-        let mut trace = Vec::new();
-        let mut s = Scheduler::new();
-        s.schedule_at(0.0, (0u32, 0u32));
-        s.schedule_at(0.0, (1, 0));
-        while let Some((t, (proc_id, step))) = s.pop() {
-            trace.push((t, proc_id, step));
-            if step < 3 {
-                s.schedule_after(if proc_id == 0 { 1.0 } else { 1.5 }, (proc_id, step + 1));
+        for backend in [DesBackend::Heap, DesBackend::Wheel] {
+            let mut trace = Vec::new();
+            let mut s = Scheduler::with_backend(backend);
+            s.schedule_at(0.0, (0u32, 0u32));
+            s.schedule_at(0.0, (1, 0));
+            while let Some((t, (proc_id, step))) = s.pop() {
+                trace.push((t, proc_id, step));
+                if step < 3 {
+                    s.schedule_after(if proc_id == 0 { 1.0 } else { 1.5 }, (proc_id, step + 1));
+                }
             }
+            assert_eq!(
+                trace,
+                vec![
+                    (0.0, 0, 0),
+                    (0.0, 1, 0),
+                    (1.0, 0, 1),
+                    (1.5, 1, 1),
+                    (2.0, 0, 2),
+                    (3.0, 1, 2), // scheduled (at t=1.5) before (0,3) was (t=2.0)
+                    (3.0, 0, 3),
+                    (4.5, 1, 3),
+                ],
+                "backend {backend:?}"
+            );
         }
+    }
+
+    #[test]
+    fn wheel_scheduler_passes_the_heap_contract_suite() {
+        // the fixed-scenario tests above run on the default heap; rerun
+        // the cancellation contract on the wheel explicitly
+        let mut s = Scheduler::with_backend(DesBackend::Wheel);
+        let a = s.schedule_at(1.0, "a");
+        let b = s.schedule_at(2.0, "b");
+        s.schedule_at(2.0, "c");
+        assert!(s.cancel(a));
+        assert!(!s.cancel(a));
+        assert_eq!(s.len(), 2);
+        assert_eq!(s.peek_time(), Some(2.0));
+        // cancel an event that is already sitting in the peek stash
+        assert!(s.cancel(b));
+        assert_eq!(s.pop(), Some((2.0, "c")));
+        assert_eq!(s.pop(), None);
+        assert!(s.is_empty());
+    }
+
+    /// The tentpole equivalence pin: drive a heap scheduler and a wheel
+    /// scheduler through the same randomized op sequence — schedules on
+    /// a coarse grid (forcing exact same-instant ties), interleaved
+    /// cancellations (including of already-fired events), peeks, and
+    /// pops — and require identical traces, ids, lens, and clocks.
+    #[test]
+    fn wheel_matches_heap_on_randomized_schedules() {
+        for seed in 0..12u64 {
+            let mut rng = Rng::new(0xD35C_0DE5 ^ seed);
+            let mut heap = Scheduler::with_backend(DesBackend::Heap);
+            let mut wheel = Scheduler::with_backend(DesBackend::Wheel);
+            let mut ids: Vec<(EventId, EventId)> = Vec::new();
+            let mut tag = 0u32;
+            for _ in 0..3000 {
+                match rng.below(10) {
+                    // schedule (grid times so distinct ops collide exactly)
+                    0..=4 => {
+                        let dt = rng.below(64) as f64 * 0.25;
+                        let t = heap.now() + dt;
+                        let ih = heap.schedule_at(t, tag);
+                        let iw = wheel.schedule_at(t, tag);
+                        assert_eq!(ih, iw);
+                        ids.push((ih, iw));
+                        tag += 1;
+                    }
+                    // cancel a random (possibly fired) id
+                    5..=6 => {
+                        if !ids.is_empty() {
+                            let (ih, iw) = ids[rng.below(ids.len())];
+                            assert_eq!(heap.cancel(ih), wheel.cancel(iw));
+                        }
+                    }
+                    // peek
+                    7 => assert_eq!(heap.peek_time(), wheel.peek_time()),
+                    // pop
+                    _ => {
+                        assert_eq!(heap.pop(), wheel.pop());
+                        assert_eq!(heap.now(), wheel.now());
+                    }
+                }
+                assert_eq!(heap.len(), wheel.len());
+            }
+            // drain both to the end
+            loop {
+                let (h, w) = (heap.pop(), wheel.pop());
+                assert_eq!(h, w);
+                if h.is_none() {
+                    break;
+                }
+            }
+            assert!(heap.is_empty() && wheel.is_empty());
+        }
+    }
+
+    #[test]
+    fn for_load_heuristic_picks_by_event_count() {
+        // NOTE: asserts the heuristic, so it must not run with XLOOP_DES
+        // set — the CI determinism matrix leaves it unset.
+        if std::env::var("XLOOP_DES").is_ok() {
+            return;
+        }
+        assert_eq!(Scheduler::<()>::for_load(8).backend(), DesBackend::Heap);
         assert_eq!(
-            trace,
-            vec![
-                (0.0, 0, 0),
-                (0.0, 1, 0),
-                (1.0, 0, 1),
-                (1.5, 1, 1),
-                (2.0, 0, 2),
-                (3.0, 1, 2), // scheduled (at t=1.5) before (0,3) was (t=2.0)
-                (3.0, 0, 3),
-                (4.5, 1, 3),
-            ]
+            Scheduler::<()>::for_load(WHEEL_THRESHOLD).backend(),
+            DesBackend::Wheel
         );
     }
 }

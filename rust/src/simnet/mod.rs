@@ -12,9 +12,10 @@ pub mod des;
 pub mod fault;
 pub mod fluid;
 pub mod topology;
+pub mod wheel;
 
 pub use clock::{VClock, VSpan};
-pub use des::{EventId, Scheduler};
+pub use des::{DesBackend, EventId, Scheduler, WHEEL_THRESHOLD};
 pub use fault::{EndpointOutage, FaultModel, FaultPlan, WanDegradation};
 pub use fluid::{max_min_rates, simulate, FlowResult, FlowSpec};
 pub use topology::{Facility, FacilityId, Link, LinkId, Topology, GBPS};

@@ -1,0 +1,276 @@
+//! Calendar-queue event backend (DESIGN.md §13).
+//!
+//! A classic Brown calendar queue: one "year" of fixed-width time
+//! buckets, a virtual-bucket cursor (`epoch`) that sweeps forward, and
+//! entries hashed into `bucket = vk % n_buckets` where
+//! `vk = floor(time / width)`. Schedule is an O(1) push; pop scans the
+//! cursor bucket for entries belonging to the current epoch and takes
+//! the `(time, seq)` minimum, advancing the cursor over empty buckets.
+//! With the width resized to track the mean inter-event gap the queue
+//! holds ~one live event per bucket, making both operations O(1)
+//! amortized — against O(log n) for the binary heap — which is what a
+//! million-user campaign needs from its wake-up queue.
+//!
+//! Correctness invariant: **every stored entry has `vk >= epoch`.**
+//! Pop preserves it by construction (it only advances `epoch` past
+//! buckets holding no current-epoch entry); schedule restores it by
+//! rewinding `epoch` when a new entry lands earlier than the cursor
+//! (legal: the cursor may have swept ahead of wall-clock `now` while
+//! scanning toward a far-future event). Bucket membership and epoch
+//! eligibility use the *identical* float expression
+//! `(t / width).floor()`, so an entry can never be hashed into a bucket
+//! the eligibility test disagrees with.
+//!
+//! The wheel stores raw `(time, seq, payload)` triples; cancellation
+//! bookkeeping (the pending/cancelled sets) stays in
+//! [`super::des::Scheduler`], which lazily discards cancelled seqs as
+//! they surface. Total order popped: ascending `(time, seq)` — the
+//! exact tie-break contract of the heap backend, property-tested
+//! against it in `simnet::des`.
+
+/// Smallest bucket count; also the grow/shrink floor.
+const MIN_BUCKETS: usize = 16;
+/// Gap samples taken when re-picking the bucket width on resize.
+const WIDTH_SAMPLES: usize = 64;
+
+struct Entry<E> {
+    time: f64,
+    seq: u64,
+    payload: E,
+}
+
+pub(crate) struct Wheel<E> {
+    buckets: Vec<Vec<Entry<E>>>,
+    /// bucket width in virtual seconds (> 0)
+    width: f64,
+    /// virtual bucket cursor: no stored entry has `vk < epoch`
+    epoch: u64,
+    len: usize,
+}
+
+impl<E> Wheel<E> {
+    pub(crate) fn new() -> Wheel<E> {
+        Wheel {
+            buckets: (0..MIN_BUCKETS).map(|_| Vec::new()).collect(),
+            width: 1.0,
+            epoch: 0,
+            len: 0,
+        }
+    }
+
+    pub(crate) fn len(&self) -> usize {
+        self.len
+    }
+
+    /// Virtual bucket index of a timestamp. Times are clamped at zero:
+    /// the scheduler's clock starts non-negative and never runs
+    /// backwards, so negative times cannot reach us, but a clamp is
+    /// cheaper than an unreachable panic path.
+    #[inline]
+    fn vk(&self, t: f64) -> u64 {
+        (t.max(0.0) / self.width).floor() as u64
+    }
+
+    pub(crate) fn schedule(&mut self, time: f64, seq: u64, payload: E) {
+        if self.len >= self.buckets.len() * 2 {
+            self.resize(self.buckets.len() * 2);
+        }
+        let vk = self.vk(time);
+        // restore the invariant if the cursor swept past this slot
+        if vk < self.epoch {
+            self.epoch = vk;
+        }
+        let n = self.buckets.len() as u64;
+        self.buckets[(vk % n) as usize].push(Entry { time, seq, payload });
+        self.len += 1;
+    }
+
+    /// Remove and return the globally minimum `(time, seq)` entry.
+    pub(crate) fn pop_min(&mut self) -> Option<(f64, u64, E)> {
+        if self.len == 0 {
+            return None;
+        }
+        let n = self.buckets.len() as u64;
+        let mut scanned = 0u64;
+        loop {
+            let b = (self.epoch % n) as usize;
+            let mut best: Option<usize> = None;
+            for (i, e) in self.buckets[b].iter().enumerate() {
+                if self.vk(e.time) != self.epoch {
+                    continue; // a collision from a later revolution
+                }
+                best = Some(match best {
+                    None => i,
+                    Some(j) => {
+                        let bj = &self.buckets[b][j];
+                        if e.time.total_cmp(&bj.time).then(e.seq.cmp(&bj.seq)).is_lt() {
+                            i
+                        } else {
+                            j
+                        }
+                    }
+                });
+            }
+            if let Some(i) = best {
+                return Some(self.take(b, i));
+            }
+            // empty virtual bucket: commit the cursor forward (this is
+            // where the O(1) amortization comes from — each empty bucket
+            // is crossed once, not re-scanned on every pop)
+            self.epoch += 1;
+            scanned += 1;
+            if scanned >= n {
+                // a full revolution without a hit: the next event is more
+                // than a year ahead of the cursor. Jump straight to it.
+                return Some(self.pop_global_min());
+            }
+        }
+    }
+
+    /// Fallback for sparse far-future schedules: linear scan of every
+    /// bucket for the global `(time, seq)` minimum, jumping the cursor
+    /// to its epoch. O(n + len), amortized away by the resize policy.
+    fn pop_global_min(&mut self) -> (f64, u64, E) {
+        debug_assert!(self.len > 0);
+        let mut at: Option<(usize, usize)> = None;
+        for (b, bucket) in self.buckets.iter().enumerate() {
+            for (i, e) in bucket.iter().enumerate() {
+                let better = match at {
+                    None => true,
+                    Some((pb, pi)) => {
+                        let p = &self.buckets[pb][pi];
+                        e.time.total_cmp(&p.time).then(e.seq.cmp(&p.seq)).is_lt()
+                    }
+                };
+                if better {
+                    at = Some((b, i));
+                }
+            }
+        }
+        let (b, i) = at.expect("non-empty wheel has a minimum");
+        self.epoch = self.vk(self.buckets[b][i].time);
+        self.take(b, i)
+    }
+
+    fn take(&mut self, bucket: usize, i: usize) -> (f64, u64, E) {
+        let e = self.buckets[bucket].swap_remove(i);
+        self.len -= 1;
+        if self.len < self.buckets.len() / 4 && self.buckets.len() > MIN_BUCKETS {
+            self.resize((self.buckets.len() / 2).max(MIN_BUCKETS));
+        }
+        (e.time, e.seq, e.payload)
+    }
+
+    /// Rebuild with `n_new` buckets, re-picking the width from the mean
+    /// gap of a sample of stored times so occupancy stays ~1 per bucket.
+    fn resize(&mut self, n_new: usize) {
+        let entries: Vec<Entry<E>> = self.buckets.iter_mut().flat_map(std::mem::take).collect();
+        if let Some(w) = sample_width(&entries) {
+            self.width = w;
+        }
+        self.buckets = (0..n_new).map(|_| Vec::new()).collect();
+        // the cursor currently points at time ~ epoch * old_width; with a
+        // new width the cheapest correct cursor is the minimum stored vk
+        // (pop only requires that no entry precede the cursor)
+        self.epoch = entries.iter().map(|e| self.vk(e.time)).min().unwrap_or(0);
+        let n = n_new as u64;
+        for e in entries {
+            let vk = self.vk(e.time);
+            self.buckets[(vk % n) as usize].push(e);
+        }
+    }
+}
+
+/// Mean positive gap between up-to-[`WIDTH_SAMPLES`] sorted sampled
+/// times, clamped to a sane range. `None` when the sample carries no
+/// signal (fewer than two distinct times).
+fn sample_width<E>(entries: &[Entry<E>]) -> Option<f64> {
+    if entries.len() < 2 {
+        return None;
+    }
+    let stride = (entries.len() / WIDTH_SAMPLES).max(1);
+    let mut times: Vec<f64> = entries.iter().step_by(stride).map(|e| e.time).collect();
+    times.sort_by(f64::total_cmp);
+    let gaps: Vec<f64> = times.windows(2).map(|w| w[1] - w[0]).filter(|&g| g > 0.0).collect();
+    if gaps.is_empty() {
+        return None;
+    }
+    let mean = gaps.iter().sum::<f64>() / gaps.len() as f64;
+    // classic calendar-queue practice: a bucket spans a few mean gaps
+    Some((mean * 2.0).clamp(1e-6, 1e9))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn drain(w: &mut Wheel<u32>) -> Vec<(f64, u64)> {
+        let mut out = Vec::new();
+        while let Some((t, s, _)) = w.pop_min() {
+            out.push((t, s));
+        }
+        out
+    }
+
+    #[test]
+    fn pops_in_time_then_seq_order() {
+        let mut w = Wheel::new();
+        w.schedule(3.0, 0, 0);
+        w.schedule(1.0, 1, 0);
+        w.schedule(1.0, 2, 0);
+        w.schedule(0.5, 3, 0);
+        assert_eq!(drain(&mut w), vec![(0.5, 3), (1.0, 1), (1.0, 2), (3.0, 0)]);
+        assert_eq!(w.len(), 0);
+    }
+
+    #[test]
+    fn far_future_event_found_via_global_fallback() {
+        let mut w = Wheel::new();
+        // more than a full revolution (16 buckets * 1 s) ahead
+        w.schedule(1e7, 0, 7);
+        assert_eq!(w.pop_min(), Some((1e7, 0, 7)));
+    }
+
+    #[test]
+    fn schedule_behind_swept_cursor_is_still_found() {
+        let mut w = Wheel::new();
+        // sweep the cursor far forward by popping a far-future event
+        w.schedule(1000.0, 0, 0);
+        assert!(w.pop_min().is_some());
+        // a later schedule into an earlier virtual bucket (legal: the
+        // >= now guard is the Scheduler's business, and `peek_time` can
+        // sweep the cursor past `now`) must rewind the cursor so the
+        // entry stays visible
+        w.schedule(500.0, 1, 1);
+        w.schedule(1000.5, 2, 2);
+        assert_eq!(w.epoch, 500);
+        assert_eq!(drain(&mut w), vec![(500.0, 1), (1000.5, 2)]);
+    }
+
+    #[test]
+    fn grows_and_shrinks_through_resize() {
+        let mut w = Wheel::new();
+        for i in 0..4096u64 {
+            w.schedule(i as f64 * 0.125, i, i as u32);
+        }
+        assert!(w.buckets.len() > MIN_BUCKETS);
+        let order = drain(&mut w);
+        assert_eq!(order.len(), 4096);
+        assert!(order.windows(2).all(|p| p[0] <= p[1]), "out of order");
+        assert_eq!(w.buckets.len(), MIN_BUCKETS);
+    }
+
+    #[test]
+    fn identical_times_resize_without_width_signal() {
+        // all-equal times give sample_width nothing; the resize must
+        // keep the old width and stay correct
+        let mut w = Wheel::new();
+        for i in 0..256u64 {
+            w.schedule(42.0, i, 0);
+        }
+        let order = drain(&mut w);
+        assert_eq!(order.first(), Some(&(42.0, 0)));
+        assert_eq!(order.last(), Some(&(42.0, 255)));
+        assert!(order.windows(2).all(|p| p[0].1 < p[1].1));
+    }
+}

@@ -115,6 +115,9 @@ struct TaskSim {
     retried_bytes: u64,
     /// final completion event (data_end + detect) consumed
     delivered: bool,
+    /// interned shared cap keys in route order (read, WAN links, write);
+    /// resolved once at submit, empty on the synchronous `execute` path
+    cap_keys: Vec<usize>,
 }
 
 impl TaskSim {
@@ -181,6 +184,7 @@ impl TaskSim {
             done: 0,
             retried_bytes: 0,
             delivered: false,
+            cap_keys: Vec::new(),
         })
     }
 
@@ -399,12 +403,114 @@ struct ActiveTask {
 
 /// Abstract capacity a stream consumes: WAN links, endpoint storage, and
 /// its own TCP window — the link set the shared water-filling runs over.
+/// Used by the reference solver
+/// ([`TransferService::shared_stream_rates_reference`]); the production
+/// solver works on interned integer ids instead (see [`KeyInterner`]).
 #[derive(Debug, Clone, PartialEq, Eq, PartialOrd, Ord)]
 enum CapKey {
     Wan(usize),
     Read(String),
     Write(String),
     Stream(usize, usize),
+}
+
+/// A shared capacity dimension, interned to a small integer id once per
+/// task submit (DESIGN.md §13). The derive order (Wan < Read < Write)
+/// mirrors [`CapKey`] minus the per-stream window keys, which always
+/// sort after every shared key — the indexed solver iterates candidates
+/// in exactly the reference order, so its bottleneck tie-breaks (and
+/// therefore its f64 outputs) are bit-identical.
+#[derive(Debug, Clone, PartialEq, Eq, PartialOrd, Ord)]
+enum KeyKind {
+    Wan(usize),
+    Read(String),
+    Write(String),
+}
+
+/// String→id interner for shared cap keys: the water-fill hot loop
+/// compares and copies `usize` ids instead of cloning `String`s (the
+/// satellite perf fix), and the ids index the per-key flow counters the
+/// incremental solver maintains. Each id's static capacity (unscaled by
+/// WAN brownouts) is stored alongside; ids are dense and stable for the
+/// life of the service.
+#[derive(Default)]
+struct KeyInterner {
+    kinds: Vec<KeyKind>,
+    caps: Vec<f64>,
+    index: std::collections::BTreeMap<KeyKind, usize>,
+}
+
+impl KeyInterner {
+    fn intern(&mut self, kind: KeyKind, cap: f64) -> usize {
+        if let Some(&id) = self.index.get(&kind) {
+            return id;
+        }
+        let id = self.kinds.len();
+        self.kinds.push(kind.clone());
+        self.caps.push(cap);
+        self.index.insert(kind, id);
+        id
+    }
+
+    fn len(&self) -> usize {
+        self.kinds.len()
+    }
+
+    fn is_wan(&self, id: usize) -> bool {
+        matches!(self.kinds[id], KeyKind::Wan(_))
+    }
+}
+
+/// Path-compressing union-find over interned key ids: tasks sharing any
+/// capacity dimension land in one contention component, and only the
+/// components a join/leave/stream-edge perturbs re-solve.
+struct UnionFind {
+    parent: Vec<usize>,
+}
+
+impl UnionFind {
+    fn new(n: usize) -> UnionFind {
+        UnionFind {
+            parent: (0..n).collect(),
+        }
+    }
+
+    fn find(&mut self, x: usize) -> usize {
+        let mut r = x;
+        while self.parent[r] != r {
+            r = self.parent[r];
+        }
+        let mut c = x;
+        while self.parent[c] != r {
+            let next = self.parent[c];
+            self.parent[c] = r;
+            c = next;
+        }
+        r
+    }
+
+    fn union(&mut self, a: usize, b: usize) {
+        let (ra, rb) = (self.find(a), self.find(b));
+        if ra != rb {
+            self.parent[ra.max(rb)] = ra.min(rb);
+        }
+    }
+}
+
+/// Per-task allocation from the last shared solve, keyed by task handle
+/// so it survives `active` index shifts. A component none of whose keys
+/// were perturbed since this snapshot reuses these rates verbatim.
+struct RateCache {
+    wan_factor: f64,
+    tasks: std::collections::BTreeMap<u64, CachedTask>,
+}
+
+struct CachedTask {
+    ns: usize,
+    rate: f64,
+    /// the task's interned shared keys — kept so a departure can dirty
+    /// the component it used to belong to
+    keys: Vec<usize>,
 }
 
 /// The service itself. One instance simulates one fabric.
@@ -420,6 +526,10 @@ pub struct TransferService {
     /// window (DESIGN.md §9): every WAN link's capacity is scaled by
     /// this while the fabric advances. 1.0 = healthy.
     wan_factor: f64,
+    /// shared-cap-key interner for the indexed water-fill (DESIGN.md §13)
+    interner: KeyInterner,
+    /// last shared solve, reused for unperturbed contention components
+    rate_cache: Option<RateCache>,
 }
 
 impl TransferService {
@@ -433,6 +543,8 @@ impl TransferService {
             active: Vec::new(),
             next_handle: 1,
             wan_factor: 1.0,
+            interner: KeyInterner::default(),
+            rate_cache: None,
         }
     }
 
@@ -446,6 +558,10 @@ impl TransferService {
             factor > 0.0 && factor <= 1.0 && factor.is_finite(),
             "wan factor must be in (0, 1], got {factor}"
         );
+        if factor != self.wan_factor {
+            // every WAN cap changes: no cached component survives
+            self.rate_cache = None;
+        }
         self.wan_factor = factor;
     }
 
@@ -484,7 +600,8 @@ impl TransferService {
     /// It advances (sharing bandwidth with every other active task) as
     /// the fabric is driven through `advance_to`.
     pub fn submit_task(&mut self, now: f64, req: &TransferRequest) -> Result<TransferHandle> {
-        let sim = TaskSim::new(self, now, req)?;
+        let mut sim = TaskSim::new(self, now, req)?;
+        sim.cap_keys = self.intern_task_keys(&sim);
         let handle = TransferHandle(self.next_handle);
         self.next_handle += 1;
         self.active.push(ActiveTask {
@@ -492,6 +609,27 @@ impl TransferService {
             sim,
         });
         Ok(handle)
+    }
+
+    /// Resolve a task's shared cap keys (endpoint id strings, route
+    /// links) to interned ids, in route order: read, WAN links, write.
+    /// This is the only place strings are touched — every later solve
+    /// works on the integer ids.
+    fn intern_task_keys(&mut self, sim: &TaskSim) -> Vec<usize> {
+        let mut keys = Vec::with_capacity(sim.route.len() + 2);
+        keys.push(
+            self.interner
+                .intern(KeyKind::Read(sim.req.src.0.clone()), sim.read_bps),
+        );
+        for &l in &sim.route {
+            let cap = self.topo.link(l).capacity_bps;
+            keys.push(self.interner.intern(KeyKind::Wan(l.0), cap));
+        }
+        keys.push(
+            self.interner
+                .intern(KeyKind::Write(sim.req.dst.0.clone()), sim.write_bps),
+        );
+        keys
     }
 
     /// Number of tasks currently in flight on the fabric.
@@ -508,7 +646,7 @@ impl TransferService {
     /// whose scaled link caps the cached solo aggregate cannot see),
     /// every streaming slot becomes a flow in a max-min fair water-fill
     /// over WAN links, shared storage, and per-stream window caps.
-    fn current_rates(&self) -> Vec<f64> {
+    fn current_rates(&mut self) -> Vec<f64> {
         if self.active.len() == 1 && self.wan_factor == 1.0 {
             let sim = &self.active[0].sim;
             let ns = sim.n_streaming();
@@ -522,7 +660,248 @@ impl TransferService {
         self.shared_stream_rates()
     }
 
-    fn shared_stream_rates(&self) -> Vec<f64> {
+    /// Production shared solve (DESIGN.md §13): incremental, component-
+    /// scoped, and indexed. Per-key unfixed-flow counters and a
+    /// route→key incidence index replace the reference solver's
+    /// per-round `contains` scans, and connected components of the
+    /// contention graph that no join/leave/stream-edge has perturbed
+    /// since the last solve keep their cached rates untouched.
+    ///
+    /// Bit-identical to [`Self::shared_stream_rates_reference`] — the
+    /// per-component bottleneck sequence is the reference's global
+    /// sequence restricted to the component (fixes in one component
+    /// never touch another's caps), and every arithmetic step runs on
+    /// identical values in identical order. Pinned on randomized
+    /// fabrics by `incremental_matches_reference_on_randomized_fabrics`.
+    fn shared_stream_rates(&mut self) -> Vec<f64> {
+        let n = self.active.len();
+        let ns: Vec<usize> = self.active.iter().map(|a| a.sim.n_streaming()).collect();
+
+        let mut cache = match self.rate_cache.take() {
+            Some(c) if c.wan_factor == self.wan_factor => c,
+            _ => RateCache {
+                wan_factor: self.wan_factor,
+                tasks: Default::default(),
+            },
+        };
+
+        // keys perturbed since the cached solve: departures (cache
+        // remembers the dead task's keys), joins, stream-count edges
+        let mut dirty_keys: std::collections::BTreeSet<usize> = Default::default();
+        let live: std::collections::BTreeSet<u64> =
+            self.active.iter().map(|a| a.handle).collect();
+        cache.tasks.retain(|h, ct| {
+            let keep = live.contains(h);
+            if !keep {
+                dirty_keys.extend(ct.keys.iter().copied());
+            }
+            keep
+        });
+        for (i, a) in self.active.iter().enumerate() {
+            match cache.tasks.get(&a.handle) {
+                Some(ct) if ct.ns == ns[i] => {}
+                _ => dirty_keys.extend(a.sim.cap_keys.iter().copied()),
+            }
+        }
+
+        // contention components over interned keys (streaming tasks
+        // only — a task with nothing in flight contributes no flows,
+        // exactly like the reference solver's `continue`)
+        let mut uf = UnionFind::new(self.interner.len());
+        for (i, a) in self.active.iter().enumerate() {
+            if ns[i] == 0 {
+                continue;
+            }
+            for w in a.sim.cap_keys.windows(2) {
+                uf.union(w[0], w[1]);
+            }
+        }
+        let mut comp_tasks: std::collections::BTreeMap<usize, Vec<usize>> = Default::default();
+        for (i, a) in self.active.iter().enumerate() {
+            if ns[i] > 0 {
+                comp_tasks
+                    .entry(uf.find(a.sim.cap_keys[0]))
+                    .or_default()
+                    .push(i);
+            }
+        }
+        let dirty_roots: std::collections::BTreeSet<usize> =
+            dirty_keys.iter().map(|&k| uf.find(k)).collect();
+
+        let mut per_task = vec![0.0; n];
+        for (&root, tasks) in &comp_tasks {
+            if dirty_roots.contains(&root) {
+                for (ti, rate) in self.solve_component(tasks, &ns) {
+                    per_task[ti] = rate;
+                }
+            } else {
+                for &ti in tasks {
+                    per_task[ti] = cache.tasks[&self.active[ti].handle].rate;
+                }
+            }
+        }
+
+        // refresh the cache (keys clone once per task lifetime)
+        for (i, a) in self.active.iter().enumerate() {
+            cache
+                .tasks
+                .entry(a.handle)
+                .and_modify(|ct| {
+                    ct.ns = ns[i];
+                    ct.rate = per_task[i];
+                })
+                .or_insert_with(|| CachedTask {
+                    ns: ns[i],
+                    rate: per_task[i],
+                    keys: a.sim.cap_keys.clone(),
+                });
+        }
+        self.rate_cache = Some(cache);
+        per_task
+    }
+
+    /// Water-fill one contention component, restricted to `tasks`
+    /// (ascending `active` indices). Returns `(task index, per-stream
+    /// rate)` pairs, reporting each task's **last** stream — the
+    /// reference solver's `per_task[ti] = rates[fi]` overwrite order.
+    ///
+    /// Candidate order replicates the reference `BTreeMap` exactly:
+    /// shared keys in `CapKey` order first, then stream-window keys in
+    /// flow order. An unfixed stream's window cap is never subtracted
+    /// from (no other flow crosses it), so the stream candidate is
+    /// always `per_flow_cap_bps` at the first unfixed flow; it wins a
+    /// round only on strict `<`, just as a later `BTreeMap` key only
+    /// displaces the incumbent on strict `<`.
+    fn solve_component(&self, tasks: &[usize], ns: &[usize]) -> Vec<(usize, f64)> {
+        // component key set, iterated in reference (CapKey) order
+        let mut key_ids: Vec<usize> = tasks
+            .iter()
+            .flat_map(|&ti| self.active[ti].sim.cap_keys.iter().copied())
+            .collect();
+        key_ids.sort_unstable();
+        key_ids.dedup();
+        key_ids.sort_by(|&a, &b| self.interner.kinds[a].cmp(&self.interner.kinds[b]));
+        let local: std::collections::BTreeMap<usize, usize> =
+            key_ids.iter().enumerate().map(|(li, &k)| (k, li)).collect();
+
+        let nk = key_ids.len();
+        let mut caps: Vec<f64> = key_ids
+            .iter()
+            .map(|&k| {
+                let c = self.interner.caps[k];
+                if self.interner.is_wan(k) {
+                    c * self.wan_factor
+                } else {
+                    c
+                }
+            })
+            .collect();
+        let mut alive = vec![true; nk];
+
+        // per-task local routes (route order: read, WAN links, write)
+        // and per-key unfixed-flow counters
+        let routes: Vec<Vec<usize>> = tasks
+            .iter()
+            .map(|&ti| {
+                self.active[ti].sim.cap_keys.iter().map(|k| local[k]).collect()
+            })
+            .collect();
+        let mut users = vec![0usize; nk];
+        for (ci, &ti) in tasks.iter().enumerate() {
+            for &lk in &routes[ci] {
+                users[lk] += ns[ti];
+            }
+        }
+
+        // flows in reference order: tasks ascending, streams ascending;
+        // flows of one task are contiguous
+        let mut flow_range = Vec::with_capacity(tasks.len());
+        let mut flow_task = Vec::new();
+        let mut nf = 0usize;
+        for (ci, &ti) in tasks.iter().enumerate() {
+            flow_range.push((nf, nf + ns[ti]));
+            flow_task.extend(std::iter::repeat_n(ci, ns[ti]));
+            nf += ns[ti];
+        }
+        let mut fixed = vec![false; nf];
+        let mut rates = vec![0.0f64; nf];
+        let mut unfixed = nf;
+        let mut first_unfixed = 0usize;
+        let window = self.params.per_flow_cap_bps;
+
+        while unfixed > 0 {
+            let mut best: Option<(usize, f64)> = None; // (local key, share)
+            for lk in 0..nk {
+                if !alive[lk] || users[lk] == 0 {
+                    continue;
+                }
+                let share = caps[lk] / users[lk] as f64;
+                if best.map(|(_, s)| share < s).unwrap_or(true) {
+                    best = Some((lk, share));
+                }
+            }
+            while first_unfixed < nf && fixed[first_unfixed] {
+                first_unfixed += 1;
+            }
+            let stream_wins = match best {
+                Some((_, s)) => window < s,
+                None => true,
+            };
+            if stream_wins {
+                // the bottleneck is one stream's own window: fix exactly
+                // that flow, like the reference fixing the single flow
+                // crossing a `Stream` key
+                let f = first_unfixed;
+                let ci = flow_task[f];
+                rates[f] = window;
+                for &lk in &routes[ci] {
+                    if alive[lk] {
+                        caps[lk] = (caps[lk] - window).max(0.0);
+                    }
+                    users[lk] -= 1;
+                }
+                fixed[f] = true;
+                unfixed -= 1;
+            } else {
+                let (bk, share) = best.unwrap();
+                // fix every unfixed flow crossing the bottleneck, in
+                // flow order, subtracting sequentially per flow exactly
+                // like the reference's fixed-flow loop
+                for (ci, &(s, e)) in flow_range.iter().enumerate() {
+                    if !routes[ci].contains(&bk) {
+                        continue;
+                    }
+                    for f in s..e {
+                        if fixed[f] {
+                            continue;
+                        }
+                        rates[f] = share;
+                        for &lk in &routes[ci] {
+                            if alive[lk] {
+                                caps[lk] = (caps[lk] - share).max(0.0);
+                            }
+                            users[lk] -= 1;
+                        }
+                        fixed[f] = true;
+                        unfixed -= 1;
+                    }
+                }
+                alive[bk] = false;
+            }
+        }
+
+        tasks
+            .iter()
+            .zip(&flow_range)
+            .map(|(&ti, &(_, e))| (ti, rates[e - 1]))
+            .collect()
+    }
+
+    /// The original from-scratch water-fill over `CapKey` strings —
+    /// kept verbatim as the executable specification the incremental
+    /// solver is property-tested against, and as the baseline the
+    /// `water-fill` micro benches compare to. Not used on any hot path.
+    pub fn shared_stream_rates_reference(&self) -> Vec<f64> {
         use std::collections::BTreeMap;
         let mut caps: BTreeMap<CapKey, f64> = BTreeMap::new();
         // one flow per streaming slot: (task idx, route over cap keys)
@@ -595,6 +974,20 @@ impl TransferService {
             per_task[*ti] = rates[fi];
         }
         per_task
+    }
+
+    /// Probe the production (incremental) shared solve — the exact
+    /// allocation `advance_to` uses. Public for the `water-fill` micro
+    /// benches and the invariant tests.
+    pub fn current_shared_rates(&mut self) -> Vec<f64> {
+        self.shared_stream_rates()
+    }
+
+    /// Drop the incremental solver's cache so the next solve runs cold
+    /// — lets benches separate "indexed solve from scratch" from
+    /// "cached component reuse".
+    pub fn invalidate_rate_cache(&mut self) {
+        self.rate_cache = None;
     }
 
     /// Earliest future virtual time the fabric changes state, under the
@@ -1049,6 +1442,129 @@ mod tests {
     fn wan_factor_rejects_out_of_range() {
         let mut s = svc();
         s.set_wan_factor(0.0);
+    }
+
+    /// Three disjoint WAN routes plus reverse directions: a fabric with
+    /// several contention components, for the incremental-solver pins.
+    fn multi_route_service(seed: u64) -> TransferService {
+        let j = crate::util::Json::parse(
+            r#"{
+            "facilities": ["a", "b", "c", "d", "e", "f"],
+            "links": [
+                {"name": "nic-a", "gbps": 10.0, "latency_ms": 0.5},
+                {"name": "bb-ab", "gbps": 8.0, "latency_ms": 20.0},
+                {"name": "nic-b", "gbps": 10.0, "latency_ms": 0.5},
+                {"name": "nic-c", "gbps": 12.0, "latency_ms": 0.5},
+                {"name": "bb-cd", "gbps": 6.0, "latency_ms": 30.0},
+                {"name": "nic-d", "gbps": 12.0, "latency_ms": 0.5},
+                {"name": "nic-e", "gbps": 10.0, "latency_ms": 0.5},
+                {"name": "bb-ef", "gbps": 9.0, "latency_ms": 10.0},
+                {"name": "nic-f", "gbps": 10.0, "latency_ms": 0.5}
+            ],
+            "routes": [
+                {"from": "a", "to": "b", "links": ["nic-a", "bb-ab", "nic-b"]},
+                {"from": "c", "to": "d", "links": ["nic-c", "bb-cd", "nic-d"]},
+                {"from": "e", "to": "f", "links": ["nic-e", "bb-ef", "nic-f"]}
+            ]
+        }"#,
+        )
+        .unwrap();
+        let topo = Topology::from_json(&j).unwrap();
+        let mut svc =
+            TransferService::new(topo, TransferParams::default(), FaultModel::none(), seed);
+        for (ep, fac, r, w) in [
+            ("a#dtn", "a", 1.30e9, 1.10e9),
+            ("b#dtn", "b", 1.45e9, 1.25e9),
+            ("c#dtn", "c", 1.60e9, 1.35e9),
+            ("d#dtn", "d", 1.20e9, 1.00e9),
+            ("e#dtn", "e", 1.50e9, 1.30e9),
+            ("f#dtn", "f", 1.40e9, 1.20e9),
+        ] {
+            let fid = svc.topo.facility(fac).unwrap();
+            svc.endpoints
+                .register(Endpoint {
+                    id: ep.into(),
+                    facility: fid,
+                    read_bps: r,
+                    write_bps: w,
+                })
+                .unwrap();
+        }
+        svc
+    }
+
+    /// The tentpole invariant: the incremental component-scoped solver
+    /// must match the from-scratch reference **bit for bit** at every
+    /// fabric event of a randomized multi-route workload — staggered
+    /// joins, deliveries (leaves), stream-count edges as slots drain,
+    /// and WAN brownout flips that invalidate every cached component.
+    #[test]
+    fn incremental_matches_reference_on_randomized_fabrics() {
+        let pairs = [
+            ("a#dtn", "b#dtn"),
+            ("b#dtn", "a#dtn"),
+            ("c#dtn", "d#dtn"),
+            ("d#dtn", "c#dtn"),
+            ("e#dtn", "f#dtn"),
+        ];
+        for seed in 0..4u64 {
+            let mut svc = multi_route_service(seed);
+            let mut rng = crate::util::Rng::new(0xFA88_11E5 ^ seed);
+            let mut submissions: Vec<(f64, TransferRequest)> = (0..10)
+                .map(|i| {
+                    let (src, dst) = pairs[rng.below(pairs.len())];
+                    let files = 1 + rng.below(12);
+                    let bytes = 200_000_000 + rng.below(2_000_000_000) as u64;
+                    let mut req = TransferRequest::split_even(
+                        &format!("t{i}"),
+                        src.into(),
+                        dst.into(),
+                        bytes,
+                        files,
+                    );
+                    req.concurrency = Some(1 + rng.below(6));
+                    (rng.f64() * 20.0, req)
+                })
+                .collect();
+            submissions.sort_by(|a, b| a.0.total_cmp(&b.0));
+            let total = submissions.len();
+            let mut queue = std::collections::VecDeque::from(submissions);
+
+            let mut now = 0.0f64;
+            let mut done = 0usize;
+            while done < total {
+                while queue.front().map(|(t, _)| *t <= now).unwrap_or(false) {
+                    let (_, req) = queue.pop_front().unwrap();
+                    svc.submit_task(now, &req).unwrap();
+                }
+                let inc = svc.current_shared_rates();
+                let full = svc.shared_stream_rates_reference();
+                assert_eq!(inc.len(), full.len());
+                for (i, (a, b)) in inc.iter().zip(&full).enumerate() {
+                    assert_eq!(
+                        a.to_bits(),
+                        b.to_bits(),
+                        "task {i}: incremental {a} != reference {b} (seed {seed}, t {now})"
+                    );
+                }
+                let next_sub = queue.front().map(|(t, _)| *t);
+                let t = match (svc.next_event_time(), next_sub) {
+                    (Some(a), Some(b)) => a.min(b),
+                    (Some(a), None) => a,
+                    (None, Some(b)) => b,
+                    (None, None) => break,
+                };
+                done += svc.advance_to(t).iter().filter(|(_, r)| r.is_ok()).count();
+                now = t;
+                // brownout edges: global cache invalidation mid-flight
+                match rng.below(10) {
+                    0 => svc.set_wan_factor(0.3 + 0.6 * rng.f64()),
+                    1 => svc.set_wan_factor(1.0),
+                    _ => {}
+                }
+            }
+            assert_eq!(done, total, "seed {seed}: not every task delivered");
+        }
     }
 
     /// Tasks in opposite directions share the same bidirectional links

@@ -40,6 +40,7 @@ use super::world::{SpotLedger, Tenant, TrainingMode, World};
 use crate::costmodel::PriceBook;
 use crate::faas::{Autoscaler, PolicyKind, ScalingEvent};
 use crate::flows::{FabricHost, FlowEngine, FlowRun, RunPoll, RunReport, Ticket};
+use crate::pool::{Pool, ScopeTask};
 use crate::simnet::{FaultPlan, Scheduler, VClock};
 use crate::util::stats::{integrate_step, jain_index, percentile};
 use crate::util::{Json, Rng};
@@ -327,6 +328,23 @@ pub fn parse_spot(spec: &str) -> Result<Vec<SpotSpec>> {
 /// stream, so spot draws never perturb the arrival streams.
 const SPOT_SALT: u64 = 0x5B07_71E2_D15C_0A11;
 
+/// Salt folded into the root seed for each shard's derived seed
+/// (DESIGN.md §13), so a shard's arrival/spot streams never collide
+/// with the unsharded streams or with another shard's.
+const SHARD_SALT: u64 = 0x51A2_D0E5_7AC7_1C33;
+
+/// Users per shard when `shards == 0` auto-sizes the partition. The
+/// shard count is a pure function of the user count — **never** of the
+/// thread count — so reports are identical under any `XLOOP_THREADS`.
+/// Campaigns at or below this size stay on the serial path.
+pub const AUTO_SHARD_USERS: usize = 4096;
+
+/// The seed a shard's campaign runs under: a SplitMix-style derivation
+/// from the root seed and the shard index (the PR 1 chunked-RNG trick).
+fn shard_seed(root: u64, shard: usize) -> u64 {
+    root ^ SHARD_SALT ^ (shard as u64 + 1).wrapping_mul(0x9E3779B97F4A7C15)
+}
+
 /// Mean spot restore delay as a fraction of the mean preemption gap:
 /// reclaimed pools come back an order of magnitude faster than they are
 /// taken (≈91% stationary availability), matching the short reclaim
@@ -374,6 +392,15 @@ pub struct CampaignConfig {
     /// training progress (`None` = no checkpoints: a preempted gang
     /// loses everything since its start)
     pub checkpoint_every_s: Option<f64>,
+    /// shard count for parallel execution (DESIGN.md §13). `0` = auto:
+    /// serial up to [`AUTO_SHARD_USERS`] users, then one shard per
+    /// `AUTO_SHARD_USERS` — a pure function of the user count, never of
+    /// the thread count, so reports are `XLOOP_THREADS`-invariant.
+    /// `1` forces the serial path. Each shard is an **independent
+    /// fabric replica** serving a contiguous slice of the user
+    /// population with its own derived arrival/spot streams; the merge
+    /// is deterministic in shard order.
+    pub shards: usize,
 }
 
 impl CampaignConfig {
@@ -397,6 +424,7 @@ impl CampaignConfig {
             mix: Vec::new(),
             spot: Vec::new(),
             checkpoint_every_s: None,
+            shards: 0,
         }
     }
 
@@ -739,6 +767,9 @@ pub struct CampaignReport {
     pub endpoint_loads: Vec<EndpointLoad>,
     /// mean per-task goodput over every WAN transfer in the campaign
     pub mean_task_throughput_bps: f64,
+    /// number of WAN transfers behind that mean — the weight a
+    /// deterministic shard merge needs to keep the mean exact
+    pub wan_transfers: u64,
     /// first arrival to last deployment
     pub makespan_s: f64,
     /// the scheduling policy the faas fabric ran under
@@ -844,7 +875,206 @@ fn apply_wan_factor(world: &mut World, plan: &FaultPlan, active: &[bool]) {
 /// trainer (DESIGN.md §10). Per-user dataset names keep their data
 /// disjoint; training is virtual-only — the campaign is a capacity
 /// study, not a weights producer.
+///
+/// With an effective shard count above 1 (an explicit `cfg.shards` or
+/// the `AUTO_SHARD_USERS` auto-split at scale) the user population is
+/// partitioned across [`crate::pool::scope`] workers, each shard an
+/// independent fabric replica, and the reports merged deterministically
+/// (DESIGN.md §13). At an effective count of 1 this *is* the serial
+/// path — byte-identical to every earlier PR.
 pub fn run_campaign(cfg: &CampaignConfig) -> Result<CampaignReport> {
+    run_campaign_with_pool(cfg, Pool::global())
+}
+
+/// The effective shard count: explicit `shards` wins, else the
+/// auto-split — both clamped to the user count so no shard is empty.
+fn effective_shards(cfg: &CampaignConfig) -> usize {
+    let s = if cfg.shards > 0 {
+        cfg.shards
+    } else {
+        cfg.users.div_ceil(AUTO_SHARD_USERS.max(1))
+    };
+    s.clamp(1, cfg.users.max(1))
+}
+
+/// [`run_campaign`] on an explicit pool — the seam the thread-count
+/// invariance test drives (the global pool reads `XLOOP_THREADS` once
+/// per process, so a test cannot vary it).
+pub fn run_campaign_with_pool(cfg: &CampaignConfig, pool: &Pool) -> Result<CampaignReport> {
+    let shards = effective_shards(cfg);
+    if shards <= 1 {
+        return run_campaign_serial(cfg);
+    }
+    // contiguous balanced split, earlier shards take the remainder —
+    // the same carve as `pool::split_ranges`, but recomputed here as a
+    // pure function of (users, shards) so the partition can never
+    // depend on worker count
+    let base = cfg.users / shards;
+    let rem = cfg.users % shards;
+    let mut offsets = Vec::with_capacity(shards);
+    let mut shard_cfgs = Vec::with_capacity(shards);
+    let mut offset = 0usize;
+    for s in 0..shards {
+        let len = base + usize::from(s < rem);
+        let mut sc = cfg.clone();
+        sc.users = len;
+        sc.shards = 1; // shard sub-runs are serial by construction
+        sc.seed = shard_seed(cfg.seed, s);
+        // priority classes cycle over the *global* user index: rotate
+        // the cycle to this shard's offset so user `offset + k` keeps
+        // the class the unsharded campaign would give it
+        if !cfg.priorities.is_empty() {
+            let n = cfg.priorities.len();
+            sc.priorities = (0..n).map(|k| cfg.priorities[(offset + k) % n]).collect();
+        }
+        offsets.push(offset);
+        offset += len;
+        shard_cfgs.push(sc);
+    }
+    let tasks: Vec<ScopeTask<Result<CampaignReport>>> = shard_cfgs
+        .iter()
+        .map(|sc| Box::new(move || run_campaign_serial(sc)) as ScopeTask<Result<CampaignReport>>)
+        .collect();
+    let mut reports = Vec::with_capacity(shards);
+    for r in pool.scope(tasks) {
+        reports.push(r?);
+    }
+    Ok(merge_shard_reports(cfg, &offsets, reports))
+}
+
+/// Merge per-shard reports into one campaign report, deterministically
+/// in shard order (DESIGN.md §13): users renumbered to their global
+/// 1-based indices, ledgers summed, the throughput mean re-weighted by
+/// per-shard transfer counts, fairness recomputed over the full
+/// population, and the scaling log stably re-sorted by virtual time.
+fn merge_shard_reports(
+    cfg: &CampaignConfig,
+    offsets: &[usize],
+    reports: Vec<CampaignReport>,
+) -> CampaignReport {
+    let mut users = Vec::with_capacity(cfg.users);
+    let mut failed_users = Vec::new();
+    let mut scaling: Vec<ScalingEvent> = Vec::new();
+    let mut loads: std::collections::BTreeMap<String, EndpointLoad> =
+        std::collections::BTreeMap::new();
+    let mut cost_eps: std::collections::BTreeMap<String, EndpointCost> =
+        std::collections::BTreeMap::new();
+    let mut per_user_slot_s = Vec::with_capacity(cfg.users);
+    let mut per_user_endpoint_slot_s = Vec::with_capacity(cfg.users);
+    let mut per_user_scaleup_waste = Vec::with_capacity(cfg.users);
+    let mut per_user_egress_bytes = Vec::with_capacity(cfg.users);
+    let mut spot_endpoints = std::collections::BTreeSet::new();
+    let mut egress_bytes = 0.0f64;
+    let mut makespan_s = 0.0f64;
+    let mut bps_weighted = 0.0f64;
+    let mut wan_transfers = 0u64;
+    let mut spot: Option<SpotLedger> = None;
+    for (rep, &off) in reports.into_iter().zip(offsets) {
+        for mut u in rep.users {
+            u.user += off;
+            users.push(u);
+        }
+        failed_users.extend(rep.failed_users.iter().map(|u| u + off));
+        for mut e in rep.scaling {
+            if e.trigger_user > 0 {
+                e.trigger_user += off as u32;
+            }
+            scaling.push(e);
+        }
+        for l in rep.endpoint_loads {
+            let entry = loads
+                .entry(l.endpoint.clone())
+                .or_insert_with(|| EndpointLoad {
+                    endpoint: l.endpoint.clone(),
+                    tasks: 0,
+                    total_queue_wait_s: 0.0,
+                    max_queue_wait_s: 0.0,
+                });
+            entry.tasks += l.tasks;
+            entry.total_queue_wait_s += l.total_queue_wait_s;
+            entry.max_queue_wait_s = entry.max_queue_wait_s.max(l.max_queue_wait_s);
+        }
+        // shards are fabric replicas: capacities agree, slot-time adds
+        for c in rep.cost.endpoints {
+            let entry = cost_eps
+                .entry(c.endpoint.clone())
+                .or_insert_with(|| EndpointCost {
+                    endpoint: c.endpoint.clone(),
+                    base_capacity: c.base_capacity,
+                    peak_capacity: 0,
+                    provisioned_slot_s: 0.0,
+                    used_slot_s: 0.0,
+                    scaleup_slot_s: 0.0,
+                });
+            entry.base_capacity = entry.base_capacity.max(c.base_capacity);
+            entry.peak_capacity = entry.peak_capacity.max(c.peak_capacity);
+            entry.provisioned_slot_s += c.provisioned_slot_s;
+            entry.used_slot_s += c.used_slot_s;
+            entry.scaleup_slot_s += c.scaleup_slot_s;
+        }
+        per_user_slot_s.extend(rep.cost.per_user_slot_s);
+        per_user_endpoint_slot_s.extend(rep.cost.per_user_endpoint_slot_s);
+        per_user_scaleup_waste.extend(rep.cost.per_user_scaleup_waste);
+        per_user_egress_bytes.extend(rep.cost.per_user_egress_bytes);
+        spot_endpoints.extend(rep.cost.spot_endpoints);
+        egress_bytes += rep.cost.egress_bytes;
+        makespan_s = makespan_s.max(rep.makespan_s);
+        bps_weighted += rep.mean_task_throughput_bps * rep.wan_transfers as f64;
+        wan_transfers += rep.wan_transfers;
+        if let Some(s) = rep.spot {
+            let acc = spot.get_or_insert_with(SpotLedger::default);
+            acc.preemptions += s.preemptions;
+            acc.displaced += s.displaced;
+            acc.wan_migrations += s.wan_migrations;
+            acc.local_migrations += s.local_migrations;
+            acc.migration_bytes += s.migration_bytes;
+            acc.checkpointed_s += s.checkpointed_s;
+            acc.lost_s += s.lost_s;
+            acc.stranded += s.stranded;
+        }
+    }
+    // a stable sort keeps shard order as the same-instant tie-break
+    scaling.sort_by(|a, b| a.vt.total_cmp(&b.vt));
+    let slowdowns: Vec<f64> = users.iter().map(|u| u.slowdown).collect();
+    let fairness = FairnessSummary {
+        mean_slowdown: slowdowns.iter().sum::<f64>() / slowdowns.len() as f64,
+        max_slowdown: slowdowns.iter().cloned().fold(0.0, f64::max),
+        p50_slowdown: percentile(&slowdowns, 50.0),
+        p95_slowdown: percentile(&slowdowns, 95.0),
+        jain: jain_index(&slowdowns),
+    };
+    CampaignReport {
+        config_users: cfg.users,
+        mean_interarrival_s: cfg.mean_interarrival_s,
+        users,
+        endpoint_loads: loads.into_values().collect(),
+        mean_task_throughput_bps: if wan_transfers > 0 {
+            bps_weighted / wan_transfers as f64
+        } else {
+            0.0
+        },
+        wan_transfers,
+        makespan_s,
+        policy: cfg.policy,
+        fairness,
+        scaling,
+        failed_users,
+        cost: CostSummary {
+            endpoints: cost_eps.into_values().collect(),
+            per_user_slot_s,
+            per_user_endpoint_slot_s,
+            per_user_scaleup_waste,
+            egress_bytes,
+            per_user_egress_bytes,
+            spot_endpoints,
+        },
+        spot,
+    }
+}
+
+/// The serial campaign: one fabric, one DES, every user on it — the
+/// exact path of every earlier PR, and the body each shard runs.
+fn run_campaign_serial(cfg: &CampaignConfig) -> Result<CampaignReport> {
     anyhow::ensure!(cfg.users > 0, "campaign needs at least one user");
     cfg.faults.validate()?;
     // a programmatically built mix bypasses parse_mix: re-validate so
@@ -1053,8 +1283,13 @@ pub fn run_campaign(cfg: &CampaignConfig) -> Result<CampaignReport> {
     // The event-queue scheduler owns the campaign's virtual clock
     // (single writer): arrivals and fault-window edges are scheduled up
     // front, dynamic wake-ups (flow completions, fabric events) are fed
-    // in each round, and every time step is a deterministic heap pop.
-    let mut sched = Scheduler::<Wake>::new();
+    // in each round, and every time step is a deterministic pop.
+    // `for_load` sizes the backend to the expected event volume — one
+    // arrival plus a handful of scan/fault wake-ups per user — picking
+    // the §13 calendar queue at scale (`XLOOP_DES` overrides); both
+    // backends pop the identical (time, seq) order, so the choice never
+    // changes a byte of output.
+    let mut sched = Scheduler::<Wake>::for_load(cfg.users.saturating_mul(8));
     for &a in &arrivals {
         sched.schedule_at(a, Wake::Arrival);
     }
@@ -1501,6 +1736,7 @@ pub fn run_campaign(cfg: &CampaignConfig) -> Result<CampaignReport> {
         users,
         endpoint_loads: loads.into_values().collect(),
         mean_task_throughput_bps,
+        wan_transfers: world.transfer_log.len() as u64,
         makespan_s,
         policy: cfg.policy,
         fairness,
@@ -1662,6 +1898,7 @@ mod tests {
             mix: Vec::new(),
             spot: Vec::new(),
             checkpoint_every_s: None,
+            shards: 0,
         };
         let a = run_campaign(&default_cfg).unwrap();
         let b = run_campaign(&explicit).unwrap();
@@ -2326,6 +2563,116 @@ mod tests {
             "spot discount raised the bill: {} vs {}",
             d.total_usd(),
             d2.total_usd()
+        );
+    }
+
+    // ---- sharded execution (§13) ----
+
+    /// The shard count is a pure function of the config — never of the
+    /// thread count. That is the whole determinism argument, so pin it.
+    #[test]
+    fn shard_count_is_a_pure_function_of_the_config() {
+        let scenario = Scenario::table1("braggnn", Mode::RemoteCerebras).unwrap();
+        let mut cfg = CampaignConfig::new(8, scenario, 1.0, 1);
+        assert_eq!(effective_shards(&cfg), 1, "small campaigns stay serial");
+        cfg.users = AUTO_SHARD_USERS;
+        assert_eq!(effective_shards(&cfg), 1, "threshold itself stays serial");
+        cfg.users = AUTO_SHARD_USERS * 3 + 1;
+        assert_eq!(effective_shards(&cfg), 4);
+        cfg.users = 1_000_000;
+        assert_eq!(effective_shards(&cfg), 1_000_000usize.div_ceil(AUTO_SHARD_USERS));
+        // explicit shards win, clamped so no shard is empty
+        cfg.shards = 3;
+        cfg.users = 10;
+        assert_eq!(effective_shards(&cfg), 3);
+        cfg.shards = 64;
+        assert_eq!(effective_shards(&cfg), 10);
+        // derived shard seeds are distinct from the root and each other
+        let seeds: std::collections::BTreeSet<u64> =
+            (0..8).map(|s| shard_seed(42, s)).collect();
+        assert_eq!(seeds.len(), 8);
+        assert!(!seeds.contains(&42));
+    }
+
+    /// Tentpole pin (named in the issue): the sharded report is
+    /// byte-equal (full `Debug` form) across worker counts — with the
+    /// knobs off, and with spot preemption and a WAN fault plan riding
+    /// along. `run_campaign_with_pool` is the seam because the global
+    /// pool reads `XLOOP_THREADS` once per process.
+    #[test]
+    fn sharded_campaign_is_thread_count_invariant() {
+        if !artifacts_present() {
+            return;
+        }
+        let scenario = Scenario::table1("braggnn", Mode::RemoteCerebras).unwrap();
+        let mut cfg = CampaignConfig::new(6, scenario.clone(), 1.0, 37);
+        cfg.shards = 3;
+        let a = run_campaign_with_pool(&cfg, &Pool::new(1)).unwrap();
+        let b = run_campaign_with_pool(&cfg, &Pool::new(8)).unwrap();
+        assert_eq!(format!("{a:?}"), format!("{b:?}"));
+
+        let mut cfg = CampaignConfig::new(6, scenario, 0.0, 37);
+        cfg.shards = 3;
+        cfg.spot = parse_spot("alcf#cerebras:6:2").unwrap();
+        cfg.checkpoint_every_s = Some(5.0);
+        cfg.faults = crate::simnet::FaultPlan::parse("wan=0.5@0..60").unwrap();
+        let a = run_campaign_with_pool(&cfg, &Pool::new(1)).unwrap();
+        let b = run_campaign_with_pool(&cfg, &Pool::new(8)).unwrap();
+        assert_eq!(format!("{a:?}"), format!("{b:?}"));
+        assert!(a.spot.is_some(), "spot ledger survives the merge");
+    }
+
+    /// The deterministic merge keeps the bookkeeping exact: users come
+    /// back renumbered 1..=N in shard order, the per-user cost vectors
+    /// cover the population, attribution sums still match the fabric
+    /// totals, and the re-weighted throughput mean sits inside the
+    /// per-shard range.
+    #[test]
+    fn sharded_merge_renumbers_and_balances() {
+        if !artifacts_present() {
+            return;
+        }
+        let scenario = Scenario::table1("braggnn", Mode::RemoteCerebras).unwrap();
+        let mut cfg = CampaignConfig::new(5, scenario, 1.0, 41);
+        cfg.shards = 2;
+        cfg.priorities = vec![0, 2, 5];
+        let rep = run_campaign_with_pool(&cfg, &Pool::new(2)).unwrap();
+        assert_eq!(rep.config_users, 5);
+        assert_eq!(rep.users.len(), 5);
+        for (i, u) in rep.users.iter().enumerate() {
+            assert_eq!(u.user, i + 1, "global renumbering in shard order");
+            assert!(u.succeeded);
+        }
+        assert_eq!(rep.cost.per_user_slot_s.len(), 5);
+        assert_eq!(rep.cost.per_user_egress_bytes.len(), 5);
+        assert!(rep.failed_users.is_empty());
+        // attribution still covers the merged totals exactly
+        let attributed: f64 = rep.cost.per_user_slot_s.iter().sum();
+        assert!(
+            (attributed - rep.cost.total_used_slot_s()).abs() < 1e-6,
+            "attributed {attributed} vs used {}",
+            rep.cost.total_used_slot_s()
+        );
+        let tagged: f64 = rep.cost.per_user_egress_bytes.iter().sum();
+        assert!(
+            (tagged - rep.cost.egress_bytes).abs() < 1e-6,
+            "untagged egress after merge: {tagged} of {}",
+            rep.cost.egress_bytes
+        );
+        // the makespan is the max over shards, so no user outruns it
+        for u in &rep.users {
+            assert!(u.finished_vt <= rep.makespan_s + 1e-9);
+        }
+        assert!(rep.wan_transfers > 0);
+        assert!(rep.mean_task_throughput_bps > 0.0);
+        assert!(rep.fairness.jain > 0.0 && rep.fairness.jain <= 1.0);
+        // per-tenant dollar partition survives the merge
+        let d = rep.cost.dollars(&PriceBook::paper());
+        let billed: f64 = d.per_tenant.iter().map(|t| t.total_usd()).sum();
+        assert!(
+            (billed - d.total_usd()).abs() < 1e-6 * d.total_usd().max(1.0),
+            "bills {billed} vs fabric total {}",
+            d.total_usd()
         );
     }
 

@@ -24,9 +24,9 @@ pub mod scenario;
 pub mod world;
 
 pub use campaign::{
-    parse_mix, parse_spot, run_campaign, Burst, CampaignConfig, CampaignReport, CostSummary,
-    DollarSummary, EndpointCost, EndpointDollars, EndpointLoad, FairnessSummary, MixEntry,
-    SpotSpec, TenantDollars, UserOutcome,
+    parse_mix, parse_spot, run_campaign, run_campaign_with_pool, Burst, CampaignConfig,
+    CampaignReport, CostSummary, DollarSummary, EndpointCost, EndpointDollars, EndpointLoad,
+    FairnessSummary, MixEntry, SpotSpec, TenantDollars, UserOutcome, AUTO_SHARD_USERS,
 };
 pub use coordinator::{
     extract_breakdown, render_table1, Coordinator, RetrainBreakdown, RetrainOutcome,

@@ -29,6 +29,12 @@ LINE = re.compile(
     r"\(p95\s+(?P<p95>[\d.]+)\s+(?P<p95u>ns|µs|us|ms|s),\s+(?P<iters>\d+)\s+iters\)"
 )
 GROUP = re.compile(r"^===\s+(?P<title>.*?)\s+===$")
+# whole-engine scale lines from the campaign group (and the CLI's stderr):
+#     campaign-scale: <users> users in <wall> s = <rate> users/s
+SCALE = re.compile(
+    r"^campaign-scale:\s+(?P<users>\d+)\s+users in\s+"
+    r"(?P<wall>[\d.]+)\s+s = (?P<rate>[\d.]+)\s+users/s$"
+)
 
 
 def cpu_model():
@@ -48,12 +54,24 @@ def main():
     src, dst = sys.argv[1], sys.argv[2]
     group = None
     benches = []
+    scale = []
     with open(src, encoding="utf-8") as f:
         for raw in f:
             line = raw.rstrip("\n")
             g = GROUP.match(line.strip())
             if g:
                 group = g.group("title")
+                continue
+            s = SCALE.match(line.strip())
+            if s:
+                scale.append(
+                    {
+                        "group": group,
+                        "users": int(s.group("users")),
+                        "wall_s": float(s.group("wall")),
+                        "users_per_s": float(s.group("rate")),
+                    }
+                )
                 continue
             m = LINE.match(line)
             if not m:
@@ -76,10 +94,14 @@ def main():
         "nproc": os.cpu_count(),
         "threads_env": os.environ.get("XLOOP_THREADS", ""),
         "benches": benches,
+        "users_per_wall_second": scale,
     }
     with open(dst, "w", encoding="utf-8") as f:
         json.dump(doc, f, indent=1)
-    print(f"[parse_bench] {len(benches)} benches -> {dst} (cpu: {doc['cpu']})")
+    print(
+        f"[parse_bench] {len(benches)} benches, {len(scale)} scale points"
+        f" -> {dst} (cpu: {doc['cpu']})"
+    )
     if not benches:
         sys.exit("no bench lines parsed — harness output format changed?")
 
