@@ -195,6 +195,35 @@ fn main() {
         });
     }
 
+    // ---- §14 campaign sync: replica vs bounded-lag windows ----
+    // One shot per mode (same honesty argument as campaign-scale
+    // below), placed before the artifacts gate so it runs everywhere;
+    // printed in the `campaign-sync:` line format that
+    // scripts/parse_bench.py lifts into `sync_users_per_wall_second`.
+    harness::group("campaign sync — replica vs bounded-lag windows (1e4 users)");
+    let scenario = Scenario::table1("braggnn", Mode::RemoteCerebras).unwrap();
+    for sync in [false, true] {
+        let mut cfg = CampaignConfig::new(10_000, scenario.clone(), 30.0, 42);
+        cfg.sync_wan = sync;
+        let start = std::time::Instant::now();
+        let rep = run_campaign(&cfg).unwrap();
+        let wall = start.elapsed().as_secs_f64();
+        let windows = if sync {
+            format!(" ({} windows)", rep.sync_wan_windows)
+        } else {
+            String::new()
+        };
+        println!(
+            "campaign-sync: {} {} users in {:.3} s = {:.1} users/s{}",
+            if sync { "windowed" } else { "replica" },
+            cfg.users,
+            wall,
+            cfg.users as f64 / wall.max(1e-9),
+            windows
+        );
+        std::hint::black_box(rep);
+    }
+
     // ---- PJRT paths: only with built artifacts ----
     let dir = default_artifacts_dir();
     if !dir.join("manifest.json").exists() {

@@ -202,7 +202,11 @@ pub struct Pick {
 /// max(free_for(chosen width), chosen task's eligible_vt)`, and the
 /// decision is a pure function of the view (no interior state), which
 /// is what keeps campaign replays deterministic.
-pub trait SchedPolicy {
+///
+/// `Send` supertrait: policies are plain config structs, and the faas
+/// service (inside a campaign shard's World) crosses pool-worker
+/// threads at bounded-lag window barriers.
+pub trait SchedPolicy: Send {
     fn name(&self) -> &'static str;
     fn pick(&self, q: &QueueView) -> Option<Pick>;
 }

@@ -118,7 +118,9 @@ impl Displaced {
     }
 }
 
-type FuncBody<C> = Box<dyn Fn(&mut C, &mut VClock, &Json) -> Result<Json>>;
+// `Send` so a campaign shard (which owns its World, faas included) can
+// migrate between pool workers at bounded-lag window barriers.
+type FuncBody<C> = Box<dyn Fn(&mut C, &mut VClock, &Json) -> Result<Json> + Send>;
 
 /// Autoscaler config plus its runtime state for one endpoint.
 struct AutoState {
@@ -197,7 +199,7 @@ impl<C> FaasService<C> {
     pub fn register_function(
         &mut self,
         name: &str,
-        body: impl Fn(&mut C, &mut VClock, &Json) -> Result<Json> + 'static,
+        body: impl Fn(&mut C, &mut VClock, &Json) -> Result<Json> + Send + 'static,
     ) -> Result<FuncId> {
         let id = FuncId(name.to_string());
         if self.funcs.contains_key(&id) {

@@ -57,7 +57,11 @@ impl Effect {
 }
 
 /// One pluggable action kind (Transfer, Compute, Deploy, ...).
-pub trait ActionProvider<C> {
+///
+/// `Send` supertrait: providers are stateless handles onto the context,
+/// and the flow engine (inside a campaign shard) crosses pool-worker
+/// threads at bounded-lag window barriers.
+pub trait ActionProvider<C>: Send {
     /// Provider name referenced by `ActionDef::provider`.
     fn name(&self) -> &'static str;
 

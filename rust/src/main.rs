@@ -187,8 +187,22 @@ fn cmd_campaign(args: &[String]) -> Result<()> {
             "shards",
             "0",
             "partition users across N parallel fabric shards (0 = auto: serial \
-             up to 4096 users, then one shard per 4096; reports are \
-             thread-count-invariant)",
+             up to --shard-users users, then one shard per --shard-users; \
+             reports are thread-count-invariant)",
+        )
+        .opt(
+            "shard-users",
+            "0",
+            "users per shard for the auto-split (0 = built-in 4096; the \
+             XLOOP_SHARD_USERS env var overrides the built-in); ignored when \
+             --shards is explicit",
+        )
+        .flag(
+            "sync-wan",
+            "bounded-lag window synchronization across shards: shards advance \
+             in lock-step virtual-time windows and share the physical WAN via \
+             a demand ledger + water-fill, instead of each shard claiming the \
+             full pipe (default: independent fabric replicas)",
         )
         .opt("model", "braggnn", "model to retrain (braggnn|cookienetae)")
         .opt("mode", "remote-cerebras", "training mode")
@@ -267,8 +281,11 @@ fn cmd_campaign(args: &[String]) -> Result<()> {
         return Ok(());
     }
     let p = opts.parse(args).map_err(anyhow::Error::msg)?;
-    let users = parse_count(p.get("users"))?.max(1);
+    let users = parse_count(p.get("users"))?;
+    anyhow::ensure!(users > 0, "--users must be at least 1");
     let shards = parse_count(p.get("shards"))?;
+    let shard_users = parse_count(p.get("shard-users"))?;
+    let sync_wan = p.get_bool("sync-wan");
     let seed = p.get_usize("seed")? as u64;
     let mode = Mode::parse(p.get("mode"))?;
     let scenario = Scenario::table1(p.get("model"), mode)?;
@@ -299,7 +316,12 @@ fn cmd_campaign(args: &[String]) -> Result<()> {
         || !mix.is_empty()
         || prices.is_some()
         || !spot.is_empty()
-        || checkpoint_every.is_some();
+        || checkpoint_every.is_some()
+        // the §14 knobs report their sharding/window summary there;
+        // plain --shards stays out so the scale job's stdout is
+        // byte-identical to the replica-mode golden
+        || sync_wan
+        || shard_users > 0;
     let mk_cfg = |scenario: &Scenario, mean: f64, kind: PolicyKind| {
         let mut cfg = CampaignConfig::new(users, scenario.clone(), mean, seed);
         cfg.policy = kind;
@@ -315,6 +337,8 @@ fn cmd_campaign(args: &[String]) -> Result<()> {
         cfg.spot = spot.clone();
         cfg.checkpoint_every_s = checkpoint_every;
         cfg.shards = shards;
+        cfg.shard_users = shard_users;
+        cfg.sync_wan = sync_wan;
         cfg
     };
 
@@ -473,6 +497,22 @@ fn parse_priorities(spec: &str) -> Result<Vec<i64>> {
 /// when a non-default knob is set, keeping `--policy fifo` output
 /// byte-identical to the pre-policy CLI.
 fn print_enriched_report(report: &CampaignReport, prices: Option<&PriceBook>) {
+    // sharded/windowed execution summary (DESIGN.md §13/§14): only when
+    // the partition or the sync executor actually did something
+    if report.shards > 1 || report.sync_wan_windows > 0 {
+        let sync = if report.sync_wan_windows > 0 {
+            format!(
+                " | sync-wan: {} bounded-lag window(s)",
+                report.sync_wan_windows
+            )
+        } else {
+            String::new()
+        };
+        println!(
+            "\nsharding: {} shard(s) x up to {} user(s) each{}",
+            report.shards, report.shard_users, sync
+        );
+    }
     let f = &report.fairness;
     println!(
         "\nscheduling policy: {} | per-user slowdown: mean {:.3} | p50 {:.3} | p95 {:.3} | max {:.3}",

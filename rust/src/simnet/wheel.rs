@@ -1,4 +1,4 @@
-//! Calendar-queue event backend (DESIGN.md §13).
+//! Calendar-queue event backend (DESIGN.md §13, §14).
 //!
 //! A classic Brown calendar queue: one "year" of fixed-width time
 //! buckets, a virtual-bucket cursor (`epoch`) that sweeps forward, and
@@ -11,12 +11,26 @@
 //! amortized — against O(log n) for the binary heap — which is what a
 //! million-user campaign needs from its wake-up queue.
 //!
-//! Correctness invariant: **every stored entry has `vk >= epoch`.**
+//! **Two levels.** Entries more than one ring revolution past the
+//! cursor are parked in an unordered *far bag* instead of the ring, and
+//! promoted into the ring when the cursor approaches (an hour-hand /
+//! minute-hand hierarchy with a degenerate hour hand: the bag). Without
+//! it, a long event horizon over a narrow ring — exactly what the
+//! bounded-lag windowed campaign produces, with wake-ups hundreds of
+//! seconds out and windows tens of milliseconds wide — forces the ring
+//! to grow to span the whole horizon and the width resample to thrash
+//! between the near-gap and far-gap scales. With the bag, ring size and
+//! bucket width track only the *near* population.
+//!
+//! Correctness invariant: **every ring-stored entry has `vk >= epoch`.**
 //! Pop preserves it by construction (it only advances `epoch` past
 //! buckets holding no current-epoch entry); schedule restores it by
 //! rewinding `epoch` when a new entry lands earlier than the cursor
 //! (legal: the cursor may have swept ahead of wall-clock `now` while
-//! scanning toward a far-future event). Bucket membership and epoch
+//! scanning toward a far-future event). Far entries satisfy the weaker
+//! `vk >= insert-time horizon`; the pop loop promotes the bag's cohort
+//! before the cursor can reach it, rewinding the cursor if a width
+//! change left a promoted entry behind it. Bucket membership and epoch
 //! eligibility use the *identical* float expression
 //! `(t / width).floor()`, so an entry can never be hashed into a bucket
 //! the eligibility test disagrees with.
@@ -43,9 +57,15 @@ pub(crate) struct Wheel<E> {
     buckets: Vec<Vec<Entry<E>>>,
     /// bucket width in virtual seconds (> 0)
     width: f64,
-    /// virtual bucket cursor: no stored entry has `vk < epoch`
+    /// virtual bucket cursor: no ring-stored entry has `vk < epoch`
     epoch: u64,
+    /// total entries, ring + far bag
     len: usize,
+    /// entries beyond the ring horizon at insert time, unordered
+    far: Vec<Entry<E>>,
+    /// min `vk` over the far bag under the current width
+    /// (`u64::MAX` when the bag is empty)
+    far_min_vk: u64,
 }
 
 impl<E> Wheel<E> {
@@ -55,11 +75,19 @@ impl<E> Wheel<E> {
             width: 1.0,
             epoch: 0,
             len: 0,
+            far: Vec::new(),
+            far_min_vk: u64::MAX,
         }
     }
 
     pub(crate) fn len(&self) -> usize {
         self.len
+    }
+
+    /// Ring population (total minus the far bag) — what the resize
+    /// policy sizes the ring for.
+    fn near_len(&self) -> usize {
+        self.len - self.far.len()
     }
 
     /// Virtual bucket index of a timestamp. Times are clamped at zero:
@@ -71,18 +99,61 @@ impl<E> Wheel<E> {
         (t.max(0.0) / self.width).floor() as u64
     }
 
+    /// First vk past the ring's reach from the current cursor.
+    #[inline]
+    fn horizon(&self) -> u64 {
+        self.epoch.saturating_add(self.buckets.len() as u64)
+    }
+
     pub(crate) fn schedule(&mut self, time: f64, seq: u64, payload: E) {
-        if self.len >= self.buckets.len() * 2 {
+        if self.vk(time) >= self.horizon() {
+            // beyond the ring: O(1) park in the far bag; the pop loop
+            // promotes the cohort when the cursor approaches
+            self.far_min_vk = self.far_min_vk.min(self.vk(time));
+            self.far.push(Entry { time, seq, payload });
+        } else {
+            self.insert_near(Entry { time, seq, payload });
+        }
+        self.len += 1;
+    }
+
+    /// Ring insert: grow if the ring is crowded, rewind the cursor if
+    /// the entry lands behind it. Does not touch `len` (callers move
+    /// entries between levels without changing the total).
+    fn insert_near(&mut self, e: Entry<E>) {
+        if self.near_len() >= self.buckets.len() * 2 {
             self.resize(self.buckets.len() * 2);
         }
-        let vk = self.vk(time);
-        // restore the invariant if the cursor swept past this slot
+        let vk = self.vk(e.time);
         if vk < self.epoch {
             self.epoch = vk;
         }
         let n = self.buckets.len() as u64;
-        self.buckets[(vk % n) as usize].push(Entry { time, seq, payload });
-        self.len += 1;
+        self.buckets[(vk % n) as usize].push(e);
+    }
+
+    /// Move every far entry inside the current ring horizon into the
+    /// ring and recompute the bag minimum.
+    fn promote_due_far(&mut self) {
+        let horizon = self.horizon();
+        let mut due = Vec::new();
+        let mut i = 0;
+        while i < self.far.len() {
+            if self.vk(self.far[i].time) < horizon {
+                due.push(self.far.swap_remove(i));
+            } else {
+                i += 1;
+            }
+        }
+        for e in due {
+            self.insert_near(e);
+        }
+        self.far_min_vk = self
+            .far
+            .iter()
+            .map(|e| self.vk(e.time))
+            .min()
+            .unwrap_or(u64::MAX);
     }
 
     /// Remove and return the globally minimum `(time, seq)` entry.
@@ -90,9 +161,20 @@ impl<E> Wheel<E> {
         if self.len == 0 {
             return None;
         }
-        let n = self.buckets.len() as u64;
         let mut scanned = 0u64;
         loop {
+            if !self.far.is_empty() {
+                if self.near_len() == 0 && self.far_min_vk > self.epoch {
+                    // empty ring: jump the cursor straight to the bag's
+                    // first cohort instead of sweeping dead buckets
+                    self.epoch = self.far_min_vk;
+                }
+                if self.far_min_vk < self.horizon() {
+                    self.promote_due_far();
+                    scanned = 0; // ring population changed; restart the dry count
+                }
+            }
+            let n = self.buckets.len() as u64;
             let b = (self.epoch % n) as usize;
             let mut best: Option<usize> = None;
             for (i, e) in self.buckets[b].iter().enumerate() {
@@ -128,8 +210,11 @@ impl<E> Wheel<E> {
     }
 
     /// Fallback for sparse far-future schedules: linear scan of every
-    /// bucket for the global `(time, seq)` minimum, jumping the cursor
-    /// to its epoch. O(n + len), amortized away by the resize policy.
+    /// ring bucket *and* the far bag for the global `(time, seq)`
+    /// minimum, jumping the cursor to its epoch. O(n + len), amortized
+    /// away by the resize policy. Safe cursor jump: `vk` is monotone in
+    /// time, so the global-min time has the global-min vk and no stored
+    /// entry ends up behind the cursor.
     fn pop_global_min(&mut self) -> (f64, u64, E) {
         debug_assert!(self.len > 0);
         let mut at: Option<(usize, usize)> = None;
@@ -147,6 +232,43 @@ impl<E> Wheel<E> {
                 }
             }
         }
+        let mut far_at: Option<usize> = None;
+        for (j, e) in self.far.iter().enumerate() {
+            let better = match far_at {
+                None => true,
+                Some(pj) => {
+                    let p = &self.far[pj];
+                    e.time.total_cmp(&p.time).then(e.seq.cmp(&p.seq)).is_lt()
+                }
+            };
+            if better {
+                far_at = Some(j);
+            }
+        }
+        let far_wins = match (at, far_at) {
+            (None, Some(_)) => true,
+            (Some((pb, pi)), Some(pj)) => {
+                let near = &self.buckets[pb][pi];
+                let far = &self.far[pj];
+                far.time
+                    .total_cmp(&near.time)
+                    .then(far.seq.cmp(&near.seq))
+                    .is_lt()
+            }
+            _ => false,
+        };
+        if far_wins {
+            let e = self.far.swap_remove(far_at.expect("far candidate"));
+            self.len -= 1;
+            self.epoch = self.vk(e.time);
+            self.far_min_vk = self
+                .far
+                .iter()
+                .map(|x| self.vk(x.time))
+                .min()
+                .unwrap_or(u64::MAX);
+            return (e.time, e.seq, e.payload);
+        }
         let (b, i) = at.expect("non-empty wheel has a minimum");
         self.epoch = self.vk(self.buckets[b][i].time);
         self.take(b, i)
@@ -155,14 +277,18 @@ impl<E> Wheel<E> {
     fn take(&mut self, bucket: usize, i: usize) -> (f64, u64, E) {
         let e = self.buckets[bucket].swap_remove(i);
         self.len -= 1;
-        if self.len < self.buckets.len() / 4 && self.buckets.len() > MIN_BUCKETS {
+        if self.near_len() < self.buckets.len() / 4 && self.buckets.len() > MIN_BUCKETS {
             self.resize((self.buckets.len() / 2).max(MIN_BUCKETS));
         }
         (e.time, e.seq, e.payload)
     }
 
-    /// Rebuild with `n_new` buckets, re-picking the width from the mean
-    /// gap of a sample of stored times so occupancy stays ~1 per bucket.
+    /// Rebuild the ring with `n_new` buckets, re-picking the width from
+    /// the mean gap of a sample of *ring* times so occupancy stays ~1
+    /// per bucket. The far bag is untouched — its gaps are a different
+    /// scale and must not pollute the width signal (the point of the
+    /// two levels) — but its cached minimum is recomputed because vk
+    /// values change with the width.
     fn resize(&mut self, n_new: usize) {
         let entries: Vec<Entry<E>> = self.buckets.iter_mut().flat_map(std::mem::take).collect();
         if let Some(w) = sample_width(&entries) {
@@ -171,13 +297,25 @@ impl<E> Wheel<E> {
         self.buckets = (0..n_new).map(|_| Vec::new()).collect();
         // the cursor currently points at time ~ epoch * old_width; with a
         // new width the cheapest correct cursor is the minimum stored vk
-        // (pop only requires that no entry precede the cursor)
-        self.epoch = entries.iter().map(|e| self.vk(e.time)).min().unwrap_or(0);
+        // (pop only requires that no ring entry precede the cursor; a far
+        // entry that lands behind it is rewound over at promotion)
+        self.epoch = entries
+            .iter()
+            .map(|e| self.vk(e.time))
+            .min()
+            .or_else(|| self.far.iter().map(|e| self.vk(e.time)).min())
+            .unwrap_or(0);
         let n = n_new as u64;
         for e in entries {
             let vk = self.vk(e.time);
             self.buckets[(vk % n) as usize].push(e);
         }
+        self.far_min_vk = self
+            .far
+            .iter()
+            .map(|e| self.vk(e.time))
+            .min()
+            .unwrap_or(u64::MAX);
     }
 }
 
@@ -226,8 +364,10 @@ mod tests {
     #[test]
     fn far_future_event_found_via_global_fallback() {
         let mut w = Wheel::new();
-        // more than a full revolution (16 buckets * 1 s) ahead
+        // more than a full revolution (16 buckets * 1 s) ahead: parked
+        // in the far bag, found by the empty-ring cursor jump
         w.schedule(1e7, 0, 7);
+        assert_eq!(w.far.len(), 1);
         assert_eq!(w.pop_min(), Some((1e7, 0, 7)));
     }
 
@@ -272,5 +412,52 @@ mod tests {
         assert_eq!(order.first(), Some(&(42.0, 0)));
         assert_eq!(order.last(), Some(&(42.0, 255)));
         assert!(order.windows(2).all(|p| p[0].1 < p[1].1));
+    }
+
+    #[test]
+    fn far_horizon_population_stays_out_of_the_ring() {
+        // the bounded-lag shape: a handful of near wake-ups, thousands
+        // of events hundreds of seconds out. The ring must not grow to
+        // span the horizon — the far population parks in the bag.
+        let mut w = Wheel::new();
+        for i in 0..8u64 {
+            w.schedule(i as f64 * 0.5, i, 0);
+        }
+        for i in 0..10_000u64 {
+            w.schedule(900.0 + i as f64 * 0.01, 8 + i, 1);
+        }
+        assert_eq!(w.len(), 10_008);
+        assert_eq!(
+            w.buckets.len(),
+            MIN_BUCKETS,
+            "far events must not force ring growth"
+        );
+        assert!(w.far.len() >= 10_000);
+        // near events pop first and in order, never seeing the far mass
+        for i in 0..8u64 {
+            let (t, s, _) = w.pop_min().unwrap();
+            assert_eq!((t, s), (i as f64 * 0.5, i));
+        }
+        // then the promoted far cohorts, still in (time, seq) order
+        let order = drain(&mut w);
+        assert_eq!(order.len(), 10_000);
+        assert!(order.windows(2).all(|p| p[0] < p[1]), "out of order");
+    }
+
+    #[test]
+    fn promotion_interleaves_with_fresh_near_schedules() {
+        // far entries promoted into the ring must merge correctly with
+        // entries scheduled near after the cursor has swept forward
+        let mut w = Wheel::new();
+        w.schedule(100.0, 0, 0); // far at insert (horizon = 16)
+        w.schedule(1.0, 1, 1); // near
+        assert_eq!(w.pop_min(), Some((1.0, 1, 1)));
+        // cursor still near 1.0; schedule between it and the far entry
+        w.schedule(50.0, 2, 2);
+        w.schedule(100.0, 3, 3); // same instant as the far entry, later seq
+        assert_eq!(w.pop_min(), Some((50.0, 2, 2)));
+        assert_eq!(w.pop_min(), Some((100.0, 0, 0)));
+        assert_eq!(w.pop_min(), Some((100.0, 3, 3)));
+        assert_eq!(w.pop_min(), None);
     }
 }

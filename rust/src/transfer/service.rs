@@ -459,6 +459,14 @@ impl KeyInterner {
     fn is_wan(&self, id: usize) -> bool {
         matches!(self.kinds[id], KeyKind::Wan(_))
     }
+
+    /// Topology link index behind an interned key, if it is a WAN key.
+    fn wan_link(&self, id: usize) -> Option<usize> {
+        match self.kinds[id] {
+            KeyKind::Wan(l) => Some(l),
+            _ => None,
+        }
+    }
 }
 
 /// Path-compressing union-find over interned key ids: tasks sharing any
@@ -530,6 +538,11 @@ pub struct TransferService {
     interner: KeyInterner,
     /// last shared solve, reused for unperturbed contention components
     rate_cache: Option<RateCache>,
+    /// bytes streamed through each WAN link (by topology link index)
+    /// since the last [`Self::take_wan_window_bytes`] — the bounded-lag
+    /// demand ledger (DESIGN.md §14). Pure bookkeeping: never read by
+    /// the solver, so fabrics that ignore it behave bit-identically.
+    wan_window_bytes: std::collections::BTreeMap<usize, f64>,
 }
 
 impl TransferService {
@@ -545,7 +558,18 @@ impl TransferService {
             wan_factor: 1.0,
             interner: KeyInterner::default(),
             rate_cache: None,
+            wan_window_bytes: std::collections::BTreeMap::new(),
         }
+    }
+
+    /// Drain the WAN demand ledger: `(topology link index, bytes)`
+    /// streamed through each WAN link since the last drain, ascending
+    /// by link index. The windowed campaign executor aggregates these
+    /// across shards to derive next-window slowdown factors
+    /// (DESIGN.md §14); fabrics that never drain just accumulate a map
+    /// nobody reads.
+    pub fn take_wan_window_bytes(&mut self) -> Vec<(usize, f64)> {
+        std::mem::take(&mut self.wan_window_bytes).into_iter().collect()
     }
 
     /// Apply (or clear, with 1.0) a WAN capacity brownout. Active tasks
@@ -1036,8 +1060,24 @@ impl TransferService {
             let params = &self.params;
             let faults = &self.faults;
             let rng = &mut self.rng;
+            let interner = &self.interner;
+            let ledger = &mut self.wan_window_bytes;
             let mut failures: Vec<(usize, anyhow::Error)> = Vec::new();
             for (i, (a, &r)) in self.active.iter_mut().zip(&rates).enumerate() {
+                // credit the demand ledger before the state mutates:
+                // bytes this task streams over [task frontier, step_t]
+                // attributed to every WAN key on its route
+                let dt = (step_t - a.sim.t).max(0.0);
+                if dt > 0.0 && r > 0.0 {
+                    let bytes = r * dt * a.sim.n_streaming() as f64;
+                    if bytes > 0.0 {
+                        for &k in &a.sim.cap_keys {
+                            if let Some(l) = interner.wan_link(k) {
+                                *ledger.entry(l).or_insert(0.0) += bytes;
+                            }
+                        }
+                    }
+                }
                 if let Err(e) = a.sim.advance(step_t, r, params, faults, rng) {
                     failures.push((i, e));
                 }
@@ -1355,6 +1395,27 @@ mod tests {
                 "per-task throughput {tp} not near fair share {half}"
             );
         }
+    }
+
+    /// The bounded-lag demand ledger: driving a task through the fabric
+    /// credits ~its payload to every WAN link on the route, and the
+    /// drain is a true take (second drain is empty).
+    #[test]
+    fn wan_window_ledger_accounts_streamed_bytes() {
+        let mut s = svc();
+        s.submit_task(0.0, &gb_request(16, Some(8))).unwrap();
+        drive(&mut s, 1);
+        let ledger = s.take_wan_window_bytes();
+        // paper route slac->alcf: 3 WAN links, each carrying the payload
+        assert_eq!(ledger.len(), 3, "{ledger:?}");
+        for &(_, bytes) in &ledger {
+            // within a few % of the 1 GB payload (completion-detect slop)
+            assert!(
+                (0.95e9..1.10e9).contains(&bytes),
+                "link bytes {bytes} far from payload"
+            );
+        }
+        assert!(s.take_wan_window_bytes().is_empty(), "drain must reset");
     }
 
     /// A task arriving mid-flight slows the incumbent down (its finish

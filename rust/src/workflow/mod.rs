@@ -13,7 +13,9 @@
 //!   autoscaling, and fault plans (§9), gang-scheduled heterogeneous
 //!   tenant mixes with slot-time cost accounting (§10), and per-class
 //!   arrival processes plus dollar pricing / per-tenant bills (§11),
-//!   and spot capacity with checkpointed failover migration (§12)
+//!   spot capacity with checkpointed failover migration (§12), sharded
+//!   execution over fabric replicas (§13), and bounded-lag window
+//!   synchronization for cross-shard WAN contention (§14)
 
 pub mod campaign;
 pub mod coordinator;
@@ -24,9 +26,10 @@ pub mod scenario;
 pub mod world;
 
 pub use campaign::{
-    parse_mix, parse_spot, run_campaign, run_campaign_with_pool, Burst, CampaignConfig,
-    CampaignReport, CostSummary, DollarSummary, EndpointCost, EndpointDollars, EndpointLoad,
-    FairnessSummary, MixEntry, SpotSpec, TenantDollars, UserOutcome, AUTO_SHARD_USERS,
+    parse_mix, parse_spot, run_campaign, run_campaign_with_pool, sync_window_s, Burst,
+    CampaignConfig, CampaignReport, CostSummary, DollarSummary, EndpointCost, EndpointDollars,
+    EndpointLoad, FairnessSummary, MixEntry, SpotSpec, TenantDollars, UserOutcome,
+    AUTO_SHARD_USERS,
 };
 pub use coordinator::{
     extract_breakdown, render_table1, Coordinator, RetrainBreakdown, RetrainOutcome,

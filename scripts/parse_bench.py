@@ -35,6 +35,13 @@ SCALE = re.compile(
     r"^campaign-scale:\s+(?P<users>\d+)\s+users in\s+"
     r"(?P<wall>[\d.]+)\s+s = (?P<rate>[\d.]+)\s+users/s$"
 )
+# replica-vs-windowed comparison lines from the campaign-sync group:
+#     campaign-sync: <mode> <users> users in <wall> s = <rate> users/s [(N windows)]
+SYNC = re.compile(
+    r"^campaign-sync:\s+(?P<mode>replica|windowed)\s+(?P<users>\d+)\s+users in\s+"
+    r"(?P<wall>[\d.]+)\s+s = (?P<rate>[\d.]+)\s+users/s"
+    r"(?:\s+\((?P<windows>\d+)\s+windows?\))?$"
+)
 
 
 def cpu_model():
@@ -55,6 +62,7 @@ def main():
     group = None
     benches = []
     scale = []
+    sync_scale = []
     with open(src, encoding="utf-8") as f:
         for raw in f:
             line = raw.rstrip("\n")
@@ -70,6 +78,21 @@ def main():
                         "users": int(s.group("users")),
                         "wall_s": float(s.group("wall")),
                         "users_per_s": float(s.group("rate")),
+                    }
+                )
+                continue
+            y = SYNC.match(line.strip())
+            if y:
+                sync_scale.append(
+                    {
+                        "group": group,
+                        "mode": y.group("mode"),
+                        "users": int(y.group("users")),
+                        "wall_s": float(y.group("wall")),
+                        "users_per_s": float(y.group("rate")),
+                        "windows": int(y.group("windows"))
+                        if y.group("windows")
+                        else None,
                     }
                 )
                 continue
@@ -95,13 +118,18 @@ def main():
         "threads_env": os.environ.get("XLOOP_THREADS", ""),
         "benches": benches,
         "users_per_wall_second": scale,
+        "sync_users_per_wall_second": sync_scale,
     }
     with open(dst, "w", encoding="utf-8") as f:
         json.dump(doc, f, indent=1)
     print(
-        f"[parse_bench] {len(benches)} benches, {len(scale)} scale points"
-        f" -> {dst} (cpu: {doc['cpu']})"
+        f"[parse_bench] {len(benches)} benches, {len(scale)} scale points,"
+        f" {len(sync_scale)} sync points -> {dst} (cpu: {doc['cpu']})"
     )
+    if not scale:
+        # campaign-scale runs after the PJRT artifacts gate, so an
+        # artifact-less bench transcript legitimately has no such lines.
+        print("[parse_bench] note: no campaign-scale lines (artifacts absent?)")
     if not benches:
         sys.exit("no bench lines parsed — harness output format changed?")
 
