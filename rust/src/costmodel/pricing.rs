@@ -134,6 +134,15 @@ impl PriceBook {
         Ok(book)
     }
 
+    /// Chainable egress override — each federated site carries its own
+    /// book so `--sites`/`--cost-sweep` can study egress-price
+    /// asymmetry (a cheap-egress site wins the dollar placement even
+    /// when its queue is longer).
+    pub fn with_egress(mut self, dollars_per_gb: f64) -> PriceBook {
+        self.egress_per_gb = dollars_per_gb;
+        self
+    }
+
     /// The class of an endpoint id: the part after `#` (`alcf#cerebras`
     /// → `cerebras`), or the whole id when there is no `#`.
     pub fn class_of(endpoint: &str) -> &str {

@@ -19,8 +19,8 @@ use xloop::transfer::{TransferRequest, TransferService};
 use xloop::util::cli::Options;
 use xloop::util::stats::{human_bytes, human_secs};
 use xloop::workflow::{
-    parse_mix, parse_spot, render_table1, run_campaign, CampaignConfig, CampaignReport,
-    Coordinator, Mode, MixEntry, Scenario, SpotSpec, TrainingMode,
+    parse_mix, parse_sites, parse_spot, render_table1, run_campaign, CampaignConfig,
+    CampaignReport, Coordinator, Mode, MixEntry, Placement, Scenario, SpotSpec, TrainingMode,
 };
 
 fn main() {
@@ -73,7 +73,8 @@ fn print_usage() {
                      scheduling/elasticity/fault study; --prices and\n\
                      --cost-sweep for the dollar-denominated cost study;\n\
                      --spot, --checkpoint-every for preemptible capacity\n\
-                     with checkpointed failover)\n\
+                     with checkpointed failover; --sites, --placement for\n\
+                     brokered multi-site federation)\n\
            fig3      WAN transfer throughput vs concurrency (Fig. 3)\n\
            fig4      conventional vs ML-surrogate crossover (Fig. 4)\n\
            serve     retrain + deploy + stream edge inference\n\
@@ -266,6 +267,21 @@ fn cmd_campaign(args: &[String]) -> Result<()> {
             "checkpoint cadence for training gangs, in body seconds (0 = training is \
              not checkpointable: a spot preemption loses all progress)",
         )
+        .opt(
+            "sites",
+            "",
+            "extra federation sites behind the placement broker: semicolon-joined \
+             name:classes:gbps:latency_ms:egress_per_gb[:resident] entries, e.g. \
+             nersc:cerebras+gpu8:25:5:0.02:braggnn — classes and resident models \
+             join with `+`; whole-site outages come from --faults site=name@a..b \
+             (empty = the paper's fixed SLAC->ALCF path, no broker)",
+        )
+        .opt(
+            "placement",
+            "turnaround",
+            "which score the broker minimizes across --sites: turnaround (predicted \
+             staging + gang queue wait) | dollars (predicted slot + egress dollars)",
+        )
         .flag(
             "compare-policies",
             "run the same campaign under every policy and print a comparison table",
@@ -308,6 +324,8 @@ fn cmd_campaign(args: &[String]) -> Result<()> {
         "paper" => Some(PriceBook::paper()),
         spec => Some(PriceBook::parse(spec)?),
     };
+    let sites = parse_sites(p.get("sites"))?;
+    let placement = Placement::parse(p.get("placement"))?;
     // anything beyond the PR 2 default enables the enriched report
     let enriched = !matches!(policy, PolicyKind::Fifo)
         || !priorities.is_empty()
@@ -321,25 +339,34 @@ fn cmd_campaign(args: &[String]) -> Result<()> {
         // plain --shards stays out so the scale job's stdout is
         // byte-identical to the replica-mode golden
         || sync_wan
-        || shard_users > 0;
+        || shard_users > 0
+        || !sites.is_empty();
     let mk_cfg = |scenario: &Scenario, mean: f64, kind: PolicyKind| {
-        let mut cfg = CampaignConfig::new(users, scenario.clone(), mean, seed);
-        cfg.policy = kind;
-        cfg.priorities = priorities.clone();
-        if autoscale_max > 0 {
-            cfg.autoscale = vec![(
+        let autoscale = if autoscale_max > 0 {
+            vec![(
                 scenario.mode.train_endpoint().to_string(),
                 Autoscaler::up_to(autoscale_max),
-            )];
-        }
-        cfg.faults = faults.clone();
-        cfg.mix = mix.clone();
-        cfg.spot = spot.clone();
-        cfg.checkpoint_every_s = checkpoint_every;
-        cfg.shards = shards;
-        cfg.shard_users = shard_users;
-        cfg.sync_wan = sync_wan;
-        cfg
+            )]
+        } else {
+            Vec::new()
+        };
+        CampaignConfig::default()
+            .with_users(users)
+            .with_scenario(scenario.clone())
+            .with_interarrival_s(mean)
+            .with_seed(seed)
+            .with_policy(kind)
+            .with_priorities(priorities.clone())
+            .with_autoscale(autoscale)
+            .with_faults(faults.clone())
+            .with_mix(mix.clone())
+            .with_spot(spot.clone())
+            .with_checkpoint_every_s(checkpoint_every)
+            .with_shards(shards)
+            .with_shard_users(shard_users)
+            .with_sync_wan(sync_wan)
+            .with_sites(sites.clone())
+            .with_placement(placement)
     };
 
     let mean = p.get_f64("interarrival")?;
@@ -599,6 +626,29 @@ fn print_enriched_report(report: &CampaignReport, prices: Option<&PriceBook>) {
             bills.join(" | ")
         );
     }
+    // the DESIGN.md §15 federation block: per-site placement breakdown
+    // plus the site-outage reroute line the CI smoke leg greps for
+    if let Some(fed) = &report.federation {
+        println!(
+            "\nfederation — {} site(s), placement by {}:",
+            fed.sites.len(),
+            fed.placement.as_str(),
+        );
+        println!(
+            "{:>10} {:>8} {:>14} {:>12}",
+            "site", "placed", "resident hits", "egress $/GB"
+        );
+        for s in &fed.sites {
+            println!(
+                "{:>10} {:>8} {:>14} {:>12.2}",
+                s.name, s.placed, s.resident_hits, s.egress_per_gb
+            );
+        }
+        println!(
+            "site outages: {} gang(s) rerouted off dark sites | {} stranded",
+            fed.reroutes, fed.stranded
+        );
+    }
     if let Some(s) = &report.spot {
         println!(
             "\nspot capacity: {} preemption(s) | {} gang(s) displaced | \
@@ -738,7 +788,11 @@ fn campaign_cost_sweep(
     );
     for mean in parse_loads(loads)? {
         let remote = run_campaign(&mk_cfg(scenario, mean, policy))?;
-        let local = run_campaign(&mk_cfg(&local_scenario, mean, policy))?;
+        // the local V100 never crosses the WAN: its side of the
+        // comparison runs broker-less even under --sites
+        let mut local_cfg = mk_cfg(&local_scenario, mean, policy);
+        local_cfg.sites.clear();
+        let local = run_campaign(&local_cfg)?;
         let remote_usd = remote.cost.dollars(book).total_usd();
         let local_usd = local.cost.dollars(book).total_usd();
         let (rp50, lp50) = (
@@ -808,6 +862,50 @@ fn campaign_cost_sweep(
              See DESIGN.md \u{a7}12.)"
         );
     }
+
+    // the federation axis (DESIGN.md §15): with --sites set, sweep an
+    // egress-price asymmetry — scaling the extra sites' $/GB while the
+    // home site keeps list price — under dollars placement, and watch
+    // the broker shift traffic (and the bill) between sites
+    if !probe.sites.is_empty() {
+        let mean = parse_loads(loads)?.last().copied().unwrap_or(60.0);
+        println!(
+            "\nFederation axis — egress-price asymmetry under dollars placement \
+             (mean inter-arrival {mean:.1} s)\n"
+        );
+        println!(
+            "{:>14} {:>12} {}",
+            "egress scale", "fabric $", "placed per site"
+        );
+        for scale in [0.0, 0.5, 1.0, 2.0, 4.0] {
+            let mut cfg = mk_cfg(scenario, mean, policy).with_placement(Placement::Dollars);
+            for site in &mut cfg.sites {
+                let egress = site.book.egress_per_gb * scale;
+                site.book = site.book.clone().with_egress(egress);
+            }
+            let rep = run_campaign(&cfg)?;
+            let fed = rep
+                .federation
+                .as_ref()
+                .expect("--sites implies a federation block");
+            let placed: Vec<String> = fed
+                .sites
+                .iter()
+                .map(|s| format!("{} {}", s.name, s.placed))
+                .collect();
+            println!(
+                "{:>14.2} {:>12.2} {}",
+                scale,
+                rep.cost.dollars(book).total_usd(),
+                placed.join(" | ")
+            );
+        }
+        println!(
+            "\n(same arrivals/fabric per row; only the extra sites' egress $/GB\n\
+             scales — cheap egress pulls dollars-placement off the home site,\n\
+             pricey egress pushes it back. See DESIGN.md \u{a7}15.)"
+        );
+    }
     Ok(())
 }
 
@@ -834,7 +932,10 @@ fn campaign_load_sweep(
     );
     for mean in parse_loads(loads)? {
         let remote = run_campaign(&mk_cfg(scenario, mean, policy))?;
-        let local = run_campaign(&mk_cfg(&local_scenario, mean, policy))?;
+        // broker-less local side, as in the cost sweep
+        let mut local_cfg = mk_cfg(&local_scenario, mean, policy);
+        local_cfg.sites.clear();
+        let local = run_campaign(&local_cfg)?;
         let (rp50, rp95) = (
             remote.turnaround_percentile(50.0),
             remote.turnaround_percentile(95.0),

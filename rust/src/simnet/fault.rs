@@ -82,16 +82,29 @@ pub struct WanDegradation {
     pub until_vt: f64,
 }
 
+/// A whole federated site taken `Down` over `[from_vt, until_vt)`:
+/// every faas endpoint at the site goes dark at once and the placement
+/// broker must reroute (DESIGN.md §15). Only meaningful when the
+/// campaign runs with `--sites`; the site name is validated against the
+/// active site set by the campaign driver, not here.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SiteOutage {
+    pub site: String,
+    pub from_vt: f64,
+    pub until_vt: f64,
+}
+
 /// Scheduled campaign-level faults (DESIGN.md §9).
 #[derive(Debug, Clone, Default, PartialEq)]
 pub struct FaultPlan {
     pub outages: Vec<EndpointOutage>,
     pub wan: Vec<WanDegradation>,
+    pub sites: Vec<SiteOutage>,
 }
 
 impl FaultPlan {
     pub fn is_empty(&self) -> bool {
-        self.outages.is_empty() && self.wan.is_empty()
+        self.outages.is_empty() && self.wan.is_empty() && self.sites.is_empty()
     }
 
     /// Parse a comma-separated spec, e.g.
@@ -135,7 +148,12 @@ impl FaultPlan {
                         until_vt,
                     });
                 }
-                other => bail!("unknown fault kind `{other}` (outage, wan)"),
+                "site" => plan.sites.push(SiteOutage {
+                    site: subject.trim().to_string(),
+                    from_vt,
+                    until_vt,
+                }),
+                other => bail!("unknown fault kind `{other}` (outage, wan, site)"),
             }
         }
         plan.validate()?;
@@ -178,6 +196,29 @@ impl FaultPlan {
             }
             if !(w.factor > 0.0 && w.factor <= 1.0) {
                 bail!("wan factor must be in (0, 1], got {}", w.factor);
+            }
+        }
+        for s in &self.sites {
+            if s.site.is_empty() {
+                bail!("site outage with empty site name");
+            }
+            if !(s.from_vt.is_finite() && s.until_vt.is_finite())
+                || s.from_vt < 0.0
+                || s.until_vt <= s.from_vt
+            {
+                bail!(
+                    "bad site outage window [{}, {}) for `{}`",
+                    s.from_vt,
+                    s.until_vt,
+                    s.site
+                );
+            }
+        }
+        for (i, a) in self.sites.iter().enumerate() {
+            for b in self.sites.iter().skip(i + 1) {
+                if a.site == b.site && a.from_vt < b.until_vt && b.from_vt < a.until_vt {
+                    bail!("overlapping site outage windows on `{}`", a.site);
+                }
             }
         }
         Ok(())
@@ -264,7 +305,7 @@ mod tests {
                 from_vt,
                 until_vt,
             }],
-            wan: Vec::new(),
+            ..FaultPlan::default()
         };
         // zero-length window: [5, 5) injects nothing — rejected
         assert!(outage("e", 5.0, 5.0).validate().is_err());
@@ -288,12 +329,12 @@ mod tests {
             .contains("overlapping"));
         // wan windows get the same window checks plus the factor range
         let wan = |factor: f64, from_vt: f64, until_vt: f64| FaultPlan {
-            outages: Vec::new(),
             wan: vec![WanDegradation {
                 factor,
                 from_vt,
                 until_vt,
             }],
+            ..FaultPlan::default()
         };
         assert!(wan(0.5, 3.0, 3.0).validate().is_err());
         assert!(wan(f64::NAN, 0.0, 1.0).validate().is_err());
@@ -301,5 +342,35 @@ mod tests {
         // overlapping wan windows are allowed — they compose by
         // most-severe-factor, unlike outages
         assert!(FaultPlan::parse("wan=0.5@0..10,wan=0.25@5..15").is_ok());
+    }
+
+    #[test]
+    fn site_outage_windows_parse_and_validate() {
+        let p = FaultPlan::parse("site=nersc@100..900").unwrap();
+        assert_eq!(
+            p.sites,
+            vec![SiteOutage {
+                site: "nersc".into(),
+                from_vt: 100.0,
+                until_vt: 900.0,
+            }]
+        );
+        assert!(!p.is_empty());
+        // site windows get the same window checks as endpoint outages
+        assert!(FaultPlan::parse("site=nersc@5..5").is_err());
+        assert!(FaultPlan::parse("site=nersc@9..2").is_err());
+        assert!(FaultPlan::parse("site=@0..10").is_err()); // empty name
+        // same site overlapping: rejected; disjoint and distinct-site: fine
+        assert!(FaultPlan::parse("site=nersc@0..5,site=nersc@3..9")
+            .unwrap_err()
+            .to_string()
+            .contains("overlapping"));
+        assert!(FaultPlan::parse("site=nersc@0..5,site=nersc@5..9").is_ok());
+        assert!(FaultPlan::parse("site=nersc@0..5,site=ornl@0..5").is_ok());
+        // composes with the other kinds in one spec
+        let mixed = FaultPlan::parse("outage=alcf#gpu8@0..9,site=nersc@4..8,wan=0.5@1..2").unwrap();
+        assert_eq!(mixed.outages.len(), 1);
+        assert_eq!(mixed.sites.len(), 1);
+        assert_eq!(mixed.wan.len(), 1);
     }
 }

@@ -16,6 +16,6 @@ pub mod wheel;
 
 pub use clock::{VClock, VSpan};
 pub use des::{DesBackend, EventId, Scheduler, WHEEL_THRESHOLD};
-pub use fault::{EndpointOutage, FaultModel, FaultPlan, WanDegradation};
+pub use fault::{EndpointOutage, FaultModel, FaultPlan, SiteOutage, WanDegradation};
 pub use fluid::{max_min_rates, simulate, FlowResult, FlowSpec};
 pub use topology::{Facility, FacilityId, Link, LinkId, Topology, GBPS};

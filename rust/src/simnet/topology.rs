@@ -129,6 +129,58 @@ impl Topology {
         }
     }
 
+    /// Register a new facility. Fails on duplicate names so callers can
+    /// rely on `facility(name)` staying unambiguous.
+    pub fn add_facility(&mut self, name: &str) -> Result<FacilityId> {
+        if self.facilities.iter().any(|f| f.name == name) {
+            bail!("duplicate facility `{name}`");
+        }
+        self.facilities.push(Facility { name: name.into() });
+        Ok(FacilityId(self.facilities.len() - 1))
+    }
+
+    /// Register a new shared link. Fails on duplicate names (link names
+    /// key the route grammar in `from_json` and debugging output).
+    pub fn add_link(&mut self, name: &str, capacity_bps: f64, latency_s: f64) -> Result<LinkId> {
+        if self.links.iter().any(|l| l.name == name) {
+            bail!("duplicate link `{name}`");
+        }
+        self.links.push(Link {
+            name: name.into(),
+            capacity_bps,
+            latency_s,
+        });
+        Ok(LinkId(self.links.len() - 1))
+    }
+
+    /// Register a directed route. Fails if the pair already has one.
+    pub fn add_route(&mut self, from: FacilityId, to: FacilityId, path: Vec<LinkId>) -> Result<()> {
+        if from == to {
+            bail!("route from a facility to itself");
+        }
+        if path.is_empty() {
+            bail!("empty route");
+        }
+        if self.routes.iter().any(|(pair, _)| *pair == (from, to)) {
+            bail!(
+                "duplicate route {} -> {}",
+                self.facility_name(from),
+                self.facility_name(to)
+            );
+        }
+        self.routes.push(((from, to), path));
+        Ok(())
+    }
+
+    /// Find a link by name.
+    pub fn link_by_name(&self, name: &str) -> Result<LinkId> {
+        self.links
+            .iter()
+            .position(|l| l.name == name)
+            .map(LinkId)
+            .with_context(|| format!("unknown link `{name}`"))
+    }
+
     /// Parse a topology from a JSON config:
     /// `{"facilities": ["a","b"], "links": [{"name","gbps","latency_ms"}],
     ///   "routes": [{"from":"a","to":"b","links":["l1","l2"]}]}`

@@ -1,0 +1,608 @@
+//! Multi-site federation and brokered placement (DESIGN.md §15).
+//!
+//! The paper's evaluation is a binary: train at the remote DCAI
+//! facility (ALCF) or on the locally deployable GPU. The
+//! federated-ptychography and remote-operations lines of work
+//! generalize that choice to K candidate sites behind a broker. This
+//! module promotes sites to first-class objects: a [`Site`] bundles a
+//! name, the access-link shape that joins it to the shared backbone,
+//! the accelerator classes it hosts, a per-site [`PriceBook`] (egress
+//! asymmetry rides here), and a residency set for the data-locality
+//! credit. The [`Broker`] scores every live site per arriving campaign
+//! task-group — by **predicted turnaround** (staging time from the
+//! transfer fabric's predictive model + gang queue wait from the
+//! scheduling estimate machinery) or **predicted dollars** (slot
+//! dollars for the exact train estimate + egress dollars for the
+//! staged bytes) — and places deterministically: sites are scanned in
+//! name order and only a strictly better score moves the choice, so
+//! equal scores tie-break to the lexicographically smaller name and
+//! the decision is a pure function of (config, seed), invariant to
+//! `XLOOP_THREADS`.
+//!
+//! With no `--sites` the campaign never constructs a broker and the
+//! paper's fixed SLAC→ALCF path runs byte-identically.
+
+use std::collections::BTreeSet;
+
+use anyhow::{bail, Context, Result};
+
+use crate::costmodel::PriceBook;
+use crate::faas::FuncId;
+use crate::simnet::{FaultPlan, Topology, GBPS};
+use crate::transfer::{EndpointId, TransferRequest};
+use crate::util::Json;
+
+use super::world::World;
+
+/// Accelerator classes a federated site may host — the train-capable
+/// subset of `costmodel::KNOWN_CLASSES` (an endpoint without an
+/// accelerator model can never run `train_model`, so `sim`/`cluster`
+/// are not placeable).
+pub const PLACEABLE_CLASSES: &[&str] = &["cerebras", "gpu8", "sambanova", "v100"];
+
+/// File split the broker assumes when predicting staging time — the
+/// campaign flow's `FlowShape::default().files`.
+const BROKER_STAGE_FILES: usize = 16;
+
+/// One federated DCAI site: an access link onto the shared backbone,
+/// a set of accelerator endpoints, prices, and resident model families.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Site {
+    pub name: String,
+    /// accelerator classes hosted; endpoint ids are `{name}#{class}`
+    pub classes: Vec<String>,
+    /// access-link (DTN NIC) capacity in Gbit/s
+    pub gbps: f64,
+    /// access-link one-way latency in milliseconds
+    pub latency_ms: f64,
+    /// per-site prices — `egress_per_gb` is where `--sites` egress
+    /// asymmetry lives; class rates default to the paper book
+    pub book: PriceBook,
+    /// model families already resident at the site (locality credit:
+    /// predicted staging is waived in the broker score)
+    pub resident: BTreeSet<String>,
+}
+
+impl Site {
+    /// The implicit home site: the paper's ALCF, reachable over its
+    /// existing 10 Gbps DTN NIC, hosting the accelerator classes
+    /// `World::paper` registers there, priced by the paper book.
+    pub fn home() -> Site {
+        Site {
+            name: "alcf".into(),
+            classes: vec!["cerebras".into(), "sambanova".into(), "gpu8".into()],
+            gbps: 10.0,
+            latency_ms: 0.5,
+            book: PriceBook::paper(),
+            resident: BTreeSet::new(),
+        }
+    }
+
+    /// The site's staging endpoint (`{name}#dtn`).
+    pub fn dtn(&self) -> String {
+        format!("{}#dtn", self.name)
+    }
+
+    /// The site's faas endpoint for a class (`{name}#{class}`).
+    pub fn endpoint(&self, class: &str) -> String {
+        format!("{}#{class}", self.name)
+    }
+
+    /// All faas endpoints the site hosts, in declared class order.
+    pub fn endpoints(&self) -> Vec<String> {
+        self.classes.iter().map(|c| self.endpoint(c)).collect()
+    }
+
+    pub fn hosts(&self, class: &str) -> bool {
+        self.classes.iter().any(|c| c == class)
+    }
+
+    /// Wire the site's access link and routes into a topology: a new
+    /// facility, a `{name}-dtn-nic` link, and routes to every facility
+    /// that already owns a `-dtn-nic` via the shared `esnet-backbone`.
+    pub fn extend_topology(&self, topo: &mut Topology) -> Result<()> {
+        let fac = topo.add_facility(&self.name)?;
+        let backbone = topo.link_by_name("esnet-backbone")?;
+        let nic = topo.add_link(
+            &format!("{}-dtn-nic", self.name),
+            self.gbps * GBPS,
+            self.latency_ms / 1e3,
+        )?;
+        let peers: Vec<String> = topo
+            .facilities
+            .iter()
+            .map(|f| f.name.clone())
+            .filter(|n| *n != self.name)
+            .collect();
+        for peer in peers {
+            let Ok(peer_nic) = topo.link_by_name(&format!("{peer}-dtn-nic")) else {
+                continue;
+            };
+            let peer_id = topo.facility(&peer)?;
+            topo.add_route(fac, peer_id, vec![nic, backbone, peer_nic])?;
+            topo.add_route(peer_id, fac, vec![peer_nic, backbone, nic])?;
+        }
+        Ok(())
+    }
+}
+
+/// Parse a `--sites` spec: semicolon-joined
+/// `name:class1+class2:gbps:latency_ms:egress_per_gb[:model1+model2]`
+/// entries, e.g.
+/// `nersc:gpu8+v100:10:12:0.02;ornl:cerebras:25:18:0.09:braggnn`.
+/// The trailing optional field lists resident model families (locality
+/// credit). Site names must be unique and must not shadow the paper
+/// facilities (`slac`, `alcf`); classes must be placeable and unique
+/// per site; link and price numbers must be finite and sensible.
+pub fn parse_sites(spec: &str) -> Result<Vec<Site>> {
+    let mut sites: Vec<Site> = Vec::new();
+    for entry in spec.split(';') {
+        let entry = entry.trim();
+        if entry.is_empty() {
+            continue;
+        }
+        let fields: Vec<&str> = entry.split(':').collect();
+        if !(5..=6).contains(&fields.len()) {
+            bail!(
+                "bad site entry `{entry}` \
+                 (want name:classes:gbps:latency_ms:egress_per_gb[:resident])"
+            );
+        }
+        let name = fields[0].trim();
+        if name.is_empty() {
+            bail!("site with empty name in `{entry}`");
+        }
+        if name == "slac" || name == "alcf" {
+            bail!("site name `{name}` is reserved (paper facility)");
+        }
+        if sites.iter().any(|s| s.name == name) {
+            bail!("duplicate site name `{name}`");
+        }
+        let mut classes: Vec<String> = Vec::new();
+        for class in fields[1].split('+') {
+            let class = class.trim();
+            if class.is_empty() {
+                continue;
+            }
+            if !PLACEABLE_CLASSES.contains(&class) {
+                bail!(
+                    "unknown endpoint class `{class}` for site `{name}` (placeable: {})",
+                    PLACEABLE_CLASSES.join(", ")
+                );
+            }
+            if classes.iter().any(|c| c == class) {
+                bail!("duplicate class `{class}` for site `{name}`");
+            }
+            classes.push(class.to_string());
+        }
+        if classes.is_empty() {
+            bail!("site `{name}` has an empty endpoint class list");
+        }
+        let num = |field: &str, what: &str| -> Result<f64> {
+            field
+                .trim()
+                .parse::<f64>()
+                .map_err(|_| anyhow::anyhow!("bad {what} `{field}` for site `{name}`"))
+        };
+        let gbps = num(fields[2], "gbps")?;
+        if !gbps.is_finite() || gbps <= 0.0 {
+            bail!("site `{name}` gbps must be finite and > 0, got {gbps}");
+        }
+        let latency_ms = num(fields[3], "latency_ms")?;
+        if !latency_ms.is_finite() || latency_ms < 0.0 {
+            bail!("site `{name}` latency_ms must be finite and >= 0, got {latency_ms}");
+        }
+        let egress = num(fields[4], "egress_per_gb")?;
+        if !egress.is_finite() || egress < 0.0 {
+            bail!("site `{name}` egress_per_gb must be finite and >= 0, got {egress}");
+        }
+        let resident: BTreeSet<String> = fields
+            .get(5)
+            .map(|f| {
+                f.split('+')
+                    .map(str::trim)
+                    .filter(|m| !m.is_empty())
+                    .map(str::to_string)
+                    .collect()
+            })
+            .unwrap_or_default();
+        sites.push(Site {
+            name: name.to_string(),
+            classes,
+            gbps,
+            latency_ms,
+            book: PriceBook::paper().with_egress(egress),
+            resident,
+        });
+    }
+    Ok(sites)
+}
+
+/// Which score the broker minimizes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Placement {
+    /// predicted staging time + predicted gang queue wait (seconds)
+    #[default]
+    Turnaround,
+    /// predicted slot dollars + predicted egress dollars
+    Dollars,
+}
+
+impl Placement {
+    pub fn parse(s: &str) -> Result<Placement> {
+        match s.trim() {
+            "turnaround" => Ok(Placement::Turnaround),
+            "dollars" => Ok(Placement::Dollars),
+            other => bail!("unknown placement policy `{other}` (turnaround, dollars)"),
+        }
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Placement::Turnaround => "turnaround",
+            Placement::Dollars => "dollars",
+        }
+    }
+}
+
+/// Per-site placement bookkeeping, reported in the enriched block.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SiteSummary {
+    pub name: String,
+    /// users the broker placed at this site
+    pub placed: u32,
+    /// placements that took the data-locality credit
+    pub resident_hits: u32,
+    pub egress_per_gb: f64,
+}
+
+/// The federation block of a campaign report.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FederationSummary {
+    pub placement: Placement,
+    /// per-site stats, in site-name order (home site included)
+    pub sites: Vec<SiteSummary>,
+    /// gangs rerouted off dark sites by `SiteOutage` windows
+    pub reroutes: u32,
+    /// displaced gangs a site outage left with no live candidate
+    pub stranded: u32,
+}
+
+/// The placement broker: home site + `--sites` extras in name order,
+/// a down flag per site driven by `SiteOutage` windows, and running
+/// stats. Scoring reads the live fabric (`World`) but never mutates
+/// it, so placement stays a pure function of the shard's state.
+#[derive(Debug, Clone)]
+pub struct Broker {
+    pub placement: Placement,
+    sites: Vec<Site>,
+    down: Vec<bool>,
+    stats: Vec<SiteSummary>,
+    reroutes: u32,
+    stranded: u32,
+}
+
+impl Broker {
+    /// Build a broker over the implicit home site plus `extra` sites,
+    /// sorted by name for the stable tie-break.
+    pub fn new(extra: &[Site], placement: Placement) -> Broker {
+        let mut sites = vec![Site::home()];
+        sites.extend(extra.iter().cloned());
+        sites.sort_by(|a, b| a.name.cmp(&b.name));
+        let stats = sites
+            .iter()
+            .map(|s| SiteSummary {
+                name: s.name.clone(),
+                placed: 0,
+                resident_hits: 0,
+                egress_per_gb: s.book.egress_per_gb,
+            })
+            .collect();
+        let down = vec![false; sites.len()];
+        Broker {
+            placement,
+            sites,
+            down,
+            stats,
+            reroutes: 0,
+            stranded: 0,
+        }
+    }
+
+    pub fn sites(&self) -> &[Site] {
+        &self.sites
+    }
+
+    fn index_of(&self, site: &str) -> Result<usize> {
+        self.sites
+            .iter()
+            .position(|s| s.name == site)
+            .with_context(|| format!("unknown federation site `{site}`"))
+    }
+
+    /// Check every `site=` window in a fault plan names a broker site.
+    pub fn validate_plan(&self, plan: &FaultPlan) -> Result<()> {
+        for s in &plan.sites {
+            self.index_of(&s.site)
+                .with_context(|| format!("site outage on unknown site `{}`", s.site))?;
+        }
+        Ok(())
+    }
+
+    /// Flip a site's outage state; returns the site's faas endpoints so
+    /// the campaign driver can keep its per-endpoint `down_count`
+    /// refcounts (and run the failover planner) in step.
+    pub fn set_down(&mut self, site: &str, down: bool) -> Result<Vec<String>> {
+        let i = self.index_of(site)?;
+        self.down[i] = down;
+        Ok(self.sites[i].endpoints())
+    }
+
+    /// Record the outcome of a site-outage failover wave.
+    pub fn note_reroutes(&mut self, displaced: u32, stranded: u32) {
+        self.reroutes += displaced.saturating_sub(stranded);
+        self.stranded += stranded;
+    }
+
+    /// Predicted score for running a `width`-wide `model` task-group of
+    /// `bytes` staged input on site `si`'s `class` endpoint at `now`.
+    /// `f64::INFINITY` = infeasible (class not hosted, gang can never
+    /// fit, or no WAN path).
+    fn score(&self, world: &World, si: usize, class: &str, width: usize, bytes: u64, model: &str, now: f64) -> f64 {
+        let site = &self.sites[si];
+        if !site.hosts(class) {
+            return f64::INFINITY;
+        }
+        let ep = site.endpoint(class);
+        let Some(faas) = world.faas.as_ref() else {
+            return f64::INFINITY;
+        };
+        let wait_s = faas.predicted_gang_wait(&ep, width, now);
+        if !wait_s.is_finite() {
+            return f64::INFINITY;
+        }
+        let resident = site.resident.contains(model);
+        let stage_s = if resident {
+            0.0
+        } else {
+            let req = TransferRequest::split_even(
+                "broker-stage",
+                EndpointId::from("slac#dtn"),
+                EndpointId::from(site.dtn().as_str()),
+                bytes.max(1),
+                BROKER_STAGE_FILES,
+            );
+            match world.transfer.predict_linear(&req) {
+                Ok(s) => s,
+                Err(_) => return f64::INFINITY,
+            }
+        };
+        match self.placement {
+            Placement::Turnaround => stage_s + wait_s,
+            Placement::Dollars => {
+                let est_s = world
+                    .estimate_task_secs(
+                        &ep,
+                        &FuncId("train_model".into()),
+                        &Json::obj(vec![("model", Json::str(model))]),
+                    )
+                    .unwrap_or(0.0);
+                let slot = site.book.slot_dollars(&ep, est_s * width as f64);
+                let egress = if resident {
+                    0.0
+                } else {
+                    site.book.egress_dollars(bytes as f64)
+                };
+                slot + egress
+            }
+        }
+    }
+
+    /// Place one arriving task-group: scan sites in name order, keep
+    /// the first strictly best finite score among live sites hosting
+    /// `class`. If an outage has every hosting site dark, the group
+    /// parks on the first hosting site by name (it queues and runs at
+    /// restore). Returns `(train_endpoint, stage_dtn)`.
+    pub fn place(
+        &mut self,
+        world: &World,
+        class: &str,
+        width: usize,
+        bytes: u64,
+        model: &str,
+        now: f64,
+    ) -> Result<(String, String)> {
+        let mut best: Option<(usize, f64)> = None;
+        for si in 0..self.sites.len() {
+            if self.down[si] || !self.sites[si].hosts(class) {
+                continue;
+            }
+            let score = self.score(world, si, class, width, bytes, model, now);
+            if !score.is_finite() {
+                continue;
+            }
+            if best.map_or(true, |(_, b)| score < b) {
+                best = Some((si, score));
+            }
+        }
+        let si = match best {
+            Some((si, _)) => si,
+            // every hosting site is dark or infeasible: park on the
+            // first hosting site so the work queues until restore
+            None => self
+                .sites
+                .iter()
+                .position(|s| s.hosts(class))
+                .with_context(|| format!("no federation site hosts class `{class}`"))?,
+        };
+        self.stats[si].placed += 1;
+        if self.sites[si].resident.contains(model) {
+            self.stats[si].resident_hits += 1;
+        }
+        Ok((self.sites[si].endpoint(class), self.sites[si].dtn()))
+    }
+
+    pub fn summary(&self) -> FederationSummary {
+        FederationSummary {
+            placement: self.placement,
+            sites: self.stats.clone(),
+            reroutes: self.reroutes,
+            stranded: self.stranded,
+        }
+    }
+}
+
+impl FederationSummary {
+    /// Merge a shard's summary into this one (site lists are identical
+    /// across shards — same config — so stats add elementwise).
+    pub fn absorb(&mut self, other: &FederationSummary) {
+        debug_assert_eq!(self.sites.len(), other.sites.len());
+        for (a, b) in self.sites.iter_mut().zip(&other.sites) {
+            debug_assert_eq!(a.name, b.name);
+            a.placed += b.placed;
+            a.resident_hits += b.resident_hits;
+        }
+        self.reroutes += other.reroutes;
+        self.stranded += other.stranded;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_sites_happy_path() {
+        let sites =
+            parse_sites("nersc:gpu8+v100:10:12:0.02;ornl:cerebras:25:18:0.09:braggnn+cookienetae")
+                .unwrap();
+        assert_eq!(sites.len(), 2);
+        assert_eq!(sites[0].name, "nersc");
+        assert_eq!(sites[0].classes, vec!["gpu8", "v100"]);
+        assert_eq!(sites[0].gbps, 10.0);
+        assert_eq!(sites[0].latency_ms, 12.0);
+        assert_eq!(sites[0].book.egress_per_gb, 0.02);
+        assert!(sites[0].resident.is_empty());
+        assert!(sites[1].resident.contains("braggnn"));
+        assert!(sites[1].resident.contains("cookienetae"));
+        assert_eq!(sites[1].endpoints(), vec!["ornl#cerebras"]);
+        assert_eq!(sites[1].dtn(), "ornl#dtn");
+        // class rates ride the paper book; only egress is per-site
+        assert_eq!(sites[1].book.rate_per_slot_hour("ornl#cerebras"), 42.0);
+        // empty spec = no extra sites
+        assert!(parse_sites("").unwrap().is_empty());
+        assert!(parse_sites(" ; ").unwrap().is_empty());
+    }
+
+    #[test]
+    fn parse_sites_rejects_bad_specs() {
+        // duplicate site names
+        assert!(parse_sites("nersc:gpu8:10:12:0.02;nersc:v100:10:12:0.02")
+            .unwrap_err()
+            .to_string()
+            .contains("duplicate site name"));
+        // empty endpoint class list (explicitly empty field)
+        assert!(parse_sites("nersc::10:12:0.02")
+            .unwrap_err()
+            .to_string()
+            .contains("empty endpoint class list"));
+        // negative egress rate
+        assert!(parse_sites("nersc:gpu8:10:12:-0.02")
+            .unwrap_err()
+            .to_string()
+            .contains("egress_per_gb"));
+        // unknown price class (sim/cluster are known but not placeable)
+        assert!(parse_sites("nersc:tpu:10:12:0.02")
+            .unwrap_err()
+            .to_string()
+            .contains("unknown endpoint class"));
+        assert!(parse_sites("nersc:sim:10:12:0.02").is_err());
+        // duplicate classes within one site
+        assert!(parse_sites("nersc:gpu8+gpu8:10:12:0.02")
+            .unwrap_err()
+            .to_string()
+            .contains("duplicate class"));
+        // reserved paper facility names
+        assert!(parse_sites("alcf:gpu8:10:12:0.02")
+            .unwrap_err()
+            .to_string()
+            .contains("reserved"));
+        assert!(parse_sites("slac:gpu8:10:12:0.02").is_err());
+        // malformed numbers and shapes
+        assert!(parse_sites("nersc:gpu8:fast:12:0.02").is_err());
+        assert!(parse_sites("nersc:gpu8:0:12:0.02").is_err()); // gbps 0
+        assert!(parse_sites("nersc:gpu8:10:-1:0.02").is_err()); // latency < 0
+        assert!(parse_sites("nersc:gpu8:10:12").is_err()); // too few fields
+        assert!(parse_sites("nersc:gpu8:10:12:0.02:braggnn:extra").is_err());
+        assert!(parse_sites(":gpu8:10:12:0.02").is_err()); // empty name
+    }
+
+    #[test]
+    fn placement_parses() {
+        assert_eq!(Placement::parse("turnaround").unwrap(), Placement::Turnaround);
+        assert_eq!(Placement::parse("dollars").unwrap(), Placement::Dollars);
+        assert!(Placement::parse("cheapest").is_err());
+        assert_eq!(Placement::default(), Placement::Turnaround);
+        assert_eq!(Placement::Dollars.as_str(), "dollars");
+    }
+
+    #[test]
+    fn broker_orders_sites_by_name_with_home_included() {
+        let extra = parse_sites("ornl:cerebras:25:18:0.09;nersc:gpu8:10:12:0.02").unwrap();
+        let b = Broker::new(&extra, Placement::Turnaround);
+        let names: Vec<&str> = b.sites().iter().map(|s| s.name.as_str()).collect();
+        assert_eq!(names, vec!["alcf", "nersc", "ornl"]);
+        // the summary mirrors that order with zeroed stats
+        let s = b.summary();
+        assert_eq!(s.sites.len(), 3);
+        assert!(s.sites.iter().all(|x| x.placed == 0));
+        assert_eq!(s.reroutes, 0);
+    }
+
+    #[test]
+    fn site_outage_plans_validate_against_broker_sites() {
+        let extra = parse_sites("nersc:cerebras:10:12:0.02").unwrap();
+        let b = Broker::new(&extra, Placement::Turnaround);
+        assert!(b.validate_plan(&FaultPlan::parse("site=nersc@0..10").unwrap()).is_ok());
+        assert!(b.validate_plan(&FaultPlan::parse("site=alcf@0..10").unwrap()).is_ok());
+        assert!(b
+            .validate_plan(&FaultPlan::parse("site=ornl@0..10").unwrap())
+            .unwrap_err()
+            .to_string()
+            .contains("unknown site"));
+    }
+
+    #[test]
+    fn topology_extension_routes_through_the_backbone() {
+        let mut topo = Topology::paper();
+        let site = &parse_sites("nersc:gpu8:20:10:0.02").unwrap()[0];
+        site.extend_topology(&mut topo).unwrap();
+        let slac = topo.facility("slac").unwrap();
+        let nersc = topo.facility("nersc").unwrap();
+        let alcf = topo.facility("alcf").unwrap();
+        // 0.5ms slac nic + 23ms backbone + 10ms nersc nic, both ways
+        let rtt = topo.rtt(slac, nersc).unwrap();
+        assert!((rtt - 2.0 * (0.5e-3 + 23.0e-3 + 10.0e-3)).abs() < 1e-12, "{rtt}");
+        // narrowest hop to nersc is its own 20 Gbps NIC vs slac's 10
+        let min_cap = topo
+            .route(slac, nersc)
+            .unwrap()
+            .iter()
+            .map(|&l| topo.link(l).capacity_bps)
+            .fold(f64::INFINITY, f64::min);
+        assert_eq!(min_cap, 10.0 * GBPS);
+        let min_cap_back = topo
+            .route(nersc, alcf)
+            .unwrap()
+            .iter()
+            .map(|&l| topo.link(l).capacity_bps)
+            .fold(f64::INFINITY, f64::min);
+        assert_eq!(min_cap_back, 10.0 * GBPS); // alcf's NIC
+        // a second site also routes to the first (site<->site paths)
+        let site2 = &parse_sites("ornl:cerebras:25:18:0.09").unwrap()[0];
+        site2.extend_topology(&mut topo).unwrap();
+        let ornl = topo.facility("ornl").unwrap();
+        assert!(topo.route(ornl, nersc).is_ok());
+        assert!(topo.route(nersc, ornl).is_ok());
+    }
+}

@@ -22,6 +22,11 @@ pub struct FlowShape {
     /// transfer file split + pinned concurrency
     pub files: usize,
     pub concurrency: Option<usize>,
+    /// override the remote staging destination (and the symmetric
+    /// trained-model return source) — `None` keeps the paper's fixed
+    /// `alcf#dtn`, the federation broker passes `"${input.stage_dst}"`
+    /// so each user's placed site picks the DTN pair
+    pub stage_dst: Option<String>,
 }
 
 impl Default for FlowShape {
@@ -32,6 +37,7 @@ impl Default for FlowShape {
             rollback_on_failure: true,
             files: 16,
             concurrency: None,
+            stage_dst: None,
         }
     }
 }
@@ -44,10 +50,12 @@ pub fn dnn_trainer_flow(shape: &FlowShape) -> Result<FlowDefinition> {
     let mut actions = Vec::new();
     let mut train_dep = Vec::new();
 
+    let remote_dtn = shape.stage_dst.as_deref().unwrap_or("alcf#dtn");
+
     if shape.remote {
         let mut stage = format!(
             r#"{{"id": "stage_data", "provider": "transfer", "retries": 2,
-                 "params": {{"label": "train-data", "src": "slac#dtn", "dst": "alcf#dtn",
+                 "params": {{"label": "train-data", "src": "slac#dtn", "dst": "{remote_dtn}",
                              "bytes": "${{input.dataset_bytes}}", "files": {}"#,
             shape.files
         );
@@ -93,12 +101,11 @@ pub fn dnn_trainer_flow(shape: &FlowShape) -> Result<FlowDefinition> {
     ));
 
     let deploy_dep = if shape.remote {
-        actions.push(
-            r#"{"id": "return_model", "provider": "transfer", "retries": 2, "depends_on": ["train"],
-                "params": {"label": "trained-model", "src": "alcf#dtn", "dst": "slac#dtn",
-                           "model": "${input.model}", "files": 1}}"#
-                .to_string(),
-        );
+        actions.push(format!(
+            r#"{{"id": "return_model", "provider": "transfer", "retries": 2, "depends_on": ["train"],
+                "params": {{"label": "trained-model", "src": "{remote_dtn}", "dst": "slac#dtn",
+                           "model": "${{input.model}}", "files": 1}}}}"#
+        ));
         "return_model"
     } else {
         "train"
@@ -182,6 +189,24 @@ mod tests {
             ids,
             vec!["stage_data", "label", "train", "return_model", "deploy"]
         );
+    }
+
+    #[test]
+    fn stage_dst_override_rewires_both_transfers() {
+        let def = dnn_trainer_flow(&FlowShape {
+            stage_dst: Some("${input.stage_dst}".into()),
+            ..Default::default()
+        })
+        .unwrap();
+        let stage = def.action("stage_data").unwrap();
+        assert_eq!(stage.params.get("dst").as_str(), Some("${input.stage_dst}"));
+        let ret = def.action("return_model").unwrap();
+        assert_eq!(ret.params.get("src").as_str(), Some("${input.stage_dst}"));
+        assert_eq!(ret.params.get("dst").as_str(), Some("slac#dtn"));
+        // the default shape keeps the paper's fixed DTN pair
+        let def = dnn_trainer_flow(&FlowShape::default()).unwrap();
+        let stage = def.action("stage_data").unwrap();
+        assert_eq!(stage.params.get("dst").as_str(), Some("alcf#dtn"));
     }
 
     #[test]

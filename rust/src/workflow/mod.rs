@@ -14,11 +14,14 @@
 //!   tenant mixes with slot-time cost accounting (§10), and per-class
 //!   arrival processes plus dollar pricing / per-tenant bills (§11),
 //!   spot capacity with checkpointed failover migration (§12), sharded
-//!   execution over fabric replicas (§13), and bounded-lag window
-//!   synchronization for cross-shard WAN contention (§14)
+//!   execution over fabric replicas (§13), bounded-lag window
+//!   synchronization for cross-shard WAN contention (§14), and
+//!   brokered multi-site federation (§15)
+//! * `federation`  — sites, the placement broker, and `--sites` parsing
 
 pub mod campaign;
 pub mod coordinator;
+pub mod federation;
 pub mod flow;
 pub mod functions;
 pub mod providers;
@@ -27,9 +30,12 @@ pub mod world;
 
 pub use campaign::{
     parse_mix, parse_spot, run_campaign, run_campaign_with_pool, sync_window_s, Burst,
-    CampaignConfig, CampaignReport, CostSummary, DollarSummary, EndpointCost, EndpointDollars,
-    EndpointLoad, FairnessSummary, MixEntry, SpotSpec, TenantDollars, UserOutcome,
-    AUTO_SHARD_USERS,
+    CampaignConfig, CampaignReport, CampaignRunner, CostSummary, DollarSummary, EndpointCost,
+    EndpointDollars, EndpointLoad, FairnessSummary, MixEntry, SpotSpec, TenantDollars,
+    UserOutcome, AUTO_SHARD_USERS,
+};
+pub use federation::{
+    parse_sites, Broker, FederationSummary, Placement, Site, SiteSummary,
 };
 pub use coordinator::{
     extract_breakdown, render_table1, Coordinator, RetrainBreakdown, RetrainOutcome,

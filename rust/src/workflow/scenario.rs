@@ -63,6 +63,15 @@ pub struct Scenario {
     pub seed: u64,
 }
 
+impl Default for Scenario {
+    /// The lead Table 1 cell (BraggNN on the remote Cerebras) — the
+    /// scenario `CampaignConfig::default()` starts from. `table1` is
+    /// infallible for this pair, so the builder root never errors.
+    fn default() -> Scenario {
+        Scenario::table1("braggnn", Mode::RemoteCerebras).expect("built-in table1 scenario")
+    }
+}
+
 impl Scenario {
     /// Defaults reproducing the Table 1 magnitudes: staged payloads sized
     /// so the paper-calibrated fabric yields ~7 s (BraggNN) and ~5 s

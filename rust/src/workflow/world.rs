@@ -232,6 +232,37 @@ impl World {
         })
     }
 
+    /// Register a federated site on this world (DESIGN.md §15): wire
+    /// its access link into the transfer topology, register its
+    /// `{name}#dtn` staging endpoint (ALCF-class DTN disks), and add
+    /// one faas endpoint + accelerator model per hosted class. Sites
+    /// never touch the paper endpoints, so a world with no sites added
+    /// is exactly `World::paper`.
+    pub fn add_site(&mut self, site: &super::federation::Site) -> Result<()> {
+        site.extend_topology(&mut self.transfer.topo)?;
+        let fac = self.transfer.topo.facility(&site.name)?;
+        self.transfer.endpoints.register(crate::transfer::Endpoint {
+            id: EndpointId::from(site.dtn().as_str()),
+            facility: fac,
+            read_bps: 1.45e9,
+            write_bps: 1.25e9,
+        })?;
+        let faas = self.faas.as_mut().context("faas service missing")?;
+        for class in &site.classes {
+            let id = site.endpoint(class);
+            let accel = match class.as_str() {
+                "cerebras" => cerebras_wse(),
+                "sambanova" => sambanova_rdu(),
+                "gpu8" => multi_gpu_horovod(8),
+                "v100" => local_v100(),
+                other => bail!("class `{other}` is not placeable at a federated site"),
+            };
+            faas.register_endpoint(FaasEndpoint::new(id.as_str(), fac).with_capacity(1))?;
+            self.accels.insert(id, accel);
+        }
+        Ok(())
+    }
+
     fn alloc_ticket(&mut self) -> Ticket {
         let t = Ticket(self.next_ticket);
         self.next_ticket += 1;
@@ -461,37 +492,71 @@ impl World {
     /// (the resubmission queues on the Down endpoint and runs at
     /// restore).
     pub fn preempt_spot_endpoint(&mut self, endpoint: &str, now: f64) -> Result<()> {
+        // Accumulate onto a copy of the live spot ledger and write it
+        // back, so the f64 running sums add in exactly the order the
+        // pre-federation single-endpoint planner used (bit-identical
+        // spot reports).
+        let eps = [endpoint.to_string()];
+        let mut ledger = self.spot;
+        let res = self.fail_over_endpoints(&eps, now, &mut ledger);
+        self.spot = ledger;
+        res.map(|_| ())
+    }
+
+    /// The generalized failover core: reclaim every endpoint in
+    /// `endpoints` (a single spot reclaim, or a whole site going dark —
+    /// DESIGN.md §15) and replan all displaced gangs in one assignment
+    /// wave. Bookkeeping lands on `ledger` — the spot path passes the
+    /// live `self.spot` (by copy, written back), the site-outage path a
+    /// fresh ledger so reroutes are reported separately. Returns the
+    /// number of gangs displaced.
+    pub fn fail_over_endpoints(
+        &mut self,
+        endpoints: &[String],
+        now: f64,
+        ledger: &mut SpotLedger,
+    ) -> Result<usize> {
         let mut faas = self.faas.take().context("faas service missing")?;
-        let displaced = match faas.reclaim_spot(endpoint, now) {
-            Ok(d) => d,
-            Err(e) => {
-                self.faas = Some(faas);
-                return Err(e);
+        // (source endpoint, displaced gang) pairs, in reclaim order
+        let mut displaced: Vec<(String, crate::faas::Displaced)> = Vec::new();
+        for endpoint in endpoints {
+            let batch = match faas.reclaim_spot(endpoint, now) {
+                Ok(d) => d,
+                Err(e) => {
+                    self.faas = Some(faas);
+                    return Err(e);
+                }
+            };
+            if !batch.is_empty() {
+                ledger.preemptions += 1;
             }
-        };
+            displaced.extend(batch.into_iter().map(|d| (endpoint.clone(), d)));
+        }
         if displaced.is_empty() {
             self.faas = Some(faas);
-            return Ok(());
+            return Ok(0);
         }
-        self.spot.preemptions += 1;
 
         let candidates: Vec<String> = faas
             .endpoints()
             .filter(|ep| {
-                ep.id != endpoint
+                !endpoints.contains(&ep.id)
                     && ep.status == crate::faas::EndpointStatus::Online
                     && self.accels.contains_key(&ep.id)
             })
             .map(|ep| ep.id.clone())
             .collect();
-        let src_fac = Self::facility_of(endpoint).to_string();
+        let src_facs: Vec<String> = displaced
+            .iter()
+            .map(|(src, _)| Self::facility_of(src).to_string())
+            .collect();
 
         // checkpoint artifact size per gang: the published model's
         // parameter bytes (`models::repository::Checkpoint` stores the
         // params the original start already published)
         let ckpt_bytes: Vec<u64> = displaced
             .iter()
-            .map(|d| {
+            .map(|(_, d)| {
                 d.output
                     .get("model")
                     .as_str()
@@ -504,14 +569,15 @@ impl World {
         // cost matrix: WAN ship time + predicted queue wait (infinite =
         // infeasible: gang can never fit, or no WAN path)
         let mut costs = vec![vec![f64::INFINITY; candidates.len()]; displaced.len()];
-        for (gi, d) in displaced.iter().enumerate() {
+        for (gi, (_, d)) in displaced.iter().enumerate() {
+            let src_fac = &src_facs[gi];
             for (ci, cand) in candidates.iter().enumerate() {
                 let wait = faas.predicted_gang_wait(cand, d.meta.width(), now);
                 if !wait.is_finite() {
                     continue;
                 }
                 let cand_fac = Self::facility_of(cand);
-                let wan = if cand_fac == src_fac {
+                let wan = if cand_fac == src_fac.as_str() {
                     0.0
                 } else {
                     let req = TransferRequest::split_even(
@@ -585,10 +651,11 @@ impl World {
             }
         }
 
-        for (gi, d) in displaced.iter().enumerate() {
-            self.spot.displaced += 1;
-            self.spot.checkpointed_s += d.checkpointed_s;
-            self.spot.lost_s += (d.elapsed_s - d.checkpointed_s).max(0.0);
+        for (gi, (src_ep, d)) in displaced.iter().enumerate() {
+            let src_fac = &src_facs[gi];
+            ledger.displaced += 1;
+            ledger.checkpointed_s += d.checkpointed_s;
+            ledger.lost_s += (d.elapsed_s - d.checkpointed_s).max(0.0);
             // the displaced task's compute ticket; a gang driven outside
             // the ticket machinery has nobody to deliver a resume to
             let ticket = self.pending.iter().find_map(|(id, op)| match op {
@@ -596,18 +663,18 @@ impl World {
                 _ => None,
             });
             let Some(tid) = ticket else {
-                self.spot.stranded += 1;
+                ledger.stranded += 1;
                 continue;
             };
             let Some(target) = assignment[gi].map(|ci| candidates[ci].clone()) else {
-                self.spot.stranded += 1;
+                ledger.stranded += 1;
                 self.pending.remove(&tid);
                 self.ready.insert(
                     tid,
                     (
                         now,
                         Err(anyhow::anyhow!(
-                            "task {:?} preempted on `{endpoint}`: no failover candidate",
+                            "task {:?} preempted on `{src_ep}`: no failover candidate",
                             d.task
                         )),
                     ),
@@ -627,17 +694,17 @@ impl World {
                 slots: d.meta.width(),
                 checkpoint_every_s: d.meta.checkpoint_every_s,
             };
-            if Self::facility_of(&target) == src_fac {
+            if Self::facility_of(&target) == src_fac.as_str() {
                 // same facility: the checkpoint moves over local
                 // staging — the resume enqueues immediately
                 let fid = FuncId("resume_train".into());
                 match faas.enqueue_with_meta(now, &target, &fid, &args, meta) {
                     Ok(task) => {
-                        self.spot.local_migrations += 1;
+                        ledger.local_migrations += 1;
                         self.pending.insert(tid, PendingOp::Faas { task });
                     }
                     Err(e) => {
-                        self.spot.stranded += 1;
+                        ledger.stranded += 1;
                         self.pending.remove(&tid);
                         self.ready.insert(tid, (now, Err(e)));
                     }
@@ -655,8 +722,8 @@ impl World {
                 );
                 match self.transfer.submit_task(now, &req) {
                     Ok(handle) => {
-                        self.spot.wan_migrations += 1;
-                        self.spot.migration_bytes += bytes;
+                        ledger.wan_migrations += 1;
+                        ledger.migration_bytes += bytes;
                         self.pending.insert(
                             tid,
                             PendingOp::Migration {
@@ -669,7 +736,7 @@ impl World {
                         );
                     }
                     Err(e) => {
-                        self.spot.stranded += 1;
+                        ledger.stranded += 1;
                         self.pending.remove(&tid);
                         self.ready.insert(tid, (now, Err(e)));
                     }
@@ -677,7 +744,7 @@ impl World {
             }
         }
         self.faas = Some(faas);
-        Ok(())
+        Ok(displaced.len())
     }
 
     /// Resolve the transfer payload size for a provider parameter set:
