@@ -34,6 +34,9 @@ pub struct EdgeHost {
     versions: u32,
     /// virtual-time model of the edge accelerator
     pub device: AcceleratorModel,
+    /// closed-loop hot-swap log (DESIGN.md §16): `(virtual time, model)`
+    /// per retrain-completion version bump, in swap order
+    swaps: Vec<(f64, String)>,
 }
 
 /// Streaming-serving outcome.
@@ -76,7 +79,25 @@ impl EdgeHost {
             deployed: None,
             versions: 0,
             device: edge_device(),
+            swaps: Vec::new(),
         }
+    }
+
+    /// Record a closed-loop model hot-swap at virtual time `vt`
+    /// (DESIGN.md §16): the retrained `model` replaces the serving
+    /// version the moment its flow completes. Virtual-time
+    /// bookkeeping only — campaigns run `TrainingMode::VirtualOnly`,
+    /// so there are no real params to [`EdgeHost::deploy`]; the
+    /// version counter still bumps so the swap is observable.
+    pub fn note_swap(&mut self, vt: f64, model: &str) -> u32 {
+        self.versions += 1;
+        self.swaps.push((vt, model.to_string()));
+        self.versions
+    }
+
+    /// The closed-loop hot-swap log, in virtual-time order.
+    pub fn swaps(&self) -> &[(f64, String)] {
+        &self.swaps
     }
 
     /// Install a trained model (compiles the inference artifact once).
@@ -234,6 +255,19 @@ mod tests {
         let mut params = TrainState::init(&meta).unwrap().params;
         params[0].data_mut()[0] = f32::NAN;
         assert!(edge.deploy(&meta, params).is_err());
+    }
+
+    #[test]
+    fn note_swap_bumps_versions_and_logs_in_order() {
+        let Ok(rt) = Runtime::cpu() else { return };
+        let mut edge = EdgeHost::new("slac-edge", rt);
+        assert!(edge.swaps().is_empty());
+        assert_eq!(edge.note_swap(120.5, "braggnn"), 1);
+        assert_eq!(edge.note_swap(380.0, "cookienetae"), 2);
+        assert_eq!(
+            edge.swaps(),
+            &[(120.5, "braggnn".to_string()), (380.0, "cookienetae".to_string())]
+        );
     }
 
     #[test]

@@ -32,6 +32,6 @@ pub mod service;
 pub use endpoint::{CapacityTier, EndpointStatus, FaasEndpoint};
 pub use sched::{
     Autoscaler, EasyBackfill, Fifo, Pick, PolicyKind, Priority, QueueView, ScalingEvent,
-    SchedPolicy, SchedTask, ShortestJobFirst, TaskMeta,
+    SchedPolicy, SchedTask, ShortestJobFirst, TaskMeta, TaskOrigin,
 };
 pub use service::{Displaced, FaasService, FuncId, TaskId, TaskRecord, TaskStatus};

@@ -56,6 +56,21 @@ use super::service::TaskId;
 /// Slack tolerance for virtual-time comparisons inside policies.
 const EPS: f64 = 1e-9;
 
+/// Why a task entered the fabric — exogenous (Poisson / per-class
+/// arrival plans) or admitted by the closed-loop drift trigger
+/// (DESIGN.md §16). Carried through failover resumes so the
+/// campaign's cost attribution can integrate drift-attributed
+/// slot-seconds across migrations.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum TaskOrigin {
+    /// An externally-planned arrival (the default for every pre-§16
+    /// path, so existing constructors are unchanged).
+    #[default]
+    Exogenous,
+    /// Admitted by a serving-drift trigger (`--closed-loop`).
+    Drift,
+}
+
 /// Scheduler-relevant metadata attached to a task at enqueue time.
 #[derive(Debug, Clone)]
 pub struct TaskMeta {
@@ -79,6 +94,9 @@ pub struct TaskMeta {
     /// instead of losing everything (`FaasService::reclaim_spot`).
     /// `None` = not checkpointable: preemption wastes all progress.
     pub checkpoint_every_s: Option<f64>,
+    /// Provenance for cost attribution: who caused this work to exist
+    /// (DESIGN.md §16). Defaults to [`TaskOrigin::Exogenous`].
+    pub origin: TaskOrigin,
 }
 
 impl Default for TaskMeta {
@@ -89,6 +107,7 @@ impl Default for TaskMeta {
             est_duration_s: None,
             slots: 1,
             checkpoint_every_s: None,
+            origin: TaskOrigin::Exogenous,
         }
     }
 }

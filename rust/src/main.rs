@@ -20,7 +20,8 @@ use xloop::util::cli::Options;
 use xloop::util::stats::{human_bytes, human_secs};
 use xloop::workflow::{
     parse_mix, parse_sites, parse_spot, render_table1, run_campaign, CampaignConfig,
-    CampaignReport, Coordinator, Mode, MixEntry, Placement, Scenario, SpotSpec, TrainingMode,
+    CampaignReport, ClosedLoopSpec, Coordinator, Mode, MixEntry, Placement, Scenario, SpotSpec,
+    TrainingMode,
 };
 
 fn main() {
@@ -291,6 +292,26 @@ fn cmd_campaign(args: &[String]) -> Result<()> {
             "sweep arrival load (--loads or a default grid) and print the remote-vs-\
              local crossover in dollars AND turnaround (uses --prices, default `paper`)",
         )
+        .flag(
+            "closed-loop",
+            "close the edge loop (DESIGN.md §16): replace the Poisson arrival plan \
+             with per-user serving-drift streams — each user serves batches on the \
+             edge device until their fit-residual EWMA trips the trigger, which \
+             admits their retraining flow; the completed retrain hot-swaps the \
+             served model (default: exogenous arrivals)",
+        )
+        .opt(
+            "drift-threshold",
+            "0.35",
+            "EWMA fit-residual level that fires a retrain trigger (with \
+             --closed-loop; must be finite and > 0)",
+        )
+        .opt(
+            "serve-rate",
+            "0.1",
+            "served batches per virtual second per user (with --closed-loop; the \
+             default when the flag is passed alone)",
+        )
         .opt("seed", "42", "arrival/fabric seed");
     if args.iter().any(|a| a == "--help") {
         print!("{}", opts.usage("xloop campaign"));
@@ -326,6 +347,20 @@ fn cmd_campaign(args: &[String]) -> Result<()> {
     };
     let sites = parse_sites(p.get("sites"))?;
     let placement = Placement::parse(p.get("placement"))?;
+    // --drift-threshold / --serve-rate refine the loop; without
+    // --closed-loop they are inert and the campaign is byte-identical
+    // to the knob-less default
+    let closed_loop: Option<ClosedLoopSpec> = if p.get_bool("closed-loop") {
+        let spec = ClosedLoopSpec {
+            threshold: p.get_f64("drift-threshold")?,
+            serve_rate: p.get_f64("serve-rate")?,
+            ..ClosedLoopSpec::default()
+        };
+        spec.validate()?;
+        Some(spec)
+    } else {
+        None
+    };
     // anything beyond the PR 2 default enables the enriched report
     let enriched = !matches!(policy, PolicyKind::Fifo)
         || !priorities.is_empty()
@@ -340,7 +375,8 @@ fn cmd_campaign(args: &[String]) -> Result<()> {
         // byte-identical to the replica-mode golden
         || sync_wan
         || shard_users > 0
-        || !sites.is_empty();
+        || !sites.is_empty()
+        || closed_loop.is_some();
     let mk_cfg = |scenario: &Scenario, mean: f64, kind: PolicyKind| {
         let autoscale = if autoscale_max > 0 {
             vec![(
@@ -367,6 +403,7 @@ fn cmd_campaign(args: &[String]) -> Result<()> {
             .with_sync_wan(sync_wan)
             .with_sites(sites.clone())
             .with_placement(placement)
+            .with_closed_loop(closed_loop)
     };
 
     let mean = p.get_f64("interarrival")?;
@@ -661,6 +698,24 @@ fn print_enriched_report(report: &CampaignReport, prices: Option<&PriceBook>) {
             human_secs(s.checkpointed_s),
             human_secs(s.lost_s),
             human_bytes(s.migration_bytes as f64),
+        );
+    }
+    // the DESIGN.md §16 closed-loop block: drift/trigger activity plus
+    // the staleness line the CI smoke leg greps for
+    if let Some(c) = &report.closed_loop {
+        println!(
+            "\nclosed loop — served {} batch(es) | drift triggers {} ({} forced, \
+             {} suppressed) | retrains admitted {} | hot swaps {}",
+            c.batches_served, c.triggers, c.forced_triggers, c.suppressed,
+            c.retrains_admitted, c.hot_swaps,
+        );
+        println!(
+            "staleness {} | accuracy-loss integral {:.4} | edge busy {} | \
+             drift-attributed {:.1} slot-s",
+            human_secs(c.staleness_s),
+            c.accuracy_loss,
+            human_secs(c.edge_busy_s),
+            c.drift_slot_s,
         );
     }
     if !report.scaling.is_empty() {

@@ -53,6 +53,7 @@
 
 use anyhow::{Context, Result};
 
+use super::closedloop::{ClosedLoopLedger, ClosedLoopSpec, DriftStream, ServeOutcome};
 use super::coordinator::{extract_breakdown, RetrainBreakdown};
 use super::federation::{Broker, FederationSummary, Placement, Site};
 use super::flow::{dnn_trainer_flow, FlowShape};
@@ -375,6 +376,12 @@ fn endpoint_class(endpoint: &str) -> &str {
     endpoint.split_once('#').map(|(_, c)| c).unwrap_or(endpoint)
 }
 
+/// Salt folded into the root seed for each user's serving-drift
+/// stream (DESIGN.md §16), so drift draws never perturb the arrival
+/// or spot streams; per-user decorrelation reuses the golden-ratio
+/// multiplier via [`super::closedloop::per_user_seed`].
+const DRIFT_SALT: u64 = 0xD21F_7A11_0C10_5EDB;
+
 /// Mean spot restore delay as a fraction of the mean preemption gap:
 /// reclaimed pools come back an order of magnitude faster than they are
 /// taken (≈91% stationary availability), matching the short reclaim
@@ -455,6 +462,14 @@ pub struct CampaignConfig {
     /// which score the broker minimizes when `sites` is non-empty
     /// (ignored otherwise)
     pub placement: Placement,
+    /// closed-loop serving drift (DESIGN.md §16; `None` = the
+    /// exogenous-arrival semantics of every earlier PR, byte-identical
+    /// output). `Some(spec)` replaces the Poisson arrival plan with
+    /// per-user drift streams: each user serves batches on the edge
+    /// device until their fit-residual EWMA trips the trigger, which
+    /// *admits* their retraining flow into the fabric; the completed
+    /// retrain hot-swaps the served model and resets the drift clock.
+    pub closed_loop: Option<ClosedLoopSpec>,
 }
 
 impl Default for CampaignConfig {
@@ -478,6 +493,7 @@ impl Default for CampaignConfig {
             sync_wan: false,
             sites: Vec::new(),
             placement: Placement::Turnaround,
+            closed_loop: None,
         }
     }
 }
@@ -577,6 +593,11 @@ impl CampaignConfig {
 
     pub fn with_placement(mut self, placement: Placement) -> CampaignConfig {
         self.placement = placement;
+        self
+    }
+
+    pub fn with_closed_loop(mut self, closed_loop: Option<ClosedLoopSpec>) -> CampaignConfig {
+        self.closed_loop = closed_loop;
         self
     }
 
@@ -950,6 +971,10 @@ pub struct CampaignReport {
     /// bounded-lag windows executed under `sync_wan` (DESIGN.md §14);
     /// `0` in replica mode and on the serial path
     pub sync_wan_windows: u64,
+    /// closed-loop serving/drift integrals — batches served, triggers,
+    /// hot-swaps, staleness and accuracy-loss seconds (DESIGN.md §16);
+    /// `None` without `--closed-loop`
+    pub closed_loop: Option<ClosedLoopLedger>,
 }
 
 impl CampaignReport {
@@ -1006,6 +1031,11 @@ enum Wake {
     SpotReclaim(usize),
     /// spec `i`'s pool restored: the endpoint takes starts again
     SpotRestore(usize),
+    /// user `i` serves their next drift batch on the edge device
+    /// (DESIGN.md §16): update the fit-residual EWMA, maybe fire the
+    /// trigger (admitting the user's retraining flow), reschedule one
+    /// batch gap later
+    Drift(usize),
 }
 
 /// One scheduled fault-plan transition (a window edge turned into a
@@ -1217,8 +1247,9 @@ pub fn sync_window_s(topo: &Topology) -> f64 {
 /// demands: ascending demand order, each claimant takes
 /// `min(demand, remaining / claimants_left)`. Identical in spirit to
 /// the transfer solver's per-link fill, but over *shards* instead of
-/// streams.
-fn water_fill(demands: &[f64], cap: f64) -> Vec<f64> {
+/// streams. Public so the metamorphic invariant suite can fuzz its
+/// max-min fairness directly (`rust/tests/invariants.rs`).
+pub fn water_fill(demands: &[f64], cap: f64) -> Vec<f64> {
     let mut order: Vec<usize> = (0..demands.len()).collect();
     order.sort_by(|&a, &b| demands[a].total_cmp(&demands[b]).then(a.cmp(&b)));
     let mut alloc = vec![0.0f64; demands.len()];
@@ -1383,6 +1414,7 @@ fn merge_shard_reports(
     let mut wan_transfers = 0u64;
     let mut spot: Option<SpotLedger> = None;
     let mut federation: Option<FederationSummary> = None;
+    let mut closed_loop: Option<ClosedLoopLedger> = None;
     for (rep, &off) in reports.into_iter().zip(offsets) {
         for mut u in rep.users {
             u.user += off;
@@ -1452,6 +1484,19 @@ fn merge_shard_reports(
                 Some(acc) => acc.absorb(&f),
             }
         }
+        if let Some(c) = rep.closed_loop {
+            let acc = closed_loop.get_or_insert_with(ClosedLoopLedger::default);
+            acc.batches_served += c.batches_served;
+            acc.triggers += c.triggers;
+            acc.forced_triggers += c.forced_triggers;
+            acc.suppressed += c.suppressed;
+            acc.retrains_admitted += c.retrains_admitted;
+            acc.hot_swaps += c.hot_swaps;
+            acc.staleness_s += c.staleness_s;
+            acc.accuracy_loss += c.accuracy_loss;
+            acc.edge_busy_s += c.edge_busy_s;
+            acc.drift_slot_s += c.drift_slot_s;
+        }
     }
     // a stable sort keeps shard order as the same-instant tie-break
     scaling.sort_by(|a, b| a.vt.total_cmp(&b.vt));
@@ -1493,6 +1538,7 @@ fn merge_shard_reports(
         shards: offsets.len(),
         shard_users: cfg.users.div_ceil(offsets.len().max(1)),
         sync_wan_windows,
+        closed_loop,
     }
 }
 
@@ -1538,6 +1584,15 @@ struct ShardRun {
     /// WAN slowdown factor imposed by the sync executor for the
     /// current window (1.0 = unthrottled; always 1.0 serially)
     sync_factor: f64,
+    /// per-user serving-drift streams (DESIGN.md §16); empty without
+    /// `--closed-loop` — the default path allocates no drift objects
+    drift: Vec<DriftStream>,
+    /// closed-loop integrals accumulated as batches serve and swaps
+    /// land (merged into `CampaignReport.closed_loop` at `finish()`)
+    cl_ledger: ClosedLoopLedger,
+    /// FLOPs per served inference batch, per user (precomputed from
+    /// the registry; empty without `--closed-loop`)
+    serve_flops: Vec<f64>,
     /// every user reached `Done`: the run is ready to `finish()`
     finished: bool,
 }
@@ -1596,6 +1651,12 @@ impl ShardRun {
                 c.is_finite() && c > 0.0,
                 "checkpoint cadence must be finite and > 0 (got {c})"
             );
+        }
+        // a programmatically built closed-loop spec bypasses the CLI
+        // parser: re-validate so degenerate thresholds/rates fail
+        // before any fabric state exists (DESIGN.md §16)
+        if let Some(spec) = &cfg.closed_loop {
+            spec.validate()?;
         }
 
         // heterogeneous mix: apportion users to entries and build each
@@ -1740,7 +1801,16 @@ impl ShardRun {
         // sampling noise between rows. Class arrivals are handed to that
         // class's users in apportionment order.
         let per_class = cfg.mix.iter().any(|e| e.rate_s.is_some() || e.burst.is_some());
-        let arrivals: Vec<f64> = if per_class {
+        let arrivals: Vec<f64> = if cfg.closed_loop.is_some() {
+            // closed loop (DESIGN.md §16): no exogenous arrival plan.
+            // Every user's retraining flow is *admitted* by their drift
+            // trigger — the arrival slot is set to the trigger's virtual
+            // time when it fires. Until then it is ∞ (never scheduled,
+            // never eligible). The Poisson/per-class `Rng`s are never
+            // constructed, so toggling the knob cannot shift any other
+            // stream's draws.
+            vec![f64::INFINITY; cfg.users]
+        } else if per_class {
             let mut streams: Vec<std::vec::IntoIter<f64>> = cfg
                 .mix
                 .iter()
@@ -1811,7 +1881,13 @@ impl ShardRun {
         // changes a byte of output.
         let mut sched = Scheduler::<Wake>::for_load(cfg.users.saturating_mul(8));
         for &a in &arrivals {
-            sched.schedule_at(a, Wake::Arrival);
+            // closed-loop users start at ∞ (admitted by their drift
+            // trigger later); an infinite timestamp never enters the
+            // queue. Exogenous plans are always finite, so this guard
+            // is a no-op on the default path.
+            if a.is_finite() {
+                sched.schedule_at(a, Wake::Arrival);
+            }
         }
         let mut fault_changes: Vec<FaultChange> = Vec::new();
         for o in &cfg.faults.outages {
@@ -1854,6 +1930,34 @@ impl ShardRun {
             sched.schedule_at(first, Wake::SpotWarn(i));
         }
 
+        // Closed-loop drift streams (DESIGN.md §16): one seeded
+        // residual process per user, salted so drift draws never
+        // perturb arrival/spot streams; the first batch of every user
+        // serves one gap in, in user order (the scheduler's sequence
+        // tie-break keeps same-instant batches deterministic). The
+        // provenance stamp makes every fabric task this shard submits
+        // drift-attributed for the cost ledger.
+        let (drift, serve_flops) = match &cfg.closed_loop {
+            None => (Vec::new(), Vec::new()),
+            Some(spec) => {
+                world.task_origin = crate::faas::TaskOrigin::Drift;
+                let streams: Vec<DriftStream> = (0..cfg.users)
+                    .map(|i| {
+                        let seed = super::closedloop::per_user_seed(cfg.seed ^ DRIFT_SALT, i);
+                        DriftStream::new(*spec, seed)
+                    })
+                    .collect();
+                let flops: Vec<f64> = scen
+                    .iter()
+                    .map(|s| s.serve_flops_per_batch(&world.registry))
+                    .collect::<Result<_>>()?;
+                for i in 0..cfg.users {
+                    sched.schedule_at(spec.gap_s(), Wake::Drift(i));
+                }
+                (streams, flops)
+            }
+        };
+
         Ok(ShardRun {
             cfg: cfg.clone(),
             scen,
@@ -1875,6 +1979,9 @@ impl ShardRun {
             spot_rngs,
             broker,
             sync_factor: 1.0,
+            drift,
+            cl_ledger: ClosedLoopLedger::default(),
+            serve_flops,
             finished: false,
         })
     }
@@ -1922,6 +2029,9 @@ impl ShardRun {
             spot_rngs,
             broker,
             sync_factor,
+            drift,
+            cl_ledger,
+            serve_flops,
             finished,
             ..
         } = self;
@@ -2004,7 +2114,23 @@ impl ShardRun {
                             if engine.poll(run, &mut world, now)? == RunPoll::Finished {
                                 let prev = std::mem::replace(&mut states[i], UserState::Waiting);
                                 let UserState::Running(run) = prev else { unreachable!() };
-                                states[i] = UserState::Done(run.into_report());
+                                let rep = run.into_report();
+                                // closed-loop hot-swap (DESIGN.md §16):
+                                // the retrained model replaces the served
+                                // version at the flow's virtual completion
+                                // time. Staleness = swap vt - trigger vt;
+                                // `arrivals[i]` IS the trigger time (that's
+                                // how the retrain was admitted), the same
+                                // subtraction `finish()` uses for
+                                // turnaround — the integrals agree
+                                // bit-exactly.
+                                if !drift.is_empty() && rep.succeeded {
+                                    cl_ledger.hot_swaps += 1;
+                                    cl_ledger.staleness_s += rep.end_vt - arrivals[i];
+                                    drift[i].hot_swap(rep.end_vt);
+                                    world.edge.note_swap(rep.end_vt, &scen[i].model);
+                                }
+                                states[i] = UserState::Done(rep);
                                 progressed = true;
                             }
                         }
@@ -2158,6 +2284,44 @@ impl ShardRun {
                     let gap = spot_rngs[i].exponential(1.0 / s.preempt_rate_s);
                     sched.schedule_at(t + gap, Wake::SpotWarn(i));
                 }
+                Wake::Drift(i) => {
+                    // a Done user's stream is retired: no serve, no
+                    // reschedule — the drained events are what lets the
+                    // campaign terminate
+                    if !matches!(states[i], UserState::Done(_)) {
+                        let out = drift[i].serve(t);
+                        cl_ledger.batches_served += 1;
+                        cl_ledger.edge_busy_s += world.edge.device.infer_time(serve_flops[i]);
+                        // accuracy-loss integral: excess residual over
+                        // the acceptable threshold, held for one batch
+                        // gap (rectangle rule on the batch grid)
+                        cl_ledger.accuracy_loss += (drift[i].ewma
+                            - drift[i].spec().threshold)
+                            .max(0.0)
+                            * drift[i].spec().gap_s();
+                        match out {
+                            ServeOutcome::Fired | ServeOutcome::ForcedFire => {
+                                cl_ledger.triggers += 1;
+                                if out == ServeOutcome::ForcedFire {
+                                    cl_ledger.forced_triggers += 1;
+                                }
+                                // admit the retraining flow *unless* one
+                                // is already in flight for this user —
+                                // the trigger time becomes the arrival
+                                // the settle loop acts on
+                                if matches!(states[i], UserState::Waiting)
+                                    && arrivals[i].is_infinite()
+                                {
+                                    arrivals[i] = t;
+                                    cl_ledger.retrains_admitted += 1;
+                                }
+                            }
+                            ServeOutcome::Suppressed => cl_ledger.suppressed += 1,
+                            ServeOutcome::Quiet => {}
+                        }
+                        sched.schedule_at(t + drift[i].spec().gap_s(), Wake::Drift(i));
+                    }
+                }
                 Wake::Arrival | Wake::Scan => {}
             }
         }
@@ -2177,6 +2341,7 @@ impl ShardRun {
             base_capacities,
             states,
             broker,
+            mut cl_ledger,
             ..
         } = self;
         // per-user capacity-slot queue wait, attributed via task metadata
@@ -2418,6 +2583,27 @@ impl ShardRun {
             spot_endpoints: spot_eps,
         };
 
+        // drift-attributed fabric slot-seconds (DESIGN.md §16): every
+        // task the closed loop caused carries `TaskOrigin::Drift`
+        // provenance — summed here so the report separates what the
+        // trigger *cost the fabric* from what the edge served
+        let closed_loop = if cfg.closed_loop.is_some() {
+            if let Some(faas) = world.faas.as_ref() {
+                for rec in faas.records() {
+                    if rec.status.is_complete()
+                        && rec.exec_secs().is_finite()
+                        && rec.meta.origin == crate::faas::TaskOrigin::Drift
+                    {
+                        cl_ledger.drift_slot_s +=
+                            rec.exec_secs().max(0.0) * rec.meta.width() as f64;
+                    }
+                }
+            }
+            Some(cl_ledger)
+        } else {
+            None
+        };
+
         Ok(CampaignReport {
             config_users: cfg.users,
             mean_interarrival_s: cfg.mean_interarrival_s,
@@ -2436,6 +2622,7 @@ impl ShardRun {
             shards: 1,
             shard_users: cfg.users,
             sync_wan_windows: 0,
+            closed_loop,
         })
     }
 }
@@ -2598,6 +2785,7 @@ mod tests {
             sync_wan: false,
             sites: Vec::new(),
             placement: Placement::Turnaround,
+            closed_loop: None,
         };
         let a = run_campaign(&default_cfg).unwrap();
         let b = run_campaign(&explicit).unwrap();
@@ -3570,6 +3758,7 @@ mod tests {
         assert!(!d.sync_wan);
         assert!(d.sites.is_empty());
         assert_eq!(d.placement, Placement::Turnaround);
+        assert_eq!(d.closed_loop, None);
         let scenario = Scenario::table1("cookienetae", Mode::RemoteMultiGpu).unwrap();
         let positional = CampaignConfig::new(3, scenario.clone(), 5.0, 13);
         let chained = CampaignConfig::default()
@@ -3818,5 +4007,136 @@ mod tests {
         )
         .unwrap_err();
         assert!(format!("{err:#}").contains("unknown site"), "{err:#}");
+    }
+
+    /// A noise-free, unsmoothed drift spec whose every trigger time is
+    /// hand-computable: ewma = 0.01 × model age, batch every 2 s, so
+    /// the threshold 0.1 is first exceeded at t = 12 for every user.
+    fn traced_loop() -> ClosedLoopSpec {
+        ClosedLoopSpec {
+            serve_rate: 0.5,
+            threshold: 0.1,
+            hysteresis: 0.5,
+            cooldown_s: 0.0,
+            ewma_alpha: 1.0,
+            drift_rate: 0.01,
+            noise: 0.0,
+            max_batches: 10_000,
+        }
+    }
+
+    /// Tentpole acceptance (named in the issue): with `--closed-loop`
+    /// the drift trigger *admits* every retraining flow — no user
+    /// arrives at the Poisson stream's t = 0; the hand-traced spec
+    /// pins the admission instant — and the staleness integral equals
+    /// the turnaround sum bit-exactly, because the hot-swap records
+    /// `end_vt - trigger_vt` with the same subtraction `finish()`
+    /// uses for turnaround.
+    #[test]
+    fn closed_loop_admits_retrains_and_staleness_is_exact() {
+        if !artifacts_present() {
+            return;
+        }
+        let scenario = Scenario::table1("braggnn", Mode::RemoteCerebras).unwrap();
+        let cfg = CampaignConfig::new(2, scenario, 5.0, 42)
+            .with_closed_loop(Some(traced_loop()));
+        let rep = run_campaign(&cfg).unwrap();
+        let cl = rep.closed_loop.expect("knob on implies the ledger");
+        // drift replaced the Poisson plan: both users admitted at the
+        // hand-traced trigger instant, not at the Poisson t = 0
+        assert_eq!(cl.retrains_admitted, 2, "{cl:?}");
+        for u in &rep.users {
+            assert_eq!(u.arrival_vt, 12.0, "user {} not drift-admitted", u.user);
+            assert!(u.succeeded);
+        }
+        assert_eq!(cl.hot_swaps, 2);
+        assert!(cl.triggers >= 2);
+        assert_eq!(cl.forced_triggers, 0);
+        // two-term sums are order-insensitive in IEEE arithmetic, so
+        // the identity holds to the last bit
+        let turnaround_sum: f64 = rep.users.iter().map(|u| u.turnaround_s).sum();
+        assert_eq!(cl.staleness_s, turnaround_sum, "{cl:?}");
+        assert!(cl.batches_served > 0);
+        assert!(cl.edge_busy_s > 0.0);
+        // batches served above threshold while the retrains were in
+        // flight: the accuracy-loss integral is strictly positive
+        assert!(cl.accuracy_loss > 0.0, "{cl:?}");
+        // every fabric task the loop admitted carries Drift provenance
+        assert!(cl.drift_slot_s > 0.0, "{cl:?}");
+        // and the whole thing replays byte-identically
+        let again = run_campaign(&cfg).unwrap();
+        assert_eq!(format!("{rep:?}"), format!("{again:?}"));
+    }
+
+    /// Tentpole pin (named in the issue): the closed-loop report — with
+    /// shards and a spot trainer riding along — is byte-equal in full
+    /// `Debug` form across worker counts.
+    #[test]
+    fn closed_loop_campaign_is_thread_count_invariant() {
+        if !artifacts_present() {
+            return;
+        }
+        let scenario = Scenario::table1("braggnn", Mode::RemoteCerebras).unwrap();
+        let mut cfg = CampaignConfig::new(4, scenario, 1.0, 37);
+        cfg.shards = 2;
+        cfg.spot = parse_spot("alcf#cerebras:60:2").unwrap();
+        cfg.checkpoint_every_s = Some(5.0);
+        cfg.closed_loop = Some(traced_loop());
+        let one = run_campaign_with_pool(&cfg, &Pool::new(1)).unwrap();
+        let eight = run_campaign_with_pool(&cfg, &Pool::new(8)).unwrap();
+        assert_eq!(format!("{one:?}"), format!("{eight:?}"));
+        let cl = one.closed_loop.expect("ledger survives the merge");
+        assert_eq!(cl.retrains_admitted, 4);
+        assert!(one.spot.is_some());
+    }
+
+    /// Knob off ⇒ no drift objects, no report field: the default
+    /// campaign carries `closed_loop: None` and is untouched by the
+    /// subsystem existing (the byte-identity is pinned end-to-end by
+    /// `rust/tests/invariants.rs` and the CI golden).
+    #[test]
+    fn closed_loop_off_leaves_no_trace_in_the_report() {
+        if !artifacts_present() {
+            return;
+        }
+        let scenario = Scenario::table1("braggnn", Mode::RemoteCerebras).unwrap();
+        let rep = run_campaign(&CampaignConfig::new(2, scenario, 5.0, 42)).unwrap();
+        assert!(rep.closed_loop.is_none());
+        assert_eq!(rep.users[0].arrival_vt, 0.0, "Poisson first user at 0");
+    }
+
+    /// Degenerate closed-loop configs fail fast with pointed messages
+    /// (mirrors the PR 8 spot/checkpoint guards): zero / negative /
+    /// NaN thresholds, a degenerate serve rate, and `--users 0` are
+    /// all rejected before any fabric state exists — no artifacts
+    /// needed, validation precedes the world build.
+    #[test]
+    fn closed_loop_config_validation_rejects_degenerate_specs() {
+        let base = CampaignConfig::default();
+        for threshold in [0.0, -0.5, f64::NAN] {
+            let cfg = base.clone().with_closed_loop(Some(ClosedLoopSpec {
+                threshold,
+                ..ClosedLoopSpec::default()
+            }));
+            let err = run_campaign(&cfg).unwrap_err();
+            assert!(
+                format!("{err:#}").contains("drift threshold"),
+                "threshold {threshold}: {err:#}"
+            );
+        }
+        let cfg = base.clone().with_closed_loop(Some(ClosedLoopSpec {
+            serve_rate: f64::INFINITY,
+            ..ClosedLoopSpec::default()
+        }));
+        let err = run_campaign(&cfg).unwrap_err();
+        assert!(format!("{err:#}").contains("serve rate"), "{err:#}");
+        let cfg = base
+            .with_users(0)
+            .with_closed_loop(Some(ClosedLoopSpec::default()));
+        let err = run_campaign(&cfg).unwrap_err();
+        assert!(
+            format!("{err:#}").contains("at least one user"),
+            "{err:#}"
+        );
     }
 }

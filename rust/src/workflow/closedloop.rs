@@ -1,0 +1,524 @@
+//! Closed-loop serving drift and drift-triggered retraining
+//! (DESIGN.md §16).
+//!
+//! The paper's point is *actionable* retrieval: the edge model serves
+//! live beamline batches, its fit residual drifts as the instrument
+//! walks away from the training distribution, and a drift trigger
+//! admits a retraining flow into the same DCAI fabric the Poisson
+//! campaigns exercise. This module holds the pieces that are pure
+//! functions of `(spec, seed)`:
+//!
+//! * [`ClosedLoopSpec`] — every knob of the loop, with the CLI
+//!   defaults and the validation the campaign re-runs per shard;
+//! * [`DriftStream`] — one user's deterministic fit-residual EWMA over
+//!   served batches, with threshold + hysteresis + cooldown trigger
+//!   semantics and a hot-swap reset;
+//! * [`ClosedLoopLedger`] — the staleness / accuracy-loss integrals
+//!   the campaign report carries (`CampaignReport.closed_loop`);
+//! * [`replay_triggers`] / [`replay_fleet`] — standalone replays of
+//!   the loop against a fixed retrain latency, used by the metamorphic
+//!   suite and fanned per-user over [`crate::pool::scope`].
+//!
+//! The campaign integration (arrival admission, `Wake::Drift` events,
+//! hot-swap at flow completion) lives in `workflow::campaign`; nothing
+//! here touches the DES, so every test in this file is a pure replay.
+
+use anyhow::{ensure, Result};
+
+use crate::pool::Pool;
+use crate::util::rng::Rng;
+
+/// Every knob of the closed loop (CLI: `--closed-loop`,
+/// `--drift-threshold`, `--serve-rate`). Copy so shard carving can
+/// hand each shard the same spec without sharing.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ClosedLoopSpec {
+    /// Served batches per virtual second (batch gap = `1/serve_rate`).
+    /// CLI `--serve-rate`, default 0.1 — the documented default when
+    /// `--closed-loop` is passed alone.
+    pub serve_rate: f64,
+    /// EWMA fit-residual level that fires a retrain trigger
+    /// (strictly-greater comparison). CLI `--drift-threshold`.
+    pub threshold: f64,
+    /// Hysteresis band as a fraction of the threshold: after a fire
+    /// the trigger re-arms only once the EWMA falls below
+    /// `threshold * (1 - hysteresis)`. Prevents trigger storms.
+    pub hysteresis: f64,
+    /// Minimum virtual seconds between fires, on top of hysteresis.
+    pub cooldown_s: f64,
+    /// EWMA smoothing factor in (0, 1]; 1.0 = no smoothing (handy for
+    /// hand-traced tests).
+    pub ewma_alpha: f64,
+    /// Residual growth per virtual second of deployed-model age — the
+    /// deterministic part of the drift process.
+    pub drift_rate: f64,
+    /// Amplitude of the uniform per-batch residual noise drawn from
+    /// the stream's seeded `Rng`.
+    pub noise: f64,
+    /// Forced-trigger backstop: a stream that has served this many
+    /// batches since its last hot-swap fires unconditionally, so a
+    /// zero-drift user still terminates its campaign.
+    pub max_batches: u64,
+}
+
+impl Default for ClosedLoopSpec {
+    fn default() -> Self {
+        ClosedLoopSpec {
+            serve_rate: 0.1,
+            threshold: 0.35,
+            hysteresis: 0.5,
+            cooldown_s: 60.0,
+            ewma_alpha: 0.3,
+            drift_rate: 0.003,
+            noise: 0.05,
+            max_batches: 10_000,
+        }
+    }
+}
+
+impl ClosedLoopSpec {
+    /// Batch gap in virtual seconds.
+    pub fn gap_s(&self) -> f64 {
+        1.0 / self.serve_rate
+    }
+
+    /// Reject degenerate knob values with the same message style the
+    /// spot/checkpoint guards use; the campaign re-validates per shard
+    /// so a bad spec fails before any DES state exists.
+    pub fn validate(&self) -> Result<()> {
+        ensure!(
+            self.threshold.is_finite() && self.threshold > 0.0,
+            "drift threshold must be a finite positive residual (got {})",
+            self.threshold
+        );
+        ensure!(
+            self.serve_rate.is_finite() && self.serve_rate > 0.0,
+            "serve rate must be a finite positive batches/s (got {})",
+            self.serve_rate
+        );
+        ensure!(
+            self.hysteresis.is_finite() && (0.0..1.0).contains(&self.hysteresis),
+            "drift hysteresis must lie in [0, 1) (got {})",
+            self.hysteresis
+        );
+        ensure!(
+            self.cooldown_s.is_finite() && self.cooldown_s >= 0.0,
+            "drift cooldown must be finite and non-negative (got {})",
+            self.cooldown_s
+        );
+        ensure!(
+            self.ewma_alpha.is_finite() && self.ewma_alpha > 0.0 && self.ewma_alpha <= 1.0,
+            "drift EWMA alpha must lie in (0, 1] (got {})",
+            self.ewma_alpha
+        );
+        ensure!(
+            self.drift_rate.is_finite() && self.drift_rate >= 0.0,
+            "drift rate must be finite and non-negative (got {})",
+            self.drift_rate
+        );
+        ensure!(
+            self.noise.is_finite() && self.noise >= 0.0,
+            "drift noise amplitude must be finite and non-negative (got {})",
+            self.noise
+        );
+        ensure!(
+            self.max_batches >= 1,
+            "drift max-batches backstop must be at least 1"
+        );
+        Ok(())
+    }
+}
+
+/// What one served batch did to the trigger state.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ServeOutcome {
+    /// Below threshold (or nothing notable): keep serving.
+    Quiet,
+    /// Threshold crossed and the trigger was armed + off cooldown:
+    /// admit a retraining flow.
+    Fired,
+    /// Batch-count backstop fired (zero-drift termination guarantee).
+    ForcedFire,
+    /// Above threshold but disarmed or cooling down: counted, not
+    /// fired — the hysteresis/cooldown storm suppression at work.
+    Suppressed,
+}
+
+/// One user's deterministic serving-drift process: fit-residual EWMA
+/// over batches served on the edge device, seeded so replays are
+/// bit-identical (DESIGN.md §16).
+#[derive(Debug, Clone)]
+pub struct DriftStream {
+    spec: ClosedLoopSpec,
+    rng: Rng,
+    /// Current fit-residual EWMA (exposed for the accuracy-loss
+    /// integral the campaign accumulates per batch).
+    pub ewma: f64,
+    /// Virtual time the deployed model version was born (hot-swap
+    /// resets it; residual age = now - birth).
+    pub version_birth_vt: f64,
+    armed: bool,
+    cooldown_until: f64,
+    batches_since_swap: u64,
+}
+
+impl DriftStream {
+    pub fn new(spec: ClosedLoopSpec, seed: u64) -> DriftStream {
+        DriftStream {
+            spec,
+            rng: Rng::new(seed),
+            ewma: 0.0,
+            version_birth_vt: 0.0,
+            armed: true,
+            cooldown_until: 0.0,
+            batches_since_swap: 0,
+        }
+    }
+
+    pub fn spec(&self) -> &ClosedLoopSpec {
+        &self.spec
+    }
+
+    /// Serve one batch at virtual time `now`: draw the residual,
+    /// update the EWMA, and run the threshold + hysteresis + cooldown
+    /// trigger policy. Deterministic: the residual is
+    /// `noise * U(0,1) + drift_rate * model_age`, all from the seeded
+    /// stream.
+    pub fn serve(&mut self, now: f64) -> ServeOutcome {
+        let u = self.rng.uniform(0.0, 1.0);
+        let age = (now - self.version_birth_vt).max(0.0);
+        let resid = self.spec.noise * u + self.spec.drift_rate * age;
+        self.ewma = self.spec.ewma_alpha * resid + (1.0 - self.spec.ewma_alpha) * self.ewma;
+        self.batches_since_swap += 1;
+
+        if !self.armed && self.ewma < self.spec.threshold * (1.0 - self.spec.hysteresis) {
+            self.armed = true;
+        }
+        if self.ewma > self.spec.threshold {
+            if self.armed && now >= self.cooldown_until {
+                self.armed = false;
+                self.cooldown_until = now + self.spec.cooldown_s;
+                return ServeOutcome::Fired;
+            }
+            return ServeOutcome::Suppressed;
+        }
+        if self.batches_since_swap >= self.spec.max_batches {
+            // termination backstop — fires even on a drift-free stream
+            self.armed = false;
+            self.cooldown_until = now + self.spec.cooldown_s;
+            return ServeOutcome::ForcedFire;
+        }
+        ServeOutcome::Quiet
+    }
+
+    /// Retrain completion: the new model version deploys at virtual
+    /// time `vt`. Residual state resets; the trigger re-arms.
+    pub fn hot_swap(&mut self, vt: f64) {
+        self.ewma = 0.0;
+        self.version_birth_vt = vt;
+        self.armed = true;
+        self.batches_since_swap = 0;
+    }
+}
+
+/// The closed-loop integrals the campaign report carries
+/// (`CampaignReport.closed_loop`); shard merge sums fields exactly
+/// like `SpotLedger`.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct ClosedLoopLedger {
+    /// Batches served across all users/streams.
+    pub batches_served: u64,
+    /// Threshold triggers fired (includes forced fires).
+    pub triggers: u32,
+    /// Of those, fires forced by the `max_batches` backstop.
+    pub forced_triggers: u32,
+    /// Above-threshold batches suppressed by hysteresis/cooldown.
+    pub suppressed: u32,
+    /// Retraining flows actually admitted into the fabric (a fire
+    /// while a retrain is already in flight re-fires later instead).
+    pub retrains_admitted: u32,
+    /// Model hot-swaps applied at retrain completion.
+    pub hot_swaps: u32,
+    /// Σ (swap_vt - trigger_vt): seconds users served a known-stale
+    /// model while its replacement trained.
+    pub staleness_s: f64,
+    /// Σ max(ewma - threshold, 0) * batch_gap: the accuracy-loss
+    /// integral of serving above the acceptable residual.
+    pub accuracy_loss: f64,
+    /// Edge-device busy seconds (virtual) spent serving batches.
+    pub edge_busy_s: f64,
+    /// Fabric slot-seconds attributed to drift-triggered work via
+    /// `TaskOrigin::Drift` provenance (cost attribution).
+    pub drift_slot_s: f64,
+}
+
+/// A standalone replay of one stream against a fixed retrain latency:
+/// the pure function of `(spec, seed)` the determinism and
+/// metamorphic tests pin (no DES, no fabric).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ReplayOutcome {
+    /// Virtual times of every fire (forced included), in order.
+    pub triggers: Vec<f64>,
+    pub ledger: ClosedLoopLedger,
+}
+
+/// Replay a single drift stream over `[0, horizon_s]`: batches at
+/// `k * gap`, each fire admits a retrain iff none is in flight, and
+/// the swap lands `swap_latency_s` later (staleness = that latency).
+pub fn replay_triggers(
+    spec: ClosedLoopSpec,
+    seed: u64,
+    horizon_s: f64,
+    swap_latency_s: f64,
+) -> ReplayOutcome {
+    let mut stream = DriftStream::new(spec, seed);
+    let mut out = ReplayOutcome {
+        triggers: Vec::new(),
+        ledger: ClosedLoopLedger::default(),
+    };
+    let gap = spec.gap_s();
+    let mut in_flight = false;
+    let mut swap_at = f64::INFINITY;
+    let mut k = 1u64;
+    loop {
+        let t = k as f64 * gap;
+        if t > horizon_s {
+            break;
+        }
+        if in_flight && t >= swap_at {
+            out.ledger.staleness_s += swap_latency_s;
+            out.ledger.hot_swaps += 1;
+            stream.hot_swap(swap_at);
+            in_flight = false;
+            swap_at = f64::INFINITY;
+        }
+        let outcome = stream.serve(t);
+        out.ledger.batches_served += 1;
+        out.ledger.accuracy_loss += (stream.ewma - spec.threshold).max(0.0) * gap;
+        match outcome {
+            ServeOutcome::Fired | ServeOutcome::ForcedFire => {
+                out.ledger.triggers += 1;
+                if outcome == ServeOutcome::ForcedFire {
+                    out.ledger.forced_triggers += 1;
+                }
+                out.triggers.push(t);
+                if !in_flight {
+                    in_flight = true;
+                    swap_at = t + swap_latency_s;
+                    out.ledger.retrains_admitted += 1;
+                }
+            }
+            ServeOutcome::Suppressed => out.ledger.suppressed += 1,
+            ServeOutcome::Quiet => {}
+        }
+        k += 1;
+    }
+    out
+}
+
+/// Fan per-user replays over [`Pool::scope`] — the `pool::scope`
+/// fan-out entry the ROADMAP item carries. Stream `i` gets
+/// [`per_user_seed`]`(seed, i)` — the same derivation the campaign
+/// applies (to its drift-salted root), so fleet replays share the
+/// campaign's per-user decorrelation structure.
+pub fn replay_fleet(
+    spec: ClosedLoopSpec,
+    seed: u64,
+    users: usize,
+    horizon_s: f64,
+    swap_latency_s: f64,
+    pool: &Pool,
+) -> Vec<ReplayOutcome> {
+    let tasks: Vec<crate::pool::ScopeTask<'_, ReplayOutcome>> = (0..users)
+        .map(|i| {
+            let user_seed = per_user_seed(seed, i);
+            let task: crate::pool::ScopeTask<'_, ReplayOutcome> = Box::new(move || {
+                replay_triggers(spec, user_seed, horizon_s, swap_latency_s)
+            });
+            task
+        })
+        .collect();
+    pool.scope(tasks)
+}
+
+/// The per-user drift seed derivation shared by [`replay_fleet`] and
+/// the campaign's stream construction (golden-ratio odd multiplier
+/// decorrelates adjacent users).
+pub fn per_user_seed(seed: u64, user: usize) -> u64 {
+    seed ^ (user as u64 + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Noise 0, alpha 1 spec: ewma == drift_rate * model_age exactly,
+    /// so every trigger time is hand-computable.
+    fn traced_spec() -> ClosedLoopSpec {
+        ClosedLoopSpec {
+            serve_rate: 0.5, // gap 2 s
+            threshold: 0.1,
+            hysteresis: 0.5,
+            cooldown_s: 0.0,
+            ewma_alpha: 1.0,
+            drift_rate: 0.01,
+            noise: 0.0,
+            max_batches: 1_000_000,
+        }
+    }
+
+    #[test]
+    fn hand_traced_replay_is_exact() {
+        // ewma = 0.01 * age; threshold 0.1 crossed strictly at
+        // age 12 s (age 10 gives exactly 0.1, not > 0.1). Swap
+        // latency 5 s applies at the next batch >= trigger+5.
+        let out = replay_triggers(traced_spec(), 7, 50.0, 5.0);
+        assert_eq!(out.triggers, vec![12.0, 28.0, 44.0], "{out:?}");
+        assert_eq!(out.ledger.batches_served, 25);
+        assert_eq!(out.ledger.triggers, 3);
+        assert_eq!(out.ledger.forced_triggers, 0);
+        assert_eq!(out.ledger.hot_swaps, 3);
+        assert_eq!(out.ledger.retrains_admitted, 3);
+        // two above-threshold batches after each fire before the
+        // swap applies: t = 14,16 / 30,32 / 46,48
+        assert_eq!(out.ledger.suppressed, 6);
+        // staleness = 3 swaps x 5 s latency, exactly
+        assert_eq!(out.ledger.staleness_s, 15.0);
+        // excess residual x gap 2 s: cycle 1 is born at 0 (even grid
+        // ages; excess 0.02+0.04+0.06 = 0.12), cycles 2 and 3 are born
+        // at the swap instants 17 and 33 (odd grid ages 11,13,15;
+        // excess 0.01+0.03+0.05 = 0.09) -> 2*(0.12+0.09+0.09) = 0.60
+        assert!((out.ledger.accuracy_loss - 0.60).abs() < 1e-12, "{out:?}");
+    }
+
+    #[test]
+    fn replay_is_pure_function_of_spec_and_seed() {
+        let spec = ClosedLoopSpec::default();
+        let a = replay_triggers(spec, 42, 5_000.0, 300.0);
+        let b = replay_triggers(spec, 42, 5_000.0, 300.0);
+        assert_eq!(a, b);
+        let c = replay_triggers(spec, 43, 5_000.0, 300.0);
+        assert_ne!(a, c, "different seeds should produce different noise");
+    }
+
+    #[test]
+    fn zero_drift_stream_never_triggers() {
+        // drift_rate 0 and noise amplitude < threshold: the EWMA is a
+        // convex average of values <= noise < threshold, so it can
+        // never exceed it; the horizon keeps batches below the forced
+        // backstop, so the replay must be trigger-free.
+        let spec = ClosedLoopSpec {
+            drift_rate: 0.0,
+            ..ClosedLoopSpec::default()
+        };
+        assert!(spec.noise < spec.threshold);
+        let out = replay_triggers(spec, 42, 10_000.0, 300.0);
+        assert_eq!(out.ledger.triggers, 0, "{out:?}");
+        assert_eq!(out.ledger.suppressed, 0);
+        assert_eq!(out.ledger.staleness_s, 0.0);
+        assert_eq!(out.ledger.batches_served, 1_000);
+    }
+
+    #[test]
+    fn hysteresis_prevents_trigger_storms() {
+        // Infinite swap latency: the retrain never completes, the EWMA
+        // keeps climbing, and hysteresis (disarm until the EWMA falls
+        // back below threshold * (1 - h), which a monotone stream
+        // never does) must hold the fire count at exactly 1 while
+        // every later above-threshold batch lands in `suppressed`.
+        let out = replay_triggers(traced_spec(), 7, 400.0, f64::INFINITY);
+        assert_eq!(out.ledger.triggers, 1, "{out:?}");
+        assert_eq!(out.triggers, vec![12.0]);
+        assert_eq!(out.ledger.hot_swaps, 0);
+        assert_eq!(out.ledger.retrains_admitted, 1);
+        // batches at 2..=400 step 2 -> 200 served; 12 fires, every
+        // batch after it (14..=400 -> 194) is suppressed
+        assert_eq!(out.ledger.batches_served, 200);
+        assert_eq!(out.ledger.suppressed, 194);
+    }
+
+    #[test]
+    fn cooldown_spaces_fires_without_hysteresis() {
+        // Hysteresis off, instant swaps (latency 0: rebirth at the
+        // fire instant, applied at the next batch). Drift alone would
+        // re-fire every 12 s (ages on the even grid cross 10 at 12);
+        // the 15 s cooldown stretches the period to 16 s, pushing two
+        // above-threshold batches per cycle into `suppressed`. The
+        // point: cooldown alone spaces periodic fires where the
+        // hysteresis test above pinned exactly one.
+        let spec = ClosedLoopSpec {
+            hysteresis: 0.0,
+            cooldown_s: 15.0,
+            ..traced_spec()
+        };
+        let out = replay_triggers(spec, 7, 100.0, 0.0);
+        // fire at 12 (cooldown until 27, rebirth at 12): ages 12 and
+        // 14 land at t = 24, 26 — above threshold but cooling down —
+        // and t = 28 fires; each later cycle repeats the shape
+        assert_eq!(out.triggers, vec![12.0, 28.0, 44.0, 60.0, 76.0, 92.0]);
+        assert_eq!(out.ledger.suppressed, 10);
+        assert_eq!(out.ledger.hot_swaps, 6);
+        assert_eq!(out.ledger.retrains_admitted, 6);
+    }
+
+    #[test]
+    fn forced_fire_terminates_zero_drift_streams() {
+        let spec = ClosedLoopSpec {
+            drift_rate: 0.0,
+            noise: 0.0,
+            max_batches: 10,
+            ..ClosedLoopSpec::default()
+        };
+        let out = replay_triggers(spec, 1, 1_000.0, 50.0);
+        assert!(out.ledger.triggers >= 1, "{out:?}");
+        assert_eq!(out.ledger.triggers, out.ledger.forced_triggers);
+        assert_eq!(out.triggers[0], 10.0 * spec.gap_s());
+    }
+
+    #[test]
+    fn fleet_replay_is_pool_width_invariant() {
+        let spec = ClosedLoopSpec::default();
+        let a = replay_fleet(spec, 42, 12, 2_000.0, 120.0, &Pool::new(1));
+        let b = replay_fleet(spec, 42, 12, 2_000.0, 120.0, &Pool::new(8));
+        assert_eq!(a, b);
+        // per-user seeds decorrelate: not all outcomes identical
+        assert!(a.windows(2).any(|w| w[0] != w[1]));
+    }
+
+    #[test]
+    fn validate_rejects_degenerate_specs() {
+        let ok = ClosedLoopSpec::default();
+        assert!(ok.validate().is_ok());
+        for (label, bad) in [
+            ("zero threshold", ClosedLoopSpec { threshold: 0.0, ..ok }),
+            ("negative threshold", ClosedLoopSpec { threshold: -0.1, ..ok }),
+            ("NaN threshold", ClosedLoopSpec { threshold: f64::NAN, ..ok }),
+            ("zero serve rate", ClosedLoopSpec { serve_rate: 0.0, ..ok }),
+            ("infinite serve rate", ClosedLoopSpec { serve_rate: f64::INFINITY, ..ok }),
+            ("hysteresis of 1", ClosedLoopSpec { hysteresis: 1.0, ..ok }),
+            ("negative cooldown", ClosedLoopSpec { cooldown_s: -1.0, ..ok }),
+            ("zero alpha", ClosedLoopSpec { ewma_alpha: 0.0, ..ok }),
+            ("alpha above 1", ClosedLoopSpec { ewma_alpha: 1.5, ..ok }),
+            ("negative drift", ClosedLoopSpec { drift_rate: -0.01, ..ok }),
+            ("NaN noise", ClosedLoopSpec { noise: f64::NAN, ..ok }),
+            ("zero max-batches", ClosedLoopSpec { max_batches: 0, ..ok }),
+        ] {
+            assert!(bad.validate().is_err(), "{label} should be rejected");
+        }
+    }
+
+    #[test]
+    fn hot_swap_resets_residual_state() {
+        let mut s = DriftStream::new(traced_spec(), 3);
+        for k in 1..=10 {
+            s.serve(k as f64 * 2.0);
+        }
+        assert!(s.ewma > 0.0);
+        s.hot_swap(20.0);
+        assert_eq!(s.ewma, 0.0);
+        assert_eq!(s.version_birth_vt, 20.0);
+        // next batch right after the swap has age 2 s -> tiny residual
+        assert_eq!(s.serve(22.0), ServeOutcome::Quiet);
+        assert!((s.ewma - 0.02).abs() < 1e-12);
+    }
+}

@@ -15,11 +15,15 @@
 //!   arrival processes plus dollar pricing / per-tenant bills (§11),
 //!   spot capacity with checkpointed failover migration (§12), sharded
 //!   execution over fabric replicas (§13), bounded-lag window
-//!   synchronization for cross-shard WAN contention (§14), and
-//!   brokered multi-site federation (§15)
+//!   synchronization for cross-shard WAN contention (§14), brokered
+//!   multi-site federation (§15), and closed-loop drift-triggered
+//!   retraining with model hot-swap (§16)
 //! * `federation`  — sites, the placement broker, and `--sites` parsing
+//! * `closedloop`  — serving-drift streams, the trigger policy, and the
+//!   staleness/accuracy-loss ledger (§16)
 
 pub mod campaign;
+pub mod closedloop;
 pub mod coordinator;
 pub mod federation;
 pub mod flow;
@@ -29,10 +33,14 @@ pub mod scenario;
 pub mod world;
 
 pub use campaign::{
-    parse_mix, parse_spot, run_campaign, run_campaign_with_pool, sync_window_s, Burst,
-    CampaignConfig, CampaignReport, CampaignRunner, CostSummary, DollarSummary, EndpointCost,
-    EndpointDollars, EndpointLoad, FairnessSummary, MixEntry, SpotSpec, TenantDollars,
-    UserOutcome, AUTO_SHARD_USERS,
+    parse_mix, parse_spot, run_campaign, run_campaign_with_pool, sync_window_s, water_fill,
+    Burst, CampaignConfig, CampaignReport, CampaignRunner, CostSummary, DollarSummary,
+    EndpointCost, EndpointDollars, EndpointLoad, FairnessSummary, MixEntry, SpotSpec,
+    TenantDollars, UserOutcome, AUTO_SHARD_USERS,
+};
+pub use closedloop::{
+    per_user_seed, replay_fleet, replay_triggers, ClosedLoopLedger, ClosedLoopSpec,
+    DriftStream, ReplayOutcome, ServeOutcome,
 };
 pub use federation::{
     parse_sites, Broker, FederationSummary, Placement, Site, SiteSummary,

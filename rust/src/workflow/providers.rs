@@ -6,6 +6,12 @@
 //! submit to their shared fabrics and return tickets (completion time
 //! depends on contention with other tenants); Deploy and Rollback are
 //! fixed-cost local work and return `Effect::Done` durations.
+//!
+//! Compute submissions inherit `World.task_origin` into
+//! `TaskMeta.origin` (DESIGN.md §16): a closed-loop campaign stamps
+//! `TaskOrigin::Drift` so the fabric's slot-time ledgers can attribute
+//! drift-admitted retraining separately from exogenous arrivals — the
+//! tag survives checkpoint failover migration.
 
 use anyhow::{Context, Result};
 

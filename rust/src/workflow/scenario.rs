@@ -95,6 +95,18 @@ impl Scenario {
         })
     }
 
+    /// FLOPs per served inference batch on this scenario's model
+    /// (forward-pass FLOPs x the model's inference batch size) — what
+    /// the closed-loop campaign charges the edge device per drift
+    /// batch (DESIGN.md §16).
+    pub fn serve_flops_per_batch(
+        &self,
+        registry: &crate::models::ModelRegistry,
+    ) -> Result<f64> {
+        let meta = registry.get(&self.model)?;
+        Ok(meta.fwd_flops_per_sample * meta.infer_batch as f64)
+    }
+
     /// The paper's Table 1 grid (modes measured per model).
     pub fn table1_grid() -> Vec<Scenario> {
         let mut rows = Vec::new();

@@ -165,6 +165,11 @@ pub struct World {
     pub checkpoint_every_s: Option<f64>,
     /// cumulative spot preemption / migration bookkeeping
     pub spot: SpotLedger,
+    /// provenance stamped on every fabric submission (DESIGN.md §16):
+    /// the campaign layer sets `Drift` when retraining flows are
+    /// admitted by the closed-loop trigger instead of the arrival plan,
+    /// so cost accounting can attribute drift-caused slot-seconds.
+    pub task_origin: crate::faas::TaskOrigin,
     /// fabric work awaiting completion, by ticket id
     pending: BTreeMap<u64, PendingOp>,
     /// resolved tickets: (finish virtual time, outcome)
@@ -226,6 +231,7 @@ impl World {
             tenant: Tenant::default(),
             checkpoint_every_s: None,
             spot: SpotLedger::default(),
+            task_origin: crate::faas::TaskOrigin::default(),
             pending: BTreeMap::new(),
             ready: BTreeMap::new(),
             next_ticket: 1,
@@ -326,6 +332,7 @@ impl World {
             } else {
                 None
             },
+            origin: self.task_origin,
         };
         let faas = self
             .faas
@@ -693,6 +700,9 @@ impl World {
                 est_duration_s: Some(d.remaining_s()),
                 slots: d.meta.width(),
                 checkpoint_every_s: d.meta.checkpoint_every_s,
+                // provenance survives the migration: drift-triggered
+                // work stays drift-attributed after a failover resume
+                origin: d.meta.origin,
             };
             if Self::facility_of(&target) == src_fac.as_str() {
                 // same facility: the checkpoint moves over local

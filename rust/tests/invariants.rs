@@ -1,0 +1,203 @@
+//! Metamorphic invariant suite (DESIGN.md §16 acceptance).
+//!
+//! Four cross-cutting invariants pinned with the in-crate PRNG (no
+//! proptest in the offline cache — same seeded-case technique as
+//! `properties.rs`, failing seeds printed for replay):
+//!
+//! 1. **Dollar partition of unity** — per-tenant bills sum to the
+//!    fabric total under random mixes, spot tiers, autoscalers, and
+//!    closed-loop drift (pricing, §11/§12).
+//! 2. **Water-fill max-min fairness** — the shard-WAN allocator is
+//!    feasible, demand-capped, work-conserving, and max-min fair on
+//!    random fabrics (transfer, §14).
+//! 3. **Wheel ≡ heap** — the two DES backends pop identical
+//!    `(time, payload)` sequences under random schedule / cancel /
+//!    pop interleavings (DES core, §13).
+//! 4. **Knob-off identity** — every composed knob at its off (or
+//!    provably inert) setting yields a byte-identical campaign
+//!    report (§12–§16 default-path guarantee).
+
+use xloop::costmodel::PriceBook;
+use xloop::faas::Autoscaler;
+use xloop::simnet::{DesBackend, Scheduler};
+use xloop::util::Rng;
+use xloop::workflow::{
+    parse_mix, parse_spot, run_campaign, water_fill, CampaignConfig, ClosedLoopSpec, Mode,
+    Placement, Scenario,
+};
+
+const CASES: u64 = 200;
+
+fn artifacts_present() -> bool {
+    xloop::models::default_artifacts_dir()
+        .join("manifest.json")
+        .exists()
+}
+
+// ---------------------------------------------------------------- pricing
+
+/// Invariant: the per-tenant bills are a partition of unity over the
+/// fabric total — used + idle-share + egress summed across tenants
+/// equals provisioned + egress, whatever mix/spot/autoscale/closed-loop
+/// combination the campaign ran under.
+#[test]
+fn prop_dollar_bills_partition_fabric_total() {
+    if !artifacts_present() {
+        return;
+    }
+    let book = PriceBook::paper();
+    for seed in 0..8u64 {
+        let mut rng = Rng::new(9000 + seed);
+        let users = 2 + rng.below(3);
+        let scenario = Scenario::table1("braggnn", Mode::RemoteCerebras).unwrap();
+        let mut cfg = CampaignConfig::new(users, scenario, rng.uniform(0.5, 8.0), 100 + seed);
+        if rng.chance(0.5) {
+            cfg = cfg.with_mix(parse_mix("braggnn:2,cookienetae:1").unwrap());
+        }
+        if rng.chance(0.5) {
+            cfg = cfg
+                .with_spot(parse_spot("alcf#cerebras:120:5").unwrap())
+                .with_checkpoint_every_s(Some(10.0));
+        } else if rng.chance(0.5) {
+            cfg = cfg.with_autoscale(vec![("alcf#cerebras".into(), Autoscaler::up_to(3))]);
+        }
+        if rng.chance(0.4) {
+            cfg = cfg.with_closed_loop(Some(ClosedLoopSpec::default()));
+        }
+        let report = run_campaign(&cfg).unwrap();
+        let d = report.cost.dollars(&book);
+        assert_eq!(d.per_tenant.len(), users, "seed {seed}: bill per tenant");
+        let billed: f64 = d.per_tenant.iter().map(|t| t.total_usd()).sum();
+        let total = d.total_usd();
+        assert!(total > 0.0, "seed {seed}: free fabric");
+        assert!(
+            (billed - total).abs() <= 1e-6 * total,
+            "seed {seed}: bills {billed} != fabric total {total}"
+        );
+    }
+}
+
+// --------------------------------------------------------------- transfer
+
+/// Invariant: `water_fill` is feasible (never exceeds cap), demand-capped,
+/// work-conserving, and max-min fair — an unsatisfied claimant's
+/// allocation is at least every other claimant's.
+#[test]
+fn prop_water_fill_is_max_min_fair() {
+    // hand-pinned: 9 across demands (5, 1, 10) → the small claimant is
+    // satisfied, the rest split the remainder evenly
+    assert_eq!(water_fill(&[5.0, 1.0, 10.0], 9.0), vec![4.0, 1.0, 4.0]);
+
+    for seed in 0..CASES {
+        let mut rng = Rng::new(10_000 + seed);
+        let n = 1 + rng.below(12);
+        let demands: Vec<f64> = (0..n).map(|_| rng.uniform(0.0, 10.0)).collect();
+        let cap = rng.uniform(0.0, 25.0);
+        let alloc = water_fill(&demands, cap);
+        assert_eq!(alloc.len(), n);
+        let granted: f64 = alloc.iter().sum();
+        let wanted: f64 = demands.iter().sum();
+        for (i, (&a, &d)) in alloc.iter().zip(&demands).enumerate() {
+            assert!(a >= 0.0, "seed {seed}: negative allocation {a}");
+            assert!(a <= d + 1e-9, "seed {seed}: claimant {i} over demand");
+        }
+        assert!(granted <= cap + 1e-9, "seed {seed}: cap oversubscribed");
+        assert!(
+            (granted - wanted.min(cap)).abs() <= 1e-9 * (1.0 + wanted.min(cap)),
+            "seed {seed}: not work-conserving ({granted} of {})",
+            wanted.min(cap)
+        );
+        for (i, &a) in alloc.iter().enumerate() {
+            if a < demands[i] - 1e-9 {
+                // unsatisfied ⇒ nobody else got more
+                for (j, &b) in alloc.iter().enumerate() {
+                    assert!(
+                        a >= b - 1e-9,
+                        "seed {seed}: starved claimant {i} ({a}) below {j} ({b})"
+                    );
+                }
+            }
+        }
+    }
+}
+
+// -------------------------------------------------------------------- des
+
+/// Invariant: the wheel and heap backends are observationally identical —
+/// the same interleaving of schedules, cancellations, and pops yields
+/// the same `(time, payload)` sequence from both.
+#[test]
+fn prop_wheel_and_heap_pop_identically() {
+    for seed in 0..CASES {
+        let mut rng = Rng::new(11_000 + seed);
+        let mut heap: Scheduler<u64> = Scheduler::with_backend(DesBackend::Heap);
+        let mut wheel: Scheduler<u64> = Scheduler::with_backend(DesBackend::Wheel);
+        let mut payload = 0u64;
+        for round in 0..4 {
+            let k = 1 + rng.below(32);
+            let mut ids = Vec::with_capacity(k);
+            for _ in 0..k {
+                let dt = rng.uniform(0.0, 500.0);
+                ids.push((heap.schedule_after(dt, payload), wheel.schedule_after(dt, payload)));
+                payload += 1;
+            }
+            for (hid, wid) in &ids {
+                if rng.chance(0.2) {
+                    assert_eq!(
+                        heap.cancel(*hid),
+                        wheel.cancel(*wid),
+                        "seed {seed} round {round}: cancel outcome diverged"
+                    );
+                }
+            }
+            for _ in 0..rng.below(k + 1) {
+                let (a, b) = (heap.pop(), wheel.pop());
+                assert_eq!(a, b, "seed {seed} round {round}: pop diverged");
+                if a.is_none() {
+                    break;
+                }
+            }
+        }
+        loop {
+            let (a, b) = (heap.pop(), wheel.pop());
+            assert_eq!(a, b, "seed {seed}: drain diverged");
+            if a.is_none() {
+                break;
+            }
+        }
+    }
+}
+
+// --------------------------------------------------------------- knob-off
+
+/// Invariant: every composed campaign knob at its off (or provably
+/// inert) setting reproduces the default report byte for byte — the
+/// §12–§16 guarantee that unexercised machinery leaves no trace.
+#[test]
+fn prop_knob_off_reports_are_byte_identical() {
+    if !artifacts_present() {
+        return;
+    }
+    let scenario = Scenario::table1("braggnn", Mode::RemoteCerebras).unwrap();
+    let base = CampaignConfig::new(3, scenario, 5.0, 13);
+    let baseline = format!("{:?}", run_campaign(&base).unwrap());
+    let variants: Vec<(&str, CampaignConfig)> = vec![
+        (
+            "spot off",
+            base.clone().with_spot(Vec::new()).with_checkpoint_every_s(None),
+        ),
+        // serial execution never contends with itself, so window sync
+        // is inert at an effective shard count of 1
+        ("sync-wan inert", base.clone().with_sync_wan(true)),
+        // the broker score is ignored without sites behind the broker
+        (
+            "sites off",
+            base.clone().with_sites(Vec::new()).with_placement(Placement::Dollars),
+        ),
+        ("closed-loop off", base.clone().with_closed_loop(None)),
+    ];
+    for (label, cfg) in variants {
+        let got = format!("{:?}", run_campaign(&cfg).unwrap());
+        assert_eq!(got, baseline, "{label}: report diverged from baseline");
+    }
+}
